@@ -1,0 +1,32 @@
+//! §Perf probe: interpreter throughput measurement used for the
+//! EXPERIMENTS.md §Perf baseline/after comparison.
+use tlo::ir::func::{FuncBuilder, Module};
+use tlo::ir::instr::Ty;
+use tlo::jit::engine::Engine;
+use tlo::jit::interp::{Memory, Val};
+
+fn main() {
+    let mut m = Module::new();
+    let mut b = FuncBuilder::new("k", &[("A", Ty::Ptr), ("n", Ty::I32)]);
+    let (a, n) = (b.param(0), b.param(1));
+    let zero = b.const_i32(0);
+    b.counted_loop(zero, n, |b, i| {
+        let v = b.load(Ty::I32, a, i);
+        let w = b.mul(v, v);
+        let x = b.add(w, v);
+        b.store(Ty::I32, a, i, x);
+    });
+    m.add(b.ret(None));
+    let mut engine = Engine::new(m).unwrap();
+    let mut mem = Memory::new();
+    let n = 100_000usize;
+    let h = mem.alloc_i32(n);
+    let t0 = std::time::Instant::now();
+    for _ in 0..10 {
+        engine.call("k", &mut mem, &[Val::P(h), Val::I(n as i32)]).unwrap();
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    let f = engine.func_index("k").unwrap();
+    let insts = engine.profile(f).counters.insts as f64;
+    println!("{:.1} M bytecode ops/s", insts / dt / 1e6);
+}

@@ -1,0 +1,111 @@
+//! Quickstart (experiment E6): the paper's Fig-2 kernel `C = A + 3B + 1`
+//! through the whole stack — profile, SCoP analysis, DFG extraction with
+//! unroll 4 (Fig 2C), Las-Vegas place & route onto the overlay, and
+//! transparent redirection of the running function to the DFE datapath
+//! (the AOT Pallas/PJRT artifact when `artifacts/` exists, otherwise the
+//! rust functional simulator).
+//!
+//! Run: `cargo run --release --example quickstart [-- --n 4096 --seed 7]`
+
+use tlo::ir::func::{FuncBuilder, Module};
+use tlo::ir::instr::Ty;
+use tlo::jit::engine::Engine;
+use tlo::jit::interp::{Memory, Val};
+use tlo::offload::{OffloadManager, OffloadParams};
+use tlo::runtime::PjrtRuntime;
+use tlo::util::cli::Args;
+
+fn fig2_module() -> Module {
+    let mut m = Module::new();
+    let mut b = FuncBuilder::new(
+        "fig2",
+        &[("C", Ty::Ptr), ("A", Ty::Ptr), ("B", Ty::Ptr), ("n", Ty::I32)],
+    );
+    let (c, a, bb, n) = (b.param(0), b.param(1), b.param(2), b.param(3));
+    let zero = b.const_i32(0);
+    b.counted_loop(zero, n, |b, i| {
+        let av = b.load(Ty::I32, a, i);
+        let bv = b.load(Ty::I32, bb, i);
+        let c3 = b.const_i32(3);
+        let t = b.mul(bv, c3);
+        let s = b.add(av, t);
+        let c1 = b.const_i32(1);
+        let r = b.add(s, c1);
+        b.store(Ty::I32, c, i, r);
+    });
+    m.add(b.ret(None));
+    m
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env(&["n", "seed", "unroll"]);
+    let n = args.get_usize("n", 4096);
+    let unroll = args.get_usize("unroll", 4);
+
+    let mut engine = Engine::new(fig2_module())?;
+    let mut mem = Memory::new();
+    let a: Vec<i32> = (0..n as i32).map(|i| i * 7 - 1000).collect();
+    let b: Vec<i32> = (0..n as i32).map(|i| 13 - i).collect();
+    let (ha, hb) = (mem.from_i32(&a), mem.from_i32(&b));
+    let hc = mem.alloc_i32(n);
+    let call_args = [Val::P(hc), Val::P(ha), Val::P(hb), Val::I(n as i32)];
+
+    // 1. software run (profiles the function).
+    engine.call("fig2", &mut mem, &call_args)?;
+    let func = engine.func_index("fig2").unwrap();
+    let prof = engine.profile(func);
+    println!(
+        "software: {} abstract cycles, {} memory accesses",
+        prof.counters.cycles, prof.counters.mem_accesses
+    );
+
+    // 2. offload.
+    let mut mgr = OffloadManager::new(OffloadParams {
+        unroll,
+        min_dfg_nodes: 4,
+        seed: args.get_u64("seed", 0xD0E),
+        ..Default::default()
+    });
+    let mut pjrt = PjrtRuntime::load_default().ok();
+    match &pjrt {
+        Some(rt) => println!("DFE datapath: PJRT ({})", rt.platform()),
+        None => println!("DFE datapath: rust functional simulator (run `make artifacts`)"),
+    }
+    let rec = mgr
+        .try_offload(&mut engine, func, pjrt.as_mut())
+        .map_err(|e| anyhow::anyhow!("offload rejected: {e}"))?;
+    println!(
+        "offloaded '{}': DFG {} in / {} out / {} calc ({} nodes, unroll x{})",
+        rec.name, rec.inputs, rec.outputs, rec.calc, rec.dfg_nodes, unroll
+    );
+    if let Some(ps) = rec.par_stats {
+        println!(
+            "place&route: {} placements, {} route calls, {} retries, {} restarts, {}",
+            ps.placements,
+            ps.route_calls,
+            ps.pos_retries,
+            ps.restarts,
+            tlo::util::fmt_duration(ps.elapsed)
+        );
+    }
+
+    // 3. run on the DFE and check every element.
+    mem.i32s_mut(hc).fill(0);
+    engine.call("fig2", &mut mem, &call_args)?;
+    for i in 0..n {
+        let want = a[i].wrapping_add(b[i].wrapping_mul(3)).wrapping_add(1);
+        assert_eq!(mem.i32s(hc)[i], want, "mismatch at {i}");
+    }
+    println!("numerics: all {n} elements match C = A + 3B + 1");
+
+    let st = mgr.state(func).unwrap();
+    let st = st.borrow();
+    println!(
+        "virtual offload time: {} ({} elements, {} remainder)",
+        tlo::util::fmt_duration(st.virtual_offload),
+        st.last_report.elements,
+        st.last_report.remainder_elements,
+    );
+    println!("\n== phase timeline ==\n{}", mgr.tracer.borrow().render_timeline());
+    Ok(())
+}

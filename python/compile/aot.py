@@ -1,0 +1,97 @@
+"""AOT lowering: jax → HLO *text* artifacts the rust runtime loads via PJRT.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids that xla_extension 0.5.1 (what the
+published `xla` 0.1.6 crate binds) rejects; the text parser reassigns ids
+and round-trips cleanly. See /opt/xla-example/README.md.
+
+Run once at build time (`make artifacts`); python never touches the request
+path. Emits one artifact per DFE grid-size variant plus manifest.json with
+the ABI metadata rust needs (slot layout, shapes, variant table).
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import pathlib
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (ids reassigned by the parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_variant(variant: model.Variant) -> str:
+    lowered = jax.jit(model.dfe_fn(variant)).lower(*model.example_args(variant))
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument(
+        "--out-dir", default="../artifacts",
+        help="artifact directory (default: ../artifacts, i.e. repo root)",
+    )
+    # Back-compat with the Makefile's historical single-file target name.
+    parser.add_argument("--out", default=None, help=argparse.SUPPRESS)
+    args = parser.parse_args()
+
+    out_dir = pathlib.Path(args.out).parent if args.out else pathlib.Path(args.out_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    manifest = {
+        "abi": {
+            "n_consts": model.N_CONSTS,
+            "n_inputs": model.N_INPUTS,
+            "n_outputs": model.N_OUTPUTS,
+            "batch": model.BATCH,
+            "opcodes": "see python/compile/kernels/opcodes.py == rust/src/dfe/opcodes.rs",
+            "plane_layout": "0:zero, 1..K:consts, 1+K..K+NI:inputs, then cells",
+            "operands": ["opcode", "src1", "src2", "sel", "consts", "out_sel", "x"],
+            "x_layout": "[n_inputs, batch] i32, slot-major",
+            "result": "1-tuple of [n_outputs, batch] i32",
+        },
+        "variants": [],
+    }
+
+    for variant in model.VARIANTS:
+        text = lower_variant(variant)
+        path = out_dir / f"{variant.name}.hlo.txt"
+        path.write_text(text)
+        digest = hashlib.sha256(text.encode()).hexdigest()[:16]
+        manifest["variants"].append(
+            {
+                "name": variant.name,
+                "rows": variant.rows,
+                "cols": variant.cols,
+                "n_cells": variant.n_cells,
+                "file": path.name,
+                "sha256_16": digest,
+            }
+        )
+        print(f"wrote {path} ({len(text)} chars, sha {digest})")
+
+    manifest_path = out_dir / "manifest.json"
+    manifest_path.write_text(json.dumps(manifest, indent=2) + "\n")
+    print(f"wrote {manifest_path}")
+
+    # The Makefile stamps on a single sentinel file; keep it fresh.
+    if args.out:
+        pathlib.Path(args.out).write_text(
+            (out_dir / f"{model.VARIANTS[0].name}.hlo.txt").read_text()
+        )
+
+
+if __name__ == "__main__":
+    main()

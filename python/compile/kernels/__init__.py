@@ -1,0 +1,4 @@
+# L1: Pallas DFE-grid kernel + oracles + shared opcode ABI.
+from . import opcodes  # noqa: F401
+from .dfe_grid import BLOCK_BATCH, dfe_apply, fu  # noqa: F401
+from .ref import py_apply, ref_apply, validate_image  # noqa: F401

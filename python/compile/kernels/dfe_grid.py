@@ -1,0 +1,171 @@
+"""L1 Pallas kernel: batched execution of a configured DFE grid.
+
+The paper's Data Flow Engine (§III-A) is a pre-programmed FPGA overlay —
+a Manhattan grid of functional-unit cells reconfigured at run time to
+execute a placed-and-routed DFG. Here the *PJRT executable* plays the role
+of the fixed bitstream and the configuration arrives as tensor operands,
+so one AOT artifact per grid size serves every DFG the coordinator maps.
+
+Execution model ("execution image" ABI, shared with rust/src/dfe/image.rs):
+
+  value plane slots (one i32 vector of BATCH lanes per slot):
+      slot 0                               : constant zero
+      slots 1 .. K                         : constant pool
+      slots 1+K .. K+NI                    : external inputs
+      slots 1+K+NI .. K+NI+N               : cell results, in schedule order
+
+  For cell i (i = 0..N-1):
+      r_i = FU(opcode[i], plane[src1[i]], plane[src2[i]], plane[sel[i]])
+      plane[1+K+NI+i] = r_i
+  Outputs: out[j] = plane[out_sel[j]],  j = 0..NO-1.
+
+The coordinator topologically linearizes the *placed* grid into this
+schedule; physical placement only affects the timing/resource model, not
+the numerics. src/sel indices must point at already-written slots — the
+rust `ExecImage` builder guarantees it, and `ref.py` checks it in tests.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the overlay is an
+*integer dataflow* accelerator, so the Pallas design targets the VPU, not
+the MXU. The batch dimension is tiled into VMEM via BlockSpec (the analogue
+of the paper's PCIe DMA blocks); every cell evaluation is a vectorized
+gather + predicated op-select over a full lane block; the per-cell loop is
+a fori_loop so the lowered HLO stays small even for the 24x18 grid.
+
+interpret=True everywhere: real-TPU lowering emits Mosaic custom-calls the
+CPU PJRT plugin cannot run (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+from . import opcodes as op
+
+# Lane-aligned batch block: one VPU register row of i32 per plane slot.
+BLOCK_BATCH = 128
+
+
+def fu(opcode, a, b, s):
+    """Functional unit: predicated evaluation of all ops, select by opcode.
+
+    Computing every candidate and selecting is the standard predicated
+    idiom on wide-vector hardware; every op here is a cheap VPU lanewise
+    instruction. All values are i32 with wrapping arithmetic (the paper's
+    32-bit signed datapath).
+    """
+    shamt = jnp.clip(b, 0, 31)
+    candidates = [
+        (op.NOP, jnp.zeros_like(a)),
+        (op.ADD, a + b),
+        (op.SUB, a - b),
+        (op.MUL, a * b),
+        (op.MIN, jnp.minimum(a, b)),
+        (op.MAX, jnp.maximum(a, b)),
+        (op.LT, (a < b).astype(jnp.int32)),
+        (op.GT, (a > b).astype(jnp.int32)),
+        (op.LE, (a <= b).astype(jnp.int32)),
+        (op.GE, (a >= b).astype(jnp.int32)),
+        (op.EQ, (a == b).astype(jnp.int32)),
+        (op.NE, (a != b).astype(jnp.int32)),
+        (op.MUX, jnp.where(s != 0, a, b)),
+        (op.AND, a & b),
+        (op.OR, a | b),
+        (op.XOR, a ^ b),
+        (op.SHL, a << shamt),
+        (op.SHR, a >> shamt),
+        (op.PASS, a),
+    ]
+    out = jnp.zeros_like(a)
+    for code, val in candidates:
+        out = jnp.where(opcode == code, val, out)
+    return out
+
+
+def _dfe_kernel(
+    opcode_ref, src1_ref, src2_ref, sel_ref, consts_ref, out_sel_ref,
+    x_ref, o_ref, *, n_cells: int, n_consts: int, n_inputs: int,
+    n_outputs: int,
+):
+    """One batch block through the whole grid.
+
+    plane is carried functionally through the cell fori_loop (slots-major,
+    lanes last) — the whole plane for the largest grid (24x18: 481 slots x
+    128 lanes x 4 B ≈ 246 KiB) fits comfortably in VMEM next to the block
+    I/O, so no HBM round-trips occur inside a block.
+    """
+    bb = x_ref.shape[1]
+    n_slots = 1 + n_consts + n_inputs + n_cells
+    base = 1 + n_consts + n_inputs
+
+    plane = jnp.zeros((n_slots, bb), jnp.int32)
+    consts = consts_ref[...]  # [K]
+    plane = plane.at[1 : 1 + n_consts, :].set(
+        jnp.broadcast_to(consts[:, None], (n_consts, bb))
+    )
+    plane = plane.at[1 + n_consts : base, :].set(x_ref[...])
+
+    opcode = opcode_ref[...]
+    src1 = src1_ref[...]
+    src2 = src2_ref[...]
+    sel = sel_ref[...]
+
+    def cell(i, plane):
+        a = lax.dynamic_index_in_dim(plane, src1[i], axis=0, keepdims=False)
+        b = lax.dynamic_index_in_dim(plane, src2[i], axis=0, keepdims=False)
+        s = lax.dynamic_index_in_dim(plane, sel[i], axis=0, keepdims=False)
+        r = fu(opcode[i], a, b, s)
+        return lax.dynamic_update_index_in_dim(plane, r, base + i, axis=0)
+
+    plane = lax.fori_loop(0, n_cells, cell, plane)
+
+    out_sel = out_sel_ref[...]  # [NO]
+    o_ref[...] = jnp.take(plane, out_sel, axis=0, mode="clip")
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_cells", "n_consts", "n_inputs", "n_outputs")
+)
+def dfe_apply(
+    opcode, src1, src2, sel, consts, out_sel, x,
+    *, n_cells: int, n_consts: int, n_inputs: int, n_outputs: int,
+):
+    """Run a configured DFE over a batch of input vectors.
+
+    Args:
+      opcode, src1, src2, sel: i32[n_cells] — per-cell configuration.
+      consts: i32[n_consts] — constant pool (paper's constant-masked inputs).
+      out_sel: i32[n_outputs] — plane slots routed to the outputs.
+      x: i32[n_inputs, B] — slot-major batch (B a multiple of BLOCK_BATCH).
+
+    Returns: i32[n_outputs, B].
+    """
+    n_inputs_x, batch = x.shape
+    assert n_inputs_x == n_inputs
+    assert batch % BLOCK_BATCH == 0, f"batch {batch} % {BLOCK_BATCH} != 0"
+
+    kernel = functools.partial(
+        _dfe_kernel,
+        n_cells=n_cells, n_consts=n_consts,
+        n_inputs=n_inputs, n_outputs=n_outputs,
+    )
+    grid = (batch // BLOCK_BATCH,)
+    # Config operands are broadcast to every program instance; only the
+    # batch axis of x/o is tiled (HBM -> VMEM block schedule).
+    cfg1d = lambda n: pl.BlockSpec((n,), lambda b: (0,))
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            cfg1d(n_cells), cfg1d(n_cells), cfg1d(n_cells), cfg1d(n_cells),
+            cfg1d(n_consts), cfg1d(n_outputs),
+            pl.BlockSpec((n_inputs, BLOCK_BATCH), lambda b: (0, b)),
+        ],
+        out_specs=pl.BlockSpec((n_outputs, BLOCK_BATCH), lambda b: (0, b)),
+        out_shape=jax.ShapeDtypeStruct((n_outputs, batch), jnp.int32),
+        interpret=True,
+    )(opcode, src1, src2, sel, consts, out_sel, x)

@@ -1,0 +1,35 @@
+"""DFE functional-unit opcode numbering — the shared ABI with the rust side.
+
+Must stay in sync with `rust/src/dfe/opcodes.rs`. The paper's DFE (§III-A)
+supports 32-bit signed integer arithmetic, comparison operators and MUX
+nodes; integer division and remainder are explicitly *not* supported, and
+neither is floating point — those limits drive the Table I outcomes.
+"""
+
+NOP = 0  # output 0
+ADD = 1
+SUB = 2
+MUL = 3  # wrapping i32
+MIN = 4
+MAX = 5
+LT = 6  # comparisons produce 0/1 as i32
+GT = 7
+LE = 8
+GE = 9
+EQ = 10
+NE = 11
+MUX = 12  # sel != 0 ? a : b
+AND = 13
+OR = 14
+XOR = 15
+SHL = 16  # shift amount clamped to [0, 31]
+SHR = 17  # arithmetic shift right, clamped
+PASS = 18  # identity of first operand (routing through an FU)
+
+NUM_OPS = 19
+
+OP_NAMES = {
+    NOP: "nop", ADD: "add", SUB: "sub", MUL: "mul", MIN: "min", MAX: "max",
+    LT: "lt", GT: "gt", LE: "le", GE: "ge", EQ: "eq", NE: "ne", MUX: "mux",
+    AND: "and", OR: "or", XOR: "xor", SHL: "shl", SHR: "shr", PASS: "pass",
+}

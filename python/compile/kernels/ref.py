@@ -1,0 +1,138 @@
+"""Pure-jnp (and pure-python) oracles for the DFE execution-image semantics.
+
+`ref_apply` mirrors kernels/dfe_grid.py exactly but with no Pallas — it is
+the correctness ground truth for pytest/hypothesis. `py_apply` is a second,
+independently-written scalar-python implementation used to cross-check the
+jnp oracle itself (two oracles that agree by construction are worthless;
+these two share no code).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+from jax import lax
+
+from . import opcodes as op
+from .dfe_grid import fu
+
+
+def ref_apply(opcode, src1, src2, sel, consts, out_sel, x):
+    """Vectorized jnp oracle. Same ABI as dfe_grid.dfe_apply (x: [NI, B])."""
+    opcode, src1, src2, sel, consts, out_sel, x = (
+        jnp.asarray(a, jnp.int32)
+        for a in (opcode, src1, src2, sel, consts, out_sel, x)
+    )
+    n_cells = opcode.shape[0]
+    n_consts = consts.shape[0]
+    n_inputs, batch = x.shape
+    base = 1 + n_consts + n_inputs
+    n_slots = base + n_cells
+
+    plane = jnp.zeros((n_slots, batch), jnp.int32)
+    plane = plane.at[1 : 1 + n_consts].set(
+        jnp.broadcast_to(consts[:, None], (n_consts, batch))
+    )
+    plane = plane.at[1 + n_consts : base].set(x)
+
+    def cell(i, plane):
+        a = plane[src1[i]]
+        b = plane[src2[i]]
+        s = plane[sel[i]]
+        return plane.at[base + i].set(fu(opcode[i], a, b, s))
+
+    plane = lax.fori_loop(0, n_cells, cell, plane)
+    return jnp.take(plane, out_sel, axis=0, mode="clip")
+
+
+def _py_fu(opcode: int, a: int, b: int, s: int) -> int:
+    """Scalar FU with explicit 32-bit wrapping — shares no code with fu()."""
+
+    def wrap(v: int) -> int:
+        v &= 0xFFFFFFFF
+        return v - 0x100000000 if v >= 0x80000000 else v
+
+    if opcode == op.NOP:
+        return 0
+    if opcode == op.ADD:
+        return wrap(a + b)
+    if opcode == op.SUB:
+        return wrap(a - b)
+    if opcode == op.MUL:
+        return wrap(a * b)
+    if opcode == op.MIN:
+        return min(a, b)
+    if opcode == op.MAX:
+        return max(a, b)
+    if opcode == op.LT:
+        return int(a < b)
+    if opcode == op.GT:
+        return int(a > b)
+    if opcode == op.LE:
+        return int(a <= b)
+    if opcode == op.GE:
+        return int(a >= b)
+    if opcode == op.EQ:
+        return int(a == b)
+    if opcode == op.NE:
+        return int(a != b)
+    if opcode == op.MUX:
+        return a if s != 0 else b
+    if opcode == op.AND:
+        return wrap((a & 0xFFFFFFFF) & (b & 0xFFFFFFFF))
+    if opcode == op.OR:
+        return wrap((a & 0xFFFFFFFF) | (b & 0xFFFFFFFF))
+    if opcode == op.XOR:
+        return wrap((a & 0xFFFFFFFF) ^ (b & 0xFFFFFFFF))
+    if opcode == op.SHL:
+        return wrap((a & 0xFFFFFFFF) << max(0, min(b, 31)))
+    if opcode == op.SHR:
+        return a >> max(0, min(b, 31))  # python >> on signed int is arithmetic
+    if opcode == op.PASS:
+        return a
+    raise ValueError(f"unknown opcode {opcode}")
+
+
+def py_apply(opcode, src1, src2, sel, consts, out_sel, x):
+    """Scalar-python oracle (slow; small batches only)."""
+    opcode = np.asarray(opcode)
+    src1, src2, sel = np.asarray(src1), np.asarray(src2), np.asarray(sel)
+    consts, out_sel = np.asarray(consts), np.asarray(out_sel)
+    x = np.asarray(x)
+    n_cells = len(opcode)
+    n_consts = len(consts)
+    n_inputs, batch = x.shape
+    base = 1 + n_consts + n_inputs
+    n_slots = base + n_cells
+    out = np.zeros((len(out_sel), batch), dtype=np.int32)
+    for lane in range(batch):
+        plane = [0] * n_slots
+        for k in range(n_consts):
+            plane[1 + k] = int(consts[k])
+        for j in range(n_inputs):
+            plane[1 + n_consts + j] = int(x[j, lane])
+        for i in range(n_cells):
+            plane[base + i] = _py_fu(
+                int(opcode[i]),
+                plane[int(src1[i])],
+                plane[int(src2[i])],
+                plane[int(sel[i])],
+            )
+        for j, slot in enumerate(out_sel):
+            out[j, lane] = plane[min(int(slot), n_slots - 1)]
+    return out
+
+
+def validate_image(opcode, src1, src2, sel, consts, out_sel, n_inputs: int):
+    """Check the topological-schedule invariant the rust builder guarantees:
+    every source index of cell i references a slot written before cell i."""
+    n_consts = len(consts)
+    base = 1 + n_consts + n_inputs
+    for i in range(len(opcode)):
+        limit = base + i
+        for s in (src1[i], src2[i], sel[i]):
+            if not (0 <= int(s) < limit):
+                raise ValueError(
+                    f"cell {i}: source slot {int(s)} not yet written "
+                    f"(limit {limit})"
+                )

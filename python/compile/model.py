@@ -1,0 +1,95 @@
+"""L2: the jax compute graph the coordinator AOT-compiles and executes.
+
+For this paper the "model" is the DFE executor itself: one jitted function
+per supported grid size, each a thin jax wrapper over the L1 Pallas kernel
+(kernels/dfe_grid.py). The configuration — the output of the rust-side
+Las-Vegas place & route, linearized into an execution image — is a runtime
+*operand*, so one artifact per grid size covers every offloaded DFG, which
+is exactly the paper's fixed-bitstream / runtime-reconfiguration split.
+
+Variant table (the ABI contract with rust/src/runtime/):
+  every variant shares K=16 constants, NI=32 inputs, NO=8 outputs and a
+  batch of 512 lanes; n_cells = rows*cols of the paper's grid sizes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.dfe_grid import dfe_apply
+
+N_CONSTS = 16
+N_INPUTS = 32
+N_OUTPUTS = 8
+BATCH = 512
+
+
+@dataclasses.dataclass(frozen=True)
+class Variant:
+    """One AOT-compiled DFE executor: a (rows x cols) overlay."""
+
+    rows: int
+    cols: int
+
+    @property
+    def name(self) -> str:
+        return f"dfe_{self.rows}x{self.cols}"
+
+    @property
+    def n_cells(self) -> int:
+        return self.rows * self.cols
+
+    @property
+    def n_slots(self) -> int:
+        return 1 + N_CONSTS + N_INPUTS + self.n_cells
+
+
+# Grid sizes mirror the paper's Table II sweep (plus the small 4x4 used by
+# the quickstart/Fig-2 example).
+VARIANTS = [
+    Variant(4, 4),
+    Variant(8, 8),
+    Variant(12, 12),
+    Variant(15, 15),
+    Variant(24, 18),
+]
+
+
+def dfe_fn(variant: Variant):
+    """The jax function lowered for `variant` (fixed shapes, ready for AOT)."""
+
+    n = variant.n_cells
+
+    def fn(opcode, src1, src2, sel, consts, out_sel, x):
+        out = dfe_apply(
+            opcode, src1, src2, sel, consts, out_sel, x,
+            n_cells=n, n_consts=N_CONSTS,
+            n_inputs=N_INPUTS, n_outputs=N_OUTPUTS,
+        )
+        return (out,)
+
+    return fn
+
+
+def example_args(variant: Variant):
+    """ShapeDtypeStructs for jax.jit(...).lower(...)."""
+    i32 = jnp.int32
+    n = variant.n_cells
+    return (
+        jax.ShapeDtypeStruct((n,), i32),          # opcode
+        jax.ShapeDtypeStruct((n,), i32),          # src1
+        jax.ShapeDtypeStruct((n,), i32),          # src2
+        jax.ShapeDtypeStruct((n,), i32),          # sel
+        jax.ShapeDtypeStruct((N_CONSTS,), i32),   # consts
+        jax.ShapeDtypeStruct((N_OUTPUTS,), i32),  # out_sel
+        jax.ShapeDtypeStruct((N_INPUTS, BATCH), i32),  # x
+    )
+
+
+@functools.lru_cache(maxsize=None)
+def jitted(variant: Variant):
+    return jax.jit(dfe_fn(variant))

@@ -1,0 +1,229 @@
+"""Kernel-vs-oracle correctness: the CORE numeric signal of the repo.
+
+Three implementations of the DFE execution-image semantics are compared:
+  1. the L1 Pallas kernel (interpret=True) — what ships in the artifacts,
+  2. ref.ref_apply — vectorized jnp oracle,
+  3. ref.py_apply — independently written scalar-python oracle.
+Hypothesis sweeps random-but-legal execution images (topological sources),
+grid sizes, batch contents including i32 extremes.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import opcodes as op
+from compile.kernels.dfe_grid import BLOCK_BATCH, dfe_apply
+from compile.kernels.ref import py_apply, ref_apply, validate_image
+
+N_CONSTS = 4
+N_INPUTS = 6
+N_OUTPUTS = 3
+
+
+def run_all(opcode, src1, src2, sel, consts, out_sel, x):
+    args = [np.asarray(a, np.int32) for a in (opcode, src1, src2, sel, consts, out_sel, x)]
+    validate_image(*args[:6], n_inputs=args[6].shape[0])
+    got_pallas = np.asarray(
+        dfe_apply(
+            *args,
+            n_cells=args[0].shape[0],
+            n_consts=args[4].shape[0],
+            n_inputs=args[6].shape[0],
+            n_outputs=args[5].shape[0],
+        )
+    )
+    got_ref = np.asarray(ref_apply(*args))
+    np.testing.assert_array_equal(got_pallas, got_ref)
+    return got_pallas
+
+
+@st.composite
+def exec_images(draw):
+    """Random legal execution image + batch (batch == BLOCK_BATCH lanes)."""
+    n_cells = draw(st.integers(min_value=1, max_value=24))
+    base = 1 + N_CONSTS + N_INPUTS
+    i32 = st.integers(min_value=-(2**31), max_value=2**31 - 1)
+
+    opcode, src1, src2, sel = [], [], [], []
+    for i in range(n_cells):
+        limit = base + i
+        opcode.append(draw(st.integers(min_value=0, max_value=op.NUM_OPS - 1)))
+        src1.append(draw(st.integers(min_value=0, max_value=limit - 1)))
+        src2.append(draw(st.integers(min_value=0, max_value=limit - 1)))
+        sel.append(draw(st.integers(min_value=0, max_value=limit - 1)))
+    consts = draw(
+        st.lists(i32, min_size=N_CONSTS, max_size=N_CONSTS)
+    )
+    out_sel = draw(
+        st.lists(
+            st.integers(min_value=0, max_value=base + n_cells - 1),
+            min_size=N_OUTPUTS, max_size=N_OUTPUTS,
+        )
+    )
+    # A few interesting lanes + random fill.
+    lanes = draw(
+        st.lists(
+            st.lists(i32, min_size=N_INPUTS, max_size=N_INPUTS),
+            min_size=1, max_size=4,
+        )
+    )
+    x = np.zeros((N_INPUTS, BLOCK_BATCH), np.int64)
+    rng = np.random.default_rng(draw(st.integers(0, 2**32 - 1)))
+    x[:, :] = rng.integers(-(2**31), 2**31, size=(N_INPUTS, BLOCK_BATCH))
+    for j, lane in enumerate(lanes):
+        x[:, j] = lane
+    return (
+        np.array(opcode, np.int32),
+        np.array(src1, np.int32),
+        np.array(src2, np.int32),
+        np.array(sel, np.int32),
+        np.array(consts, np.int32),
+        np.array(out_sel, np.int32),
+        x.astype(np.int32),
+    )
+
+
+@settings(max_examples=30, deadline=None)
+@given(exec_images())
+def test_pallas_matches_jnp_oracle(image):
+    run_all(*image)
+
+
+@settings(max_examples=10, deadline=None)
+@given(exec_images())
+def test_jnp_oracle_matches_scalar_python(image):
+    """Cross-check the two oracles on a handful of lanes (py_apply is slow)."""
+    opcode, src1, src2, sel, consts, out_sel, x = image
+    x_small = x[:, :8].copy()
+    got = np.asarray(ref_apply(*[np.asarray(a, np.int32) for a in
+                                 (opcode, src1, src2, sel, consts, out_sel)], x_small))
+    want = py_apply(opcode, src1, src2, sel, consts, out_sel, x_small)
+    np.testing.assert_array_equal(got, want)
+
+
+def _image_a_plus_3b_plus_1():
+    """Fig 2's C = A + 3B + 1 as an execution image: inputs a=slot in0,
+    b=in1; consts 3 (c0) and 1 (c1)."""
+    base = 1 + N_CONSTS + N_INPUTS
+    in0, in1 = 1 + N_CONSTS, 1 + N_CONSTS + 1
+    c3, c1 = 1, 2  # const-pool slot for consts[k] is 1 + k
+    opcode = [op.MUL, op.ADD, op.ADD]
+    src1 = [in1, in0, base + 1]
+    src2 = [c3, base + 0, c1]
+    sel = [0, 0, 0]
+    consts = [3, 1, 0, 0]
+    out_sel = [base + 2, 0, 0]
+    return opcode, src1, src2, sel, consts, out_sel
+
+
+def test_fig2_a_plus_3b_plus_1():
+    opcode, src1, src2, sel, consts, out_sel = _image_a_plus_3b_plus_1()
+    rng = np.random.default_rng(7)
+    x = rng.integers(-1000, 1000, size=(N_INPUTS, BLOCK_BATCH)).astype(np.int32)
+    got = run_all(opcode, src1, src2, sel, consts, out_sel, x)
+    a, b = x[0].astype(np.int64), x[1].astype(np.int64)
+    np.testing.assert_array_equal(got[0], (a + 3 * b + 1).astype(np.int32))
+
+
+def test_listing1_branchy_mux():
+    """Listing 1 / Fig 4: C = (A>B) ? A+3B+1 : A-5B-2 via CMP + MUX."""
+    base = 1 + N_CONSTS + N_INPUTS
+    in_a, in_b = 1 + N_CONSTS, 1 + N_CONSTS + 1
+    consts = [3, 1, 5, 2]
+    c3, c1, c5, c2 = 1, 2, 3, 4
+    opcode = [op.GT, op.MUL, op.ADD, op.ADD, op.MUL, op.SUB, op.SUB, op.MUX]
+    #          0      1       2       3       4       5       6       7
+    src1 = [in_a, in_b, in_a, base + 2, in_b, in_a, base + 5, base + 3]
+    src2 = [in_b, c3, base + 1, c1, c5, base + 4, c2, base + 6]
+    sel = [0, 0, 0, 0, 0, 0, 0, base + 0]
+    out_sel = [base + 7, 0, 0]
+    rng = np.random.default_rng(11)
+    x = rng.integers(-100, 100, size=(N_INPUTS, BLOCK_BATCH)).astype(np.int32)
+    got = run_all(opcode, src1, src2, sel, consts, out_sel, x)
+    a, b = x[0].astype(np.int64), x[1].astype(np.int64)
+    want = np.where(a > b, a + 3 * b + 1, a - 5 * b - 2).astype(np.int32)
+    np.testing.assert_array_equal(got[0], want)
+
+
+def test_i32_wrapping():
+    """MUL/ADD wrap like the 32-bit signed FPGA datapath."""
+    base = 1 + N_CONSTS + N_INPUTS
+    in0 = 1 + N_CONSTS
+    opcode = [op.MUL, op.ADD]
+    src1 = [in0, base + 0]
+    src2 = [in0, base + 0]
+    sel = [0, 0]
+    consts = [0] * N_CONSTS
+    out_sel = [base + 0, base + 1, 0]
+    x = np.full((N_INPUTS, BLOCK_BATCH), 2**30, np.int32)
+    got = run_all(opcode, src1, src2, sel, consts, out_sel, x)
+    want_mul = np.int32((2**60) % (2**32))  # == 0 after wrap
+    assert (got[0] == want_mul).all()
+
+
+def test_shift_clamping():
+    """Shift amounts outside [0,31] clamp rather than poisoning lanes."""
+    base = 1 + N_CONSTS + N_INPUTS
+    in0, in1 = 1 + N_CONSTS, 1 + N_CONSTS + 1
+    opcode = [op.SHL, op.SHR]
+    src1 = [in0, in0]
+    src2 = [in1, in1]
+    sel = [0, 0]
+    consts = [0] * N_CONSTS
+    out_sel = [base + 0, base + 1, 0]
+    x = np.zeros((N_INPUTS, BLOCK_BATCH), np.int32)
+    x[0, :] = -64
+    x[1, :4] = [40, -3, 31, 0]
+    got = run_all(opcode, src1, src2, sel, consts, out_sel, x)
+    # shamt clamps to 31, 0, 31, 0
+    assert got[0, 0] == np.int32(np.left_shift(np.int32(-64), 31))
+    assert got[0, 1] == -64
+    assert got[1, 0] == -1  # arithmetic shift of negative
+    assert got[1, 3] == -64
+
+
+def test_multi_block_batch():
+    """Batches spanning several BlockSpec tiles stitch together correctly."""
+    batch = BLOCK_BATCH * 4
+    base = 1 + N_CONSTS + N_INPUTS
+    in0 = 1 + N_CONSTS
+    opcode = np.array([op.ADD], np.int32)
+    src1 = np.array([in0], np.int32)
+    src2 = np.array([1], np.int32)  # const slot
+    sel = np.array([0], np.int32)
+    consts = np.array([100, 0, 0, 0], np.int32)
+    out_sel = np.array([base, 0, 0], np.int32)
+    x = np.arange(N_INPUTS * batch, dtype=np.int32).reshape(N_INPUTS, batch)
+    got = np.asarray(
+        dfe_apply(
+            opcode, src1, src2, sel, consts, out_sel, x,
+            n_cells=1, n_consts=N_CONSTS, n_inputs=N_INPUTS, n_outputs=3,
+        )
+    )
+    np.testing.assert_array_equal(got[0], x[0] + 100)
+
+
+def test_nop_and_default_zero():
+    base = 1 + N_CONSTS + N_INPUTS
+    opcode = [op.NOP]
+    image = ([op.NOP], [0], [0], [0], [0] * N_CONSTS, [base, 0, 0])
+    x = np.ones((N_INPUTS, BLOCK_BATCH), np.int32)
+    got = run_all(*image, x)
+    assert (got == 0).all()
+
+
+def test_validate_image_rejects_forward_reference():
+    base = 1 + N_CONSTS + N_INPUTS
+    with pytest.raises(ValueError, match="not yet written"):
+        validate_image(
+            np.array([op.ADD], np.int32),
+            np.array([base], np.int32),  # cell 0 reading its own output
+            np.array([0], np.int32),
+            np.array([0], np.int32),
+            np.zeros(N_CONSTS, np.int32),
+            np.zeros(N_OUTPUTS, np.int32),
+            n_inputs=N_INPUTS,
+        )

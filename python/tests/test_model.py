@@ -1,0 +1,57 @@
+"""L2 model + AOT lowering tests: shapes, variant table, HLO text validity."""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from compile import aot, model
+from compile.kernels import opcodes as op
+
+
+def test_variant_table():
+    names = [v.name for v in model.VARIANTS]
+    assert names == ["dfe_4x4", "dfe_8x8", "dfe_12x12", "dfe_15x15", "dfe_24x18"]
+    assert model.VARIANTS[-1].n_cells == 432  # the paper's largest DFE
+    for v in model.VARIANTS:
+        assert v.n_slots == 1 + model.N_CONSTS + model.N_INPUTS + v.n_cells
+
+
+def test_model_executes_smallest_variant():
+    v = model.VARIANTS[0]
+    n = v.n_cells
+    base = 1 + model.N_CONSTS + model.N_INPUTS
+    in0 = 1 + model.N_CONSTS
+    opcode = np.zeros(n, np.int32)
+    opcode[0] = op.ADD
+    src1 = np.zeros(n, np.int32)
+    src2 = np.zeros(n, np.int32)
+    src1[0], src2[0] = in0, 1  # x[0] + consts[0]
+    sel = np.zeros(n, np.int32)
+    consts = np.zeros(model.N_CONSTS, np.int32)
+    consts[0] = 41
+    out_sel = np.zeros(model.N_OUTPUTS, np.int32)
+    out_sel[0] = base
+    x = np.ones((model.N_INPUTS, model.BATCH), np.int32)
+    (out,) = model.jitted(v)(
+        *[jnp.asarray(a) for a in (opcode, src1, src2, sel, consts, out_sel, x)]
+    )
+    assert out.shape == (model.N_OUTPUTS, model.BATCH)
+    assert (np.asarray(out)[0] == 42).all()
+    assert (np.asarray(out)[1:] == 0).all()
+
+
+def test_hlo_text_lowering_smallest():
+    """HLO text (not proto) — must contain an ENTRY and i32 tensors and
+    carry no Mosaic custom-call (interpret=True requirement)."""
+    text = aot.lower_variant(model.VARIANTS[0])
+    assert "ENTRY" in text
+    assert "s32" in text
+    assert "custom-call" not in text.lower() or "mosaic" not in text.lower()
+
+
+def test_example_args_match_fn():
+    for v in model.VARIANTS[:2]:
+        args = model.example_args(v)
+        assert args[0].shape == (v.n_cells,)
+        assert args[-1].shape == (model.N_INPUTS, model.BATCH)

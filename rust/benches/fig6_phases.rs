@@ -1,0 +1,68 @@
+//! E3 + E4 — Fig 6: the full §IV-C pipeline phase breakdown and the
+//! software-vs-offloaded frame rate, in bench form (the interactive
+//! rendition lives in examples/video_pipeline.rs).
+
+use std::time::Duration;
+
+use tlo::jit::engine::Engine;
+use tlo::jit::interp::Memory;
+use tlo::offload::{OffloadManager, OffloadParams};
+use tlo::trace::Phase;
+use tlo::util::bench::{print_header, run, BenchConfig};
+use tlo::util::fmt_duration;
+use tlo::workloads::video::{alloc_pipeline, conv_args, video_module, DECODE_MS, FrameSource, FRAME_H, FRAME_W};
+
+fn main() {
+    let cfg = BenchConfig::from_env();
+    let decode = Duration::from_secs_f64(DECODE_MS * 1e-3);
+
+    // One full pipeline run, phases recorded.
+    let mut engine = Engine::new(video_module()).unwrap();
+    let mut mem = Memory::new();
+    let (out, inp, coef) = alloc_pipeline(&mut mem);
+    let mut src = FrameSource::new();
+    let mut frame = vec![0i32; FRAME_W * FRAME_H];
+    let func = engine.func_index("conv").unwrap();
+    for _ in 0..2 {
+        src.next_frame(&mut frame);
+        mem.i32s_mut(inp).copy_from_slice(&frame);
+        engine.call("conv", &mut mem, &conv_args(out, inp, coef)).unwrap();
+    }
+    let prof = engine.profile(func);
+    let sw_frame =
+        decode + Duration::from_secs_f64(1e-9 * prof.counters.cycles as f64 / 2.0);
+
+    let mut mgr = OffloadManager::new(OffloadParams { min_dfg_nodes: 8, ..Default::default() });
+    mgr.try_offload(&mut engine, func, None).unwrap();
+    for _ in 0..8 {
+        src.next_frame(&mut frame);
+        mem.i32s_mut(inp).copy_from_slice(&frame);
+        mgr.tracer.borrow_mut().simulated(Phase::HostWork, decode);
+        engine.call("conv", &mut mem, &conv_args(out, inp, coef)).unwrap();
+    }
+    println!("== E3: Fig-6 phase timeline (paper values in parentheses) ==");
+    println!("{}", mgr.tracer.borrow().render_timeline());
+    println!("paper: analysis 17.5ms, jit 16.7ms, P&R 1.18s, config 2.1ms,");
+    println!("       constants 55us, PC->FPGA 35us/block, FPGA->PC 16us/block");
+    let st = mgr.state(func).unwrap();
+    let off_frame = decode + st.borrow().virtual_offload / st.borrow().invocations.max(1) as u32;
+    println!(
+        "\n== E4: frame rates ==\nsoftware {:.1} fps vs offloaded {:.1} fps  (paper: 83 vs 31)",
+        1.0 / sw_frame.as_secs_f64(),
+        1.0 / off_frame.as_secs_f64()
+    );
+    println!(
+        "software frame {} / offloaded frame {}",
+        fmt_duration(sw_frame),
+        fmt_duration(off_frame)
+    );
+
+    // Wall-clock cost of the offloaded invocation path (gather/PJRT-or-
+    // sim/scatter on this host).
+    print_header("offloaded invocation wall cost (sim backend)");
+    run("video/offloaded-frame", cfg, || {
+        src.next_frame(&mut frame);
+        mem.i32s_mut(inp).copy_from_slice(&frame);
+        engine.call("conv", &mut mem, &conv_args(out, inp, coef)).unwrap();
+    });
+}

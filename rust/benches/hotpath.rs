@@ -1,0 +1,63 @@
+//! §Perf — hot-path microbenchmarks for the three layers' rust-side
+//! components: interpreter throughput (L3 software baseline), DFE image
+//! evaluation (rust sim lane), cycle-level overlay sim, and the router.
+//! Used by the performance pass; before/after numbers in EXPERIMENTS.md.
+
+use tlo::dfe::config::fig2_config;
+use tlo::dfe::image::{fig2_image, listing1_image};
+use tlo::dfe::sim::simulate;
+use tlo::ir::func::{FuncBuilder, Module};
+use tlo::ir::instr::Ty;
+use tlo::jit::engine::Engine;
+use tlo::jit::interp::{Memory, Val};
+use tlo::util::bench::{black_box, print_header, run, BenchConfig};
+
+fn main() {
+    let cfg = BenchConfig::from_env();
+    print_header("L3 interpreter");
+    // Inner-loop heavy kernel: ~10 bytecode ops * 100k iterations.
+    let mut m = Module::new();
+    let mut b = FuncBuilder::new("k", &[("A", Ty::Ptr), ("n", Ty::I32)]);
+    let (a, n) = (b.param(0), b.param(1));
+    let zero = b.const_i32(0);
+    b.counted_loop(zero, n, |b, i| {
+        let v = b.load(Ty::I32, a, i);
+        let w = b.mul(v, v);
+        let x = b.add(w, v);
+        b.store(Ty::I32, a, i, x);
+    });
+    m.add(b.ret(None));
+    let mut engine = Engine::new(m).unwrap();
+    let mut mem = Memory::new();
+    let n = 100_000;
+    let h = mem.alloc_i32(n);
+    let s = run("interp/100k-iter-kernel", cfg, || {
+        engine.call("k", &mut mem, &[Val::P(h), Val::I(n as i32)]).unwrap();
+    });
+    let func = engine.func_index("k").unwrap();
+    let insts = engine.profile(func).counters.insts as f64
+        / engine.profile(func).counters.invocations as f64;
+    println!(
+        "  -> {:.1} M bytecode ops/s",
+        insts / s.median.as_secs_f64() / 1e6
+    );
+
+    print_header("DFE image evaluation (rust sim lane)");
+    let img = fig2_image();
+    let batch = 4096;
+    let x: Vec<i32> = (0..2 * batch as i32).collect();
+    run("image/fig2-4096-lanes", cfg, || {
+        black_box(img.eval_batch(&x, batch));
+    });
+    let img2 = listing1_image();
+    run("image/listing1-4096-lanes", cfg, || {
+        black_box(img2.eval_batch(&x, batch));
+    });
+
+    print_header("cycle-level overlay simulator");
+    let config = fig2_config();
+    let streams: Vec<Vec<i32>> = vec![(0..512).collect(), (0..512).rev().collect()];
+    run("cyclesim/fig2-512-elements", cfg, || {
+        black_box(simulate(&config, &streams, 512).unwrap());
+    });
+}

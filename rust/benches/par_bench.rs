@@ -1,0 +1,98 @@
+//! E8 + A2 — Las-Vegas place & route behaviour:
+//!   * runtime distribution over seeds for the §IV-C conv DFG (the paper
+//!     observes "a random time ... in this example 1.18 s");
+//!   * scaling over DFG size and grid size;
+//!   * heat-3d's merged ~300-node DFG failing on 24x18 (Table I note);
+//!   * configuration-cache hit vs cold P&R (A2).
+
+use tlo::analysis::scop::analyze_function;
+use tlo::dfe::cache::{dfg_key, CachedConfig, ConfigCache};
+use tlo::dfe::grid::Grid;
+use tlo::dfg::extract::extract;
+use tlo::par::{place_and_route, ParParams};
+use tlo::util::bench::{black_box, print_header, run, BenchConfig};
+use tlo::util::prng::Rng;
+use tlo::util::{fmt_duration, mean_std, median};
+use tlo::workloads::video::conv_func;
+
+fn main() {
+    let cfg = BenchConfig::from_env();
+    let params = ParParams::default();
+
+    // --- runtime distribution for the conv DFG (17/1/16) ---
+    let f = conv_func();
+    let an = analyze_function(&f);
+    let off = extract(&f, &an.scops[0], 1).unwrap();
+    println!("== E8: Las-Vegas P&R runtime distribution (conv 17/1/16 DFG) ==");
+    for grid in [Grid::new(8, 8), Grid::new(12, 12), Grid::new(24, 18)] {
+        let mut times = Vec::new();
+        let mut restarts = 0u64;
+        for seed in 0..20u64 {
+            let mut rng = Rng::new(seed);
+            let r = place_and_route(&off.dfg, grid, &params, &mut rng).expect("routable");
+            times.push(r.stats.elapsed.as_secs_f64());
+            restarts += r.stats.restarts;
+        }
+        let (m, s) = mean_std(&times);
+        println!(
+            "  {}x{}: median {} mean {} std {} (20 seeds, {} total restarts)",
+            grid.rows,
+            grid.cols,
+            fmt_duration(std::time::Duration::from_secs_f64(median(&times))),
+            fmt_duration(std::time::Duration::from_secs_f64(m)),
+            fmt_duration(std::time::Duration::from_secs_f64(s)),
+            restarts
+        );
+    }
+
+    // --- heat-3d: the paper's P&R failure on the largest DFE ---
+    let h = tlo::workloads::polybench::heat3d();
+    let han = analyze_function(&h);
+    let mut merged = extract(&h, &han.scops[0], 4).unwrap().dfg;
+    // Merge the second nest to approximate the paper's combined DFG,
+    // re-indexing its external streams past the first nest's.
+    let second = extract(&h, &han.scops[1], 4).unwrap().dfg;
+    let offset = merged.len();
+    let in_off = merged.stats().inputs;
+    let out_off = merged.stats().outputs;
+    for node in &second.nodes {
+        let srcs = node.srcs.iter().map(|s| s + offset).collect();
+        let kind = match &node.kind {
+            tlo::dfg::graph::NodeKind::Input(j) => tlo::dfg::graph::NodeKind::Input(j + in_off),
+            tlo::dfg::graph::NodeKind::Output(j) => {
+                tlo::dfg::graph::NodeKind::Output(j + out_off)
+            }
+            k => k.clone(),
+        };
+        merged.nodes.push(tlo::dfg::graph::Node { kind, srcs });
+    }
+    let calc = merged.stats().calc;
+    let mut rng = Rng::new(1);
+    let quick = ParParams { max_restarts: 4, ..params };
+    let res = place_and_route(&merged, Grid::new(24, 18), &quick, &mut rng);
+    println!(
+        "\nheat-3d merged DFG ({calc} calc nodes) on 24x18: {} (paper: fails to map)",
+        match res {
+            Ok(_) => "ROUTED (model diverges)".to_string(),
+            Err(e) => format!("fails — {e}"),
+        }
+    );
+
+    // --- A2: cache hit vs cold ---
+    print_header("A2 — configuration cache");
+    run("par/cold (conv on 24x18)", cfg, || {
+        let mut rng = Rng::new(7);
+        black_box(place_and_route(&off.dfg, Grid::new(24, 18), &params, &mut rng).unwrap());
+    });
+    let mut cache = ConfigCache::new(8);
+    let mut rng = Rng::new(7);
+    let r = place_and_route(&off.dfg, Grid::new(24, 18), &params, &mut rng).unwrap();
+    cache.insert(
+        dfg_key(&off.dfg),
+        CachedConfig { config: r.config, image: r.image, variant: "dfe_24x18".into() },
+    );
+    run("par/cache-hit", cfg, || {
+        black_box(cache.get(dfg_key(&off.dfg)).is_some());
+    });
+    println!("cache stats: {:?}", cache.stats);
+}

@@ -1,0 +1,83 @@
+//! A3 — rollback crossover: sweep the workload size for the Fig-2 kernel
+//! and report where the offloaded (transfer-bound) path beats or loses to
+//! software, under both PCIe protocols. This regenerates the economics
+//! behind the paper's DFG-size threshold and its 31-vs-83-fps result.
+
+use tlo::ir::func::{FuncBuilder, Module};
+use tlo::ir::instr::Ty;
+use tlo::jit::engine::Engine;
+use tlo::jit::interp::{Memory, Val};
+use tlo::offload::{OffloadManager, OffloadParams};
+use tlo::transport::PcieParams;
+
+fn fig2_module() -> Module {
+    let mut m = Module::new();
+    let mut b = FuncBuilder::new(
+        "fig2",
+        &[("C", Ty::Ptr), ("A", Ty::Ptr), ("B", Ty::Ptr), ("n", Ty::I32)],
+    );
+    let (c, a, bb, n) = (b.param(0), b.param(1), b.param(2), b.param(3));
+    let zero = b.const_i32(0);
+    b.counted_loop(zero, n, |b, i| {
+        let av = b.load(Ty::I32, a, i);
+        let bv = b.load(Ty::I32, bb, i);
+        let c3 = b.const_i32(3);
+        let t = b.mul(bv, c3);
+        let s = b.add(av, t);
+        let c1 = b.const_i32(1);
+        let r = b.add(s, c1);
+        b.store(Ty::I32, c, i, r);
+    });
+    m.add(b.ret(None));
+    m
+}
+
+fn verdict(n: usize, pcie: PcieParams) -> (f64, f64, bool) {
+    let mut engine = Engine::new(fig2_module()).unwrap();
+    let mut mem = Memory::new();
+    let (ha, hb, hc) = (mem.alloc_i32(n), mem.alloc_i32(n), mem.alloc_i32(n));
+    let args = [Val::P(hc), Val::P(ha), Val::P(hb), Val::I(n as i32)];
+    engine.call("fig2", &mut mem, &args).unwrap();
+    let func = engine.func_index("fig2").unwrap();
+    let sw = 1e-9 * engine.profile(func).counters.cycles as f64;
+
+    let mut mgr = OffloadManager::new(OffloadParams {
+        min_dfg_nodes: 1,
+        unroll: 4,
+        rollback_window: 2,
+        pcie,
+        ..Default::default()
+    });
+    mgr.try_offload(&mut engine, func, None).unwrap();
+    for _ in 0..3 {
+        engine.call("fig2", &mut mem, &args).unwrap();
+    }
+    let st = mgr.state(func).unwrap();
+    let off = st.borrow().virtual_offload.as_secs_f64() / st.borrow().invocations as f64;
+    let rolled = !mgr.check_rollback(&mut engine).is_empty();
+    (sw, off, rolled)
+}
+
+fn main() {
+    println!("== A3: offload-vs-software crossover (fig2 kernel, unroll 4) ==");
+    println!(
+        "{:>10} {:>14} {:>14} {:>10} | {:>14} {:>10}",
+        "n", "software", "tagged off", "verdict", "packed off", "verdict"
+    );
+    for n in [256usize, 1024, 4096, 16384, 65536, 262144] {
+        let (sw, off_t, rolled_t) = verdict(n, PcieParams::default());
+        let (_, off_p, rolled_p) = verdict(n, PcieParams::riffa_like());
+        println!(
+            "{:>10} {:>12.1}us {:>12.1}us {:>10} | {:>12.1}us {:>10}",
+            n,
+            sw * 1e6,
+            off_t * 1e6,
+            if rolled_t { "ROLLBACK" } else { "keep" },
+            off_p * 1e6,
+            if rolled_p { "ROLLBACK" } else { "keep" },
+        );
+    }
+    println!("\nshape check: the tagged protocol loses everywhere transfer-bound");
+    println!("(the paper's 31 < 83 fps); the packed protocol flips the verdict");
+    println!("at large n — the \"significant speed-up\" the paper projects.");
+}

@@ -1,0 +1,26 @@
+//! E1 — Table I: analysis-phase timing over the PolyBench suite.
+//! Regenerates the detection/offloadability/DFG-stat rows (see
+//! examples/polybench_analysis.rs for the full side-by-side table) and
+//! benchmarks the analysis time, the paper's last column.
+
+use tlo::analysis::scop::analyze_function;
+use tlo::dfg::extract::extract;
+use tlo::util::bench::{black_box, print_header, run, BenchConfig};
+use tlo::workloads::polybench::suite;
+
+fn main() {
+    let cfg = BenchConfig::from_env();
+    print_header("Table I — analysis time per PolyBench kernel");
+    for k in suite() {
+        run(&format!("analysis/{}", k.name), cfg, || {
+            let an = analyze_function(&k.func);
+            for s in &an.scops {
+                let _ = black_box(extract(&k.func, s, k.unroll));
+            }
+            black_box(&an);
+        });
+    }
+    println!("\n(paper analysis times: 5.5ms..107ms on their prototype; the");
+    println!(" *ordering* across kernels — heat-3d slowest, syrk/trmm fastest —");
+    println!(" is the reproducible shape; see EXPERIMENTS.md E1)");
+}

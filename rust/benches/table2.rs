@@ -1,0 +1,47 @@
+//! E2 — Table II: DFE resource utilization & Fmax per device and grid
+//! size. Prints the full table (anchor rows reproduce the paper exactly;
+//! other sizes are model interpolations) and the largest routable DFE per
+//! device, then times the estimator.
+
+use tlo::dfe::resource::devices;
+use tlo::util::bench::{black_box, print_header, run, BenchConfig};
+
+fn main() {
+    println!("== Table II — DFE resource utilization (anchors = paper rows) ==");
+    for d in devices() {
+        println!("\n{} ({}, {})", d.name, d.part, d.tool.name());
+        println!(
+            "  {:<8} {:>9} {:>18} {:>18} {:>14}",
+            "size", "Fmax", d.col_names[0], d.col_names[1], d.col_names[2]
+        );
+        for (r, c) in [(3, 3), (6, 6), (8, 8), (9, 9), (10, 10), (15, 15), (18, 18), (24, 18)] {
+            let e = d.estimate(r, c);
+            println!(
+                "  {:<8} {:>6.0}MHz {:>10} ({:>4.1}%) {:>10} ({:>4.1}%) {:>7} ({:>4.1}%){}",
+                format!("{r}x{c}"),
+                e.fmax_mhz,
+                e.ff,
+                e.ff_pct,
+                e.luts,
+                e.lut_pct,
+                e.dsp,
+                e.dsp_pct,
+                if e.routable { "" } else { "  [UNROUTABLE]" }
+            );
+        }
+        let (lr, lc) = d.largest_routable();
+        println!("  largest routable DFE: {lr}x{lc}");
+    }
+
+    let cfg = BenchConfig::from_env();
+    print_header("Table II — estimator performance");
+    run("estimate/all-devices-64-sizes", cfg, || {
+        for d in devices() {
+            for r in 1..=8 {
+                for c in 1..=8 {
+                    black_box(d.estimate(r * 3, c * 3));
+                }
+            }
+        }
+    });
+}

@@ -1,0 +1,270 @@
+//! Affine (+ parametric-stride) expressions over loop induction variables
+//! and function parameters — the currency of SCoP detection (paper §III:
+//! "a custom-made automatic parallelizer inspired by Polly").
+//!
+//! Multi-dimensional array subscripts linearize as `i*n + j` — bilinear in
+//! an induction variable and a *parameter*. Classic affine forms cannot
+//! express that (Polly recovers it by delinearization); here the form
+//! carries explicit `iv x param` cross terms:
+//!
+//! `k + Σ c_d·iv_d + Σ c_p·param_p + Σ c_{d,p}·iv_d·param_p`
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+use crate::ir::instr::Reg;
+
+#[derive(Clone, Debug, PartialEq, Eq, Default)]
+pub struct Affine {
+    pub k: i64,
+    /// loop depth (0 = outermost of the enclosing nest) -> coefficient.
+    pub iv: BTreeMap<usize, i64>,
+    /// parameter register -> coefficient.
+    pub params: BTreeMap<Reg, i64>,
+    /// (loop depth, parameter) -> coefficient of the product term.
+    pub cross: BTreeMap<(usize, Reg), i64>,
+}
+
+impl Affine {
+    pub fn constant(k: i64) -> Affine {
+        Affine { k, ..Default::default() }
+    }
+
+    pub fn iv(depth: usize) -> Affine {
+        let mut m = BTreeMap::new();
+        m.insert(depth, 1);
+        Affine { iv: m, ..Default::default() }
+    }
+
+    pub fn param(r: Reg) -> Affine {
+        let mut m = BTreeMap::new();
+        m.insert(r, 1);
+        Affine { params: m, ..Default::default() }
+    }
+
+    pub fn is_constant(&self) -> bool {
+        self.iv.is_empty() && self.params.is_empty() && self.cross.is_empty()
+    }
+
+    pub fn as_constant(&self) -> Option<i64> {
+        self.is_constant().then_some(self.k)
+    }
+
+    /// Free of induction variables (a pure parameter expression)?
+    pub fn is_param_only(&self) -> bool {
+        self.iv.is_empty() && self.cross.is_empty()
+    }
+
+    /// Free of parameters (ivs and constant only)?
+    pub fn is_iv_only(&self) -> bool {
+        self.params.is_empty() && self.cross.is_empty()
+    }
+
+    pub fn add(&self, other: &Affine) -> Affine {
+        let mut r = self.clone();
+        r.k += other.k;
+        for (&d, &c) in &other.iv {
+            *r.iv.entry(d).or_insert(0) += c;
+        }
+        for (&p, &c) in &other.params {
+            *r.params.entry(p).or_insert(0) += c;
+        }
+        for (&dp, &c) in &other.cross {
+            *r.cross.entry(dp).or_insert(0) += c;
+        }
+        r.normalize()
+    }
+
+    pub fn sub(&self, other: &Affine) -> Affine {
+        self.add(&other.scale(-1))
+    }
+
+    pub fn scale(&self, c: i64) -> Affine {
+        Affine {
+            k: self.k * c,
+            iv: self.iv.iter().map(|(&d, &v)| (d, v * c)).collect(),
+            params: self.params.iter().map(|(&p, &v)| (p, v * c)).collect(),
+            cross: self.cross.iter().map(|(&dp, &v)| (dp, v * c)).collect(),
+        }
+        .normalize()
+    }
+
+    /// Product. Defined when one side is constant, or when one side is a
+    /// pure iv form and the other a pure parameter form (producing cross
+    /// terms). Anything higher-order returns `None` (non-affine).
+    pub fn mul(&self, other: &Affine) -> Option<Affine> {
+        if let Some(c) = other.as_constant() {
+            return Some(self.scale(c));
+        }
+        if let Some(c) = self.as_constant() {
+            return Some(other.scale(c));
+        }
+        let (ivs, pars) = if self.is_iv_only() && other.is_param_only() {
+            (self, other)
+        } else if other.is_iv_only() && self.is_param_only() {
+            (other, self)
+        } else {
+            return None;
+        };
+        // (k1 + Σ c_d iv_d) * (k2 + Σ c_p p) =
+        //   k1k2 + Σ k2·c_d·iv_d + Σ k1·c_p·p + Σ c_d·c_p·iv_d·p
+        let mut r = Affine::constant(ivs.k * pars.k);
+        for (&d, &cd) in &ivs.iv {
+            *r.iv.entry(d).or_insert(0) += cd * pars.k;
+            for (&p, &cp) in &pars.params {
+                *r.cross.entry((d, p)).or_insert(0) += cd * cp;
+            }
+        }
+        for (&p, &cp) in &pars.params {
+            *r.params.entry(p).or_insert(0) += cp * ivs.k;
+        }
+        Some(r.normalize())
+    }
+
+    fn normalize(mut self) -> Affine {
+        self.iv.retain(|_, c| *c != 0);
+        self.params.retain(|_, c| *c != 0);
+        self.cross.retain(|_, c| *c != 0);
+        self
+    }
+
+    /// Does loop dimension `d` influence this expression at all?
+    /// (cross terms count: their parameter strides are nonzero at run
+    /// time for any non-degenerate array).
+    pub fn depends_on_iv(&self, d: usize) -> bool {
+        self.iv.contains_key(&d) || self.cross.keys().any(|&(dd, _)| dd == d)
+    }
+
+    /// Plain (parameter-free) coefficient of dimension `d`.
+    pub fn iv_coeff(&self, d: usize) -> i64 {
+        self.iv.get(&d).copied().unwrap_or(0)
+    }
+
+    /// Substitute `iv_d := iv_d + delta` (unrolling shift).
+    pub fn shift_iv(&self, d: usize, delta: i64) -> Affine {
+        let mut r = self.clone();
+        r.k += self.iv_coeff(d) * delta;
+        for (&(dd, p), &c) in &self.cross {
+            if dd == d {
+                *r.params.entry(p).or_insert(0) += c * delta;
+            }
+        }
+        r.normalize()
+    }
+
+    /// Evaluate with concrete iv values and parameter values.
+    pub fn eval(&self, ivs: &[i64], params: &dyn Fn(Reg) -> i64) -> i64 {
+        let mut v = self.k;
+        for (&d, &c) in &self.iv {
+            v += c * ivs.get(d).copied().unwrap_or(0);
+        }
+        for (&p, &c) in &self.params {
+            v += c * params(p);
+        }
+        for (&(d, p), &c) in &self.cross {
+            v += c * ivs.get(d).copied().unwrap_or(0) * params(p);
+        }
+        v
+    }
+}
+
+impl fmt::Display for Affine {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let mut first = true;
+        let mut term = |f: &mut fmt::Formatter<'_>, s: String| -> fmt::Result {
+            if !first {
+                write!(f, " + ")?;
+            }
+            first = false;
+            write!(f, "{s}")
+        };
+        if self.k != 0 || (self.iv.is_empty() && self.params.is_empty() && self.cross.is_empty())
+        {
+            term(f, format!("{}", self.k))?;
+        }
+        for (&d, &c) in &self.iv {
+            term(f, if c == 1 { format!("i{d}") } else { format!("{c}*i{d}") })?;
+        }
+        for (&p, &c) in &self.params {
+            term(f, if c == 1 { format!("{p}") } else { format!("{c}*{p}") })?;
+        }
+        for (&(d, p), &c) in &self.cross {
+            term(
+                f,
+                if c == 1 { format!("i{d}*{p}") } else { format!("{c}*i{d}*{p}") },
+            )?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arithmetic() {
+        let a = Affine::iv(0).scale(3).add(&Affine::constant(5)); // 3*i0 + 5
+        let b = Affine::iv(1).add(&Affine::constant(-2)); // i1 - 2
+        let s = a.add(&b);
+        assert_eq!(s.k, 3);
+        assert_eq!(s.iv_coeff(0), 3);
+        assert_eq!(s.iv_coeff(1), 1);
+        let d = s.sub(&b);
+        assert_eq!(d, a);
+    }
+
+    #[test]
+    fn parametric_stride_product() {
+        // i*n + j  — the canonical 2-D subscript.
+        let n = Reg(4);
+        let sub = Affine::iv(0).mul(&Affine::param(n)).unwrap().add(&Affine::iv(1));
+        assert!(sub.depends_on_iv(0));
+        assert!(sub.depends_on_iv(1));
+        assert_eq!(sub.iv_coeff(1), 1);
+        let v = sub.eval(&[2, 3], &|_| 10);
+        assert_eq!(v, 23);
+    }
+
+    #[test]
+    fn higher_order_rejected() {
+        let a = Affine::iv(0);
+        assert!(a.mul(&a).is_none()); // iv*iv
+        let n = Reg(1);
+        let p = Affine::param(n);
+        assert!(p.mul(&p).is_none()); // param*param
+        // (i*n) * j would be cubic-ish: iv_only? lhs has cross -> neither
+        let i_n = Affine::iv(0).mul(&p).unwrap();
+        assert!(i_n.mul(&Affine::iv(1)).is_none());
+    }
+
+    #[test]
+    fn shift_for_unroll_with_cross_terms() {
+        // (i*n + j) shifted in dim 1 by 3 -> i*n + j + 3
+        let n = Reg(4);
+        let sub = Affine::iv(0).mul(&Affine::param(n)).unwrap().add(&Affine::iv(1));
+        let s = sub.shift_iv(1, 3);
+        assert_eq!(s.k, 3);
+        // (i*n) shifted in dim 0 by 2 -> i*n + 2n
+        let s2 = Affine::iv(0).mul(&Affine::param(n)).unwrap().shift_iv(0, 2);
+        assert_eq!(s2.params.get(&n), Some(&2));
+        assert_eq!(s2.eval(&[1], &|_| 10), 30);
+    }
+
+    #[test]
+    fn eval_with_params() {
+        let n = Reg(1);
+        let a = Affine::iv(0)
+            .add(&Affine::iv(1))
+            .add(&Affine::param(n).mul(&Affine::constant(10)).unwrap());
+        let v = a.eval(&[2, 3], &|r| if r == n { 7 } else { 0 });
+        assert_eq!(v, 2 + 3 + 70);
+    }
+
+    #[test]
+    fn zero_coeffs_normalized() {
+        let a = Affine::iv(0).sub(&Affine::iv(0));
+        assert!(a.is_constant());
+        assert_eq!(a.as_constant(), Some(0));
+    }
+}

@@ -1,0 +1,6 @@
+//! Analysis phase (paper §III): SCoP detection, affine machinery and the
+//! DFE legality screen driving Table I.
+pub mod affine;
+pub mod scop;
+pub use affine::Affine;
+pub use scop::{analyze_function, FuncAnalysis, LoopInfo, ScopInfo, ScopReject};

@@ -1,0 +1,615 @@
+//! SCoP detection (paper §III: "a custom-made automatic parallelizer
+//! inspired by Polly").
+//!
+//! The detector abstract-interprets a function's CFG: it tracks an affine
+//! environment (register → affine expression over enclosing induction
+//! variables and parameters), recognizes canonical counted loops
+//! (preheader `mov iv, lb; br header` / header `cmp.lt iv, ub; condbr`),
+//! recurses into nests, and records every *innermost* loop whose bounds
+//! are affine as a SCoP candidate. Rejections are classified the way
+//! Table I reports them:
+//!   * no/non-canonical loops or non-affine bounds/subscripts → "no SCoP"
+//!     (`nussinov`, `floyd-warshall`);
+//!   * control-flow diamonds whose arms have side effects cannot be
+//!     if-converted to MUX nodes → `BadMux` (the paper's two "problem
+//!     managing MUX nodes" failures);
+//!   * calls/syscalls in a body poison the region (no optimization
+//!     opportunity, §III).
+
+use std::collections::{HashMap, HashSet};
+use std::time::{Duration, Instant};
+
+use crate::ir::func::Function;
+use crate::ir::instr::{BinOp, BlockId, CmpPred, Inst, Reg, Term, Ty};
+
+use super::affine::Affine;
+
+/// One loop of an enclosing nest, outermost first.
+#[derive(Clone, Debug)]
+pub struct LoopInfo {
+    pub iv: Reg,
+    pub lb: Affine,
+    pub ub: Affine,
+    pub header: BlockId,
+    pub body_entry: BlockId,
+    pub depth: usize,
+}
+
+/// An innermost-loop SCoP candidate.
+#[derive(Clone, Debug)]
+pub struct ScopInfo {
+    pub func_name: String,
+    /// Enclosing nest including the innermost loop (last element).
+    pub nest: Vec<LoopInfo>,
+    /// Entry block of the innermost body.
+    pub body_entry: BlockId,
+    /// Innermost header (blocks branching back to it are latches).
+    pub header: BlockId,
+}
+
+impl ScopInfo {
+    pub fn innermost(&self) -> &LoopInfo {
+        self.nest.last().expect("nest non-empty")
+    }
+
+    pub fn depth(&self) -> usize {
+        self.nest.len()
+    }
+}
+
+/// Why a region failed SCoP detection / offload pre-screening.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ScopReject {
+    NoLoops,
+    NonCanonical(&'static str),
+    NonAffineBound,
+    HasCall,
+    HasSyscall,
+    /// Diamond with side-effecting arms: cannot if-convert to MUX.
+    BadMux,
+}
+
+impl ScopReject {
+    /// Table-I style label.
+    pub fn label(&self) -> &'static str {
+        match self {
+            ScopReject::NoLoops | ScopReject::NonCanonical(_) | ScopReject::NonAffineBound => {
+                "no SCoP"
+            }
+            ScopReject::HasCall | ScopReject::HasSyscall => "calls/syscalls",
+            ScopReject::BadMux => "MUX handling",
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct FuncAnalysis {
+    pub scops: Vec<ScopInfo>,
+    pub rejects: Vec<ScopReject>,
+    pub elapsed: Duration,
+}
+
+impl FuncAnalysis {
+    pub fn detected(&self) -> bool {
+        !self.scops.is_empty()
+    }
+}
+
+/// Affine environment: `None` = known non-affine.
+type Env = HashMap<Reg, Option<Affine>>;
+
+struct Parser<'a> {
+    f: &'a Function,
+    scops: Vec<ScopInfo>,
+    rejects: Vec<ScopReject>,
+    /// Written-register sets per block (for post-loop kills).
+    writes: Vec<HashSet<Reg>>,
+}
+
+/// What a region walk stopped on.
+enum StopKind {
+    /// Reached a block ending `br <latch_header>`.
+    Latch(BlockId),
+    /// Function return.
+    Ret,
+}
+
+impl<'a> Parser<'a> {
+    fn new(f: &'a Function) -> Parser<'a> {
+        let writes = f
+            .blocks
+            .iter()
+            .map(|b| b.insts.iter().filter_map(|i| i.dst()).collect::<HashSet<_>>())
+            .collect();
+        Parser { f, scops: Vec::new(), rejects: Vec::new(), writes }
+    }
+
+    fn resolve(env: &Env, r: Reg) -> Option<Affine> {
+        env.get(&r).cloned().flatten()
+    }
+
+    /// Interpret one instruction into the affine env. Returns whether the
+    /// instruction is a call / syscall (poison markers handled by caller).
+    fn step_inst(env: &mut Env, inst: &Inst) {
+        match inst {
+            Inst::ConstI32 { dst, v } => {
+                env.insert(*dst, Some(Affine::constant(*v as i64)));
+            }
+            Inst::Mov { dst, a } => {
+                let v = Self::resolve(env, *a);
+                env.insert(*dst, v);
+            }
+            Inst::Bin { dst, op, ty: Ty::I32, a, b } => {
+                let va = Self::resolve(env, *a);
+                let vb = Self::resolve(env, *b);
+                let r = match (va, vb, op) {
+                    (Some(x), Some(y), BinOp::Add) => Some(x.add(&y)),
+                    (Some(x), Some(y), BinOp::Sub) => Some(x.sub(&y)),
+                    (Some(x), Some(y), BinOp::Mul) => x.mul(&y),
+                    (Some(x), Some(y), BinOp::Shl) => {
+                        y.as_constant().filter(|s| (0..31).contains(s)).map(|s| x.scale(1 << s))
+                    }
+                    _ => None,
+                };
+                env.insert(*dst, r);
+            }
+            _ => {
+                if let Some(dst) = inst.dst() {
+                    env.insert(dst, None);
+                }
+            }
+        }
+    }
+
+    /// Is `h` shaped like a canonical loop header? Returns (iv, ub_reg).
+    fn header_shape(&self, h: BlockId) -> Option<(Reg, Reg)> {
+        let block = self.f.block(h);
+        let Some(Term::CondBr { c, .. }) = &block.term else { return None };
+        let Some(Inst::Cmp { dst, pred: CmpPred::Lt, ty: Ty::I32, a, b }) = block.insts.last()
+        else {
+            return None;
+        };
+        (dst == c).then_some((*a, *b))
+    }
+
+    /// Walk a straight-line-with-diamonds-and-loops region starting at
+    /// `entry`, stopping at a latch branch to `stop_header` (if inside a
+    /// loop) or at `ret`. Returns rejection on malformed shapes.
+    fn parse_region(
+        &mut self,
+        entry: BlockId,
+        stop_header: Option<BlockId>,
+        env: &mut Env,
+        nest: &mut Vec<LoopInfo>,
+        contains_loop: &mut bool,
+        poison: &mut Option<ScopReject>,
+    ) -> Result<StopKind, ScopReject> {
+        let mut cur = entry;
+        let mut guard = 0usize;
+        loop {
+            guard += 1;
+            if guard > self.f.blocks.len() * 4 {
+                return Err(ScopReject::NonCanonical("region does not terminate"));
+            }
+            let block = self.f.block(cur).clone();
+            for inst in &block.insts {
+                match inst {
+                    Inst::Call { .. } => *poison = Some(ScopReject::HasCall),
+                    Inst::Syscall { .. } => *poison = Some(ScopReject::HasSyscall),
+                    _ => {}
+                }
+                Self::step_inst(env, inst);
+            }
+            match block.term.clone().ok_or(ScopReject::NonCanonical("unterminated"))? {
+                Term::Ret(_) => return Ok(StopKind::Ret),
+                Term::Br(next) => {
+                    if Some(next) == stop_header {
+                        return Ok(StopKind::Latch(cur));
+                    }
+                    if let Some((iv, ub_reg)) = self.header_shape(next) {
+                        // Canonical loop: iv must be the dst of the last
+                        // Mov in the current (preheader) block.
+                        let lb = match block.insts.iter().rev().find_map(|i| match i {
+                            Inst::Mov { dst, a } if *dst == iv => Some(*a),
+                            _ => None,
+                        }) {
+                            Some(lb_reg) => Self::resolve(env, lb_reg),
+                            None => None,
+                        };
+                        let ub = Self::resolve(env, ub_reg);
+                        let (Some(lb), Some(ub)) = (lb, ub) else {
+                            // Bounds not affine: not a SCoP; skip the loop
+                            // body entirely by following the exit edge.
+                            self.rejects.push(ScopReject::NonAffineBound);
+                            let Term::CondBr { f: exit, t: body, .. } =
+                                self.f.block(next).term.clone().unwrap()
+                            else {
+                                unreachable!("header_shape checked");
+                            };
+                            // Kill everything written in the (skipped)
+                            // loop; conservative: kill all writes in all
+                            // blocks reachable before exit.
+                            self.kill_reachable_writes(body, next, env);
+                            env.insert(iv, None);
+                            cur = exit;
+                            *contains_loop = true;
+                            continue;
+                        };
+                        let depth = nest.len();
+                        let Term::CondBr { t: body_entry, f: exit, .. } =
+                            self.f.block(next).term.clone().unwrap()
+                        else {
+                            unreachable!();
+                        };
+                        let info = LoopInfo {
+                            iv,
+                            lb,
+                            ub,
+                            header: next,
+                            body_entry,
+                            depth,
+                        };
+                        // Parse the body with iv bound to the symbolic dim.
+                        let mut body_env = env.clone();
+                        body_env.insert(iv, Some(Affine::iv(depth)));
+                        nest.push(info);
+                        let mut inner_has_loop = false;
+                        let mut inner_poison = None;
+                        let body_result = self.parse_region(
+                            body_entry,
+                            Some(next),
+                            &mut body_env,
+                            nest,
+                            &mut inner_has_loop,
+                            &mut inner_poison,
+                        );
+                        match body_result {
+                            Ok(StopKind::Latch(latch)) => {
+                                self.validate_latch(latch, iv)?;
+                                if !inner_has_loop {
+                                    // Innermost: record as SCoP candidate
+                                    // unless poisoned.
+                                    match inner_poison {
+                                        None => self.scops.push(ScopInfo {
+                                            func_name: self.f.name.clone(),
+                                            nest: nest.clone(),
+                                            body_entry,
+                                            header: next,
+                                        }),
+                                        Some(p) => self.rejects.push(p),
+                                    }
+                                } else if let Some(p) = inner_poison {
+                                    self.rejects.push(p);
+                                }
+                            }
+                            Ok(StopKind::Ret) => {
+                                return Err(ScopReject::NonCanonical("ret inside loop"))
+                            }
+                            Err(e) => {
+                                nest.pop();
+                                return Err(e);
+                            }
+                        }
+                        nest.pop();
+                        *contains_loop = true;
+                        // Post-loop env: kill iv and body writes.
+                        env.insert(iv, None);
+                        self.kill_reachable_writes(body_entry, next, env);
+                        cur = exit;
+                        continue;
+                    }
+                    cur = next;
+                }
+                Term::CondBr { c, t, f } => {
+                    // Not a loop header here: expect an if-conversion
+                    // diamond with single-block arms joining immediately.
+                    let join_t = self.single_br_target(t);
+                    let join_f = self.single_br_target(f);
+                    let _ = c;
+                    match (join_t, join_f) {
+                        (Some(jt), Some(jf)) if jt == jf => {
+                            // Arms with side effects cannot become MUXes.
+                            for arm in [t, f] {
+                                for inst in &self.f.block(arm).insts {
+                                    if matches!(
+                                        inst,
+                                        Inst::Store { .. } | Inst::Call { .. } | Inst::Syscall { .. }
+                                    ) {
+                                        *poison = Some(ScopReject::BadMux);
+                                    }
+                                }
+                            }
+                            // Merge environments (non-equal values -> mux
+                            // -> non-affine as subscripts).
+                            let mut env_t = env.clone();
+                            for i in &self.f.block(t).insts {
+                                Self::step_inst(&mut env_t, i);
+                            }
+                            let mut env_f = env.clone();
+                            for i in &self.f.block(f).insts {
+                                Self::step_inst(&mut env_f, i);
+                            }
+                            let keys: HashSet<Reg> =
+                                env_t.keys().chain(env_f.keys()).copied().collect();
+                            for k in keys {
+                                let vt = Self::resolve(&env_t, k);
+                                let vf = Self::resolve(&env_f, k);
+                                env.insert(k, if vt == vf { vt } else { None });
+                            }
+                            cur = jt;
+                        }
+                        _ => {
+                            return Err(ScopReject::NonCanonical(
+                                "unstructured control flow",
+                            ))
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// If `b` is a single block ending in `br x`, return `x`.
+    fn single_br_target(&self, b: BlockId) -> Option<BlockId> {
+        match &self.f.block(b).term {
+            Some(Term::Br(x)) => Some(*x),
+            _ => None,
+        }
+    }
+
+    /// Latch must end `const 1; add next, iv, 1; mov iv, next`.
+    fn validate_latch(&self, latch: BlockId, iv: Reg) -> Result<(), ScopReject> {
+        let insts = &self.f.block(latch).insts;
+        let n = insts.len();
+        if n < 3 {
+            return Err(ScopReject::NonCanonical("latch too short"));
+        }
+        let ok = matches!(
+            (&insts[n - 3], &insts[n - 2], &insts[n - 1]),
+            (
+                Inst::ConstI32 { v: 1, dst: one },
+                Inst::Bin { op: BinOp::Add, a, b, dst: next1, .. },
+                Inst::Mov { dst, a: next2 },
+            ) if *dst == iv && *a == iv && b == one && next1 == next2
+        );
+        if ok {
+            Ok(())
+        } else {
+            Err(ScopReject::NonCanonical("non-unit loop step"))
+        }
+    }
+
+    /// Conservatively kill every register written in blocks reachable from
+    /// `start` without passing through `stop`.
+    fn kill_reachable_writes(&self, start: BlockId, stop: BlockId, env: &mut Env) {
+        let mut seen = HashSet::new();
+        let mut stack = vec![start];
+        while let Some(b) = stack.pop() {
+            if b == stop || !seen.insert(b) {
+                continue;
+            }
+            for r in &self.writes[b.0 as usize] {
+                env.insert(*r, None);
+            }
+            stack.extend(self.f.successors(b));
+        }
+    }
+}
+
+/// Analyze one function: find innermost-loop SCoPs, classify rejections,
+/// measure the analysis time (Table I's last column).
+pub fn analyze_function(f: &Function) -> FuncAnalysis {
+    let t0 = Instant::now();
+    let mut parser = Parser::new(f);
+    let mut env: Env = HashMap::new();
+    for (i, p) in f.params.iter().enumerate() {
+        if p.ty == Ty::I32 {
+            env.insert(Reg(i as u32), Some(Affine::param(Reg(i as u32))));
+        }
+    }
+    let mut nest = Vec::new();
+    let mut has_loop = false;
+    let mut poison = None;
+    let result = parser.parse_region(f.entry, None, &mut env, &mut nest, &mut has_loop, &mut poison);
+    let mut scops = std::mem::take(&mut parser.scops);
+    let mut rejects = std::mem::take(&mut parser.rejects);
+    match result {
+        Ok(_) => {
+            if !has_loop && scops.is_empty() {
+                rejects.push(ScopReject::NoLoops);
+            }
+        }
+        Err(e) => {
+            scops.clear();
+            rejects.push(e);
+        }
+    }
+    FuncAnalysis { scops, rejects, elapsed: t0.elapsed() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::func::FuncBuilder;
+    use crate::ir::instr::Ty;
+
+    fn fig2_func() -> Function {
+        let mut b = FuncBuilder::new(
+            "fig2",
+            &[("C", Ty::Ptr), ("A", Ty::Ptr), ("B", Ty::Ptr), ("n", Ty::I32)],
+        );
+        let (c, a, bb, n) = (b.param(0), b.param(1), b.param(2), b.param(3));
+        let zero = b.const_i32(0);
+        b.counted_loop(zero, n, |b, i| {
+            let av = b.load(Ty::I32, a, i);
+            let bv = b.load(Ty::I32, bb, i);
+            let c3 = b.const_i32(3);
+            let t = b.mul(bv, c3);
+            let s = b.add(av, t);
+            let c1 = b.const_i32(1);
+            let r = b.add(s, c1);
+            b.store(Ty::I32, c, i, r);
+        });
+        b.ret(None)
+    }
+
+    #[test]
+    fn detects_single_loop_scop() {
+        let f = fig2_func();
+        let an = analyze_function(&f);
+        assert!(an.detected(), "{:?}", an.rejects);
+        assert_eq!(an.scops.len(), 1);
+        let s = &an.scops[0];
+        assert_eq!(s.depth(), 1);
+        assert_eq!(s.innermost().lb.as_constant(), Some(0));
+        assert!(s.innermost().ub.params.len() == 1);
+    }
+
+    #[test]
+    fn detects_nested_scop_with_inner_only() {
+        // for i in 0..n { for j in 0..m { A[i*m+j] += 1 } }
+        let mut b = FuncBuilder::new(
+            "nest",
+            &[("A", Ty::Ptr), ("n", Ty::I32), ("m", Ty::I32)],
+        );
+        let (a, n, m) = (b.param(0), b.param(1), b.param(2));
+        let zero = b.const_i32(0);
+        b.counted_loop(zero, n, |b, i| {
+            let z2 = b.const_i32(0);
+            b.counted_loop(z2, m, |b, j| {
+                let row = b.mul(i, m);
+                let idx = b.add(row, j);
+                let v = b.load(Ty::I32, a, idx);
+                let one = b.const_i32(1);
+                let w = b.add(v, one);
+                b.store(Ty::I32, a, idx, w);
+            });
+        });
+        let f = b.ret(None);
+        let an = analyze_function(&f);
+        assert_eq!(an.scops.len(), 1, "{:?}", an.rejects);
+        assert_eq!(an.scops[0].depth(), 2);
+    }
+
+    #[test]
+    fn two_sequential_loops_two_scops() {
+        let mut b = FuncBuilder::new("seq", &[("A", Ty::Ptr), ("n", Ty::I32)]);
+        let (a, n) = (b.param(0), b.param(1));
+        for _ in 0..2 {
+            let zero = b.const_i32(0);
+            b.counted_loop(zero, n, |b, i| {
+                let v = b.load(Ty::I32, a, i);
+                let w = b.add(v, v);
+                b.store(Ty::I32, a, i, w);
+            });
+        }
+        let f = b.ret(None);
+        let an = analyze_function(&f);
+        assert_eq!(an.scops.len(), 2);
+    }
+
+    #[test]
+    fn data_dependent_bound_rejected() {
+        // ub loaded from memory -> non-affine bound -> no SCoP.
+        let mut b = FuncBuilder::new("dd", &[("A", Ty::Ptr)]);
+        let a = b.param(0);
+        let zero = b.const_i32(0);
+        let ub = b.load(Ty::I32, a, zero);
+        let z = b.const_i32(0);
+        b.counted_loop(z, ub, |b, i| {
+            let v = b.load(Ty::I32, a, i);
+            b.store(Ty::I32, a, i, v);
+        });
+        let f = b.ret(None);
+        let an = analyze_function(&f);
+        assert!(!an.detected());
+        assert!(an.rejects.contains(&ScopReject::NonAffineBound), "{:?}", an.rejects);
+    }
+
+    #[test]
+    fn call_poisons_scop() {
+        use crate::ir::instr::Inst;
+        let mut b = FuncBuilder::new("c", &[("n", Ty::I32)]);
+        let n = b.param(0);
+        let zero = b.const_i32(0);
+        b.counted_loop(zero, n, |b, _| {
+            b.push(Inst::Call { dst: None, callee: "x".into(), args: vec![] });
+        });
+        let f = b.ret(None);
+        let an = analyze_function(&f);
+        assert!(!an.detected());
+        assert!(an.rejects.contains(&ScopReject::HasCall));
+    }
+
+    #[test]
+    fn diamond_with_store_is_bad_mux() {
+        use crate::ir::instr::{CmpPred, Term};
+        let mut b = FuncBuilder::new("dm", &[("A", Ty::Ptr), ("n", Ty::I32)]);
+        let (a, n) = (b.param(0), b.param(1));
+        let zero = b.const_i32(0);
+        b.counted_loop(zero, n, |b, i| {
+            let v = b.load(Ty::I32, a, i);
+            let c = b.cmp(CmpPred::Gt, v, zero);
+            let then_bb = b.new_block();
+            let else_bb = b.new_block();
+            let join = b.new_block();
+            b.terminate(Term::CondBr { c, t: then_bb, f: else_bb });
+            b.switch_to(then_bb);
+            b.store(Ty::I32, a, i, v); // side effect in arm
+            b.terminate(Term::Br(join));
+            b.switch_to(else_bb);
+            b.terminate(Term::Br(join));
+            b.switch_to(join);
+        });
+        let f = b.ret(None);
+        let an = analyze_function(&f);
+        assert!(!an.detected());
+        assert!(an.rejects.contains(&ScopReject::BadMux), "{:?}", an.rejects);
+    }
+
+    #[test]
+    fn pure_diamond_is_fine() {
+        use crate::ir::instr::{CmpPred, Term};
+        let mut b = FuncBuilder::new("pd", &[("A", Ty::Ptr), ("n", Ty::I32)]);
+        let (a, n) = (b.param(0), b.param(1));
+        let zero = b.const_i32(0);
+        b.counted_loop(zero, n, |b, i| {
+            let v = b.load(Ty::I32, a, i);
+            let c = b.cmp(CmpPred::Gt, v, zero);
+            let r = b.fresh();
+            let then_bb = b.new_block();
+            let else_bb = b.new_block();
+            let join = b.new_block();
+            b.terminate(Term::CondBr { c, t: then_bb, f: else_bb });
+            b.switch_to(then_bb);
+            let t1 = b.add(v, v);
+            b.mov_into(r, t1);
+            b.terminate(Term::Br(join));
+            b.switch_to(else_bb);
+            let t2 = b.sub(v, v);
+            b.mov_into(r, t2);
+            b.terminate(Term::Br(join));
+            b.switch_to(join);
+            b.store(Ty::I32, a, i, r);
+        });
+        let f = b.ret(None);
+        let an = analyze_function(&f);
+        assert!(an.detected(), "{:?}", an.rejects);
+    }
+
+    #[test]
+    fn straightline_no_loops() {
+        let mut b = FuncBuilder::new("s", &[]);
+        let _ = b.const_i32(1);
+        let f = b.ret(None);
+        let an = analyze_function(&f);
+        assert!(!an.detected());
+        assert_eq!(an.rejects, vec![ScopReject::NoLoops]);
+    }
+
+    #[test]
+    fn analysis_time_recorded() {
+        let an = analyze_function(&fig2_func());
+        assert!(an.elapsed.as_nanos() > 0);
+    }
+}

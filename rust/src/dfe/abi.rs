@@ -1,0 +1,65 @@
+//! Compile-time ABI shared with the AOT artifacts (python/compile/model.py).
+//!
+//! Every artifact variant shares the constant-pool / input / output widths
+//! and the batch size; only the cell count differs. The plane-slot layout:
+//!
+//! ```text
+//! slot 0                      constant zero
+//! slots 1 ..= N_CONSTS        constant pool
+//! next N_INPUTS slots         external inputs
+//! next n_cells slots          cell results, schedule order
+//! ```
+
+/// Constant-pool width (paper: constant-masked inputs, Fig 2 green boxes).
+pub const N_CONSTS: usize = 16;
+/// Maximum external inputs per configuration.
+pub const N_INPUTS: usize = 32;
+/// Maximum external outputs per configuration.
+pub const N_OUTPUTS: usize = 8;
+/// Lanes per PJRT execution (data words per input slot per call).
+pub const BATCH: usize = 512;
+
+/// First input slot.
+pub const INPUT_BASE: usize = 1 + N_CONSTS;
+
+/// First cell-result slot.
+pub const CELL_BASE: usize = 1 + N_CONSTS + N_INPUTS;
+
+/// Plane slot of constant-pool entry `k`.
+#[inline]
+pub fn const_slot(k: usize) -> usize {
+    debug_assert!(k < N_CONSTS);
+    1 + k
+}
+
+/// Plane slot of external input `j`.
+#[inline]
+pub fn input_slot(j: usize) -> usize {
+    debug_assert!(j < N_INPUTS);
+    INPUT_BASE + j
+}
+
+/// Plane slot of cell result `i`.
+#[inline]
+pub fn cell_slot(i: usize) -> usize {
+    CELL_BASE + i
+}
+
+/// Total plane slots for an image with `n_cells` cells.
+#[inline]
+pub fn n_slots(n_cells: usize) -> usize {
+    CELL_BASE + n_cells
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layout_is_contiguous() {
+        assert_eq!(const_slot(0), 1);
+        assert_eq!(const_slot(N_CONSTS - 1) + 1, input_slot(0));
+        assert_eq!(input_slot(N_INPUTS - 1) + 1, cell_slot(0));
+        assert_eq!(n_slots(10), cell_slot(9) + 1);
+    }
+}

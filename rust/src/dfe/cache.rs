@@ -1,0 +1,164 @@
+//! Configuration cache (paper §III: "the programming details are stored in
+//! a cache for later reuse ... switch between different configurations in
+//! few milliseconds, so it makes sense to change configuration as often as
+//! needed").
+//!
+//! Keyed by a structural hash of the DFG, so a hot function re-entering
+//! the offload path skips the expensive Las-Vegas place & route entirely
+//! and pays only the (millisecond-scale) configuration switch.
+
+use std::collections::HashMap;
+use std::hash::{Hash, Hasher};
+
+use super::config::GridConfig;
+use super::image::ExecImage;
+use crate::dfg::graph::{Dfg, NodeKind};
+
+/// Structural hash of a DFG (node kinds + edges, order-sensitive — DFGs
+/// extracted from the same IR are built deterministically).
+pub fn dfg_key(dfg: &Dfg) -> u64 {
+    let mut h = std::collections::hash_map::DefaultHasher::new();
+    for node in &dfg.nodes {
+        match &node.kind {
+            NodeKind::Input(j) => (0u8, *j as i64).hash(&mut h),
+            NodeKind::Const(v) => (1u8, *v as i64).hash(&mut h),
+            NodeKind::Calc(op) => (2u8, op.code() as i64).hash(&mut h),
+            NodeKind::Output(j) => (3u8, *j as i64).hash(&mut h),
+        }
+        node.srcs.hash(&mut h);
+    }
+    h.finish()
+}
+
+/// A cached, ready-to-load configuration.
+#[derive(Clone, Debug)]
+pub struct CachedConfig {
+    pub config: GridConfig,
+    pub image: ExecImage,
+    /// Which artifact variant (grid size) it targets.
+    pub variant: String,
+}
+
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+}
+
+/// LRU cache of placed-and-routed configurations.
+pub struct ConfigCache {
+    capacity: usize,
+    map: HashMap<u64, (CachedConfig, u64)>,
+    clock: u64,
+    pub stats: CacheStats,
+}
+
+impl ConfigCache {
+    pub fn new(capacity: usize) -> ConfigCache {
+        assert!(capacity > 0);
+        ConfigCache { capacity, map: HashMap::new(), clock: 0, stats: CacheStats::default() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn get(&mut self, key: u64) -> Option<&CachedConfig> {
+        self.clock += 1;
+        let clock = self.clock;
+        match self.map.get_mut(&key) {
+            Some((cfg, stamp)) => {
+                *stamp = clock;
+                self.stats.hits += 1;
+                Some(&*cfg)
+            }
+            None => {
+                self.stats.misses += 1;
+                None
+            }
+        }
+    }
+
+    pub fn insert(&mut self, key: u64, value: CachedConfig) {
+        self.clock += 1;
+        if self.map.len() >= self.capacity && !self.map.contains_key(&key) {
+            // Evict the least recently used entry.
+            if let Some((&victim, _)) =
+                self.map.iter().min_by_key(|(_, (_, stamp))| *stamp)
+            {
+                self.map.remove(&victim);
+                self.stats.evictions += 1;
+            }
+        }
+        self.map.insert(key, (value, self.clock));
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.stats.hits + self.stats.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.stats.hits as f64 / total as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dfe::config::fig2_config;
+    use crate::dfg::graph::{fig2_dfg, listing1_dfg};
+
+    fn dummy_entry() -> CachedConfig {
+        let config = fig2_config();
+        let image = config.to_image().unwrap();
+        CachedConfig { config, image, variant: "dfe_4x4".into() }
+    }
+
+    #[test]
+    fn key_is_structural() {
+        assert_eq!(dfg_key(&fig2_dfg()), dfg_key(&fig2_dfg()));
+        assert_ne!(dfg_key(&fig2_dfg()), dfg_key(&listing1_dfg()));
+    }
+
+    #[test]
+    fn key_sensitive_to_constants() {
+        let mut g1 = fig2_dfg();
+        let g2 = fig2_dfg();
+        // Change constant 3 -> 4.
+        for n in &mut g1.nodes {
+            if n.kind == NodeKind::Const(3) {
+                n.kind = NodeKind::Const(4);
+            }
+        }
+        assert_ne!(dfg_key(&g1), dfg_key(&g2));
+    }
+
+    #[test]
+    fn lru_eviction() {
+        let mut c = ConfigCache::new(2);
+        c.insert(1, dummy_entry());
+        c.insert(2, dummy_entry());
+        assert!(c.get(1).is_some()); // 1 now more recent than 2
+        c.insert(3, dummy_entry()); // evicts 2
+        assert!(c.get(2).is_none());
+        assert!(c.get(1).is_some());
+        assert!(c.get(3).is_some());
+        assert_eq!(c.stats.evictions, 1);
+    }
+
+    #[test]
+    fn hit_rate_accounting() {
+        let mut c = ConfigCache::new(4);
+        assert!(c.get(9).is_none());
+        c.insert(9, dummy_entry());
+        assert!(c.get(9).is_some());
+        assert!(c.get(9).is_some());
+        assert!((c.hit_rate() - 2.0 / 3.0).abs() < 1e-12);
+    }
+}

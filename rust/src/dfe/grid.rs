@@ -1,0 +1,221 @@
+//! DFE overlay topology (paper §III-A, Fig 3).
+//!
+//! A parametric `rows x cols` matrix of cells in a Manhattan topology.
+//! Each cell exposes four inputs and four outputs (N/E/S/W); inside the
+//! cell a functional unit takes two operands plus a selection input, and
+//! each cell output can be driven by any cell input (pass-through routing)
+//! or by the FU result — a cell can serve "as an operator, as a routing
+//! resource, or both". Border faces are the external I/O interfaces; their
+//! count equals the grid perimeter, which is why the placer biases I/O
+//! nodes toward the border (§III-B).
+
+use std::fmt;
+
+/// Cardinal direction / cell face.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Dir {
+    N = 0,
+    E = 1,
+    S = 2,
+    W = 3,
+}
+
+pub const DIRS: [Dir; 4] = [Dir::N, Dir::E, Dir::S, Dir::W];
+
+impl Dir {
+    pub fn opposite(self) -> Dir {
+        match self {
+            Dir::N => Dir::S,
+            Dir::E => Dir::W,
+            Dir::S => Dir::N,
+            Dir::W => Dir::E,
+        }
+    }
+
+    pub fn index(self) -> usize {
+        self as usize
+    }
+
+    pub fn from_index(i: usize) -> Dir {
+        DIRS[i]
+    }
+}
+
+impl fmt::Display for Dir {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            Dir::N => "N",
+            Dir::E => "E",
+            Dir::S => "S",
+            Dir::W => "W",
+        })
+    }
+}
+
+/// Cell position (row 0 at the top).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct CellCoord {
+    pub r: usize,
+    pub c: usize,
+}
+
+impl CellCoord {
+    pub fn new(r: usize, c: usize) -> CellCoord {
+        CellCoord { r, c }
+    }
+
+    /// Manhattan distance.
+    pub fn dist(self, other: CellCoord) -> usize {
+        self.r.abs_diff(other.r) + self.c.abs_diff(other.c)
+    }
+}
+
+impl fmt::Display for CellCoord {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "({},{})", self.r, self.c)
+    }
+}
+
+/// A directed port on the fabric: the input or output face of a cell.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Port {
+    In(CellCoord, Dir),
+    Out(CellCoord, Dir),
+}
+
+/// Grid geometry (no configuration — see [`super::config::GridConfig`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Grid {
+    pub rows: usize,
+    pub cols: usize,
+}
+
+impl Grid {
+    pub fn new(rows: usize, cols: usize) -> Grid {
+        assert!(rows > 0 && cols > 0, "grid must be non-empty");
+        Grid { rows, cols }
+    }
+
+    pub fn n_cells(self) -> usize {
+        self.rows * self.cols
+    }
+
+    pub fn contains(self, p: CellCoord) -> bool {
+        p.r < self.rows && p.c < self.cols
+    }
+
+    pub fn index(self, p: CellCoord) -> usize {
+        debug_assert!(self.contains(p));
+        p.r * self.cols + p.c
+    }
+
+    pub fn coord(self, idx: usize) -> CellCoord {
+        debug_assert!(idx < self.n_cells());
+        CellCoord::new(idx / self.cols, idx % self.cols)
+    }
+
+    pub fn center(self) -> (f64, f64) {
+        ((self.rows as f64 - 1.0) / 2.0, (self.cols as f64 - 1.0) / 2.0)
+    }
+
+    /// Neighbor in direction `d`, if in bounds.
+    pub fn neighbor(self, p: CellCoord, d: Dir) -> Option<CellCoord> {
+        let (r, c) = (p.r as isize, p.c as isize);
+        let (nr, nc) = match d {
+            Dir::N => (r - 1, c),
+            Dir::E => (r, c + 1),
+            Dir::S => (r + 1, c),
+            Dir::W => (r, c - 1),
+        };
+        if nr < 0 || nc < 0 {
+            return None;
+        }
+        let q = CellCoord::new(nr as usize, nc as usize);
+        if self.contains(q) {
+            Some(q)
+        } else {
+            None
+        }
+    }
+
+    /// Whether face `(p, d)` is on the border (an external I/O interface).
+    pub fn is_border_face(self, p: CellCoord, d: Dir) -> bool {
+        self.contains(p) && self.neighbor(p, d).is_none()
+    }
+
+    /// All border faces, row-major then by direction — the paper's
+    /// perimeter I/O interfaces. Count = 2 * (rows + cols).
+    pub fn border_faces(self) -> Vec<(CellCoord, Dir)> {
+        let mut v = Vec::with_capacity(2 * (self.rows + self.cols));
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                let p = CellCoord::new(r, c);
+                for d in DIRS {
+                    if self.is_border_face(p, d) {
+                        v.push((p, d));
+                    }
+                }
+            }
+        }
+        v
+    }
+
+    /// Distance of a cell to the nearest border.
+    pub fn border_dist(self, p: CellCoord) -> usize {
+        p.r.min(self.rows - 1 - p.r).min(p.c).min(self.cols - 1 - p.c)
+    }
+
+    pub fn iter_coords(self) -> impl Iterator<Item = CellCoord> {
+        let cols = self.cols;
+        (0..self.n_cells()).map(move |i| CellCoord::new(i / cols, i % cols))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn neighbors_and_borders() {
+        let g = Grid::new(3, 4);
+        assert_eq!(g.n_cells(), 12);
+        let p = CellCoord::new(0, 0);
+        assert_eq!(g.neighbor(p, Dir::N), None);
+        assert_eq!(g.neighbor(p, Dir::W), None);
+        assert_eq!(g.neighbor(p, Dir::S), Some(CellCoord::new(1, 0)));
+        assert_eq!(g.neighbor(p, Dir::E), Some(CellCoord::new(0, 1)));
+        assert!(g.is_border_face(p, Dir::N));
+        assert!(!g.is_border_face(p, Dir::E));
+    }
+
+    #[test]
+    fn perimeter_count() {
+        for (r, c) in [(2, 2), (3, 4), (8, 8), (24, 18)] {
+            let g = Grid::new(r, c);
+            assert_eq!(g.border_faces().len(), 2 * (r + c), "{r}x{c}");
+        }
+    }
+
+    #[test]
+    fn index_roundtrip() {
+        let g = Grid::new(5, 7);
+        for i in 0..g.n_cells() {
+            assert_eq!(g.index(g.coord(i)), i);
+        }
+    }
+
+    #[test]
+    fn border_dist() {
+        let g = Grid::new(5, 5);
+        assert_eq!(g.border_dist(CellCoord::new(2, 2)), 2);
+        assert_eq!(g.border_dist(CellCoord::new(0, 3)), 0);
+        assert_eq!(g.border_dist(CellCoord::new(1, 3)), 1);
+    }
+
+    #[test]
+    fn opposite_involution() {
+        for d in DIRS {
+            assert_eq!(d.opposite().opposite(), d);
+        }
+    }
+}

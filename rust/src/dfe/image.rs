@@ -1,0 +1,377 @@
+//! Execution image: the topologically-linearized form of a placed DFE
+//! configuration — exactly the operand layout of the AOT artifacts.
+//!
+//! The coordinator (place & route → `crate::par`) produces a *physical*
+//! `dfe::config::GridConfig`; `GridConfig::to_image()` linearizes it into
+//! this schedule. Numerics only depend on the image; physical placement
+//! feeds the timing/resource model. `ExecImage::eval*` is the rust-side
+//! functional oracle, cross-validated against the PJRT artifact in
+//! `rust/tests/runtime_artifacts.rs`.
+
+use std::fmt;
+
+use super::abi;
+use super::opcodes::Op;
+
+/// One DFE cell in schedule order: `result = op(plane[src1], plane[src2],
+/// plane[sel])`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ImageCell {
+    pub op: Op,
+    pub src1: usize,
+    pub src2: usize,
+    pub sel: usize,
+}
+
+/// A complete execution image.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ExecImage {
+    pub cells: Vec<ImageCell>,
+    /// Constant pool (length <= abi::N_CONSTS).
+    pub consts: Vec<i32>,
+    /// Number of external inputs used (<= abi::N_INPUTS).
+    pub n_inputs: usize,
+    /// Plane slots routed to external outputs (length <= abi::N_OUTPUTS).
+    pub out_sel: Vec<usize>,
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ImageError {
+    TooManyConsts(usize),
+    TooManyInputs(usize),
+    TooManyOutputs(usize),
+    TooManyCells(usize, usize),
+    ForwardReference { cell: usize, slot: usize, limit: usize },
+    BadOutputSlot { index: usize, slot: usize },
+}
+
+impl fmt::Display for ImageError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ImageError::TooManyConsts(n) => write!(f, "{n} consts > {}", abi::N_CONSTS),
+            ImageError::TooManyInputs(n) => write!(f, "{n} inputs > {}", abi::N_INPUTS),
+            ImageError::TooManyOutputs(n) => write!(f, "{n} outputs > {}", abi::N_OUTPUTS),
+            ImageError::TooManyCells(n, max) => write!(f, "{n} cells > grid capacity {max}"),
+            ImageError::ForwardReference { cell, slot, limit } => write!(
+                f,
+                "cell {cell} reads slot {slot}, but only slots < {limit} are written"
+            ),
+            ImageError::BadOutputSlot { index, slot } => {
+                write!(f, "output {index} reads out-of-range slot {slot}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ImageError {}
+
+impl ExecImage {
+    pub fn n_cells(&self) -> usize {
+        self.cells.len()
+    }
+
+    pub fn n_slots(&self) -> usize {
+        abi::n_slots(self.cells.len())
+    }
+
+    /// Check the ABI bounds and the topological-schedule invariant the
+    /// Pallas kernel relies on (sources must already be written).
+    pub fn validate(&self) -> Result<(), ImageError> {
+        if self.consts.len() > abi::N_CONSTS {
+            return Err(ImageError::TooManyConsts(self.consts.len()));
+        }
+        if self.n_inputs > abi::N_INPUTS {
+            return Err(ImageError::TooManyInputs(self.n_inputs));
+        }
+        if self.out_sel.len() > abi::N_OUTPUTS {
+            return Err(ImageError::TooManyOutputs(self.out_sel.len()));
+        }
+        for (i, c) in self.cells.iter().enumerate() {
+            let limit = abi::CELL_BASE + i;
+            for slot in [c.src1, c.src2, c.sel] {
+                if slot >= limit {
+                    return Err(ImageError::ForwardReference { cell: i, slot, limit });
+                }
+            }
+        }
+        let n_slots = self.n_slots();
+        for (index, &slot) in self.out_sel.iter().enumerate() {
+            if slot >= n_slots {
+                return Err(ImageError::BadOutputSlot { index, slot });
+            }
+        }
+        Ok(())
+    }
+
+    /// Evaluate one lane. `inputs` supplies the external-input slots (its
+    /// length must be >= n_inputs; extras ignored). Returns one value per
+    /// out_sel entry.
+    pub fn eval_scalar(&self, inputs: &[i32]) -> Vec<i32> {
+        debug_assert!(inputs.len() >= self.n_inputs);
+        let mut plane = vec![0i32; self.n_slots()];
+        for (k, &c) in self.consts.iter().enumerate() {
+            plane[abi::const_slot(k)] = c;
+        }
+        for j in 0..self.n_inputs {
+            plane[abi::input_slot(j)] = inputs[j];
+        }
+        for (i, c) in self.cells.iter().enumerate() {
+            plane[abi::cell_slot(i)] =
+                c.op.eval(plane[c.src1], plane[c.src2], plane[c.sel]);
+        }
+        self.out_sel.iter().map(|&s| plane[s]).collect()
+    }
+
+    /// Evaluate a batch laid out slot-major (`x[j * batch + lane]`), the
+    /// artifact ABI layout. Returns outputs slot-major (`[n_out, batch]`).
+    pub fn eval_batch(&self, x: &[i32], batch: usize) -> Vec<i32> {
+        debug_assert_eq!(x.len(), self.n_inputs * batch);
+        let mut out = vec![0i32; self.out_sel.len() * batch];
+        let mut lane_in = vec![0i32; self.n_inputs];
+        for lane in 0..batch {
+            for j in 0..self.n_inputs {
+                lane_in[j] = x[j * batch + lane];
+            }
+            let r = self.eval_scalar(&lane_in);
+            for (j, v) in r.into_iter().enumerate() {
+                out[j * batch + lane] = v;
+            }
+        }
+        out
+    }
+
+    /// Operand arrays padded to a variant's fixed shapes, ready for the
+    /// PJRT call: (opcode, src1, src2, sel, consts, out_sel), each i32.
+    /// Padding cells are NOPs reading slot 0, padded outputs read slot 0.
+    pub fn padded_operands(
+        &self,
+        n_cells: usize,
+    ) -> Result<([Vec<i32>; 4], Vec<i32>, Vec<i32>), ImageError> {
+        self.validate()?;
+        if self.cells.len() > n_cells {
+            return Err(ImageError::TooManyCells(self.cells.len(), n_cells));
+        }
+        let mut opcode = vec![Op::Nop.code(); n_cells];
+        let mut src1 = vec![0i32; n_cells];
+        let mut src2 = vec![0i32; n_cells];
+        let mut sel = vec![0i32; n_cells];
+        for (i, c) in self.cells.iter().enumerate() {
+            opcode[i] = c.op.code();
+            src1[i] = c.src1 as i32;
+            src2[i] = c.src2 as i32;
+            sel[i] = c.sel as i32;
+        }
+        let mut consts = vec![0i32; abi::N_CONSTS];
+        for (k, &c) in self.consts.iter().enumerate() {
+            consts[k] = c;
+        }
+        let mut out_sel = vec![0i32; abi::N_OUTPUTS];
+        for (j, &s) in self.out_sel.iter().enumerate() {
+            out_sel[j] = s as i32;
+        }
+        Ok(([opcode, src1, src2, sel], consts, out_sel))
+    }
+}
+
+/// Convenience builder used by tests, examples and the DFG lowering.
+#[derive(Default, Debug)]
+pub struct ImageBuilder {
+    cells: Vec<ImageCell>,
+    consts: Vec<i32>,
+    n_inputs: usize,
+    out_sel: Vec<usize>,
+}
+
+impl ImageBuilder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Reserve external input `j`, returning its plane slot.
+    pub fn input(&mut self, j: usize) -> usize {
+        self.n_inputs = self.n_inputs.max(j + 1);
+        abi::input_slot(j)
+    }
+
+    /// Intern a constant in the pool, returning its plane slot. Zero maps
+    /// to the dedicated zero slot, duplicates are shared (the paper's
+    /// constant-masking reduces transfers; interning reduces pool usage).
+    pub fn constant(&mut self, v: i32) -> usize {
+        if v == 0 {
+            return 0;
+        }
+        if let Some(k) = self.consts.iter().position(|&c| c == v) {
+            return abi::const_slot(k);
+        }
+        self.consts.push(v);
+        abi::const_slot(self.consts.len() - 1)
+    }
+
+    pub fn n_consts(&self) -> usize {
+        self.consts.len()
+    }
+
+    /// Append a cell; returns the plane slot of its result.
+    pub fn cell(&mut self, op: Op, src1: usize, src2: usize) -> usize {
+        self.cell_sel(op, src1, src2, 0)
+    }
+
+    pub fn cell_sel(&mut self, op: Op, src1: usize, src2: usize, sel: usize) -> usize {
+        self.cells.push(ImageCell { op, src1, src2, sel });
+        abi::cell_slot(self.cells.len() - 1)
+    }
+
+    pub fn output(&mut self, slot: usize) -> usize {
+        self.out_sel.push(slot);
+        self.out_sel.len() - 1
+    }
+
+    pub fn build(self) -> Result<ExecImage, ImageError> {
+        let img = ExecImage {
+            cells: self.cells,
+            consts: self.consts,
+            n_inputs: self.n_inputs,
+            out_sel: self.out_sel,
+        };
+        img.validate()?;
+        Ok(img)
+    }
+}
+
+/// The Fig-2 example `C = A + 3B + 1` as an execution image (two inputs).
+pub fn fig2_image() -> ExecImage {
+    let mut b = ImageBuilder::new();
+    let a = b.input(0);
+    let bb = b.input(1);
+    let c3 = b.constant(3);
+    let c1 = b.constant(1);
+    let t0 = b.cell(Op::Mul, bb, c3);
+    let t1 = b.cell(Op::Add, a, t0);
+    let t2 = b.cell(Op::Add, t1, c1);
+    b.output(t2);
+    b.build().expect("fig2 image is valid")
+}
+
+/// Listing-1 / Fig-4: `C = (A > B) ? A + 3B + 1 : A - 5B - 2`.
+pub fn listing1_image() -> ExecImage {
+    let mut b = ImageBuilder::new();
+    let a = b.input(0);
+    let bb = b.input(1);
+    let c3 = b.constant(3);
+    let c1 = b.constant(1);
+    let c5 = b.constant(5);
+    let c2 = b.constant(2);
+    let cond = b.cell(Op::Gt, a, bb);
+    let t3b = b.cell(Op::Mul, bb, c3);
+    let then1 = b.cell(Op::Add, a, t3b);
+    let then2 = b.cell(Op::Add, then1, c1);
+    let t5b = b.cell(Op::Mul, bb, c5);
+    let else1 = b.cell(Op::Sub, a, t5b);
+    let else2 = b.cell(Op::Sub, else1, c2);
+    let r = b.cell_sel(Op::Mux, then2, else2, cond);
+    b.output(r);
+    b.build().expect("listing1 image is valid")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig2_matches_formula() {
+        let img = fig2_image();
+        for (a, b) in [(0, 0), (5, -7), (1000, 999), (i32::MAX, 1)] {
+            let got = img.eval_scalar(&[a, b]);
+            let want = a.wrapping_add(b.wrapping_mul(3)).wrapping_add(1);
+            assert_eq!(got, vec![want], "a={a} b={b}");
+        }
+    }
+
+    #[test]
+    fn listing1_matches_branch() {
+        let img = listing1_image();
+        for (a, b) in [(10, 2), (2, 10), (-5, -5), (100, -100)] {
+            let got = img.eval_scalar(&[a, b]);
+            let want = if a > b { a + 3 * b + 1 } else { a - 5 * b - 2 };
+            assert_eq!(got, vec![want], "a={a} b={b}");
+        }
+    }
+
+    #[test]
+    fn builder_interns_constants() {
+        let mut b = ImageBuilder::new();
+        assert_eq!(b.constant(0), 0);
+        let s1 = b.constant(42);
+        let s2 = b.constant(42);
+        assert_eq!(s1, s2);
+        assert_eq!(b.n_consts(), 1);
+    }
+
+    #[test]
+    fn validate_rejects_forward_reference() {
+        let img = ExecImage {
+            cells: vec![ImageCell {
+                op: Op::Add,
+                src1: abi::cell_slot(0), // own result
+                src2: 0,
+                sel: 0,
+            }],
+            consts: vec![],
+            n_inputs: 0,
+            out_sel: vec![],
+        };
+        assert!(matches!(
+            img.validate(),
+            Err(ImageError::ForwardReference { cell: 0, .. })
+        ));
+    }
+
+    #[test]
+    fn validate_rejects_bad_output() {
+        let img = ExecImage {
+            cells: vec![],
+            consts: vec![],
+            n_inputs: 0,
+            out_sel: vec![abi::CELL_BASE],
+        };
+        assert!(matches!(img.validate(), Err(ImageError::BadOutputSlot { .. })));
+    }
+
+    #[test]
+    fn eval_batch_is_slotmajor() {
+        let img = fig2_image();
+        let batch = 4;
+        // x[0][lane] = lane, x[1][lane] = 10*lane
+        let mut x = vec![0i32; 2 * batch];
+        for lane in 0..batch {
+            x[lane] = lane as i32;
+            x[batch + lane] = 10 * lane as i32;
+        }
+        let out = img.eval_batch(&x, batch);
+        for lane in 0..batch {
+            let (a, b) = (lane as i32, 10 * lane as i32);
+            assert_eq!(out[lane], a + 3 * b + 1);
+        }
+    }
+
+    #[test]
+    fn padded_operands_roundtrip() {
+        let img = fig2_image();
+        let ([opcode, src1, _, _], consts, out_sel) = img.padded_operands(16).unwrap();
+        assert_eq!(opcode.len(), 16);
+        assert_eq!(opcode[0], Op::Mul.code());
+        assert_eq!(opcode[3], Op::Nop.code());
+        assert_eq!(consts.len(), abi::N_CONSTS);
+        assert_eq!(out_sel.len(), abi::N_OUTPUTS);
+        assert_eq!(src1[1] as usize, abi::input_slot(0));
+    }
+
+    #[test]
+    fn padded_operands_rejects_overflow() {
+        let img = fig2_image();
+        assert!(matches!(
+            img.padded_operands(2),
+            Err(ImageError::TooManyCells(3, 2))
+        ));
+    }
+}

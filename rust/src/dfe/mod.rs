@@ -1,0 +1,17 @@
+//! The Data Flow Engine (paper §III-A): overlay model, configuration,
+//! functional + cycle simulation, execution images, configuration cache
+//! and the per-device resource model (Table II).
+
+pub mod abi;
+pub mod cache;
+pub mod config;
+pub mod grid;
+pub mod image;
+pub mod opcodes;
+pub mod resource;
+pub mod sim;
+
+pub use config::{CellConfig, ConfigError, FuSrc, GridConfig, IoAssign, OutSrc};
+pub use grid::{CellCoord, Dir, Grid, Port};
+pub use image::{ExecImage, ImageBuilder, ImageCell, ImageError};
+pub use opcodes::Op;

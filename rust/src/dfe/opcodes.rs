@@ -1,0 +1,162 @@
+//! DFE functional-unit opcodes — the shared ABI with the Pallas kernel.
+//!
+//! Must stay in sync with `python/compile/kernels/opcodes.py`. The paper's
+//! DFE (§III-A) supports 32-bit signed integer arithmetic, comparisons and
+//! MUX nodes; integer division/remainder and floating point are explicitly
+//! unsupported (that restriction drives the Table I outcomes).
+
+use std::fmt;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+#[repr(i32)]
+pub enum Op {
+    Nop = 0,
+    Add = 1,
+    Sub = 2,
+    Mul = 3,
+    Min = 4,
+    Max = 5,
+    Lt = 6,
+    Gt = 7,
+    Le = 8,
+    Ge = 9,
+    Eq = 10,
+    Ne = 11,
+    Mux = 12,
+    And = 13,
+    Or = 14,
+    Xor = 15,
+    Shl = 16,
+    Shr = 17,
+    Pass = 18,
+}
+
+pub const NUM_OPS: i32 = 19;
+
+pub const ALL_OPS: [Op; 19] = [
+    Op::Nop, Op::Add, Op::Sub, Op::Mul, Op::Min, Op::Max, Op::Lt, Op::Gt,
+    Op::Le, Op::Ge, Op::Eq, Op::Ne, Op::Mux, Op::And, Op::Or, Op::Xor,
+    Op::Shl, Op::Shr, Op::Pass,
+];
+
+impl Op {
+    pub fn from_i32(v: i32) -> Option<Op> {
+        ALL_OPS.get(v as usize).copied()
+    }
+
+    pub fn code(self) -> i32 {
+        self as i32
+    }
+
+    /// Whether this op reads its second operand.
+    pub fn uses_rhs(self) -> bool {
+        !matches!(self, Op::Nop | Op::Pass)
+    }
+
+    /// Whether this op reads the selection input (only MUX does).
+    pub fn uses_sel(self) -> bool {
+        matches!(self, Op::Mux)
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Op::Nop => "nop",
+            Op::Add => "add",
+            Op::Sub => "sub",
+            Op::Mul => "mul",
+            Op::Min => "min",
+            Op::Max => "max",
+            Op::Lt => "lt",
+            Op::Gt => "gt",
+            Op::Le => "le",
+            Op::Ge => "ge",
+            Op::Eq => "eq",
+            Op::Ne => "ne",
+            Op::Mux => "mux",
+            Op::And => "and",
+            Op::Or => "or",
+            Op::Xor => "xor",
+            Op::Shl => "shl",
+            Op::Shr => "shr",
+            Op::Pass => "pass",
+        }
+    }
+
+    /// Evaluate the functional unit: `op(a, b, sel)` with the paper's
+    /// 32-bit signed wrapping semantics. Single source of truth for the
+    /// rust-side DFE simulation; mirrors `dfe_grid.fu` / `ref._py_fu`.
+    #[inline]
+    pub fn eval(self, a: i32, b: i32, s: i32) -> i32 {
+        match self {
+            Op::Nop => 0,
+            Op::Add => a.wrapping_add(b),
+            Op::Sub => a.wrapping_sub(b),
+            Op::Mul => a.wrapping_mul(b),
+            Op::Min => a.min(b),
+            Op::Max => a.max(b),
+            Op::Lt => (a < b) as i32,
+            Op::Gt => (a > b) as i32,
+            Op::Le => (a <= b) as i32,
+            Op::Ge => (a >= b) as i32,
+            Op::Eq => (a == b) as i32,
+            Op::Ne => (a != b) as i32,
+            Op::Mux => if s != 0 { a } else { b },
+            Op::And => a & b,
+            Op::Or => a | b,
+            Op::Xor => a ^ b,
+            Op::Shl => a.wrapping_shl(b.clamp(0, 31) as u32),
+            Op::Shr => a.wrapping_shr(b.clamp(0, 31) as u32),
+            Op::Pass => a,
+        }
+    }
+}
+
+impl fmt::Display for Op {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_codes() {
+        for op in ALL_OPS {
+            assert_eq!(Op::from_i32(op.code()), Some(op));
+        }
+        assert_eq!(Op::from_i32(NUM_OPS), None);
+        assert_eq!(Op::from_i32(-1), None);
+    }
+
+    #[test]
+    fn wrapping_semantics() {
+        assert_eq!(Op::Add.eval(i32::MAX, 1, 0), i32::MIN);
+        assert_eq!(Op::Mul.eval(1 << 30, 1 << 30, 0), 0);
+        assert_eq!(Op::Sub.eval(i32::MIN, 1, 0), i32::MAX);
+    }
+
+    #[test]
+    fn comparisons_are_01() {
+        assert_eq!(Op::Lt.eval(1, 2, 0), 1);
+        assert_eq!(Op::Ge.eval(1, 2, 0), 0);
+        assert_eq!(Op::Eq.eval(7, 7, 0), 1);
+        assert_eq!(Op::Ne.eval(7, 7, 0), 0);
+    }
+
+    #[test]
+    fn mux_selects_on_nonzero() {
+        assert_eq!(Op::Mux.eval(10, 20, 1), 10);
+        assert_eq!(Op::Mux.eval(10, 20, -5), 10);
+        assert_eq!(Op::Mux.eval(10, 20, 0), 20);
+    }
+
+    #[test]
+    fn shifts_clamp() {
+        assert_eq!(Op::Shl.eval(1, 40, 0), 1 << 31);
+        assert_eq!(Op::Shl.eval(1, -3, 0), 1);
+        assert_eq!(Op::Shr.eval(-64, 40, 0), -1); // arithmetic
+        assert_eq!(Op::Shr.eval(-64, 2, 0), -16);
+    }
+}

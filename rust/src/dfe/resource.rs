@@ -1,0 +1,372 @@
+//! Per-device resource & Fmax model, calibrated on the paper's Table II.
+//!
+//! The original numbers come from vendor synthesis (ISE/Vivado/Quartus) we
+//! cannot run; Table II itself provides enough anchor points to fit a
+//! linear per-cell cost model (resources scale with cell count — each cell
+//! instantiates one FU + routing muxes — plus a fixed I/O/control base)
+//! and a piecewise-linear Fmax degradation curve. Device capacities are
+//! recovered from the paper's own utilization percentages.
+//!
+//! Routability follows the paper's observation that "routing our DFE is
+//! particularly critical once the size of the system exceeds ~80% of the
+//! available logic": per-toolchain LUT-utilization ceilings reproduce each
+//! device's largest routed DFE exactly (ISE 80%, Vivado 88%, Quartus 80%).
+
+use std::fmt;
+
+/// One Table II anchor row.
+#[derive(Clone, Copy, Debug)]
+pub struct Anchor {
+    pub rows: usize,
+    pub cols: usize,
+    pub fmax_mhz: f64,
+    pub ff: u64,
+    pub luts: u64,
+    pub dsp: u64,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Toolchain {
+    Ise,
+    Vivado,
+    Quartus,
+}
+
+impl Toolchain {
+    /// LUT-utilization ceiling above which routing fails (see module doc).
+    pub fn route_ceiling_pct(self) -> f64 {
+        match self {
+            Toolchain::Ise => 80.0,
+            Toolchain::Vivado => 88.0,
+            Toolchain::Quartus => 80.0,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Toolchain::Ise => "ISE 14.7",
+            Toolchain::Vivado => "Vivado 2015.2.1",
+            Toolchain::Quartus => "Quartus II 13.1",
+        }
+    }
+}
+
+/// An FPGA device with Table II anchors.
+#[derive(Clone, Debug)]
+pub struct Device {
+    pub name: &'static str,
+    pub part: &'static str,
+    pub tool: Toolchain,
+    /// Device capacity (FF, LUT-equivalent, DSP blocks) recovered from the
+    /// paper's utilization percentages.
+    pub cap_ff: u64,
+    pub cap_luts: u64,
+    pub cap_dsp: u64,
+    /// Names of the three resource columns for this vendor.
+    pub col_names: [&'static str; 3],
+    pub anchors: Vec<Anchor>,
+}
+
+/// Resource estimate for a DFE size on a device.
+#[derive(Clone, Copy, Debug)]
+pub struct Estimate {
+    pub rows: usize,
+    pub cols: usize,
+    pub fmax_mhz: f64,
+    pub ff: u64,
+    pub luts: u64,
+    pub dsp: u64,
+    pub ff_pct: f64,
+    pub lut_pct: f64,
+    pub dsp_pct: f64,
+    pub routable: bool,
+}
+
+impl fmt::Display for Estimate {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{}x{}: {:.0} MHz, FF {} ({:.1}%), LUT {} ({:.1}%), DSP {} ({:.1}%){}",
+            self.rows,
+            self.cols,
+            self.fmax_mhz,
+            self.ff,
+            self.ff_pct,
+            self.luts,
+            self.lut_pct,
+            self.dsp,
+            self.dsp_pct,
+            if self.routable { "" } else { "  [UNROUTABLE]" }
+        )
+    }
+}
+
+fn a(rows: usize, cols: usize, fmax: f64, ff: u64, luts: u64, dsp: u64) -> Anchor {
+    Anchor { rows, cols, fmax_mhz: fmax, ff, luts, dsp }
+}
+
+/// The five Table II devices.
+pub fn devices() -> Vec<Device> {
+    vec![
+        Device {
+            name: "Spartan 6",
+            part: "xc6slx150t-3fgg900",
+            tool: Toolchain::Ise,
+            // 11521 FF = 6.3%, 10968 LUT = 11.9%, 9 DSP = 5.0%
+            cap_ff: 184_304,
+            cap_luts: 92_152,
+            cap_dsp: 180,
+            col_names: ["Slice Reg (FF)", "LUTs", "DSP48"],
+            anchors: vec![
+                a(3, 3, 140.0, 11_521, 10_968, 9),
+                a(6, 6, 85.0, 38_340, 36_505, 36),
+                a(8, 8, 68.0, 65_547, 62_451, 64),
+            ],
+        },
+        Device {
+            name: "Virtex 7",
+            part: "xc7vx690t-3ffg1761",
+            tool: Toolchain::Vivado,
+            cap_ff: 866_400,
+            cap_luts: 433_200,
+            cap_dsp: 3_600,
+            col_names: ["Slice Reg (FF)", "LUTs", "DSP48"],
+            anchors: vec![
+                a(3, 3, 240.0, 11_639, 9_916, 9),
+                a(9, 9, 192.0, 83_022, 70_547, 81),
+                a(15, 15, 192.0, 222_298, 187_764, 225),
+                a(24, 18, 155.0, 420_981, 353_057, 432),
+            ],
+        },
+        Device {
+            name: "Virtex 7 (VC707)",
+            part: "xc7vx485t-2ffg1761",
+            tool: Toolchain::Vivado,
+            cap_ff: 607_200,
+            cap_luts: 303_600,
+            cap_dsp: 2_800,
+            col_names: ["Slice Reg (FF)", "LUTs", "DSP48"],
+            anchors: vec![
+                // Only the 18x18 row appears in the paper; borrow the
+                // 690t per-cell slopes (same family/tool) anchored here.
+                a(3, 3, 215.0, 11_639, 9_916, 9),
+                a(18, 18, 167.0, 317_517, 265_641, 324),
+            ],
+        },
+        Device {
+            name: "Cyclone IV",
+            part: "EP4CGX150DF31I7AD",
+            tool: Toolchain::Quartus,
+            cap_ff: 152_960,
+            cap_luts: 149_760,
+            cap_dsp: 720,
+            col_names: ["Registers", "LEs", "MULT9x9"],
+            anchors: vec![
+                a(3, 3, 120.0, 7_495, 12_496, 18),
+                a(6, 6, 115.0, 24_740, 43_988, 72),
+                a(9, 9, 106.0, 52_982, 95_670, 162),
+                a(10, 10, 105.0, 64_839, 117_634, 200),
+            ],
+        },
+        Device {
+            name: "Stratix V",
+            part: "5SGSED8N2F45I2L",
+            tool: Toolchain::Quartus,
+            cap_ff: 524_800,
+            cap_luts: 262_400,
+            cap_dsp: 1_963,
+            col_names: ["Registers", "ALMs", "DSP Block"],
+            anchors: vec![
+                a(3, 3, 250.0, 7_857, 6_412, 9),
+                a(9, 9, 232.0, 56_295, 45_992, 81),
+                a(15, 15, 220.0, 150_292, 122_805, 225),
+                a(24, 18, 185.0, 282_304, 209_227, 432),
+            ],
+        },
+    ]
+}
+
+pub fn device_by_name(name: &str) -> Option<Device> {
+    devices().into_iter().find(|d| d.name.eq_ignore_ascii_case(name) || d.part == name)
+}
+
+impl Device {
+    /// Per-cell DSP cost (exact in Table II: 1/cell Xilinx & Stratix,
+    /// 2/cell Cyclone's 9-bit multipliers).
+    fn dsp_per_cell(&self) -> f64 {
+        let last = self.anchors.last().unwrap();
+        last.dsp as f64 / (last.rows * last.cols) as f64
+    }
+
+    /// Linear fit `base + slope * n_cells` through first & last anchor.
+    fn linfit(&self, pick: impl Fn(&Anchor) -> u64) -> (f64, f64) {
+        let f = &self.anchors[0];
+        let l = self.anchors.last().unwrap();
+        let (n0, n1) = ((f.rows * f.cols) as f64, (l.rows * l.cols) as f64);
+        let (y0, y1) = (pick(f) as f64, pick(l) as f64);
+        if (n1 - n0).abs() < f64::EPSILON {
+            return (0.0, y0 / n0);
+        }
+        let slope = (y1 - y0) / (n1 - n0);
+        (y0 - slope * n0, slope)
+    }
+
+    /// Piecewise-linear Fmax over cell count; clamped extrapolation.
+    fn fmax(&self, n_cells: f64) -> f64 {
+        let pts: Vec<(f64, f64)> = self
+            .anchors
+            .iter()
+            .map(|an| ((an.rows * an.cols) as f64, an.fmax_mhz))
+            .collect();
+        if n_cells <= pts[0].0 {
+            return pts[0].1;
+        }
+        for w in pts.windows(2) {
+            let ((x0, y0), (x1, y1)) = (w[0], w[1]);
+            if n_cells <= x1 {
+                return y0 + (y1 - y0) * (n_cells - x0) / (x1 - x0);
+            }
+        }
+        // Extrapolate the last segment, floored at 40% of the last anchor.
+        let ((x0, y0), (x1, y1)) = (pts[pts.len() - 2], pts[pts.len() - 1]);
+        let v = y0 + (y1 - y0) * (n_cells - x0) / (x1 - x0);
+        v.max(0.4 * y1)
+    }
+
+    /// Estimate resources/Fmax/routability for a `rows x cols` DFE.
+    pub fn estimate(&self, rows: usize, cols: usize) -> Estimate {
+        let n = (rows * cols) as f64;
+        // If the exact size is an anchor, report the paper's own numbers.
+        if let Some(an) = self.anchors.iter().find(|a| a.rows == rows && a.cols == cols) {
+            return self.finish(rows, cols, an.fmax_mhz, an.ff as f64, an.luts as f64, an.dsp as f64);
+        }
+        let (ffb, ffs) = self.linfit(|a| a.ff);
+        let (lb, ls) = self.linfit(|a| a.luts);
+        let ff = ffb + ffs * n;
+        let luts = lb + ls * n;
+        let dsp = self.dsp_per_cell() * n;
+        self.finish(rows, cols, self.fmax(n), ff, luts, dsp)
+    }
+
+    fn finish(&self, rows: usize, cols: usize, fmax: f64, ff: f64, luts: f64, dsp: f64) -> Estimate {
+        let ff_pct = 100.0 * ff / self.cap_ff as f64;
+        let lut_pct = 100.0 * luts / self.cap_luts as f64;
+        let dsp_pct = 100.0 * dsp / self.cap_dsp as f64;
+        Estimate {
+            rows,
+            cols,
+            fmax_mhz: fmax,
+            ff: ff.round() as u64,
+            luts: luts.round() as u64,
+            dsp: dsp.round() as u64,
+            ff_pct,
+            lut_pct,
+            dsp_pct,
+            routable: lut_pct <= self.tool.route_ceiling_pct()
+                && ff_pct <= 100.0
+                && dsp_pct <= 100.0,
+        }
+    }
+
+    /// Largest square-ish DFE this device can route. Aspect ratio is
+    /// bounded at 4:3 (the paper's widest reported shape is 24x18): long
+    /// thin grids would technically fit more cells but starve the router
+    /// of border I/O along one axis.
+    pub fn largest_routable(&self) -> (usize, usize) {
+        let mut best = (0, 0);
+        for r in 1..=32usize {
+            for c in 1..=32usize {
+                if 3 * r.max(c) > 4 * r.min(c) {
+                    continue;
+                }
+                if self.estimate(r, c).routable && r * c > best.0 * best.1 {
+                    best = (r, c);
+                }
+            }
+        }
+        best
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn anchors_reproduce_paper_rows() {
+        for d in devices() {
+            for an in &d.anchors {
+                let e = d.estimate(an.rows, an.cols);
+                assert_eq!(e.ff, an.ff, "{} {}x{}", d.name, an.rows, an.cols);
+                assert_eq!(e.luts, an.luts);
+                assert_eq!(e.dsp, an.dsp);
+                assert!((e.fmax_mhz - an.fmax_mhz).abs() < 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn utilization_pcts_match_paper() {
+        // Spot-check the percentages the paper prints.
+        let s6 = device_by_name("Spartan 6").unwrap();
+        let e = s6.estimate(8, 8);
+        assert!((e.ff_pct - 35.6).abs() < 0.3, "{}", e.ff_pct);
+        assert!((e.lut_pct - 67.8).abs() < 0.3, "{}", e.lut_pct);
+        let v7 = device_by_name("Virtex 7").unwrap();
+        let e = v7.estimate(24, 18);
+        assert!((e.lut_pct - 81.5).abs() < 0.3, "{}", e.lut_pct);
+    }
+
+    #[test]
+    fn largest_routable_matches_paper_maxima() {
+        // The paper's per-device largest routed DFEs.
+        let cases = [
+            ("Spartan 6", 64),          // 8x8
+            ("Virtex 7", 432),          // 24x18
+            ("Virtex 7 (VC707)", 324),  // 18x18
+            ("Cyclone IV", 100),        // 10x10
+            ("Stratix V", 432),         // 24x18
+        ];
+        for (name, cells) in cases {
+            let d = device_by_name(name).unwrap();
+            // The paper's largest reported size must be routable...
+            let last = d.anchors.last().unwrap();
+            assert!(
+                d.estimate(last.rows, last.cols).routable,
+                "{name} largest anchor unroutable"
+            );
+            // ...and one grid step further must not be.
+            let (r, c) = (last.rows, last.cols);
+            let bigger = d.estimate(r + 1, c + 1);
+            assert!(!bigger.routable, "{name} {}x{} should not route", r + 1, c + 1);
+            assert_eq!(last.rows * last.cols, cells, "{name} anchor mismatch");
+        }
+    }
+
+    #[test]
+    fn interpolated_sizes_monotone() {
+        let v7 = device_by_name("Virtex 7").unwrap();
+        let mut prev = 0u64;
+        for s in 3..=24 {
+            let e = v7.estimate(s, s.min(18));
+            assert!(e.luts >= prev, "LUTs not monotone at {s}");
+            prev = e.luts;
+        }
+    }
+
+    #[test]
+    fn fmax_degrades_with_size() {
+        for d in devices() {
+            let small = d.estimate(3, 3).fmax_mhz;
+            let last = d.anchors.last().unwrap();
+            let big = d.estimate(last.rows, last.cols).fmax_mhz;
+            assert!(big <= small, "{}: {big} > {small}", d.name);
+        }
+    }
+
+    #[test]
+    fn dsp_per_cell_exact() {
+        assert_eq!(device_by_name("Cyclone IV").unwrap().estimate(5, 5).dsp, 50);
+        assert_eq!(device_by_name("Stratix V").unwrap().estimate(5, 5).dsp, 25);
+    }
+}

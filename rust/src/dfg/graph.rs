@@ -1,0 +1,411 @@
+//! Data-flow graph — the unit the framework extracts from hot code and
+//! maps onto the DFE (paper Fig 2/4).
+//!
+//! DFGs are acyclic (the framework never crosses loop boundaries, §III-A).
+//! Node classes match the paper's Table-I statistics: external inputs,
+//! constants (to be masked into DFE constant inputs), compute nodes, and
+//! outputs. MUX nodes carry a third (selection) operand.
+
+use std::collections::HashMap;
+use std::fmt;
+
+use crate::dfe::opcodes::Op;
+
+pub type NodeId = usize;
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum NodeKind {
+    /// External input `j` (one stream element per invocation).
+    Input(usize),
+    /// Compile-time constant (paper: green constant-masked boxes, Fig 2D).
+    Const(i32),
+    /// Functional-unit operation. `srcs` holds [a, b] or [a, b, sel] (MUX).
+    Calc(Op),
+    /// External output `j`; single source.
+    Output(usize),
+}
+
+#[derive(Clone, Debug)]
+pub struct Node {
+    pub kind: NodeKind,
+    pub srcs: Vec<NodeId>,
+}
+
+/// Table-I style statistics: `in/out/calc` counts.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct DfgStats {
+    pub inputs: usize,
+    pub outputs: usize,
+    pub calc: usize,
+    pub consts: usize,
+}
+
+impl fmt::Display for DfgStats {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}/{}/{}", self.inputs, self.outputs, self.calc)
+    }
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct Dfg {
+    pub nodes: Vec<Node>,
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum DfgError {
+    Cycle,
+    BadArity { node: NodeId, got: usize, want: &'static str },
+    DanglingSource { node: NodeId, src: NodeId },
+    DuplicateInput(usize),
+    DuplicateOutput(usize),
+}
+
+impl fmt::Display for DfgError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            DfgError::Cycle => write!(f, "DFG contains a cycle"),
+            DfgError::BadArity { node, got, want } => {
+                write!(f, "node {node}: {got} sources, want {want}")
+            }
+            DfgError::DanglingSource { node, src } => {
+                write!(f, "node {node} references missing node {src}")
+            }
+            DfgError::DuplicateInput(j) => write!(f, "duplicate input index {j}"),
+            DfgError::DuplicateOutput(j) => write!(f, "duplicate output index {j}"),
+        }
+    }
+}
+
+impl std::error::Error for DfgError {}
+
+impl Dfg {
+    pub fn new() -> Dfg {
+        Dfg::default()
+    }
+
+    pub fn add(&mut self, kind: NodeKind, srcs: Vec<NodeId>) -> NodeId {
+        self.nodes.push(Node { kind, srcs });
+        self.nodes.len() - 1
+    }
+
+    pub fn input(&mut self, j: usize) -> NodeId {
+        self.add(NodeKind::Input(j), vec![])
+    }
+
+    pub fn constant(&mut self, v: i32) -> NodeId {
+        self.add(NodeKind::Const(v), vec![])
+    }
+
+    pub fn calc(&mut self, op: Op, a: NodeId, b: NodeId) -> NodeId {
+        self.add(NodeKind::Calc(op), vec![a, b])
+    }
+
+    pub fn mux(&mut self, a: NodeId, b: NodeId, sel: NodeId) -> NodeId {
+        self.add(NodeKind::Calc(Op::Mux), vec![a, b, sel])
+    }
+
+    pub fn output(&mut self, j: usize, src: NodeId) -> NodeId {
+        self.add(NodeKind::Output(j), vec![src])
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    pub fn stats(&self) -> DfgStats {
+        let mut s = DfgStats { inputs: 0, outputs: 0, calc: 0, consts: 0 };
+        for n in &self.nodes {
+            match n.kind {
+                NodeKind::Input(_) => s.inputs += 1,
+                NodeKind::Output(_) => s.outputs += 1,
+                NodeKind::Calc(_) => s.calc += 1,
+                NodeKind::Const(_) => s.consts += 1,
+            }
+        }
+        s
+    }
+
+    /// Structural validation: arity, dangling edges, acyclicity, unique
+    /// input/output indices.
+    pub fn validate(&self) -> Result<(), DfgError> {
+        let mut seen_in = HashMap::new();
+        let mut seen_out = HashMap::new();
+        for (id, n) in self.nodes.iter().enumerate() {
+            for &s in &n.srcs {
+                if s >= self.nodes.len() {
+                    return Err(DfgError::DanglingSource { node: id, src: s });
+                }
+            }
+            match &n.kind {
+                NodeKind::Input(j) => {
+                    if !n.srcs.is_empty() {
+                        return Err(DfgError::BadArity { node: id, got: n.srcs.len(), want: "0" });
+                    }
+                    if seen_in.insert(*j, id).is_some() {
+                        return Err(DfgError::DuplicateInput(*j));
+                    }
+                }
+                NodeKind::Const(_) => {
+                    if !n.srcs.is_empty() {
+                        return Err(DfgError::BadArity { node: id, got: n.srcs.len(), want: "0" });
+                    }
+                }
+                NodeKind::Calc(Op::Mux) => {
+                    if n.srcs.len() != 3 {
+                        return Err(DfgError::BadArity { node: id, got: n.srcs.len(), want: "3" });
+                    }
+                }
+                NodeKind::Calc(_) => {
+                    if n.srcs.len() != 2 {
+                        return Err(DfgError::BadArity { node: id, got: n.srcs.len(), want: "2" });
+                    }
+                }
+                NodeKind::Output(j) => {
+                    if n.srcs.len() != 1 {
+                        return Err(DfgError::BadArity { node: id, got: n.srcs.len(), want: "1" });
+                    }
+                    if seen_out.insert(*j, id).is_some() {
+                        return Err(DfgError::DuplicateOutput(*j));
+                    }
+                }
+            }
+        }
+        self.topo_order().map(|_| ())
+    }
+
+    /// Kahn topological order; `Err(Cycle)` if cyclic.
+    pub fn topo_order(&self) -> Result<Vec<NodeId>, DfgError> {
+        let n = self.nodes.len();
+        let mut indeg = vec![0usize; n];
+        let mut consumers: Vec<Vec<NodeId>> = vec![Vec::new(); n];
+        for (id, node) in self.nodes.iter().enumerate() {
+            for &s in &node.srcs {
+                if s < n {
+                    indeg[id] += 1;
+                    consumers[s].push(id);
+                }
+            }
+        }
+        let mut queue: Vec<NodeId> = (0..n).filter(|&i| indeg[i] == 0).collect();
+        let mut order = Vec::with_capacity(n);
+        while let Some(id) = queue.pop() {
+            order.push(id);
+            for &c in &consumers[id] {
+                indeg[c] -= 1;
+                if indeg[c] == 0 {
+                    queue.push(c);
+                }
+            }
+        }
+        if order.len() == n {
+            Ok(order)
+        } else {
+            Err(DfgError::Cycle)
+        }
+    }
+
+    /// Reference evaluation of one invocation. `inputs[j]` feeds
+    /// `Input(j)`. Returns `outputs[j]` (dense up to the max output index).
+    pub fn eval(&self, inputs: &[i32]) -> Result<Vec<i32>, DfgError> {
+        let order = self.topo_order()?;
+        let mut vals = vec![0i32; self.nodes.len()];
+        let mut n_out = 0usize;
+        for &id in &order {
+            let node = &self.nodes[id];
+            vals[id] = match &node.kind {
+                NodeKind::Input(j) => inputs.get(*j).copied().unwrap_or(0),
+                NodeKind::Const(v) => *v,
+                NodeKind::Calc(op) => {
+                    let a = vals[node.srcs[0]];
+                    let b = vals[node.srcs[1]];
+                    let s = node.srcs.get(2).map(|&i| vals[i]).unwrap_or(0);
+                    op.eval(a, b, s)
+                }
+                NodeKind::Output(j) => {
+                    n_out = n_out.max(j + 1);
+                    vals[node.srcs[0]]
+                }
+            };
+        }
+        let mut out = vec![0i32; n_out];
+        for (id, node) in self.nodes.iter().enumerate() {
+            if let NodeKind::Output(j) = node.kind {
+                out[j] = vals[id];
+            }
+        }
+        Ok(out)
+    }
+
+    /// Number of distinct external input indices (paper's "in" column
+    /// counts input nodes; equal when indices are dense and unique).
+    pub fn max_input_index(&self) -> Option<usize> {
+        self.nodes
+            .iter()
+            .filter_map(|n| match n.kind {
+                NodeKind::Input(j) => Some(j),
+                _ => None,
+            })
+            .max()
+    }
+
+    pub fn max_output_index(&self) -> Option<usize> {
+        self.nodes
+            .iter()
+            .filter_map(|n| match n.kind {
+                NodeKind::Output(j) => Some(j),
+                _ => None,
+            })
+            .max()
+    }
+
+    /// Ids of calc nodes in topological order (what P&R places).
+    pub fn calc_order(&self) -> Result<Vec<NodeId>, DfgError> {
+        Ok(self
+            .topo_order()?
+            .into_iter()
+            .filter(|&id| matches!(self.nodes[id].kind, NodeKind::Calc(_)))
+            .collect())
+    }
+
+    /// Apply dead-node elimination: drop nodes not reachable (backwards)
+    /// from any output. Keeps node ids stable by compacting with a remap.
+    pub fn prune_dead(&self) -> Dfg {
+        let n = self.nodes.len();
+        let mut live = vec![false; n];
+        let mut stack: Vec<NodeId> = self
+            .nodes
+            .iter()
+            .enumerate()
+            .filter(|(_, node)| matches!(node.kind, NodeKind::Output(_)))
+            .map(|(id, _)| id)
+            .collect();
+        while let Some(id) = stack.pop() {
+            if live[id] {
+                continue;
+            }
+            live[id] = true;
+            stack.extend(self.nodes[id].srcs.iter().copied());
+        }
+        let mut remap = vec![usize::MAX; n];
+        let mut out = Dfg::new();
+        for id in 0..n {
+            if live[id] {
+                let node = &self.nodes[id];
+                let srcs = node.srcs.iter().map(|&s| remap[s]).collect();
+                remap[id] = out.add(node.kind.clone(), srcs);
+            }
+        }
+        out
+    }
+}
+
+/// Fig 2 (B): DFG for `C = A + 3B + 1` (single stream element).
+pub fn fig2_dfg() -> Dfg {
+    let mut g = Dfg::new();
+    let a = g.input(0);
+    let b = g.input(1);
+    let c3 = g.constant(3);
+    let c1 = g.constant(1);
+    let m = g.calc(Op::Mul, b, c3);
+    let s = g.calc(Op::Add, a, m);
+    let r = g.calc(Op::Add, s, c1);
+    g.output(0, r);
+    g
+}
+
+/// Fig 4: DFG for Listing 1 (branch if-converted to MUX).
+pub fn listing1_dfg() -> Dfg {
+    let mut g = Dfg::new();
+    let a = g.input(0);
+    let b = g.input(1);
+    let c3 = g.constant(3);
+    let c1 = g.constant(1);
+    let c5 = g.constant(5);
+    let c2 = g.constant(2);
+    let cond = g.calc(Op::Gt, a, b);
+    let t0 = g.calc(Op::Mul, b, c3);
+    let t1 = g.calc(Op::Add, a, t0);
+    let then_v = g.calc(Op::Add, t1, c1);
+    let e0 = g.calc(Op::Mul, b, c5);
+    let e1 = g.calc(Op::Sub, a, e0);
+    let else_v = g.calc(Op::Sub, e1, c2);
+    let r = g.mux(then_v, else_v, cond);
+    g.output(0, r);
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig2_eval() {
+        let g = fig2_dfg();
+        g.validate().unwrap();
+        assert_eq!(g.eval(&[10, 5]).unwrap(), vec![26]);
+        assert_eq!(g.stats().to_string(), "2/1/3");
+        assert_eq!(g.stats().consts, 2);
+    }
+
+    #[test]
+    fn listing1_eval_both_branches() {
+        let g = listing1_dfg();
+        g.validate().unwrap();
+        assert_eq!(g.eval(&[10, 2]).unwrap(), vec![10 + 6 + 1]);
+        assert_eq!(g.eval(&[2, 10]).unwrap(), vec![2 - 50 - 2]);
+    }
+
+    #[test]
+    fn cycle_detected() {
+        let mut g = Dfg::new();
+        let a = g.input(0);
+        let c = g.add(NodeKind::Calc(Op::Add), vec![a, 2]); // forward ref to itself
+        assert_eq!(c, 1);
+        g.nodes[1].srcs[1] = 1;
+        assert_eq!(g.topo_order(), Err(DfgError::Cycle));
+    }
+
+    #[test]
+    fn arity_checked() {
+        let mut g = Dfg::new();
+        let a = g.input(0);
+        g.add(NodeKind::Calc(Op::Add), vec![a]);
+        assert!(matches!(g.validate(), Err(DfgError::BadArity { want: "2", .. })));
+
+        let mut g2 = Dfg::new();
+        let a2 = g2.input(0);
+        g2.add(NodeKind::Calc(Op::Mux), vec![a2, a2]);
+        assert!(matches!(g2.validate(), Err(DfgError::BadArity { want: "3", .. })));
+    }
+
+    #[test]
+    fn duplicate_io_rejected() {
+        let mut g = Dfg::new();
+        g.input(0);
+        g.input(0);
+        assert_eq!(g.validate(), Err(DfgError::DuplicateInput(0)));
+    }
+
+    #[test]
+    fn prune_dead_drops_unused() {
+        let mut g = Dfg::new();
+        let a = g.input(0);
+        let b = g.input(1);
+        let used = g.calc(Op::Add, a, b);
+        let _dead = g.calc(Op::Mul, a, b);
+        g.output(0, used);
+        let pruned = g.prune_dead();
+        assert_eq!(pruned.stats().calc, 1);
+        assert_eq!(pruned.eval(&[3, 4]).unwrap(), vec![7]);
+    }
+
+    #[test]
+    fn missing_inputs_default_zero() {
+        let g = fig2_dfg();
+        assert_eq!(g.eval(&[]).unwrap(), vec![1]); // 0 + 3*0 + 1
+    }
+}

@@ -1,0 +1,5 @@
+//! DFG extraction and manipulation (paper §III, Figs 2 & 4).
+pub mod extract;
+pub mod graph;
+pub use extract::{extract, ExtractReject, OffloadDfg, OutMode, StreamIn, StreamOut};
+pub use graph::{Dfg, DfgError, DfgStats, Node, NodeId, NodeKind};

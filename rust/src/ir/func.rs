@@ -1,0 +1,348 @@
+//! Functions, basic blocks and modules, plus the builder API the workload
+//! library uses to author PolyBench kernels.
+
+use std::collections::HashMap;
+use std::fmt;
+
+use super::instr::{BinOp, BlockId, CmpPred, Inst, Reg, Term, Ty};
+
+#[derive(Clone, Debug, Default)]
+pub struct Block {
+    pub insts: Vec<Inst>,
+    pub term: Option<Term>,
+}
+
+/// Function parameter.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Param {
+    pub name: String,
+    pub ty: Ty,
+}
+
+#[derive(Clone, Debug)]
+pub struct Function {
+    pub name: String,
+    pub params: Vec<Param>,
+    pub blocks: Vec<Block>,
+    pub entry: BlockId,
+    pub n_regs: u32,
+}
+
+impl Function {
+    pub fn block(&self, id: BlockId) -> &Block {
+        &self.blocks[id.0 as usize]
+    }
+
+    pub fn param_reg(&self, i: usize) -> Reg {
+        // Convention: parameters occupy r0..r{n_params-1}.
+        debug_assert!(i < self.params.len());
+        Reg(i as u32)
+    }
+
+    /// CFG successors of each block.
+    pub fn successors(&self, id: BlockId) -> Vec<BlockId> {
+        self.block(id).term.as_ref().map(|t| t.successors()).unwrap_or_default()
+    }
+
+    /// CFG predecessors map.
+    pub fn predecessors(&self) -> HashMap<BlockId, Vec<BlockId>> {
+        let mut preds: HashMap<BlockId, Vec<BlockId>> = HashMap::new();
+        for b in 0..self.blocks.len() {
+            let id = BlockId(b as u32);
+            for s in self.successors(id) {
+                preds.entry(s).or_default().push(id);
+            }
+        }
+        preds
+    }
+
+    /// Static instruction count (profiling/report metric).
+    pub fn n_insts(&self) -> usize {
+        self.blocks.iter().map(|b| b.insts.len() + 1).sum()
+    }
+}
+
+impl fmt::Display for Function {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "func @{}(", self.name)?;
+        for (i, p) in self.params.iter().enumerate() {
+            if i > 0 {
+                write!(f, ", ")?;
+            }
+            write!(f, "{}: {}", p.name, p.ty)?;
+        }
+        writeln!(f, ") {{")?;
+        for (i, b) in self.blocks.iter().enumerate() {
+            writeln!(f, "bb{i}:")?;
+            for inst in &b.insts {
+                writeln!(f, "  {inst}")?;
+            }
+            if let Some(t) = &b.term {
+                writeln!(f, "  {t}")?;
+            }
+        }
+        writeln!(f, "}}")
+    }
+}
+
+/// A module: named functions (the JIT resolves `Call` by name).
+#[derive(Clone, Debug, Default)]
+pub struct Module {
+    pub funcs: Vec<Function>,
+}
+
+impl Module {
+    pub fn new() -> Module {
+        Module::default()
+    }
+
+    pub fn add(&mut self, f: Function) -> usize {
+        self.funcs.push(f);
+        self.funcs.len() - 1
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Function> {
+        self.funcs.iter().find(|f| f.name == name)
+    }
+
+    pub fn index_of(&self, name: &str) -> Option<usize> {
+        self.funcs.iter().position(|f| f.name == name)
+    }
+}
+
+/// Imperative function builder. Registers `r0..rN-1` are bound to
+/// parameters; fresh registers come from [`FuncBuilder::fresh`].
+pub struct FuncBuilder {
+    name: String,
+    params: Vec<Param>,
+    blocks: Vec<Block>,
+    cur: BlockId,
+    next_reg: u32,
+}
+
+impl FuncBuilder {
+    pub fn new(name: &str, params: &[(&str, Ty)]) -> FuncBuilder {
+        let params: Vec<Param> =
+            params.iter().map(|(n, t)| Param { name: n.to_string(), ty: *t }).collect();
+        FuncBuilder {
+            name: name.to_string(),
+            next_reg: params.len() as u32,
+            params,
+            blocks: vec![Block::default()],
+            cur: BlockId(0),
+        }
+    }
+
+    pub fn param(&self, i: usize) -> Reg {
+        debug_assert!(i < self.params.len());
+        Reg(i as u32)
+    }
+
+    pub fn fresh(&mut self) -> Reg {
+        let r = Reg(self.next_reg);
+        self.next_reg += 1;
+        r
+    }
+
+    pub fn new_block(&mut self) -> BlockId {
+        self.blocks.push(Block::default());
+        BlockId(self.blocks.len() as u32 - 1)
+    }
+
+    pub fn switch_to(&mut self, b: BlockId) {
+        self.cur = b;
+    }
+
+    pub fn cur_block(&self) -> BlockId {
+        self.cur
+    }
+
+    pub fn push(&mut self, inst: Inst) {
+        let b = &mut self.blocks[self.cur.0 as usize];
+        debug_assert!(b.term.is_none(), "emitting into terminated block");
+        b.insts.push(inst);
+    }
+
+    pub fn terminate(&mut self, t: Term) {
+        let b = &mut self.blocks[self.cur.0 as usize];
+        debug_assert!(b.term.is_none(), "block already terminated");
+        b.term = Some(t);
+    }
+
+    // ---- convenience emitters ----
+
+    pub fn const_i32(&mut self, v: i32) -> Reg {
+        let dst = self.fresh();
+        self.push(Inst::ConstI32 { dst, v });
+        dst
+    }
+
+    pub fn const_f32(&mut self, v: f32) -> Reg {
+        let dst = self.fresh();
+        self.push(Inst::ConstF32 { dst, v });
+        dst
+    }
+
+    pub fn bin(&mut self, op: BinOp, ty: Ty, a: Reg, b: Reg) -> Reg {
+        let dst = self.fresh();
+        self.push(Inst::Bin { dst, op, ty, a, b });
+        dst
+    }
+
+    pub fn add(&mut self, a: Reg, b: Reg) -> Reg {
+        self.bin(BinOp::Add, Ty::I32, a, b)
+    }
+
+    pub fn sub(&mut self, a: Reg, b: Reg) -> Reg {
+        self.bin(BinOp::Sub, Ty::I32, a, b)
+    }
+
+    pub fn mul(&mut self, a: Reg, b: Reg) -> Reg {
+        self.bin(BinOp::Mul, Ty::I32, a, b)
+    }
+
+    pub fn fadd(&mut self, a: Reg, b: Reg) -> Reg {
+        self.bin(BinOp::Add, Ty::F32, a, b)
+    }
+
+    pub fn fmul(&mut self, a: Reg, b: Reg) -> Reg {
+        self.bin(BinOp::Mul, Ty::F32, a, b)
+    }
+
+    pub fn cmp(&mut self, pred: CmpPred, a: Reg, b: Reg) -> Reg {
+        let dst = self.fresh();
+        self.push(Inst::Cmp { dst, pred, ty: Ty::I32, a, b });
+        dst
+    }
+
+    pub fn select(&mut self, c: Reg, t: Reg, f: Reg) -> Reg {
+        let dst = self.fresh();
+        self.push(Inst::Select { dst, c, t, f });
+        dst
+    }
+
+    pub fn load(&mut self, ty: Ty, base: Reg, idx: Reg) -> Reg {
+        let dst = self.fresh();
+        self.push(Inst::Load { dst, ty, base, idx });
+        dst
+    }
+
+    pub fn store(&mut self, ty: Ty, base: Reg, idx: Reg, val: Reg) {
+        self.push(Inst::Store { ty, base, idx, val });
+    }
+
+    pub fn mov(&mut self, a: Reg) -> Reg {
+        let dst = self.fresh();
+        self.push(Inst::Mov { dst, a });
+        dst
+    }
+
+    pub fn mov_into(&mut self, dst: Reg, a: Reg) {
+        self.push(Inst::Mov { dst, a });
+    }
+
+    /// Emit a canonical counted loop `for iv in lb..ub` and run `body`.
+    /// Produces the standard header/body/latch/exit shape the SCoP
+    /// detector recognizes. Returns after switching to the exit block.
+    pub fn counted_loop(
+        &mut self,
+        lb: Reg,
+        ub: Reg,
+        mut body: impl FnMut(&mut FuncBuilder, Reg),
+    ) {
+        let iv = self.fresh();
+        self.mov_into(iv, lb);
+        let header = self.new_block();
+        let body_bb = self.new_block();
+        let exit = self.new_block();
+        self.terminate(Term::Br(header));
+
+        self.switch_to(header);
+        let c = self.cmp(CmpPred::Lt, iv, ub);
+        self.terminate(Term::CondBr { c, t: body_bb, f: exit });
+
+        self.switch_to(body_bb);
+        body(self, iv);
+        // Latch: iv += 1; back to header. (Latch folded into body block
+        // tail — canonical rotated-loop shape.)
+        let one = self.const_i32(1);
+        let next = self.add(iv, one);
+        self.mov_into(iv, next);
+        self.terminate(Term::Br(header));
+
+        self.switch_to(exit);
+    }
+
+    pub fn ret(mut self, v: Option<Reg>) -> Function {
+        self.terminate(Term::Ret(v));
+        self.finish()
+    }
+
+    pub fn finish(self) -> Function {
+        Function {
+            name: self.name,
+            params: self.params,
+            blocks: self.blocks,
+            entry: BlockId(0),
+            n_regs: self.next_reg,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Build the Fig-2 kernel: for i in 0..n { C[i] = A[i] + 3*B[i] + 1 }.
+    pub fn fig2_func() -> Function {
+        let mut b = FuncBuilder::new(
+            "fig2",
+            &[("C", Ty::Ptr), ("A", Ty::Ptr), ("B", Ty::Ptr), ("n", Ty::I32)],
+        );
+        let (c, a, bb, n) = (b.param(0), b.param(1), b.param(2), b.param(3));
+        let zero = b.const_i32(0);
+        b.counted_loop(zero, n, |b, i| {
+            let av = b.load(Ty::I32, a, i);
+            let bv = b.load(Ty::I32, bb, i);
+            let c3 = b.const_i32(3);
+            let t = b.mul(bv, c3);
+            let s = b.add(av, t);
+            let c1 = b.const_i32(1);
+            let r = b.add(s, c1);
+            b.store(Ty::I32, c, i, r);
+        });
+        b.ret(None)
+    }
+
+    #[test]
+    fn builder_produces_canonical_loop() {
+        let f = fig2_func();
+        assert_eq!(f.blocks.len(), 4); // entry, header, body, exit
+        assert!(f.to_string().contains("cmp.lt"));
+        // header has condbr to body/exit
+        let header = &f.blocks[1];
+        assert!(matches!(header.term, Some(Term::CondBr { .. })));
+        // body's last terminator branches back to header
+        let body = &f.blocks[2];
+        assert_eq!(body.term, Some(Term::Br(BlockId(1))));
+    }
+
+    #[test]
+    fn predecessors_computed() {
+        let f = fig2_func();
+        let preds = f.predecessors();
+        // header (bb1) has preds: entry (bb0) and body (bb2)
+        let mut p = preds[&BlockId(1)].clone();
+        p.sort();
+        assert_eq!(p, vec![BlockId(0), BlockId(2)]);
+    }
+
+    #[test]
+    fn module_lookup() {
+        let mut m = Module::new();
+        m.add(fig2_func());
+        assert!(m.get("fig2").is_some());
+        assert_eq!(m.index_of("fig2"), Some(0));
+        assert!(m.get("nope").is_none());
+    }
+}

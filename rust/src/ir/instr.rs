@@ -1,0 +1,284 @@
+//! Mini-IR instruction set.
+//!
+//! A register-machine IR standing in for LLVM-IR (see DESIGN.md
+//! §Substitutions): unlimited virtual registers, basic blocks with
+//! explicit terminators, typed i32/f32 arithmetic, array load/store
+//! through pointer parameters, calls and an explicit syscall marker.
+//!
+//! The instruction surface is deliberately shaped so the paper's legality
+//! screen is expressible: integer div/rem *exist* (so `adi`, `lu`, ... are
+//! representable and get rejected for DFE offload), f32 arithmetic exists
+//! (so `jacobi-*`, `fdtd-2d` are representable and rejected), and
+//! syscalls/calls mark non-offloadable regions.
+
+use std::fmt;
+
+/// Value types. `Ptr` is an opaque array handle indexed by element.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Ty {
+    I32,
+    F32,
+    Ptr,
+}
+
+impl fmt::Display for Ty {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            Ty::I32 => "i32",
+            Ty::F32 => "f32",
+            Ty::Ptr => "ptr",
+        })
+    }
+}
+
+/// Virtual register.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Reg(pub u32);
+
+impl fmt::Display for Reg {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "r{}", self.0)
+    }
+}
+
+/// Basic-block id.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct BlockId(pub u32);
+
+impl fmt::Display for BlockId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "bb{}", self.0)
+    }
+}
+
+/// Binary ALU operations (type-generic; `Div`/`Rem` only legal on the CPU
+/// path, `F*` only on f32 — both rejected by the DFE legality screen).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum BinOp {
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Rem,
+    Min,
+    Max,
+    And,
+    Or,
+    Xor,
+    Shl,
+    Shr,
+}
+
+impl BinOp {
+    pub fn name(self) -> &'static str {
+        match self {
+            BinOp::Add => "add",
+            BinOp::Sub => "sub",
+            BinOp::Mul => "mul",
+            BinOp::Div => "div",
+            BinOp::Rem => "rem",
+            BinOp::Min => "min",
+            BinOp::Max => "max",
+            BinOp::And => "and",
+            BinOp::Or => "or",
+            BinOp::Xor => "xor",
+            BinOp::Shl => "shl",
+            BinOp::Shr => "shr",
+        }
+    }
+
+    /// Whether the DFE has a functional unit for this op (paper §III-A:
+    /// no integer division nor remainder).
+    pub fn dfe_supported(self) -> bool {
+        !matches!(self, BinOp::Div | BinOp::Rem)
+    }
+}
+
+/// Comparison predicates (signed).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum CmpPred {
+    Lt,
+    Gt,
+    Le,
+    Ge,
+    Eq,
+    Ne,
+}
+
+impl CmpPred {
+    pub fn name(self) -> &'static str {
+        match self {
+            CmpPred::Lt => "lt",
+            CmpPred::Gt => "gt",
+            CmpPred::Le => "le",
+            CmpPred::Ge => "ge",
+            CmpPred::Eq => "eq",
+            CmpPred::Ne => "ne",
+        }
+    }
+
+    pub fn eval_i32(self, a: i32, b: i32) -> bool {
+        match self {
+            CmpPred::Lt => a < b,
+            CmpPred::Gt => a > b,
+            CmpPred::Le => a <= b,
+            CmpPred::Ge => a >= b,
+            CmpPred::Eq => a == b,
+            CmpPred::Ne => a != b,
+        }
+    }
+
+    pub fn eval_f32(self, a: f32, b: f32) -> bool {
+        match self {
+            CmpPred::Lt => a < b,
+            CmpPred::Gt => a > b,
+            CmpPred::Le => a <= b,
+            CmpPred::Ge => a >= b,
+            CmpPred::Eq => a == b,
+            CmpPred::Ne => a != b,
+        }
+    }
+}
+
+/// Non-terminator instructions.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Inst {
+    /// `dst = const`
+    ConstI32 { dst: Reg, v: i32 },
+    ConstF32 { dst: Reg, v: f32 },
+    /// `dst = a <op> b` (both operands of type `ty`).
+    Bin { dst: Reg, op: BinOp, ty: Ty, a: Reg, b: Reg },
+    /// `dst = (a <pred> b) as i32` over operands of `ty`.
+    Cmp { dst: Reg, pred: CmpPred, ty: Ty, a: Reg, b: Reg },
+    /// `dst = c != 0 ? t : f`
+    Select { dst: Reg, c: Reg, t: Reg, f: Reg },
+    /// `dst = base[idx]` — element load through a Ptr register.
+    Load { dst: Reg, ty: Ty, base: Reg, idx: Reg },
+    /// `base[idx] = val`
+    Store { ty: Ty, base: Reg, idx: Reg, val: Reg },
+    /// `dst = i32->f32` / `f32->i32` conversions.
+    IToF { dst: Reg, a: Reg },
+    FToI { dst: Reg, a: Reg },
+    /// Copy.
+    Mov { dst: Reg, a: Reg },
+    /// Direct call; `dst` receives the i32 return value if any.
+    Call { dst: Option<Reg>, callee: String, args: Vec<Reg> },
+    /// Opaque system call — poisons any enclosing region for offload.
+    Syscall { name: String },
+}
+
+impl Inst {
+    pub fn dst(&self) -> Option<Reg> {
+        match self {
+            Inst::ConstI32 { dst, .. }
+            | Inst::ConstF32 { dst, .. }
+            | Inst::Bin { dst, .. }
+            | Inst::Cmp { dst, .. }
+            | Inst::Select { dst, .. }
+            | Inst::Load { dst, .. }
+            | Inst::IToF { dst, .. }
+            | Inst::FToI { dst, .. }
+            | Inst::Mov { dst, .. } => Some(*dst),
+            Inst::Call { dst, .. } => *dst,
+            Inst::Store { .. } | Inst::Syscall { .. } => None,
+        }
+    }
+
+    /// Registers read by this instruction.
+    pub fn uses(&self) -> Vec<Reg> {
+        match self {
+            Inst::ConstI32 { .. } | Inst::ConstF32 { .. } | Inst::Syscall { .. } => vec![],
+            Inst::Bin { a, b, .. } | Inst::Cmp { a, b, .. } => vec![*a, *b],
+            Inst::Select { c, t, f, .. } => vec![*c, *t, *f],
+            Inst::Load { base, idx, .. } => vec![*base, *idx],
+            Inst::Store { base, idx, val, .. } => vec![*base, *idx, *val],
+            Inst::IToF { a, .. } | Inst::FToI { a, .. } | Inst::Mov { a, .. } => vec![*a],
+            Inst::Call { args, .. } => args.clone(),
+        }
+    }
+}
+
+impl fmt::Display for Inst {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Inst::ConstI32 { dst, v } => write!(f, "{dst} = const.i32 {v}"),
+            Inst::ConstF32 { dst, v } => write!(f, "{dst} = const.f32 {v}"),
+            Inst::Bin { dst, op, ty, a, b } => {
+                write!(f, "{dst} = {}.{ty} {a}, {b}", op.name())
+            }
+            Inst::Cmp { dst, pred, ty, a, b } => {
+                write!(f, "{dst} = cmp.{}.{ty} {a}, {b}", pred.name())
+            }
+            Inst::Select { dst, c, t, f: fv } => write!(f, "{dst} = select {c}, {t}, {fv}"),
+            Inst::Load { dst, ty, base, idx } => write!(f, "{dst} = load.{ty} {base}[{idx}]"),
+            Inst::Store { ty, base, idx, val } => write!(f, "store.{ty} {base}[{idx}], {val}"),
+            Inst::IToF { dst, a } => write!(f, "{dst} = itof {a}"),
+            Inst::FToI { dst, a } => write!(f, "{dst} = ftoi {a}"),
+            Inst::Mov { dst, a } => write!(f, "{dst} = mov {a}"),
+            Inst::Call { dst: Some(d), callee, args } => {
+                write!(f, "{d} = call @{callee}({args:?})")
+            }
+            Inst::Call { dst: None, callee, args } => write!(f, "call @{callee}({args:?})"),
+            Inst::Syscall { name } => write!(f, "syscall @{name}"),
+        }
+    }
+}
+
+/// Block terminators.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Term {
+    Br(BlockId),
+    CondBr { c: Reg, t: BlockId, f: BlockId },
+    Ret(Option<Reg>),
+}
+
+impl Term {
+    pub fn successors(&self) -> Vec<BlockId> {
+        match self {
+            Term::Br(b) => vec![*b],
+            Term::CondBr { t, f, .. } => vec![*t, *f],
+            Term::Ret(_) => vec![],
+        }
+    }
+}
+
+impl fmt::Display for Term {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Term::Br(b) => write!(f, "br {b}"),
+            Term::CondBr { c, t, f: fb } => write!(f, "condbr {c}, {t}, {fb}"),
+            Term::Ret(Some(r)) => write!(f, "ret {r}"),
+            Term::Ret(None) => write!(f, "ret"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dfe_support_surface() {
+        assert!(BinOp::Add.dfe_supported());
+        assert!(BinOp::Shl.dfe_supported());
+        assert!(!BinOp::Div.dfe_supported());
+        assert!(!BinOp::Rem.dfe_supported());
+    }
+
+    #[test]
+    fn uses_and_dst() {
+        let i = Inst::Bin { dst: Reg(3), op: BinOp::Add, ty: Ty::I32, a: Reg(1), b: Reg(2) };
+        assert_eq!(i.dst(), Some(Reg(3)));
+        assert_eq!(i.uses(), vec![Reg(1), Reg(2)]);
+        let s = Inst::Store { ty: Ty::I32, base: Reg(0), idx: Reg(1), val: Reg(2) };
+        assert_eq!(s.dst(), None);
+        assert_eq!(s.uses().len(), 3);
+    }
+
+    #[test]
+    fn display_forms() {
+        let i = Inst::Load { dst: Reg(5), ty: Ty::I32, base: Reg(0), idx: Reg(4) };
+        assert_eq!(i.to_string(), "r5 = load.i32 r0[r4]");
+        assert_eq!(Term::Br(BlockId(2)).to_string(), "br bb2");
+    }
+}

@@ -1,0 +1,9 @@
+//! Mini-IR substrate: the stand-in for LLVM-IR (DESIGN.md §Substitutions).
+
+pub mod func;
+pub mod instr;
+pub mod verify;
+
+pub use func::{Block, FuncBuilder, Function, Module, Param};
+pub use instr::{BinOp, BlockId, CmpPred, Inst, Reg, Term, Ty};
+pub use verify::{verify_function, verify_module, VerifyError};

@@ -1,0 +1,148 @@
+//! Structural IR verification (a lightweight `opt -verify`).
+
+use std::fmt;
+
+use super::func::{Function, Module};
+use super::instr::{BlockId, Term};
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum VerifyError {
+    Unterminated(BlockId),
+    BadTarget { from: BlockId, to: BlockId },
+    RegOutOfRange { block: BlockId, reg: u32, max: u32 },
+    UnknownCallee { block: BlockId, callee: String },
+    EmptyFunction,
+}
+
+impl fmt::Display for VerifyError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            VerifyError::Unterminated(b) => write!(f, "block {b} lacks a terminator"),
+            VerifyError::BadTarget { from, to } => {
+                write!(f, "branch {from} -> {to} targets a missing block")
+            }
+            VerifyError::RegOutOfRange { block, reg, max } => {
+                write!(f, "register r{reg} out of range (max {max}) in {block}")
+            }
+            VerifyError::UnknownCallee { block, callee } => {
+                write!(f, "call to unknown function @{callee} in {block}")
+            }
+            VerifyError::EmptyFunction => write!(f, "function has no blocks"),
+        }
+    }
+}
+
+impl std::error::Error for VerifyError {}
+
+/// Verify one function (callee resolution needs the module; pass `None`
+/// to skip it).
+pub fn verify_function(f: &Function, module: Option<&Module>) -> Result<(), VerifyError> {
+    if f.blocks.is_empty() {
+        return Err(VerifyError::EmptyFunction);
+    }
+    let n_blocks = f.blocks.len() as u32;
+    for (i, b) in f.blocks.iter().enumerate() {
+        let id = BlockId(i as u32);
+        let term = b.term.as_ref().ok_or(VerifyError::Unterminated(id))?;
+        for t in term.successors() {
+            if t.0 >= n_blocks {
+                return Err(VerifyError::BadTarget { from: id, to: t });
+            }
+        }
+        let mut check = |r: u32| {
+            if r >= f.n_regs {
+                Err(VerifyError::RegOutOfRange { block: id, reg: r, max: f.n_regs })
+            } else {
+                Ok(())
+            }
+        };
+        for inst in &b.insts {
+            if let Some(d) = inst.dst() {
+                check(d.0)?;
+            }
+            for u in inst.uses() {
+                check(u.0)?;
+            }
+            if let super::instr::Inst::Call { callee, .. } = inst {
+                if let Some(m) = module {
+                    if m.get(callee).is_none() {
+                        return Err(VerifyError::UnknownCallee {
+                            block: id,
+                            callee: callee.clone(),
+                        });
+                    }
+                }
+            }
+        }
+        if let Term::CondBr { c, .. } = term {
+            check(c.0)?;
+        }
+        if let Term::Ret(Some(r)) = term {
+            check(r.0)?;
+        }
+    }
+    Ok(())
+}
+
+/// Verify every function in a module.
+pub fn verify_module(m: &Module) -> Result<(), (String, VerifyError)> {
+    for f in &m.funcs {
+        verify_function(f, Some(m)).map_err(|e| (f.name.clone(), e))?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::func::FuncBuilder;
+    use crate::ir::instr::{Inst, Reg, Term, Ty};
+
+    #[test]
+    fn accepts_wellformed() {
+        let mut b = FuncBuilder::new("ok", &[("n", Ty::I32)]);
+        let n = b.param(0);
+        let zero = b.const_i32(0);
+        b.counted_loop(zero, n, |_, _| {});
+        let f = b.ret(None);
+        verify_function(&f, None).unwrap();
+    }
+
+    #[test]
+    fn rejects_unterminated() {
+        let b = FuncBuilder::new("bad", &[]);
+        let f = b.finish(); // entry block never terminated
+        assert!(matches!(verify_function(&f, None), Err(VerifyError::Unterminated(_))));
+    }
+
+    #[test]
+    fn rejects_bad_target() {
+        let mut b = FuncBuilder::new("bad", &[]);
+        b.terminate(Term::Br(BlockId(7)));
+        let f = b.finish();
+        assert!(matches!(verify_function(&f, None), Err(VerifyError::BadTarget { .. })));
+    }
+
+    #[test]
+    fn rejects_out_of_range_reg() {
+        let mut b = FuncBuilder::new("bad", &[]);
+        b.push(Inst::Mov { dst: Reg(99), a: Reg(98) });
+        b.terminate(Term::Ret(None));
+        let f = b.finish();
+        assert!(matches!(
+            verify_function(&f, None),
+            Err(VerifyError::RegOutOfRange { .. })
+        ));
+    }
+
+    #[test]
+    fn rejects_unknown_callee() {
+        use crate::ir::func::Module;
+        let mut b = FuncBuilder::new("caller", &[]);
+        b.push(Inst::Call { dst: None, callee: "ghost".into(), args: vec![] });
+        b.terminate(Term::Ret(None));
+        let mut m = Module::new();
+        m.add(b.finish());
+        assert!(verify_module(&m).is_err());
+    }
+}

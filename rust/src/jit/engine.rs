@@ -1,0 +1,309 @@
+//! Execution engine: compiled-function store + the *patchable call table*.
+//!
+//! The table is the paper's redirect mechanism: "the run-time replaces all
+//! calls to the host processor function with a wrapper stub that handles
+//! all memory transfers to and from the FPGA". Here every call — including
+//! top-level dispatch — goes through `CallTarget`; the offload manager
+//! swaps a function's entry for a hook and can swap it back on rollback,
+//! transparently to all callers.
+
+use std::collections::HashMap;
+use std::time::{Duration, Instant};
+
+use crate::ir::func::Module;
+use crate::ir::verify::verify_module;
+
+use super::bytecode::{compile_fn, CompiledFn};
+use super::interp::{FnCounters, Frame, Memory, RunOutcome, Trap, Val};
+
+/// A host-side hook standing in for native/offloaded code.
+pub type Hook = Box<dyn FnMut(&mut Memory, &[Val]) -> Result<Option<Val>, Trap>>;
+
+enum CallTarget {
+    Bytecode(usize),
+    Hook(Hook),
+}
+
+/// Per-function profile row (counters + wall time), read by the monitor.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FnProfile {
+    pub counters: FnCounters,
+    pub wall: Duration,
+}
+
+#[derive(Debug)]
+pub enum EngineError {
+    Verify(String),
+    Compile(String),
+    UnknownFunction(String),
+    Trap(Trap),
+}
+
+impl std::fmt::Display for EngineError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            EngineError::Verify(e) => write!(f, "verify: {e}"),
+            EngineError::Compile(e) => write!(f, "compile: {e}"),
+            EngineError::UnknownFunction(n) => write!(f, "unknown function @{n}"),
+            EngineError::Trap(t) => write!(f, "trap: {t}"),
+        }
+    }
+}
+
+impl std::error::Error for EngineError {}
+
+pub struct Engine {
+    pub module: Module,
+    compiled: Vec<CompiledFn>,
+    table: Vec<CallTarget>,
+    name_to_idx: HashMap<String, u32>,
+    profiles: Vec<FnProfile>,
+    /// JIT-compile wall time per function (Fig 6 phase 2).
+    pub jit_times: Vec<Duration>,
+    /// Execution fuel ceiling per top-level call (tests override).
+    pub fuel_limit: u64,
+}
+
+impl Engine {
+    /// Verify, "JIT-compile" (lower to bytecode) and index every function.
+    pub fn new(module: Module) -> Result<Engine, EngineError> {
+        verify_module(&module).map_err(|(f, e)| EngineError::Verify(format!("@{f}: {e}")))?;
+        let name_to_idx: HashMap<String, u32> = module
+            .funcs
+            .iter()
+            .enumerate()
+            .map(|(i, f)| (f.name.clone(), i as u32))
+            .collect();
+        let mut compiled = Vec::with_capacity(module.funcs.len());
+        let mut jit_times = Vec::with_capacity(module.funcs.len());
+        for f in &module.funcs {
+            let t0 = Instant::now();
+            let resolve = |name: &str| name_to_idx.get(name).copied();
+            let c = compile_fn(f, &resolve).map_err(|e| EngineError::Compile(e.to_string()))?;
+            jit_times.push(t0.elapsed());
+            compiled.push(c);
+        }
+        let table = (0..compiled.len()).map(CallTarget::Bytecode).collect();
+        let profiles = vec![FnProfile::default(); compiled.len()];
+        Ok(Engine { module, compiled, table, name_to_idx, profiles, jit_times, fuel_limit: u64::MAX })
+    }
+
+    pub fn func_index(&self, name: &str) -> Option<u32> {
+        self.name_to_idx.get(name).copied()
+    }
+
+    pub fn func_name(&self, idx: u32) -> &str {
+        &self.compiled[idx as usize].name
+    }
+
+    pub fn n_funcs(&self) -> usize {
+        self.compiled.len()
+    }
+
+    pub fn compiled_fn(&self, idx: u32) -> &CompiledFn {
+        &self.compiled[idx as usize]
+    }
+
+    /// Redirect `func` to a hook (offload stub). Returns the previous kind
+    /// ("bytecode" or "hook") for bookkeeping.
+    pub fn patch_hook(&mut self, func: u32, hook: Hook) -> &'static str {
+        let prev = match self.table[func as usize] {
+            CallTarget::Bytecode(_) => "bytecode",
+            CallTarget::Hook(_) => "hook",
+        };
+        self.table[func as usize] = CallTarget::Hook(hook);
+        prev
+    }
+
+    /// Restore the original bytecode entry (rollback).
+    pub fn unpatch(&mut self, func: u32) {
+        self.table[func as usize] = CallTarget::Bytecode(func as usize);
+    }
+
+    pub fn is_patched(&self, func: u32) -> bool {
+        matches!(self.table[func as usize], CallTarget::Hook(_))
+    }
+
+    /// Profile row (counters summed over completed invocations).
+    pub fn profile(&self, func: u32) -> FnProfile {
+        self.profiles[func as usize]
+    }
+
+    pub fn reset_profiles(&mut self) {
+        for p in &mut self.profiles {
+            *p = FnProfile::default();
+        }
+    }
+
+    /// Call a function by name.
+    pub fn call(
+        &mut self,
+        name: &str,
+        mem: &mut Memory,
+        args: &[Val],
+    ) -> Result<Option<Val>, EngineError> {
+        let idx = self
+            .func_index(name)
+            .ok_or_else(|| EngineError::UnknownFunction(name.to_string()))?;
+        self.call_idx(idx, mem, args)
+    }
+
+    /// Call through the patchable table (what `Bc::Call` also uses).
+    pub fn call_idx(
+        &mut self,
+        func: u32,
+        mem: &mut Memory,
+        args: &[Val],
+    ) -> Result<Option<Val>, EngineError> {
+        let mut fuel = self.fuel_limit;
+        self.dispatch(func, mem, args, &mut fuel).map_err(EngineError::Trap)
+    }
+
+    fn dispatch(
+        &mut self,
+        func: u32,
+        mem: &mut Memory,
+        args: &[Val],
+        fuel: &mut u64,
+    ) -> Result<Option<Val>, Trap> {
+        match &mut self.table[func as usize] {
+            CallTarget::Hook(h) => {
+                // Hooks account wall time but no interpreter counters.
+                let t0 = Instant::now();
+                let r = h(mem, args);
+                self.profiles[func as usize].wall += t0.elapsed();
+                self.profiles[func as usize].counters.invocations += 1;
+                r
+            }
+            CallTarget::Bytecode(cidx) => {
+                let cidx = *cidx;
+                let t0 = Instant::now();
+                // Clone nothing: run the frame, pausing on nested calls.
+                let compiled = &self.compiled[cidx];
+                let mut frame = Frame::new(compiled, args);
+                let result = loop {
+                    // Split borrows: frame.run needs &CompiledFn while we
+                    // hold &mut self for nested dispatch, so re-fetch per
+                    // iteration and keep the nested call outside the borrow.
+                    let outcome = {
+                        let compiled = &self.compiled[cidx];
+                        frame.run(compiled, mem, fuel)?
+                    };
+                    match outcome {
+                        RunOutcome::Done(v) => break v,
+                        RunOutcome::NeedCall { pc, req, dst } => {
+                            let r = self.dispatch(req.func, mem, &req.args, fuel)?;
+                            if let Some(d) = dst {
+                                frame.slots[d as usize] = r.unwrap_or(Val::Undef);
+                            }
+                            frame.pc = pc + 1;
+                        }
+                    }
+                };
+                let p = &mut self.profiles[func as usize];
+                p.counters.invocations += frame.counters.invocations;
+                p.counters.cycles += frame.counters.cycles;
+                p.counters.mem_accesses += frame.counters.mem_accesses;
+                p.counters.insts += frame.counters.insts;
+                p.wall += t0.elapsed();
+                Ok(result)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::func::{FuncBuilder, Module};
+    use crate::ir::instr::{Inst, Ty};
+
+    fn module_with_square_and_driver() -> Module {
+        // square(x) = x*x ; driver(A, n): for i in 0..n { A[i] = square(A[i]) }
+        let mut m = Module::new();
+        let mut b = FuncBuilder::new("square", &[("x", Ty::I32)]);
+        let x = b.param(0);
+        let r = b.mul(x, x);
+        m.add(b.ret(Some(r)));
+
+        let mut b = FuncBuilder::new("driver", &[("A", Ty::Ptr), ("n", Ty::I32)]);
+        let (a, n) = (b.param(0), b.param(1));
+        let zero = b.const_i32(0);
+        b.counted_loop(zero, n, |b, i| {
+            let v = b.load(Ty::I32, a, i);
+            let dst = b.fresh();
+            b.push(Inst::Call { dst: Some(dst), callee: "square".into(), args: vec![v] });
+            b.store(Ty::I32, a, i, dst);
+        });
+        m.add(b.ret(None));
+        m
+    }
+
+    #[test]
+    fn nested_calls_work() {
+        let mut e = Engine::new(module_with_square_and_driver()).unwrap();
+        let mut mem = Memory::new();
+        let h = mem.from_i32(&[1, 2, 3, 4]);
+        e.call("driver", &mut mem, &[Val::P(h), Val::I(4)]).unwrap();
+        assert_eq!(mem.i32s(h), &[1, 4, 9, 16]);
+        // Both functions profiled.
+        let d = e.func_index("driver").unwrap();
+        let s = e.func_index("square").unwrap();
+        assert_eq!(e.profile(d).counters.invocations, 1);
+        assert_eq!(e.profile(s).counters.invocations, 4);
+    }
+
+    #[test]
+    fn patch_hook_redirects_and_unpatch_restores() {
+        let mut e = Engine::new(module_with_square_and_driver()).unwrap();
+        let s = e.func_index("square").unwrap();
+        // Hook: returns x+100 instead of x*x.
+        e.patch_hook(
+            s,
+            Box::new(|_mem, args| Ok(Some(Val::I(args[0].as_i32() + 100)))),
+        );
+        assert!(e.is_patched(s));
+        let mut mem = Memory::new();
+        let h = mem.from_i32(&[1, 2]);
+        e.call("driver", &mut mem, &[Val::P(h), Val::I(2)]).unwrap();
+        assert_eq!(mem.i32s(h), &[101, 102]);
+
+        e.unpatch(s);
+        assert!(!e.is_patched(s));
+        let h2 = mem.from_i32(&[3]);
+        e.call("driver", &mut mem, &[Val::P(h2), Val::I(1)]).unwrap();
+        assert_eq!(mem.i32s(h2), &[9]);
+    }
+
+    #[test]
+    fn unknown_function_errors() {
+        let mut e = Engine::new(Module::new()).unwrap();
+        let mut mem = Memory::new();
+        assert!(matches!(
+            e.call("ghost", &mut mem, &[]),
+            Err(EngineError::UnknownFunction(_))
+        ));
+    }
+
+    #[test]
+    fn fuel_limit_enforced() {
+        use crate::ir::instr::{BlockId, Term};
+        let mut m = Module::new();
+        let mut b = FuncBuilder::new("spin", &[]);
+        b.terminate(Term::Br(BlockId(0)));
+        m.add(b.finish());
+        let mut e = Engine::new(m).unwrap();
+        e.fuel_limit = 10_000;
+        let mut mem = Memory::new();
+        assert!(matches!(
+            e.call("spin", &mut mem, &[]),
+            Err(EngineError::Trap(Trap::OutOfFuel))
+        ));
+    }
+
+    #[test]
+    fn jit_times_recorded() {
+        let e = Engine::new(module_with_square_and_driver()).unwrap();
+        assert_eq!(e.jit_times.len(), 2);
+    }
+}

@@ -1,0 +1,490 @@
+//! Threaded interpreter + host memory model.
+//!
+//! Executes [`super::bytecode::CompiledFn`] bodies over a register frame,
+//! updating per-function performance counters (abstract cycles + memory
+//! accesses) that the monitor consumes — the stand-in for `perf_event`.
+
+use std::fmt;
+
+use crate::ir::instr::{BinOp, CmpPred};
+
+use super::bytecode::{Bc, CompiledFn};
+
+/// Runtime value. The baseline uses a tagged enum; the §Perf pass keeps it
+/// because dispatch, not tagging, dominates (see EXPERIMENTS.md §Perf).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Val {
+    I(i32),
+    F(f32),
+    /// Array handle into [`Memory`].
+    P(u32),
+    Undef,
+}
+
+impl Val {
+    #[inline]
+    pub fn as_i32(self) -> i32 {
+        match self {
+            Val::I(v) => v,
+            Val::F(v) => v as i32,
+            Val::P(v) => v as i32,
+            Val::Undef => 0,
+        }
+    }
+
+    #[inline]
+    pub fn as_f32(self) -> f32 {
+        match self {
+            Val::F(v) => v,
+            Val::I(v) => v as f32,
+            _ => 0.0,
+        }
+    }
+
+    #[inline]
+    pub fn as_ptr(self) -> u32 {
+        match self {
+            Val::P(v) => v,
+            Val::I(v) => v as u32,
+            _ => u32::MAX,
+        }
+    }
+}
+
+/// Typed array buffer.
+#[derive(Clone, Debug)]
+pub enum ArrayBuf {
+    I32(Vec<i32>),
+    F32(Vec<f32>),
+}
+
+impl ArrayBuf {
+    pub fn len(&self) -> usize {
+        match self {
+            ArrayBuf::I32(v) => v.len(),
+            ArrayBuf::F32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Host memory pool: arrays addressed by handle (the `Ptr` values).
+#[derive(Clone, Debug, Default)]
+pub struct Memory {
+    pub arrays: Vec<ArrayBuf>,
+}
+
+impl Memory {
+    pub fn new() -> Memory {
+        Memory::default()
+    }
+
+    pub fn alloc_i32(&mut self, len: usize) -> u32 {
+        self.arrays.push(ArrayBuf::I32(vec![0; len]));
+        self.arrays.len() as u32 - 1
+    }
+
+    pub fn alloc_f32(&mut self, len: usize) -> u32 {
+        self.arrays.push(ArrayBuf::F32(vec![0.0; len]));
+        self.arrays.len() as u32 - 1
+    }
+
+    pub fn from_i32(&mut self, data: &[i32]) -> u32 {
+        self.arrays.push(ArrayBuf::I32(data.to_vec()));
+        self.arrays.len() as u32 - 1
+    }
+
+    pub fn i32s(&self, h: u32) -> &[i32] {
+        match &self.arrays[h as usize] {
+            ArrayBuf::I32(v) => v,
+            _ => panic!("array {h} is not i32"),
+        }
+    }
+
+    pub fn i32s_mut(&mut self, h: u32) -> &mut Vec<i32> {
+        match &mut self.arrays[h as usize] {
+            ArrayBuf::I32(v) => v,
+            _ => panic!("array {h} is not i32"),
+        }
+    }
+
+    pub fn f32s(&self, h: u32) -> &[f32] {
+        match &self.arrays[h as usize] {
+            ArrayBuf::F32(v) => v,
+            _ => panic!("array {h} is not f32"),
+        }
+    }
+
+    pub fn f32s_mut(&mut self, h: u32) -> &mut Vec<f32> {
+        match &mut self.arrays[h as usize] {
+            ArrayBuf::F32(v) => v,
+            _ => panic!("array {h} is not f32"),
+        }
+    }
+
+    #[inline]
+    fn load_i32(&self, h: u32, idx: i32) -> Result<i32, Trap> {
+        let a = self.arrays.get(h as usize).ok_or(Trap::BadHandle(h))?;
+        match a {
+            ArrayBuf::I32(v) => v
+                .get(idx as usize)
+                .copied()
+                .ok_or(Trap::OutOfBounds { handle: h, idx, len: v.len() }),
+            ArrayBuf::F32(_) => Err(Trap::TypeMismatch(h)),
+        }
+    }
+
+    #[inline]
+    fn load_f32(&self, h: u32, idx: i32) -> Result<f32, Trap> {
+        let a = self.arrays.get(h as usize).ok_or(Trap::BadHandle(h))?;
+        match a {
+            ArrayBuf::F32(v) => v
+                .get(idx as usize)
+                .copied()
+                .ok_or(Trap::OutOfBounds { handle: h, idx, len: v.len() }),
+            ArrayBuf::I32(_) => Err(Trap::TypeMismatch(h)),
+        }
+    }
+}
+
+/// Execution trap.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Trap {
+    BadHandle(u32),
+    OutOfBounds { handle: u32, idx: i32, len: usize },
+    TypeMismatch(u32),
+    DivByZero,
+    /// Fuel exhausted (runaway-loop guard in tests).
+    OutOfFuel,
+}
+
+impl fmt::Display for Trap {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Trap::BadHandle(h) => write!(f, "bad array handle {h}"),
+            Trap::OutOfBounds { handle, idx, len } => {
+                write!(f, "index {idx} out of bounds for array {handle} (len {len})")
+            }
+            Trap::TypeMismatch(h) => write!(f, "array {h} accessed with wrong type"),
+            Trap::DivByZero => write!(f, "integer division by zero"),
+            Trap::OutOfFuel => write!(f, "execution fuel exhausted"),
+        }
+    }
+}
+
+impl std::error::Error for Trap {}
+
+/// Per-function performance counters (the perf_event substitute).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FnCounters {
+    pub invocations: u64,
+    pub cycles: u64,
+    pub mem_accesses: u64,
+    pub insts: u64,
+}
+
+/// A request to run a callee made from inside the interpreter; the engine
+/// dispatches it through the patchable call table.
+pub struct CallRequest {
+    pub func: u32,
+    pub args: Vec<Val>,
+}
+
+/// Outcome of running a body: returned value or a nested call to perform.
+pub enum RunOutcome {
+    Done(Option<Val>),
+    /// Hit a Call at `pc`: engine must execute it, write the result into
+    /// `dst`, then resume at `pc + 1`.
+    NeedCall { pc: u32, req: CallRequest, dst: Option<u32> },
+}
+
+/// Interpreter state for one frame (resumable across calls).
+pub struct Frame {
+    pub slots: Vec<Val>,
+    pub pc: u32,
+    pub counters: FnCounters,
+}
+
+impl Frame {
+    pub fn new(f: &CompiledFn, args: &[Val]) -> Frame {
+        assert_eq!(args.len(), f.n_params, "{}: arg count", f.name);
+        let mut slots = vec![Val::Undef; f.n_slots as usize];
+        slots[..args.len()].copy_from_slice(args);
+        Frame { slots, pc: 0, counters: FnCounters { invocations: 1, ..Default::default() } }
+    }
+
+    /// Interpret until return, trap, fuel exhaustion or a `Call`.
+    pub fn run(
+        &mut self,
+        f: &CompiledFn,
+        mem: &mut Memory,
+        fuel: &mut u64,
+    ) -> Result<RunOutcome, Trap> {
+        macro_rules! slot {
+            ($i:expr) => {
+                self.slots[$i as usize]
+            };
+        }
+        // §Perf note: accumulating these counters in locals and flushing
+        // on exit was tried and measured at <5% (slightly negative) — the
+        // struct stores stay (EXPERIMENTS.md §Perf iteration log).
+        loop {
+            if *fuel == 0 {
+                return Err(Trap::OutOfFuel);
+            }
+            let bc = &f.code[self.pc as usize];
+            *fuel -= 1;
+            self.counters.insts += 1;
+            self.counters.cycles += bc.cost();
+            if bc.is_mem() {
+                self.counters.mem_accesses += 1;
+            }
+            match bc {
+                Bc::ConstI32 { dst, v } => slot!(*dst) = Val::I(*v),
+                Bc::ConstF32 { dst, v } => slot!(*dst) = Val::F(*v),
+                Bc::BinI32 { dst, op, a, b } => {
+                    let (x, y) = (slot!(*a).as_i32(), slot!(*b).as_i32());
+                    let r = match op {
+                        BinOp::Add => x.wrapping_add(y),
+                        BinOp::Sub => x.wrapping_sub(y),
+                        BinOp::Mul => x.wrapping_mul(y),
+                        BinOp::Div => {
+                            if y == 0 {
+                                return Err(Trap::DivByZero);
+                            }
+                            x.wrapping_div(y)
+                        }
+                        BinOp::Rem => {
+                            if y == 0 {
+                                return Err(Trap::DivByZero);
+                            }
+                            x.wrapping_rem(y)
+                        }
+                        BinOp::Min => x.min(y),
+                        BinOp::Max => x.max(y),
+                        BinOp::And => x & y,
+                        BinOp::Or => x | y,
+                        BinOp::Xor => x ^ y,
+                        BinOp::Shl => x.wrapping_shl(y.clamp(0, 31) as u32),
+                        BinOp::Shr => x.wrapping_shr(y.clamp(0, 31) as u32),
+                    };
+                    slot!(*dst) = Val::I(r);
+                }
+                Bc::BinF32 { dst, op, a, b } => {
+                    let (x, y) = (slot!(*a).as_f32(), slot!(*b).as_f32());
+                    let r = match op {
+                        BinOp::Add => x + y,
+                        BinOp::Sub => x - y,
+                        BinOp::Mul => x * y,
+                        BinOp::Div => x / y,
+                        BinOp::Rem => x % y,
+                        BinOp::Min => x.min(y),
+                        BinOp::Max => x.max(y),
+                        _ => f32::NAN, // bitwise on f32 is not authorable
+                    };
+                    slot!(*dst) = Val::F(r);
+                }
+                Bc::CmpI32 { dst, pred, a, b } => {
+                    let r = pred.eval_i32(slot!(*a).as_i32(), slot!(*b).as_i32());
+                    slot!(*dst) = Val::I(r as i32);
+                }
+                Bc::CmpF32 { dst, pred, a, b } => {
+                    let r = pred.eval_f32(slot!(*a).as_f32(), slot!(*b).as_f32());
+                    slot!(*dst) = Val::I(r as i32);
+                }
+                Bc::Select { dst, c, t, f: fv } => {
+                    slot!(*dst) = if slot!(*c).as_i32() != 0 { slot!(*t) } else { slot!(*fv) };
+                }
+                Bc::LoadI32 { dst, base, idx } => {
+                    let v = mem.load_i32(slot!(*base).as_ptr(), slot!(*idx).as_i32())?;
+                    slot!(*dst) = Val::I(v);
+                }
+                Bc::LoadF32 { dst, base, idx } => {
+                    let v = mem.load_f32(slot!(*base).as_ptr(), slot!(*idx).as_i32())?;
+                    slot!(*dst) = Val::F(v);
+                }
+                Bc::StoreI32 { base, idx, val } => {
+                    let (h, i, v) =
+                        (slot!(*base).as_ptr(), slot!(*idx).as_i32(), slot!(*val).as_i32());
+                    let arr = mem.arrays.get_mut(h as usize).ok_or(Trap::BadHandle(h))?;
+                    match arr {
+                        ArrayBuf::I32(vec) => {
+                            let len = vec.len();
+                            *vec.get_mut(i as usize).ok_or(Trap::OutOfBounds {
+                                handle: h,
+                                idx: i,
+                                len,
+                            })? = v;
+                        }
+                        ArrayBuf::F32(_) => return Err(Trap::TypeMismatch(h)),
+                    }
+                }
+                Bc::StoreF32 { base, idx, val } => {
+                    let (h, i, v) =
+                        (slot!(*base).as_ptr(), slot!(*idx).as_i32(), slot!(*val).as_f32());
+                    let arr = mem.arrays.get_mut(h as usize).ok_or(Trap::BadHandle(h))?;
+                    match arr {
+                        ArrayBuf::F32(vec) => {
+                            let len = vec.len();
+                            *vec.get_mut(i as usize).ok_or(Trap::OutOfBounds {
+                                handle: h,
+                                idx: i,
+                                len,
+                            })? = v;
+                        }
+                        ArrayBuf::I32(_) => return Err(Trap::TypeMismatch(h)),
+                    }
+                }
+                Bc::IToF { dst, a } => slot!(*dst) = Val::F(slot!(*a).as_i32() as f32),
+                Bc::FToI { dst, a } => slot!(*dst) = Val::I(slot!(*a).as_f32() as i32),
+                Bc::Mov { dst, a } => slot!(*dst) = slot!(*a),
+                Bc::Call { dst, func, args } => {
+                    let req = CallRequest {
+                        func: *func,
+                        args: args.iter().map(|&a| slot!(a)).collect(),
+                    };
+                    return Ok(RunOutcome::NeedCall { pc: self.pc, req, dst: *dst });
+                }
+                Bc::Syscall => { /* opaque host effect; cost accounted */ }
+                Bc::Jmp { to } => {
+                    self.pc = *to;
+                    continue;
+                }
+                Bc::JmpIf { c, t, f: fb } => {
+                    self.pc = if slot!(*c).as_i32() != 0 { *t } else { *fb };
+                    continue;
+                }
+                Bc::Ret { v } => {
+                    return Ok(RunOutcome::Done(v.map(|r| slot!(r))));
+                }
+            }
+            self.pc += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::func::FuncBuilder;
+    use crate::ir::instr::Ty;
+    use crate::jit::bytecode::compile_fn;
+
+    fn run_simple(f: &crate::ir::func::Function, mem: &mut Memory, args: &[Val]) -> Option<Val> {
+        let c = compile_fn(f, &|_| None).unwrap();
+        let mut frame = Frame::new(&c, args);
+        let mut fuel = u64::MAX;
+        match frame.run(&c, mem, &mut fuel).unwrap() {
+            RunOutcome::Done(v) => v,
+            _ => panic!("unexpected call"),
+        }
+    }
+
+    #[test]
+    fn loop_sum() {
+        // sum = 0; for i in 0..n { sum += A[i] }; return sum
+        let mut b = FuncBuilder::new("sum", &[("A", Ty::Ptr), ("n", Ty::I32)]);
+        let (a, n) = (b.param(0), b.param(1));
+        let acc = b.const_i32(0);
+        let zero = b.const_i32(0);
+        b.counted_loop(zero, n, |b, i| {
+            let v = b.load(Ty::I32, a, i);
+            let s = b.add(acc, v);
+            b.mov_into(acc, s);
+        });
+        let f = b.ret(Some(acc));
+        let mut mem = Memory::new();
+        let h = mem.from_i32(&[1, 2, 3, 4, 5]);
+        let out = run_simple(&f, &mut mem, &[Val::P(h), Val::I(5)]);
+        assert_eq!(out, Some(Val::I(15)));
+    }
+
+    #[test]
+    fn counters_accumulate() {
+        let mut b = FuncBuilder::new("k", &[("A", Ty::Ptr), ("n", Ty::I32)]);
+        let (a, n) = (b.param(0), b.param(1));
+        let zero = b.const_i32(0);
+        b.counted_loop(zero, n, |b, i| {
+            let v = b.load(Ty::I32, a, i);
+            let w = b.add(v, v);
+            b.store(Ty::I32, a, i, w);
+        });
+        let f = b.ret(None);
+        let c = compile_fn(&f, &|_| None).unwrap();
+        let mut mem = Memory::new();
+        let h = mem.alloc_i32(10);
+        let mut frame = Frame::new(&c, &[Val::P(h), Val::I(10)]);
+        let mut fuel = u64::MAX;
+        frame.run(&c, &mut mem, &mut fuel).unwrap();
+        assert_eq!(frame.counters.mem_accesses, 20); // 10 loads + 10 stores
+        assert!(frame.counters.cycles > frame.counters.insts);
+        assert_eq!(frame.counters.invocations, 1);
+    }
+
+    #[test]
+    fn traps_out_of_bounds() {
+        let mut b = FuncBuilder::new("oob", &[("A", Ty::Ptr)]);
+        let a = b.param(0);
+        let idx = b.const_i32(99);
+        let _ = b.load(Ty::I32, a, idx);
+        let f = b.ret(None);
+        let c = compile_fn(&f, &|_| None).unwrap();
+        let mut mem = Memory::new();
+        let h = mem.alloc_i32(4);
+        let mut frame = Frame::new(&c, &[Val::P(h)]);
+        let mut fuel = u64::MAX;
+        let r = frame.run(&c, &mut mem, &mut fuel).err();
+        assert!(matches!(r, Some(Trap::OutOfBounds { idx: 99, .. })));
+    }
+
+    #[test]
+    fn traps_div_by_zero() {
+        use crate::ir::instr::BinOp;
+        let mut b = FuncBuilder::new("d0", &[]);
+        let x = b.const_i32(1);
+        let z = b.const_i32(0);
+        let _ = b.bin(BinOp::Div, Ty::I32, x, z);
+        let f = b.ret(None);
+        let c = compile_fn(&f, &|_| None).unwrap();
+        let mut mem = Memory::new();
+        let mut frame = Frame::new(&c, &[]);
+        let mut fuel = u64::MAX;
+        assert_eq!(frame.run(&c, &mut mem, &mut fuel).err(), Some(Trap::DivByZero));
+    }
+
+    #[test]
+    fn fuel_guard() {
+        // Infinite loop trips OutOfFuel instead of hanging.
+        use crate::ir::instr::{BlockId, Term};
+        let mut b = FuncBuilder::new("spin", &[]);
+        b.terminate(Term::Br(BlockId(0)));
+        let f = b.finish();
+        let c = compile_fn(&f, &|_| None).unwrap();
+        let mut mem = Memory::new();
+        let mut frame = Frame::new(&c, &[]);
+        let mut fuel = 1000;
+        assert_eq!(frame.run(&c, &mut mem, &mut fuel).err(), Some(Trap::OutOfFuel));
+    }
+
+    #[test]
+    fn f32_arithmetic() {
+        let mut b = FuncBuilder::new("faddk", &[("A", Ty::Ptr)]);
+        let a = b.param(0);
+        let i0 = b.const_i32(0);
+        let v = b.load(Ty::F32, a, i0);
+        let w = b.fmul(v, v);
+        b.store(Ty::F32, a, i0, w);
+        let f = b.ret(None);
+        let c = compile_fn(&f, &|_| None).unwrap();
+        let mut mem = Memory::new();
+        let h = mem.alloc_f32(1);
+        mem.f32s_mut(h)[0] = 1.5;
+        let mut frame = Frame::new(&c, &[Val::P(h)]);
+        let mut fuel = u64::MAX;
+        frame.run(&c, &mut mem, &mut fuel).unwrap();
+        assert!((mem.f32s(h)[0] - 2.25).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,9 @@
+//! "JIT" execution layer: IR → bytecode lowering, threaded interpreter
+//! with perf counters, and the patchable call table the offload manager
+//! uses to redirect hot functions (paper Fig 1).
+pub mod bytecode;
+pub mod engine;
+pub mod interp;
+pub use bytecode::{compile_fn, Bc, CompileError, CompiledFn};
+pub use engine::{Engine, EngineError, FnProfile, Hook};
+pub use interp::{ArrayBuf, FnCounters, Frame, Memory, Trap, Val};

@@ -1,0 +1,30 @@
+//! `tlo` — Transparent Live Code Offloading on a (simulated) FPGA overlay.
+//!
+//! Reproduction of *Transparent Live Code Offloading on FPGA* (Rigamonti,
+//! Delporte, Convers, Dassatti — HEIG-VD, 2016) as a three-layer
+//! rust + JAX + Pallas stack. See DESIGN.md for the architecture and
+//! EXPERIMENTS.md for the paper-vs-measured record.
+//!
+//! Layer map:
+//! * L3 (this crate): the paper's framework — mini-IR substrate ([`ir`]),
+//!   JIT-style bytecode engine ([`jit`]), hotspot monitor ([`profile`]),
+//!   SCoP analysis ([`analysis`]), DFG extraction ([`dfg`]), Las-Vegas
+//!   place & route ([`par`]), DFE overlay model ([`dfe`]), PCIe transport
+//!   simulation ([`transport`]), the offload manager with rollback
+//!   ([`offload`]) and phase tracing ([`trace`]).
+//! * L2/L1 (build-time python): the DFE datapath as a Pallas kernel,
+//!   AOT-lowered to HLO text and executed via PJRT ([`runtime`]).
+
+pub mod analysis;
+pub mod dfe;
+pub mod ir;
+pub mod jit;
+pub mod profile;
+pub mod trace;
+pub mod transport;
+pub mod dfg;
+pub mod offload;
+pub mod par;
+pub mod runtime;
+pub mod util;
+pub mod workloads;

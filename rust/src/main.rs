@@ -1,0 +1,61 @@
+//! `tlo` — leader entrypoint. Subcommands mirror the examples so the
+//! shipped binary can regenerate every experiment:
+//!   tlo table1            Table-I analysis over the PolyBench suite
+//!   tlo table2 [--device] Table-II resource/Fmax model
+//!   tlo video [--riffa]   §IV-C video pipeline (Fig 6 + fps)
+//!   tlo devices           list modeled FPGA devices
+use tlo::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env(&["device", "frames", "n", "seed"]);
+    match args.positional.first().map(String::as_str) {
+        Some("table1") => table1(),
+        Some("table2") => table2(&args),
+        Some("devices") => {
+            for d in tlo::dfe::resource::devices() {
+                let (r, c) = d.largest_routable();
+                println!("{:<18} {:<22} {}  largest routable DFE: {}x{}", d.name, d.part, d.tool.name(), r, c);
+            }
+        }
+        Some(other) => {
+            eprintln!("unknown subcommand '{other}'");
+            std::process::exit(2);
+        }
+        None => {
+            println!("tlo — Transparent Live Code Offloading (simulated DFE overlay)");
+            println!("subcommands: table1 | table2 [--device NAME] | devices");
+            println!("experiments: see examples/ and `cargo bench` (DESIGN.md §4)");
+        }
+    }
+}
+
+fn table1() {
+    // Same harness as examples/polybench_analysis.rs, kept thin here.
+    use tlo::analysis::scop::analyze_function;
+    use tlo::dfg::extract::extract;
+    for k in tlo::workloads::polybench::suite() {
+        let an = analyze_function(&k.func);
+        let mut ok = Vec::new();
+        for s in &an.scops {
+            if let Ok(off) = extract(&k.func, s, k.unroll) {
+                ok.push(off.dfg.stats().to_string());
+            }
+        }
+        println!("{:<16} {:?}", k.name, if ok.is_empty() { vec!["-".to_string()] } else { ok });
+    }
+}
+
+fn table2(args: &Args) {
+    let filter = args.get("device");
+    for d in tlo::dfe::resource::devices() {
+        if let Some(f) = filter {
+            if !d.name.eq_ignore_ascii_case(f) {
+                continue;
+            }
+        }
+        println!("\n{} ({}, {})", d.name, d.part, d.tool.name());
+        for (r, c) in [(3, 3), (6, 6), (8, 8), (9, 9), (10, 10), (15, 15), (18, 18), (24, 18)] {
+            println!("  {}", d.estimate(r, c));
+        }
+    }
+}

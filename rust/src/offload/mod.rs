@@ -1,0 +1,547 @@
+//! The offload manager — the paper's runtime decision engine (Fig 1).
+//!
+//! Pipeline per hot function: analysis (SCoP + extraction + legality +
+//! size threshold) → place & route (with the configuration cache) →
+//! configuration download (modeled) → call-table patch with the wrapper
+//! stub → continuous monitoring with rollback ("we continuously monitor
+//! the execution time and we roll back to the initial software should the
+//! produced implementation perform worse than the original one").
+
+pub mod stub;
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+use std::time::Duration;
+
+use crate::analysis::scop::analyze_function;
+use crate::dfe::cache::{dfg_key, CachedConfig, ConfigCache};
+use crate::dfe::grid::Grid;
+use crate::dfe::resource::{device_by_name, Device};
+use crate::dfe::sim::CycleSim;
+use crate::dfg::extract::{extract, OffloadDfg};
+use crate::jit::engine::Engine;
+use crate::jit::interp::Val;
+use crate::par::{place_and_route, ParParams, ParStats};
+use crate::trace::{Phase, Tracer};
+use crate::transport::{PcieParams, PcieSim};
+use crate::util::prng::Rng;
+
+use stub::{run_offloaded, DfeBackend, StubReport, TimeModel};
+
+/// Manager tunables.
+#[derive(Clone, Debug)]
+pub struct OffloadParams {
+    pub grid: Grid,
+    /// Minimum DFG size worth the transfer overhead (paper: "discard
+    /// small DFGs"; must be tuned per implementation).
+    pub min_dfg_nodes: usize,
+    /// Innermost-loop unroll factor for extraction (Fig 2C).
+    pub unroll: usize,
+    pub par: ParParams,
+    /// Invocations observed before a rollback decision.
+    pub rollback_window: u64,
+    /// Device powering the Fmax estimate (Table II name).
+    pub device: String,
+    pub pcie: PcieParams,
+    pub seed: u64,
+    /// Seconds per interpreter cycle (virtual host clock).
+    pub sec_per_cycle: f64,
+    pub cache_capacity: usize,
+}
+
+impl Default for OffloadParams {
+    fn default() -> Self {
+        OffloadParams {
+            grid: Grid::new(8, 8),
+            min_dfg_nodes: 6,
+            unroll: 1,
+            par: ParParams::default(),
+            rollback_window: 4,
+            device: "Virtex 7 (VC707)".into(),
+            pcie: PcieParams::default(),
+            seed: 0xD0E,
+            sec_per_cycle: 1e-9,
+            cache_capacity: 32,
+        }
+    }
+}
+
+/// Why a function was not offloaded.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum RejectReason {
+    NoScop(String),
+    Illegal(String),
+    TooSmall { nodes: usize, min: usize },
+    Unroutable(String),
+}
+
+impl std::fmt::Display for RejectReason {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RejectReason::NoScop(s) => write!(f, "no SCoP: {s}"),
+            RejectReason::Illegal(s) => write!(f, "{s}"),
+            RejectReason::TooSmall { nodes, min } => {
+                write!(f, "DFG too small ({nodes} < {min} nodes)")
+            }
+            RejectReason::Unroutable(s) => write!(f, "unroutable: {s}"),
+        }
+    }
+}
+
+/// A successful offload record.
+#[derive(Clone, Debug)]
+pub struct OffloadRecord {
+    pub func: u32,
+    pub name: String,
+    pub dfg_nodes: usize,
+    pub inputs: usize,
+    pub outputs: usize,
+    pub calc: usize,
+    pub par_stats: Option<ParStats>,
+    pub cache_hit: bool,
+    pub config_time: Duration,
+    pub constants_time: Duration,
+}
+
+/// Live monitoring state shared with the stub hook.
+#[derive(Debug, Default)]
+pub struct RuntimeState {
+    pub invocations: u64,
+    pub virtual_offload: Duration,
+    pub baseline_per_inv: Duration,
+    pub last_report: StubReport,
+    pub failed: bool,
+    pub rolled_back: bool,
+}
+
+pub struct OffloadManager {
+    pub params: OffloadParams,
+    pub cache: ConfigCache,
+    pub pcie: Rc<RefCell<PcieSim>>,
+    pub tracer: Rc<RefCell<Tracer>>,
+    pub device: Device,
+    rng: Rng,
+    states: HashMap<u32, Rc<RefCell<RuntimeState>>>,
+}
+
+impl OffloadManager {
+    pub fn new(params: OffloadParams) -> OffloadManager {
+        let device = device_by_name(&params.device)
+            .unwrap_or_else(|| device_by_name("Virtex 7").unwrap());
+        OffloadManager {
+            pcie: Rc::new(RefCell::new(PcieSim::new(params.pcie))),
+            tracer: Rc::new(RefCell::new(Tracer::new())),
+            cache: ConfigCache::new(params.cache_capacity),
+            rng: Rng::new(params.seed),
+            device,
+            states: HashMap::new(),
+            params,
+        }
+    }
+
+    pub fn state(&self, func: u32) -> Option<Rc<RefCell<RuntimeState>>> {
+        self.states.get(&func).cloned()
+    }
+
+    /// Analysis phase only (used by the Table-I harness): SCoPs, DFG
+    /// extraction and legality for every innermost loop of `func`.
+    pub fn analyze(
+        &mut self,
+        engine: &Engine,
+        func: u32,
+        unroll: usize,
+    ) -> (Vec<OffloadDfg>, Vec<String>, Duration) {
+        let f = &engine.module.funcs[func as usize];
+        let t0 = std::time::Instant::now();
+        let an = analyze_function(f);
+        let mut offs = Vec::new();
+        let mut rejects: Vec<String> =
+            an.rejects.iter().map(|r| r.label().to_string()).collect();
+        for scop in &an.scops {
+            match extract(f, scop, unroll) {
+                Ok(off) => offs.push(off),
+                Err(e) => rejects.push(e.label().to_string()),
+            }
+        }
+        (offs, rejects, t0.elapsed())
+    }
+
+    /// Full offload attempt on `func`. On success the engine's call table
+    /// is patched; numerics subsequently flow through the DFE backend.
+    pub fn try_offload(
+        &mut self,
+        engine: &mut Engine,
+        func: u32,
+        pjrt: Option<&mut crate::runtime::PjrtRuntime>,
+    ) -> Result<OffloadRecord, RejectReason> {
+        let tracer = self.tracer.clone();
+        let name = engine.func_name(func).to_string();
+
+        // ---- 1. analysis (Fig 6 phase 1) ----
+        let (off, single) = tracer.borrow_mut().span(Phase::Analysis, {
+            let params_unroll = self.params.unroll;
+            let f = &engine.module.funcs[func as usize];
+            move || -> Result<(OffloadDfg, OffloadDfg), RejectReason> {
+                let an = analyze_function(f);
+                if an.scops.is_empty() {
+                    let why = an
+                        .rejects
+                        .first()
+                        .map(|r| r.label().to_string())
+                        .unwrap_or_else(|| "no loops".into());
+                    return Err(RejectReason::NoScop(why));
+                }
+                // First extractable SCoP wins (the paper off-loads the
+                // hottest region; our workloads put it first).
+                let mut last_err = None;
+                for scop in &an.scops {
+                    match (extract(f, scop, params_unroll), extract(f, scop, 1)) {
+                        (Ok(o), Ok(s)) => return Ok((o, s)),
+                        (Err(e), _) | (_, Err(e)) => last_err = Some(e),
+                    }
+                }
+                Err(RejectReason::Illegal(
+                    last_err.map(|e| e.label().to_string()).unwrap_or_default(),
+                ))
+            }
+        })?;
+
+        let stats = off.dfg.stats();
+        let nodes = off.dfg.len();
+        if nodes < self.params.min_dfg_nodes {
+            return Err(RejectReason::TooSmall { nodes, min: self.params.min_dfg_nodes });
+        }
+
+        // ---- 2. place & route, via the configuration cache ----
+        let key = dfg_key(&off.dfg);
+        let mut par_stats = None;
+        let cache_hit = self.cache.get(key).is_some();
+        let cached = if let Some(c) = self.cache.get(key) {
+            c.clone()
+        } else {
+            let grid = self.params.grid;
+            let par = self.params.par;
+            let rng = &mut self.rng;
+            let dfg = &off.dfg;
+            let result = tracer
+                .borrow_mut()
+                .span(Phase::PlaceRoute, || place_and_route(dfg, grid, &par, rng))
+                .map_err(|e| RejectReason::Unroutable(e.to_string()))?;
+            par_stats = Some(result.stats);
+            let c = CachedConfig {
+                config: result.config,
+                image: result.image,
+                variant: format!("dfe_{}x{}", grid.rows, grid.cols),
+            };
+            self.cache.insert(key, c.clone());
+            c
+        };
+
+        // ---- 3. configuration + constants download (modeled) ----
+        let cfg_words = cached.config.config_words() as u64;
+        // Each configuration word rides the same tagged link + FSM epsilon.
+        let config_time = {
+            let mut pcie = self.pcie.borrow_mut();
+            pcie.transfer(cfg_words * 4).time + Duration::from_micros(600)
+        };
+        tracer.borrow_mut().simulated(Phase::Configure, config_time);
+        let constants_time = {
+            let mut pcie = self.pcie.borrow_mut();
+            pcie.transfer(cached.image.consts.len().max(1) as u64 * 4).time
+        };
+        tracer.borrow_mut().simulated(Phase::Constants, constants_time);
+
+        // ---- 4. timing model (Fmax from Table II, fill/II from the
+        //         cycle simulator) ----
+        let est = self.device.estimate(self.params.grid.rows, self.params.grid.cols);
+        let (fill, ii) = measure_pipeline(&cached.config, cached.image.n_inputs);
+        let tm = TimeModel {
+            sec_per_cycle: self.params.sec_per_cycle,
+            fmax_hz: est.fmax_mhz * 1e6,
+            fill_latency: fill,
+            initiation_interval: ii,
+        };
+
+        // ---- 5. backend + stub patch (Fig 6 phase 2 is the stub JIT;
+        //         engine lowering measured at Engine::new) ----
+        let backend = match pjrt {
+            Some(rt) => {
+                let exe = rt
+                    .executable_fitting(cached.image.n_cells())
+                    .map_err(|e| RejectReason::Unroutable(format!("artifact: {e}")))?;
+                DfeBackend::Pjrt(exe)
+            }
+            None => DfeBackend::Sim,
+        };
+        let jit_time = engine.jit_times.get(func as usize).copied().unwrap_or_default();
+        tracer.borrow_mut().simulated(Phase::Jit, jit_time.max(Duration::from_micros(50)));
+
+        let profile = engine.profile(func);
+        let baseline_per_inv = Duration::from_secs_f64(
+            self.params.sec_per_cycle * profile.counters.cycles as f64
+                / profile.counters.invocations.max(1) as f64,
+        );
+        let state = Rc::new(RefCell::new(RuntimeState {
+            baseline_per_inv,
+            ..Default::default()
+        }));
+        self.states.insert(func, state.clone());
+
+        let image = cached.image.clone();
+        let pcie = self.pcie.clone();
+        let tracer_h = tracer.clone();
+        let off_h = off.clone();
+        let single_h = single.clone();
+        engine.patch_hook(
+            func,
+            Box::new(move |mem, args| {
+                let mut pcie = pcie.borrow_mut();
+                let r = run_offloaded(
+                    &off_h, &single_h, &image, &backend, &tm, &mut pcie, mem, args,
+                );
+                match r {
+                    Ok(report) => {
+                        let mut st = state.borrow_mut();
+                        st.invocations += 1;
+                        st.virtual_offload += report.offload_time();
+                        st.last_report = report;
+                        drop(st);
+                        let mut t = tracer_h.borrow_mut();
+                        t.simulated(Phase::HostToDfe, report.host_to_dfe);
+                        t.simulated(Phase::DfeExec, report.dfe_exec);
+                        t.simulated(Phase::DfeToHost, report.dfe_to_host);
+                        Ok(None)
+                    }
+                    Err(trap) => {
+                        state.borrow_mut().failed = true;
+                        Err(trap)
+                    }
+                }
+            }),
+        );
+
+        Ok(OffloadRecord {
+            func,
+            name,
+            dfg_nodes: nodes,
+            inputs: stats.inputs,
+            outputs: stats.outputs,
+            calc: stats.calc,
+            par_stats,
+            cache_hit,
+            config_time,
+            constants_time,
+        })
+    }
+
+    /// Rollback pass ("roll back to the initial software should the
+    /// produced implementation perform worse"): compares modeled offload
+    /// time per invocation with the software baseline. Returns functions
+    /// rolled back.
+    pub fn check_rollback(&mut self, engine: &mut Engine) -> Vec<u32> {
+        let mut rolled = Vec::new();
+        for (&func, state) in &self.states {
+            if !engine.is_patched(func) {
+                continue;
+            }
+            let mut st = state.borrow_mut();
+            let decided = st.invocations >= self.params.rollback_window || st.failed;
+            if !decided {
+                continue;
+            }
+            let per_inv = st.virtual_offload / st.invocations.max(1) as u32;
+            if st.failed || per_inv > st.baseline_per_inv {
+                engine.unpatch(func);
+                st.rolled_back = true;
+                rolled.push(func);
+            }
+        }
+        rolled
+    }
+}
+
+/// Measure pipeline fill latency and initiation interval on the cycle
+/// simulator with a short synthetic stream.
+fn measure_pipeline(config: &crate::dfe::config::GridConfig, n_inputs: usize) -> (f64, f64) {
+    let n = 16;
+    let streams: Vec<Vec<i32>> = (0..n_inputs.max(1))
+        .map(|j| (0..n as i32).map(|t| t + j as i32).collect())
+        .collect();
+    match CycleSim::new(config).and_then(|mut s| s.run_stream(&streams, n)) {
+        Ok(r) => (r.fill_latency as f64, r.initiation_interval.max(1.0)),
+        Err(_) => (config.grid.n_cells() as f64, 1.0),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::func::{FuncBuilder, Module};
+    use crate::ir::instr::Ty;
+    use crate::jit::interp::{Memory, Val};
+
+    /// Fig-2 kernel module (C = A + 3B + 1 over n elements).
+    fn fig2_module() -> Module {
+        let mut m = Module::new();
+        let mut b = FuncBuilder::new(
+            "fig2",
+            &[("C", Ty::Ptr), ("A", Ty::Ptr), ("B", Ty::Ptr), ("n", Ty::I32)],
+        );
+        let (c, a, bb, n) = (b.param(0), b.param(1), b.param(2), b.param(3));
+        let zero = b.const_i32(0);
+        b.counted_loop(zero, n, |b, i| {
+            let av = b.load(Ty::I32, a, i);
+            let bv = b.load(Ty::I32, bb, i);
+            let c3 = b.const_i32(3);
+            let t = b.mul(bv, c3);
+            let s = b.add(av, t);
+            let c1 = b.const_i32(1);
+            let r = b.add(s, c1);
+            b.store(Ty::I32, c, i, r);
+        });
+        m.add(b.ret(None));
+        m
+    }
+
+    fn run_fig2(engine: &mut Engine, mem: &mut Memory, c: u32, a: u32, b: u32, n: i32) {
+        engine
+            .call("fig2", mem, &[Val::P(c), Val::P(a), Val::P(b), Val::I(n)])
+            .unwrap();
+    }
+
+    #[test]
+    fn offload_preserves_semantics_sim_backend() {
+        let mut engine = Engine::new(fig2_module()).unwrap();
+        let mut mem = Memory::new();
+        let n = 1000;
+        let a: Vec<i32> = (0..n).map(|i| i * 7 - 300).collect();
+        let b: Vec<i32> = (0..n).map(|i| -i + 11).collect();
+        let (ha, hb) = (mem.from_i32(&a), mem.from_i32(&b));
+        let hc_sw = mem.alloc_i32(n as usize);
+        let hc_hw = mem.alloc_i32(n as usize);
+
+        // Software baseline (also warms the profile for the baseline time).
+        run_fig2(&mut engine, &mut mem, hc_sw, ha, hb, n);
+
+        let mut mgr = OffloadManager::new(OffloadParams {
+            min_dfg_nodes: 1,
+            unroll: 4,
+            ..Default::default()
+        });
+        let func = engine.func_index("fig2").unwrap();
+        let rec = mgr.try_offload(&mut engine, func, None).expect("offload");
+        assert!(engine.is_patched(func));
+        assert_eq!(rec.outputs, 4); // unrolled x4
+
+        // Offloaded run, n NOT divisible by 4 exercises the remainder.
+        run_fig2(&mut engine, &mut mem, hc_hw, ha, hb, n - 3);
+        for i in 0..(n - 3) as usize {
+            assert_eq!(
+                mem.i32s(hc_hw)[i],
+                a[i] + 3 * b[i] + 1,
+                "element {i} mismatch"
+            );
+        }
+        // Virtual time accounted.
+        let st = mgr.state(func).unwrap();
+        assert!(st.borrow().virtual_offload > Duration::ZERO);
+        assert_eq!(st.borrow().last_report.remainder_elements as i32, (n - 3) % 4);
+    }
+
+    #[test]
+    fn threshold_rejects_small_dfgs() {
+        let mut engine = Engine::new(fig2_module()).unwrap();
+        let mut mgr = OffloadManager::new(OffloadParams {
+            min_dfg_nodes: 1000,
+            ..Default::default()
+        });
+        let func = engine.func_index("fig2").unwrap();
+        assert!(matches!(
+            mgr.try_offload(&mut engine, func, None),
+            Err(RejectReason::TooSmall { .. })
+        ));
+    }
+
+    #[test]
+    fn cache_hits_on_reoffload() {
+        let mut engine = Engine::new(fig2_module()).unwrap();
+        let mut mgr =
+            OffloadManager::new(OffloadParams { min_dfg_nodes: 1, ..Default::default() });
+        let func = engine.func_index("fig2").unwrap();
+        let r1 = mgr.try_offload(&mut engine, func, None).unwrap();
+        assert!(!r1.cache_hit);
+        engine.unpatch(func);
+        let r2 = mgr.try_offload(&mut engine, func, None).unwrap();
+        assert!(r2.cache_hit);
+        assert!(r2.par_stats.is_none(), "P&R skipped on hit");
+    }
+
+    #[test]
+    fn rollback_when_offload_slower() {
+        let mut engine = Engine::new(fig2_module()).unwrap();
+        let mut mem = Memory::new();
+        let n = 64; // tiny: transfer overhead dominates -> offload loses
+        let (ha, hb) = (mem.alloc_i32(n), mem.alloc_i32(n));
+        let hc = mem.alloc_i32(n);
+        run_fig2(&mut engine, &mut mem, hc, ha, hb, n as i32);
+
+        let mut mgr = OffloadManager::new(OffloadParams {
+            min_dfg_nodes: 1,
+            rollback_window: 2,
+            ..Default::default()
+        });
+        let func = engine.func_index("fig2").unwrap();
+        mgr.try_offload(&mut engine, func, None).unwrap();
+        for _ in 0..3 {
+            run_fig2(&mut engine, &mut mem, hc, ha, hb, n as i32);
+        }
+        let rolled = mgr.check_rollback(&mut engine);
+        assert_eq!(rolled, vec![func]);
+        assert!(!engine.is_patched(func));
+        // Software path works again.
+        run_fig2(&mut engine, &mut mem, hc, ha, hb, n as i32);
+    }
+
+    #[test]
+    fn no_rollback_when_offload_wins() {
+        // Make the baseline artificially slow (huge sec_per_cycle is not
+        // available per-side, so shrink transfer cost instead: RIFFA-like
+        // link and large n).
+        let mut engine = Engine::new(fig2_module()).unwrap();
+        let mut mem = Memory::new();
+        let n = 20_000;
+        let (ha, hb) = (mem.alloc_i32(n), mem.alloc_i32(n));
+        let hc = mem.alloc_i32(n);
+        run_fig2(&mut engine, &mut mem, hc, ha, hb, n as i32);
+
+        let mut mgr = OffloadManager::new(OffloadParams {
+            min_dfg_nodes: 1,
+            rollback_window: 2,
+            unroll: 4,
+            pcie: crate::transport::PcieParams::riffa_like(),
+            ..Default::default()
+        });
+        let func = engine.func_index("fig2").unwrap();
+        mgr.try_offload(&mut engine, func, None).unwrap();
+        for _ in 0..3 {
+            run_fig2(&mut engine, &mut mem, hc, ha, hb, n as i32);
+        }
+        let rolled = mgr.check_rollback(&mut engine);
+        assert!(rolled.is_empty(), "offload should win at this scale");
+        assert!(engine.is_patched(func));
+    }
+
+    #[test]
+    fn phases_recorded_in_tracer() {
+        let mut engine = Engine::new(fig2_module()).unwrap();
+        let mut mgr =
+            OffloadManager::new(OffloadParams { min_dfg_nodes: 1, ..Default::default() });
+        let func = engine.func_index("fig2").unwrap();
+        mgr.try_offload(&mut engine, func, None).unwrap();
+        let tracer = mgr.tracer.borrow();
+        for phase in [Phase::Analysis, Phase::PlaceRoute, Phase::Configure, Phase::Constants] {
+            assert!(tracer.count(phase) > 0, "{phase:?} missing");
+        }
+    }
+}

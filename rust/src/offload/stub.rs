@@ -1,0 +1,304 @@
+//! The wrapper stub (paper §III: "the run-time replaces all calls to the
+//! host processor function with a wrapper stub that handles all memory
+//! transfers to and from the FPGA, and only then starts execution on it").
+//!
+//! Responsibilities per invocation:
+//!   * enumerate the SCoP's iteration space (affine bounds evaluated with
+//!     the live arguments; the innermost dimension advances by the unroll
+//!     factor) — each point is one DFE stream element;
+//!   * gather input streams (array reads / iota generation) into the
+//!     slot-major batch layout, accounting the PC→FPGA transfer on the
+//!     PCIe model;
+//!   * execute on the DFE datapath (PJRT artifact or the rust functional
+//!     simulator — both run the same execution image);
+//!   * scatter outputs (assignment stores or reduction-partial folds),
+//!     accounting the FPGA→PC transfer;
+//!   * run the < unroll remainder of the innermost loop exactly, by host
+//!     evaluation of the single-iteration DFG.
+//!
+//! Timing discipline: *numerics* are real (the paper's correctness), but
+//! *performance* is virtual — interpreter cycles model host time and the
+//! PCIe/DFE models yield transfer/execution time, so the Fig-6 phase
+//! timeline and the fps comparison (§IV-C) are reproducible regardless of
+//! the machine this simulator runs on.
+
+use std::time::Duration;
+
+use crate::dfe::image::ExecImage;
+use crate::dfg::extract::{OffloadDfg, OutMode};
+use crate::jit::interp::{Memory, Trap, Val};
+use crate::runtime::DfeExecutable;
+use crate::transport::PcieSim;
+
+/// Where the DFE numerics run.
+pub enum DfeBackend {
+    /// Rust functional simulator (always available; used by tests/benches).
+    Sim,
+    /// The AOT Pallas artifact through PJRT (the shipped datapath).
+    Pjrt(std::rc::Rc<DfeExecutable>),
+}
+
+impl DfeBackend {
+    fn run(&self, image: &ExecImage, x: &[i32], lanes: usize) -> Result<Vec<i32>, Trap> {
+        match self {
+            DfeBackend::Sim => Ok(image.eval_batch(x, lanes)),
+            DfeBackend::Pjrt(exe) => exe
+                .run_lanes(image, x, lanes)
+                .map_err(|e| Trap::OutOfBounds {
+                    // Surface PJRT failures as a trap; the coordinator
+                    // rolls back on repeated failures.
+                    handle: u32::MAX,
+                    idx: -1,
+                    len: e.to_string().len(),
+                }),
+        }
+    }
+}
+
+/// Timing model constants for the virtual clock.
+#[derive(Clone, Copy, Debug)]
+pub struct TimeModel {
+    /// Seconds per interpreter abstract cycle (host "native" speed).
+    pub sec_per_cycle: f64,
+    /// DFE clock (from the resource model's Fmax for the chosen device).
+    pub fmax_hz: f64,
+    /// Pipeline characteristics measured once on the cycle simulator.
+    pub fill_latency: f64,
+    pub initiation_interval: f64,
+}
+
+impl TimeModel {
+    pub fn dfe_exec_time(&self, n_elements: u64) -> Duration {
+        if n_elements == 0 {
+            return Duration::ZERO;
+        }
+        let cycles = self.fill_latency + (n_elements as f64 - 1.0) * self.initiation_interval;
+        Duration::from_secs_f64(cycles / self.fmax_hz)
+    }
+}
+
+/// Per-invocation virtual-time report.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StubReport {
+    pub elements: u64,
+    pub host_to_dfe: Duration,
+    pub dfe_to_host: Duration,
+    pub dfe_exec: Duration,
+    pub remainder_elements: u64,
+}
+
+impl StubReport {
+    pub fn offload_time(&self) -> Duration {
+        self.host_to_dfe + self.dfe_to_host + self.dfe_exec
+    }
+}
+
+/// Resolve a `Reg`-indexed argument as i32 (affine parameter).
+fn param_i32(args: &[Val], r: crate::ir::instr::Reg) -> i64 {
+    args.get(r.0 as usize).map(|v| v.as_i32() as i64).unwrap_or(0)
+}
+
+/// Enumerate the iteration space: returns the iv-vectors of each *group*
+/// (innermost stepping by `unroll`) plus the remainder iv-vectors
+/// (stepping by 1).
+pub fn iteration_groups(
+    off: &OffloadDfg,
+    args: &[Val],
+) -> (Vec<Vec<i64>>, Vec<Vec<i64>>) {
+    let nest = &off.scop.nest;
+    let depth = nest.len();
+    let u = off.unroll as i64;
+    let mut groups = Vec::new();
+    let mut remainder = Vec::new();
+    let params = |r| param_i32(args, r);
+
+    // Iterative nested enumeration.
+    let mut ivs: Vec<i64> = Vec::with_capacity(depth);
+    fn recurse(
+        nest: &[crate::analysis::scop::LoopInfo],
+        d: usize,
+        u: i64,
+        ivs: &mut Vec<i64>,
+        params: &dyn Fn(crate::ir::instr::Reg) -> i64,
+        groups: &mut Vec<Vec<i64>>,
+        remainder: &mut Vec<Vec<i64>>,
+    ) {
+        let l = &nest[d];
+        let lb = l.lb.eval(ivs, params);
+        let ub = l.ub.eval(ivs, params);
+        if d + 1 == nest.len() {
+            let n = (ub - lb).max(0);
+            let main = n - n % u;
+            let mut iv = lb;
+            while iv < lb + main {
+                ivs.push(iv);
+                groups.push(ivs.clone());
+                ivs.pop();
+                iv += u;
+            }
+            while iv < ub {
+                ivs.push(iv);
+                remainder.push(ivs.clone());
+                ivs.pop();
+                iv += 1;
+            }
+        } else {
+            let mut iv = lb;
+            while iv < ub {
+                ivs.push(iv);
+                recurse(nest, d + 1, u, ivs, params, groups, remainder);
+                ivs.pop();
+                iv += 1;
+            }
+        }
+    }
+    if depth > 0 {
+        recurse(nest, 0, u, &mut ivs, &params, &mut groups, &mut remainder);
+    }
+    (groups, remainder)
+}
+
+/// Gather/scatter + execute one invocation. Returns the virtual-time
+/// report; numeric effects land in `mem`. `single` is the u=1 extraction
+/// of the same SCoP, used for the < unroll remainder (pass `off` itself
+/// when `off.unroll == 1`).
+pub fn run_offloaded(
+    off: &OffloadDfg,
+    single: &OffloadDfg,
+    image: &ExecImage,
+    backend: &DfeBackend,
+    tm: &TimeModel,
+    pcie: &mut PcieSim,
+    mem: &mut Memory,
+    args: &[Val],
+) -> Result<StubReport, Trap> {
+    let (groups, remainder) = iteration_groups(off, args);
+    let n = groups.len();
+    let n_in = off.inputs.len();
+    let n_out = off.outputs.len();
+    let params = |r| param_i32(args, r);
+    let mut report = StubReport {
+        elements: n as u64,
+        remainder_elements: remainder.len() as u64,
+        ..Default::default()
+    };
+
+    if n > 0 {
+        // Gather: slot-major [n_in, n].
+        let mut x = vec![0i32; n_in * n];
+        for (lane, ivs) in groups.iter().enumerate() {
+            for (j, s) in off.inputs.iter().enumerate() {
+                let v = match s.base {
+                    Some(base) => {
+                        let h = args[base.0 as usize].as_ptr();
+                        let idx = s.affine.eval(ivs, &params);
+                        let arr = mem.i32s(h);
+                        *arr.get(idx as usize).ok_or(Trap::OutOfBounds {
+                            handle: h,
+                            idx: idx as i32,
+                            len: arr.len(),
+                        })?
+                    }
+                    None => s.affine.eval(ivs, &params) as i32,
+                };
+                x[j * n + lane] = v;
+            }
+        }
+        // Account PC->FPGA (payload both data words and their addresses
+        // are implicit; the tagged protocol quadruples it on the wire).
+        report.host_to_dfe = pcie.transfer((n_in * n * 4) as u64).time;
+
+        // Execute.
+        let out = backend.run(image, &x, n)?;
+        report.dfe_exec = tm.dfe_exec_time(n as u64);
+        report.dfe_to_host = pcie.transfer((n_out * n * 4) as u64).time;
+
+        // Scatter.
+        for (j, o) in off.outputs.iter().enumerate() {
+            let h = args[o.base.0 as usize].as_ptr();
+            match o.mode {
+                OutMode::Assign => {
+                    for (lane, ivs) in groups.iter().enumerate() {
+                        let idx = o.affine.eval(ivs, &params);
+                        let arr = mem.i32s_mut(h);
+                        let len = arr.len();
+                        *arr.get_mut(idx as usize).ok_or(Trap::OutOfBounds {
+                            handle: h,
+                            idx: idx as i32,
+                            len,
+                        })? = out[j * n + lane];
+                    }
+                }
+                OutMode::Accumulate => {
+                    // Fold all partials into the (iteration-invariant in
+                    // the innermost dim) accumulator addresses.
+                    for (lane, ivs) in groups.iter().enumerate() {
+                        let idx = o.affine.eval(ivs, &params);
+                        let arr = mem.i32s_mut(h);
+                        let len = arr.len();
+                        let slot = arr.get_mut(idx as usize).ok_or(Trap::OutOfBounds {
+                            handle: h,
+                            idx: idx as i32,
+                            len,
+                        })?;
+                        *slot = slot.wrapping_add(out[j * n + lane]);
+                    }
+                }
+            }
+        }
+    }
+
+    // Remainder (< unroll innermost iterations): exact host evaluation of
+    // the single-iteration DFG (cheap, keeps semantics exact without a
+    // second fabric configuration).
+    if !remainder.is_empty() {
+        run_remainder(single, &remainder, mem, args)?;
+    }
+    Ok(report)
+}
+
+/// Host-exact evaluation of remainder iterations on the u=1 DFG.
+pub fn run_remainder(
+    single: &OffloadDfg,
+    remainder: &[Vec<i64>],
+    mem: &mut Memory,
+    args: &[Val],
+) -> Result<(), Trap> {
+    let params = |r| param_i32(args, r);
+    for ivs in remainder {
+        let mut inputs = Vec::with_capacity(single.inputs.len());
+        for s in &single.inputs {
+            let v = match s.base {
+                Some(base) => {
+                    let h = args[base.0 as usize].as_ptr();
+                    let idx = s.affine.eval(ivs, &params);
+                    let arr = mem.i32s(h);
+                    *arr.get(idx as usize).ok_or(Trap::OutOfBounds {
+                        handle: h,
+                        idx: idx as i32,
+                        len: arr.len(),
+                    })?
+                }
+                None => s.affine.eval(ivs, &params) as i32,
+            };
+            inputs.push(v);
+        }
+        let outs = single.dfg.eval(&inputs).map_err(|_| Trap::BadHandle(u32::MAX))?;
+        for (j, o) in single.outputs.iter().enumerate() {
+            let h = args[o.base.0 as usize].as_ptr();
+            let idx = o.affine.eval(ivs, &params);
+            let arr = mem.i32s_mut(h);
+            let len = arr.len();
+            let slot = arr.get_mut(idx as usize).ok_or(Trap::OutOfBounds {
+                handle: h,
+                idx: idx as i32,
+                len,
+            })?;
+            match o.mode {
+                OutMode::Assign => *slot = outs[j],
+                OutMode::Accumulate => *slot = slot.wrapping_add(outs[j]),
+            }
+        }
+    }
+    Ok(())
+}

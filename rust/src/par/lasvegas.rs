@@ -1,0 +1,573 @@
+//! The Las-Vegas place & route algorithm (paper §III-B).
+//!
+//! "A stochastic algorithm that ends with a correct solution — if this
+//! solution exists." One DFG node is handled at a time:
+//!   * node order is random, biased toward nodes adjacent to external
+//!     inputs/outputs (border interfaces are scarce — their count equals
+//!     the grid perimeter);
+//!   * a candidate cell is drawn from a position distribution built from a
+//!     narrow Gaussian over the grid plus an attraction term that pulls a
+//!     node next to already-placed producers/consumers ("altered to group
+//!     nodes together, particularly so if two given nodes share an input
+//!     or output");
+//!   * all nets to/from already-placed nodes are routed with Dijkstra
+//!     (see [`super::route`]); on routing failure the placement backtracks
+//!     and retries another position (excluding failed ones);
+//!   * after too many failures on a node the algorithm backtracks a random
+//!     number of steps; a bounded number of full restarts keeps the
+//!     Las-Vegas property while making termination decidable in practice.
+//!
+//! Because the runtime is stochastic, the paper reports it as "can require
+//! several seconds ... 1.18 s" for the 17-in/1-out/16-calc convolution DFG
+//! — bench `par_bench` reproduces that distribution shape.
+
+use std::time::{Duration, Instant};
+
+use crate::dfe::config::{FuSrc, GridConfig};
+use crate::dfe::grid::{CellCoord, Grid};
+use crate::dfe::image::ExecImage;
+
+use crate::dfg::graph::{Dfg, DfgError, NodeId, NodeKind};
+use crate::util::prng::Rng;
+
+use super::route::{RouteOutcome, RouteTarget, Router};
+
+/// Tunables for the stochastic search.
+#[derive(Clone, Copy, Debug)]
+pub struct ParParams {
+    /// Candidate positions tried per node before giving up on it.
+    pub max_pos_attempts: usize,
+    /// Node give-ups before backtracking a random number of steps.
+    pub max_node_failures: usize,
+    /// Full restarts before declaring the DFG unroutable on this grid.
+    pub max_restarts: usize,
+    /// Gaussian width of the position prior, as a fraction of grid side.
+    pub sigma_frac: f64,
+    /// Attraction width for grouping connected nodes.
+    pub attract_sigma: f64,
+    /// Extra selection weight for I/O-adjacent nodes.
+    pub io_bias: f64,
+}
+
+impl Default for ParParams {
+    fn default() -> Self {
+        ParParams {
+            max_pos_attempts: 24,
+            max_node_failures: 12,
+            max_restarts: 40,
+            sigma_frac: 0.35,
+            attract_sigma: 1.6,
+            io_bias: 3.0,
+        }
+    }
+}
+
+/// Statistics of one P&R run (the Las-Vegas behaviour the paper reports).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ParStats {
+    pub placements: u64,
+    pub route_calls: u64,
+    pub pos_retries: u64,
+    pub backtracks: u64,
+    pub restarts: u64,
+    pub elapsed: Duration,
+}
+
+#[derive(Clone, Debug)]
+pub struct ParResult {
+    pub config: GridConfig,
+    pub image: ExecImage,
+    pub stats: ParStats,
+    /// Cell chosen for each placed calc node.
+    pub placement: Vec<(NodeId, CellCoord)>,
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ParError {
+    /// More calc nodes than grid cells — can never fit.
+    TooLarge { calc: usize, cells: usize },
+    /// Unsupported DFG shape (validation failed).
+    BadDfg(DfgError),
+    /// Gave up after the restart budget (paper: heat-3d on 24x18).
+    Unroutable { restarts: usize },
+}
+
+impl std::fmt::Display for ParError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ParError::TooLarge { calc, cells } => {
+                write!(f, "DFG has {calc} calc nodes but the grid only {cells} cells")
+            }
+            ParError::BadDfg(e) => write!(f, "invalid DFG: {e}"),
+            ParError::Unroutable { restarts } => {
+                write!(f, "place&route failed after {restarts} restarts")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ParError {}
+
+/// Place & route `dfg` on `grid`. Deterministic for a given `rng` state.
+pub fn place_and_route(
+    dfg: &Dfg,
+    grid: Grid,
+    params: &ParParams,
+    rng: &mut Rng,
+) -> Result<ParResult, ParError> {
+    dfg.validate().map_err(ParError::BadDfg)?;
+    let t0 = Instant::now();
+    // Normalize: an external output fed directly by a constant gets a PASS
+    // cell (constant-masked operand) so it flows through the fabric like
+    // everything else.
+    let mut normalized;
+    let dfg = {
+        let needs = dfg.nodes.iter().any(|n| {
+            matches!(n.kind, NodeKind::Output(_))
+                && matches!(dfg.nodes[n.srcs[0]].kind, NodeKind::Const(_))
+        });
+        if needs {
+            normalized = dfg.clone();
+            for id in 0..normalized.nodes.len() {
+                if matches!(normalized.nodes[id].kind, NodeKind::Output(_)) {
+                    let src = normalized.nodes[id].srcs[0];
+                    if matches!(normalized.nodes[src].kind, NodeKind::Const(_)) {
+                        let pass = normalized.add(
+                            NodeKind::Calc(crate::dfe::opcodes::Op::Pass),
+                            vec![src, src],
+                        );
+                        normalized.nodes[id].srcs[0] = pass;
+                    }
+                }
+            }
+            &normalized
+        } else {
+            dfg
+        }
+    };
+    let calc_nodes: Vec<NodeId> = (0..dfg.len())
+        .filter(|&id| matches!(dfg.nodes[id].kind, NodeKind::Calc(_)))
+        .collect();
+    if calc_nodes.len() > grid.n_cells() {
+        return Err(ParError::TooLarge { calc: calc_nodes.len(), cells: grid.n_cells() });
+    }
+
+    // Consumers of each node (calc-level fanout), and whether a calc node
+    // touches external I/O (for the selection bias).
+    let n = dfg.len();
+    let mut consumers: Vec<Vec<(NodeId, u8)>> = vec![Vec::new(); n]; // (consumer, operand slot)
+    let mut feeds_output: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for (id, node) in dfg.nodes.iter().enumerate() {
+        match &node.kind {
+            NodeKind::Calc(_) => {
+                for (slot, &s) in node.srcs.iter().enumerate() {
+                    consumers[s].push((id, slot as u8));
+                }
+            }
+            NodeKind::Output(j) => feeds_output[node.srcs[0]].push(*j),
+            _ => {}
+        }
+    }
+    let io_adjacent: Vec<bool> = (0..n)
+        .map(|id| {
+            if !matches!(dfg.nodes[id].kind, NodeKind::Calc(_)) {
+                return false;
+            }
+            let reads_input = dfg.nodes[id]
+                .srcs
+                .iter()
+                .any(|&s| matches!(dfg.nodes[s].kind, NodeKind::Input(_)));
+            reads_input || !feeds_output[id].is_empty()
+        })
+        .collect();
+
+    let mut stats = ParStats::default();
+    let sigma = (grid.rows.max(grid.cols) as f64 * params.sigma_frac).max(0.8);
+
+    'restart: for restart in 0..=params.max_restarts {
+        stats.restarts = restart as u64;
+        let mut state = SearchState::new(dfg, grid);
+        let mut node_failures = 0usize;
+
+        while !state.unplaced.is_empty() {
+            // --- node selection: weighted toward I/O-adjacent nodes ---
+            let weights: Vec<f64> = state
+                .unplaced
+                .iter()
+                .map(|&id| if io_adjacent[id] { params.io_bias } else { 1.0 })
+                .collect();
+            let pick = rng.weighted(&weights);
+            let node = state.unplaced[pick];
+
+            // Snapshot for node-level backtracking.
+            let snapshot = state.clone();
+            let mut placed_ok = false;
+            let mut tried: Vec<CellCoord> = Vec::new();
+
+            for _attempt in 0..params.max_pos_attempts {
+                let Some(cell) =
+                    sample_position(&state, grid, node, dfg, params, sigma, &tried, rng)
+                else {
+                    break;
+                };
+                tried.push(cell);
+                stats.placements += 1;
+                match try_place(&mut state, dfg, node, cell, &consumers, &feeds_output, &mut stats)
+                {
+                    Ok(()) => {
+                        placed_ok = true;
+                        break;
+                    }
+                    Err(_) => {
+                        stats.pos_retries += 1;
+                        state = snapshot.clone();
+                    }
+                }
+            }
+
+            if !placed_ok {
+                node_failures += 1;
+                stats.backtracks += 1;
+                if node_failures > params.max_node_failures {
+                    continue 'restart;
+                }
+                // Backtrack a random number of already-placed nodes.
+                let depth = state.placed_order.len();
+                if depth == 0 {
+                    continue 'restart;
+                }
+                let back = 1 + rng.below(depth.min(4));
+                state.rewind(dfg, back, grid);
+            }
+        }
+
+        // All calc nodes placed; route remaining external outputs fed
+        // directly by inputs (pass-through DFGs) — rare but legal.
+        if state.route_passthrough_outputs(dfg).is_err() {
+            continue 'restart;
+        }
+
+        let config = state.router.cfg.clone();
+        match config.to_image() {
+            Ok(image) => {
+                stats.elapsed = t0.elapsed();
+                return Ok(ParResult {
+                    config,
+                    image,
+                    stats,
+                    placement: state.placed_order.clone(),
+                });
+            }
+            Err(_) => continue 'restart,
+        }
+    }
+    stats.elapsed = t0.elapsed();
+    Err(ParError::Unroutable { restarts: params.max_restarts })
+}
+
+/// Mutable search state: router + placement bookkeeping. Cloned for
+/// snapshots (grids are small; the paper snapshots "previous settings").
+#[derive(Clone)]
+struct SearchState {
+    router: Router,
+    unplaced: Vec<NodeId>,
+    placed_order: Vec<(NodeId, CellCoord)>,
+    cell_used: Vec<bool>,
+}
+
+impl SearchState {
+    fn new(dfg: &Dfg, grid: Grid) -> SearchState {
+        let mut router = Router::new(grid);
+        for (id, node) in dfg.nodes.iter().enumerate() {
+            if let NodeKind::Input(j) = node.kind {
+                router.add_input_net(id, j);
+            }
+        }
+        let unplaced = (0..dfg.len())
+            .filter(|&id| matches!(dfg.nodes[id].kind, NodeKind::Calc(_)))
+            .collect();
+        SearchState {
+            router,
+            unplaced,
+            placed_order: Vec::new(),
+            cell_used: vec![false; grid.n_cells()],
+        }
+    }
+
+    /// Rebuild the state with the last `back` placements undone.
+    /// (Routing state is not incrementally reversible; replay is simpler
+    /// and the paper's own backtracking "starts from scratch from a
+    /// previous setting".)
+    fn rewind(&mut self, dfg: &Dfg, back: usize, grid: Grid) {
+        let keep = self.placed_order.len().saturating_sub(back);
+        let kept: Vec<(NodeId, CellCoord)> = self.placed_order[..keep].to_vec();
+        *self = SearchState::new(dfg, grid);
+        // Replay kept placements; they were legal before, so they stay
+        // legal (the fabric only had *more* nets then).
+        let mut consumers: Vec<Vec<(NodeId, u8)>> = vec![Vec::new(); dfg.len()];
+        let mut feeds_output: Vec<Vec<usize>> = vec![Vec::new(); dfg.len()];
+        for (id, node) in dfg.nodes.iter().enumerate() {
+            match &node.kind {
+                NodeKind::Calc(_) => {
+                    for (slot, &s) in node.srcs.iter().enumerate() {
+                        consumers[s].push((id, slot as u8));
+                    }
+                }
+                NodeKind::Output(j) => feeds_output[node.srcs[0]].push(*j),
+                _ => {}
+            }
+        }
+        let mut dummy = ParStats::default();
+        for (node, cell) in kept {
+            let _ = try_place(self, dfg, node, cell, &consumers, &feeds_output, &mut dummy);
+        }
+    }
+
+    /// Route Input -> Output pass-through pairs (no calc node in between).
+    fn route_passthrough_outputs(&mut self, dfg: &Dfg) -> Result<(), ()> {
+        for node in &dfg.nodes {
+            if let NodeKind::Output(j) = node.kind {
+                let src = node.srcs[0];
+                if matches!(dfg.nodes[src].kind, NodeKind::Input(_)) {
+                    match self.router.route(src, RouteTarget::BorderOut) {
+                        Ok(RouteOutcome::AtBorderOut(p, d)) => {
+                            self.router.bind_output(p, d, j);
+                        }
+                        _ => return Err(()),
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Position sampling: Gaussian prior over the grid (narrow, centered per
+/// the paper) multiplied by an attraction term toward already-placed
+/// neighbours; border-adjusted for I/O nodes. Excludes used and
+/// previously-failed cells.
+#[allow(clippy::too_many_arguments)]
+fn sample_position(
+    state: &SearchState,
+    grid: Grid,
+    node: NodeId,
+    dfg: &Dfg,
+    params: &ParParams,
+    sigma: f64,
+    exclude: &[CellCoord],
+    rng: &mut Rng,
+) -> Option<CellCoord> {
+    let (cr, cc) = grid.center();
+    // Placed neighbours of `node` (producers it reads, consumers reading it).
+    let mut anchors: Vec<CellCoord> = Vec::new();
+    for &(placed, cell) in &state.placed_order {
+        let reads = dfg.nodes[node].srcs.contains(&placed);
+        let read_by = dfg.nodes[placed].srcs.contains(&node);
+        if reads || read_by {
+            anchors.push(cell);
+        }
+    }
+    let touches_io = dfg.nodes[node]
+        .srcs
+        .iter()
+        .any(|&s| matches!(dfg.nodes[s].kind, NodeKind::Input(_)));
+
+    let mut cells = Vec::new();
+    let mut weights = Vec::new();
+    for p in grid.iter_coords() {
+        if state.cell_used[grid.index(p)] || exclude.contains(&p) {
+            continue;
+        }
+        let dr = p.r as f64 - cr;
+        let dc = p.c as f64 - cc;
+        let d_center2 = dr * dr + dc * dc;
+        let mut w = (-d_center2 / (2.0 * sigma * sigma)).exp().max(1e-9);
+        if touches_io {
+            // Favor the border (scarce interfaces, shorter input paths).
+            let bd = grid.border_dist(p) as f64;
+            w *= (-(bd * bd) / (2.0 * 1.0)).exp().max(1e-6);
+        }
+        for a in &anchors {
+            let d = p.dist(*a) as f64;
+            w *= (-(d * d) / (2.0 * params.attract_sigma * params.attract_sigma))
+                .exp()
+                .max(1e-6);
+        }
+        cells.push(p);
+        weights.push(w);
+    }
+    if cells.is_empty() {
+        return None;
+    }
+    Some(cells[rng.weighted(&weights)])
+}
+
+/// Try to place `node`'s FU at `cell` and route every net touching an
+/// already-placed neighbour (paper: "all previously-placed nodes are
+/// checked to see if either they provide an input to the current node, or
+/// if they take the node's output as input").
+fn try_place(
+    state: &mut SearchState,
+    dfg: &Dfg,
+    node: NodeId,
+    cell: CellCoord,
+    consumers: &[Vec<(NodeId, u8)>],
+    feeds_output: &[Vec<usize>],
+    stats: &mut ParStats,
+) -> Result<(), ()> {
+    let NodeKind::Calc(op) = dfg.nodes[node].kind else {
+        return Err(());
+    };
+    let grid = state.router.grid();
+    if state.cell_used[grid.index(cell)] {
+        return Err(());
+    }
+    state.cell_used[grid.index(cell)] = true;
+    state.router.cfg.cell_mut(cell).op = Some(op);
+    state.router.add_fu_net(node, cell);
+
+    // 1. Operands: consts mask locally; inputs and placed producers route.
+    let srcs = dfg.nodes[node].srcs.clone();
+    for (slot, &src) in srcs.iter().enumerate() {
+        let required = match slot {
+            0 => true,
+            1 => op.uses_rhs(),
+            _ => op.uses_sel(),
+        };
+        if !required {
+            continue;
+        }
+        match dfg.nodes[src].kind {
+            NodeKind::Const(v) => {
+                let c = state.router.cfg.cell_mut(cell);
+                match slot {
+                    0 => c.fu1 = FuSrc::Const(v),
+                    1 => c.fu2 = FuSrc::Const(v),
+                    _ => c.fsel = FuSrc::Const(v),
+                }
+            }
+            NodeKind::Input(_) => {
+                stats.route_calls += 1;
+                match state.router.route(src, RouteTarget::CellInput(cell)) {
+                    Ok(RouteOutcome::AtInput(_, d)) => {
+                        state.router.bind_fu_operand(cell, slot as u8, d)
+                    }
+                    _ => return Err(()),
+                }
+            }
+            NodeKind::Calc(_) => {
+                // Route only if the producer is already placed.
+                if state.placed_order.iter().any(|&(id, _)| id == src) {
+                    stats.route_calls += 1;
+                    match state.router.route(src, RouteTarget::CellInput(cell)) {
+                        Ok(RouteOutcome::AtInput(_, d)) => {
+                            state.router.bind_fu_operand(cell, slot as u8, d)
+                        }
+                        _ => return Err(()),
+                    }
+                }
+            }
+            NodeKind::Output(_) => return Err(()),
+        }
+    }
+
+    // 2. Already-placed consumers of this node's result.
+    for &(consumer, slot) in &consumers[node] {
+        if let Some(&(_, ccell)) =
+            state.placed_order.iter().find(|&&(id, _)| id == consumer)
+        {
+            stats.route_calls += 1;
+            match state.router.route(node, RouteTarget::CellInput(ccell)) {
+                Ok(RouteOutcome::AtInput(_, d)) => {
+                    state.router.bind_fu_operand(ccell, slot, d)
+                }
+                _ => return Err(()),
+            }
+        }
+    }
+
+    // 3. External outputs fed by this node.
+    for &j in &feeds_output[node] {
+        stats.route_calls += 1;
+        match state.router.route(node, RouteTarget::BorderOut) {
+            Ok(RouteOutcome::AtBorderOut(p, d)) => state.router.bind_output(p, d, j),
+            _ => return Err(()),
+        }
+    }
+
+    state.placed_order.push((node, cell));
+    state.unplaced.retain(|&id| id != node);
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dfg::graph::{fig2_dfg, listing1_dfg};
+
+    fn check_par(dfg: &Dfg, grid: Grid, seed: u64) -> ParResult {
+        let mut rng = Rng::new(seed);
+        let res = place_and_route(dfg, grid, &ParParams::default(), &mut rng)
+            .expect("place&route should succeed");
+        // Routed config must evaluate identically to the DFG.
+        for trial in 0..8 {
+            let mut t = Rng::new(seed ^ (trial + 1));
+            let n_in = dfg.max_input_index().map(|m| m + 1).unwrap_or(0);
+            let inputs: Vec<i32> = (0..n_in).map(|_| t.range_i64(-1000, 1000) as i32).collect();
+            let want = dfg.eval(&inputs).unwrap();
+            let got = res.image.eval_scalar(&inputs);
+            assert_eq!(got, want, "seed {seed} trial {trial}");
+        }
+        res
+    }
+
+    #[test]
+    fn fig2_on_2x2() {
+        let res = check_par(&fig2_dfg(), Grid::new(2, 2), 1);
+        assert_eq!(res.placement.len(), 3);
+    }
+
+    #[test]
+    fn fig2_on_8x8_many_seeds() {
+        for seed in 0..10 {
+            check_par(&fig2_dfg(), Grid::new(8, 8), seed);
+        }
+    }
+
+    #[test]
+    fn listing1_on_4x4() {
+        for seed in 0..5 {
+            let res = check_par(&listing1_dfg(), Grid::new(4, 4), seed);
+            assert_eq!(res.placement.len(), 8);
+        }
+    }
+
+    #[test]
+    fn too_large_rejected_immediately() {
+        let g = listing1_dfg(); // 8 calc nodes
+        let err = place_and_route(
+            &g,
+            Grid::new(2, 2),
+            &ParParams::default(),
+            &mut Rng::new(0),
+        )
+        .unwrap_err();
+        assert_eq!(err, ParError::TooLarge { calc: 8, cells: 4 });
+    }
+
+    #[test]
+    fn tight_fit_exercises_backtracking() {
+        // 8 calc nodes on a 3x3: tight but feasible; the stochastic search
+        // must still succeed within the restart budget.
+        for seed in 0..3 {
+            check_par(&listing1_dfg(), Grid::new(3, 3), 100 + seed);
+        }
+    }
+
+    #[test]
+    fn stats_populated() {
+        let res = check_par(&fig2_dfg(), Grid::new(4, 4), 3);
+        assert!(res.stats.placements >= 3);
+        assert!(res.stats.route_calls >= 4);
+    }
+}

@@ -1,0 +1,6 @@
+//! Las-Vegas place & route (paper §III-B): stochastic placement with
+//! Dijkstra net routing over the DFE fabric.
+pub mod lasvegas;
+pub mod route;
+pub use lasvegas::{place_and_route, ParError, ParParams, ParResult, ParStats};
+pub use route::{RouteError, RouteOutcome, RouteTarget, Router};

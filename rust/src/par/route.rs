@@ -1,0 +1,545 @@
+//! Incremental net routing over the DFE fabric.
+//!
+//! A *net* is the value produced by one DFG node (a placed FU result or an
+//! external input). Routing a net to a new consumer runs Dijkstra from
+//! every point where the net is already visible ("from the node to all the
+//! DFE's cells where the desired variable is replicated, selecting then
+//! the closest option" — paper §III-B) through free cell output faces,
+//! building a branching distribution tree. Costs are hop counts: every
+//! routing stage is one pipeline register, so shortest paths minimize both
+//! resource use and pipeline depth.
+//!
+//! Resource model: each cell output face carries at most one net (it is a
+//! single registered wire into the facing neighbor); forks happen inside
+//! cells (one input face can feed several output faces and the FU at
+//! once). Border input faces each carry one external input stream; border
+//! output faces are tapped once for one external output.
+
+use std::collections::{BinaryHeap, HashMap};
+
+use crate::dfe::config::{FuSrc, GridConfig, IoAssign, OutSrc};
+use crate::dfe::grid::{CellCoord, Dir, Grid, DIRS};
+use crate::dfg::graph::NodeId;
+
+/// Producer of a net.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum NetSource {
+    /// FU result of the cell where the producer DFG node is placed.
+    Fu(CellCoord),
+    /// External input stream `j`, bound (or not yet) to a border in-face.
+    ExtIn(usize),
+}
+
+/// Where a routed value must arrive.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RouteTarget {
+    /// An input face of `cell` (for an FU operand); any direction works.
+    CellInput(CellCoord),
+    /// Any free border output face (for an external output tap).
+    BorderOut,
+}
+
+/// Outcome of a successful route.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum RouteOutcome {
+    /// Net now visible at input face `(cell, dir)`.
+    AtInput(CellCoord, Dir),
+    /// Net tapped at border output face `(cell, dir)`.
+    AtBorderOut(CellCoord, Dir),
+}
+
+/// Routing state layered over a [`GridConfig`] under construction.
+#[derive(Clone, Debug)]
+pub struct Router {
+    pub cfg: GridConfig,
+    /// Net visible at input face (cell,dir). Derived from out-face muxes
+    /// plus external input bindings; kept incrementally for speed.
+    in_net: HashMap<(CellCoord, Dir), NodeId>,
+    /// Border in-face already bound to an external input.
+    in_face_bound: HashMap<(CellCoord, Dir), usize>,
+    /// For each net: the input faces where it is currently visible.
+    visible: HashMap<NodeId, Vec<(CellCoord, Dir)>>,
+    /// Source of each net.
+    pub sources: HashMap<NodeId, NetSource>,
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum RouteError {
+    NoPath,
+    UnknownNet(NodeId),
+}
+
+/// Dijkstra search state: net visible at the input face of a cell, or the
+/// virtual producer state.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+enum SState {
+    At(CellCoord, Dir),
+    ProducerFu(CellCoord),
+    /// Virtual: unbound external input that may enter at any free border
+    /// in-face (materialized on commit).
+    ExtInUnbound,
+}
+
+#[derive(Clone, Copy, Debug)]
+struct PredEdge {
+    prev: SState,
+    /// Cell whose out face is being used by this hop.
+    via_cell: CellCoord,
+    /// Out face direction used.
+    via_out: Dir,
+    /// Out mux setting: pass from this in dir, or Fu.
+    via_src: OutSrc,
+}
+
+#[derive(Clone, Copy, PartialEq, Eq)]
+struct QItem {
+    cost: u32,
+    state: SState,
+    tiebreak: u32,
+}
+
+impl Ord for QItem {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // Min-heap by cost.
+        other
+            .cost
+            .cmp(&self.cost)
+            .then_with(|| other.tiebreak.cmp(&self.tiebreak))
+    }
+}
+
+impl PartialOrd for QItem {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Router {
+    pub fn new(grid: Grid) -> Router {
+        Router {
+            cfg: GridConfig::empty(grid),
+            in_net: HashMap::new(),
+            in_face_bound: HashMap::new(),
+            visible: HashMap::new(),
+            sources: HashMap::new(),
+        }
+    }
+
+    pub fn grid(&self) -> Grid {
+        self.cfg.grid
+    }
+
+    /// Register a net produced by the FU placed at `cell`.
+    pub fn add_fu_net(&mut self, net: NodeId, cell: CellCoord) {
+        self.sources.insert(net, NetSource::Fu(cell));
+        self.visible.entry(net).or_default();
+    }
+
+    /// Register an external-input net.
+    pub fn add_input_net(&mut self, net: NodeId, index: usize) {
+        self.sources.insert(net, NetSource::ExtIn(index));
+        self.visible.entry(net).or_default();
+    }
+
+    /// Net currently visible at `(cell, dir)`, if any.
+    pub fn net_at(&self, cell: CellCoord, dir: Dir) -> Option<NodeId> {
+        self.in_net.get(&(cell, dir)).copied()
+    }
+
+    /// Whether `net` is already visible at some input face of `cell`.
+    pub fn visible_at_cell(&self, net: NodeId, cell: CellCoord) -> Option<Dir> {
+        self.visible
+            .get(&net)?
+            .iter()
+            .find(|(p, _)| *p == cell)
+            .map(|&(_, d)| d)
+    }
+
+    fn out_free(&self, p: CellCoord, d: Dir) -> bool {
+        self.cfg.cell(p).out[d.index()] == OutSrc::None
+    }
+
+    fn border_in_free(&self, p: CellCoord, d: Dir) -> bool {
+        self.cfg.grid.is_border_face(p, d) && !self.in_face_bound.contains_key(&(p, d))
+    }
+
+    /// Route `net` to `target`. On success commits all mux settings and
+    /// visibility updates and returns where the value landed.
+    pub fn route(&mut self, net: NodeId, target: RouteTarget) -> Result<RouteOutcome, RouteError> {
+        let source = *self.sources.get(&net).ok_or(RouteError::UnknownNet(net))?;
+
+        // Fast path: already visible at the consumer cell.
+        if let RouteTarget::CellInput(t) = target {
+            if let Some(d) = self.visible_at_cell(net, t) {
+                return Ok(RouteOutcome::AtInput(t, d));
+            }
+        }
+
+        let grid = self.cfg.grid;
+        let mut dist: HashMap<SState, u32> = HashMap::new();
+        let mut pred: HashMap<SState, PredEdge> = HashMap::new();
+        let mut heap = BinaryHeap::new();
+        let mut tiebreak = 0u32;
+
+        let mut push = |heap: &mut BinaryHeap<QItem>,
+                        dist: &mut HashMap<SState, u32>,
+                        tiebreak: &mut u32,
+                        state: SState,
+                        cost: u32| {
+            let better = dist.get(&state).map_or(true, |&c| cost < c);
+            if better {
+                dist.insert(state, cost);
+                *tiebreak += 1;
+                heap.push(QItem { cost, state, tiebreak: *tiebreak });
+                true
+            } else {
+                false
+            }
+        };
+
+        // Seed: existing visibility (cost 0)...
+        if let Some(vis) = self.visible.get(&net) {
+            for &(p, d) in vis {
+                push(&mut heap, &mut dist, &mut tiebreak, SState::At(p, d), 0);
+            }
+        }
+        // ...plus the producer itself.
+        match source {
+            NetSource::Fu(q) => {
+                push(&mut heap, &mut dist, &mut tiebreak, SState::ProducerFu(q), 0);
+            }
+            NetSource::ExtIn(j) => {
+                if let Some(&(p, d)) =
+                    self.in_face_bound.iter().find(|(_, &jj)| jj == j).map(|(k, _)| k)
+                {
+                    // Already bound: visibility set covers it, but be safe.
+                    push(&mut heap, &mut dist, &mut tiebreak, SState::At(p, d), 0);
+                } else {
+                    push(&mut heap, &mut dist, &mut tiebreak, SState::ExtInUnbound, 0);
+                }
+            }
+        }
+
+        // Search.
+        let mut reached: Option<(SState, RouteOutcome, Option<(CellCoord, Dir, OutSrc)>)> = None;
+        while let Some(QItem { cost, state, .. }) = heap.pop() {
+            if dist.get(&state).map_or(true, |&c| cost > c) {
+                continue;
+            }
+            // Goal tests on dequeue (At-states only for CellInput).
+            match (&target, state) {
+                (RouteTarget::CellInput(t), SState::At(p, d)) if p == *t => {
+                    reached = Some((state, RouteOutcome::AtInput(p, d), None));
+                    break;
+                }
+                _ => {}
+            }
+
+            // Expansions.
+            match state {
+                SState::At(p, din) => {
+                    for d in DIRS {
+                        if !self.out_free(p, d) {
+                            continue;
+                        }
+                        match grid.neighbor(p, d) {
+                            Some(q) => {
+                                let ns = SState::At(q, d.opposite());
+                                if push(&mut heap, &mut dist, &mut tiebreak, ns, cost + 1) {
+                                    pred.insert(
+                                        ns,
+                                        PredEdge {
+                                            prev: state,
+                                            via_cell: p,
+                                            via_out: d,
+                                            via_src: OutSrc::In(din),
+                                        },
+                                    );
+                                }
+                            }
+                            None => {
+                                if target == RouteTarget::BorderOut {
+                                    reached = Some((
+                                        state,
+                                        RouteOutcome::AtBorderOut(p, d),
+                                        Some((p, d, OutSrc::In(din))),
+                                    ));
+                                }
+                            }
+                        }
+                        if reached.is_some() {
+                            break;
+                        }
+                    }
+                }
+                SState::ProducerFu(q) => {
+                    for d in DIRS {
+                        if !self.out_free(q, d) {
+                            continue;
+                        }
+                        match grid.neighbor(q, d) {
+                            Some(r) => {
+                                let ns = SState::At(r, d.opposite());
+                                if push(&mut heap, &mut dist, &mut tiebreak, ns, cost + 1) {
+                                    pred.insert(
+                                        ns,
+                                        PredEdge {
+                                            prev: state,
+                                            via_cell: q,
+                                            via_out: d,
+                                            via_src: OutSrc::Fu,
+                                        },
+                                    );
+                                }
+                            }
+                            None => {
+                                if target == RouteTarget::BorderOut {
+                                    reached = Some((
+                                        state,
+                                        RouteOutcome::AtBorderOut(q, d),
+                                        Some((q, d, OutSrc::Fu)),
+                                    ));
+                                }
+                            }
+                        }
+                        if reached.is_some() {
+                            break;
+                        }
+                    }
+                }
+                SState::ExtInUnbound => {
+                    // Materialize at any free border in-face.
+                    for (p, d) in grid.border_faces() {
+                        if !self.border_in_free(p, d) {
+                            continue;
+                        }
+                        let ns = SState::At(p, d);
+                        if push(&mut heap, &mut dist, &mut tiebreak, ns, cost + 1) {
+                            pred.insert(
+                                ns,
+                                PredEdge {
+                                    prev: state,
+                                    // Sentinel: no out face used; commit
+                                    // recognizes prev == ExtInUnbound.
+                                    via_cell: p,
+                                    via_out: d,
+                                    via_src: OutSrc::None,
+                                },
+                            );
+                        }
+                    }
+                }
+            }
+            if reached.is_some() {
+                break;
+            }
+        }
+
+        let (end_state, outcome, final_hop) = reached.ok_or(RouteError::NoPath)?;
+
+        // Commit: walk predecessors, setting out muxes and visibility.
+        let mut hops: Vec<PredEdge> = Vec::new();
+        if let Some((p, d, src)) = final_hop {
+            hops.push(PredEdge { prev: end_state, via_cell: p, via_out: d, via_src: src });
+        }
+        let mut cur = end_state;
+        while let Some(&e) = pred.get(&cur) {
+            hops.push(e);
+            cur = e.prev;
+        }
+        // `cur` is now a seed state; apply hops source-first.
+        for e in hops.iter().rev() {
+            match e.prev {
+                SState::ExtInUnbound => {
+                    // Bind external input at border in-face (via_cell/out
+                    // reused as the face coordinates).
+                    let j = match source {
+                        NetSource::ExtIn(j) => j,
+                        _ => unreachable!("ExtInUnbound only for ExtIn nets"),
+                    };
+                    self.in_face_bound.insert((e.via_cell, e.via_out), j);
+                    self.cfg.inputs.push(IoAssign { cell: e.via_cell, dir: e.via_out, index: j });
+                    self.mark_visible(net, e.via_cell, e.via_out);
+                }
+                _ => {
+                    debug_assert!(self.out_free(e.via_cell, e.via_out));
+                    self.cfg.cell_mut(e.via_cell).out[e.via_out.index()] = e.via_src;
+                    if let Some(q) = self.cfg.grid.neighbor(e.via_cell, e.via_out) {
+                        self.mark_visible(net, q, e.via_out.opposite());
+                    }
+                    // Border-out hops create no new visibility.
+                }
+            }
+        }
+        Ok(outcome)
+    }
+
+    fn mark_visible(&mut self, net: NodeId, p: CellCoord, d: Dir) {
+        self.in_net.insert((p, d), net);
+        self.visible.entry(net).or_default().push((p, d));
+    }
+
+    /// Set an FU operand mux after a successful route to the cell.
+    pub fn bind_fu_operand(&mut self, cell: CellCoord, which: u8, dir: Dir) {
+        let c = self.cfg.cell_mut(cell);
+        let slot = match which {
+            0 => &mut c.fu1,
+            1 => &mut c.fu2,
+            _ => &mut c.fsel,
+        };
+        *slot = FuSrc::In(dir);
+    }
+
+    /// Tap a border out face as external output `j`.
+    pub fn bind_output(&mut self, cell: CellCoord, dir: Dir, j: usize) {
+        self.cfg.outputs.push(IoAssign { cell, dir, index: j });
+    }
+
+    /// Free out faces remaining (congestion metric for stats/benches).
+    pub fn free_out_faces(&self) -> usize {
+        self.cfg
+            .grid
+            .iter_coords()
+            .map(|p| self.cfg.cell(p).free_outs().count())
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dfe::opcodes::Op;
+
+    /// Manual placement of Fig 2 using the router: MUL at (0,0), ADD at
+    /// (1,0), ADD at (1,1). Nets: input B (j=1) -> MUL; input A (j=0) ->
+    /// ADD1; MUL -> ADD1; ADD1 -> ADD2; ADD2 -> output 0.
+    #[test]
+    fn routes_fig2_manually() {
+        let grid = Grid::new(2, 2);
+        let mut r = Router::new(grid);
+        let (c00, c10, c11) =
+            (CellCoord::new(0, 0), CellCoord::new(1, 0), CellCoord::new(1, 1));
+
+        // Nets keyed by arbitrary ids.
+        let (net_a, net_b, net_mul, net_add1, net_add2) = (0, 1, 2, 3, 4);
+        r.add_input_net(net_a, 0);
+        r.add_input_net(net_b, 1);
+
+        // Place MUL at (0,0): operand B routed from border.
+        r.cfg.cell_mut(c00).op = Some(Op::Mul);
+        r.cfg.cell_mut(c00).fu2 = FuSrc::Const(3);
+        let out = r.route(net_b, RouteTarget::CellInput(c00)).unwrap();
+        let RouteOutcome::AtInput(p, d) = out else { panic!() };
+        assert_eq!(p, c00);
+        r.bind_fu_operand(c00, 0, d);
+        r.add_fu_net(net_mul, c00);
+
+        // Place ADD1 at (1,0): operands A (border) and MUL result.
+        r.cfg.cell_mut(c10).op = Some(Op::Add);
+        let RouteOutcome::AtInput(_, da) = r.route(net_a, RouteTarget::CellInput(c10)).unwrap()
+        else {
+            panic!()
+        };
+        r.bind_fu_operand(c10, 0, da);
+        let RouteOutcome::AtInput(_, dm) =
+            r.route(net_mul, RouteTarget::CellInput(c10)).unwrap()
+        else {
+            panic!()
+        };
+        r.bind_fu_operand(c10, 1, dm);
+        r.add_fu_net(net_add1, c10);
+
+        // Place ADD2 at (1,1).
+        r.cfg.cell_mut(c11).op = Some(Op::Add);
+        r.cfg.cell_mut(c11).fu2 = FuSrc::Const(1);
+        let RouteOutcome::AtInput(_, ds) =
+            r.route(net_add1, RouteTarget::CellInput(c11)).unwrap()
+        else {
+            panic!()
+        };
+        r.bind_fu_operand(c11, 0, ds);
+        r.add_fu_net(net_add2, c11);
+
+        // Output.
+        let RouteOutcome::AtBorderOut(pc, pd) =
+            r.route(net_add2, RouteTarget::BorderOut).unwrap()
+        else {
+            panic!()
+        };
+        r.bind_output(pc, pd, 0);
+
+        let img = r.cfg.to_image().unwrap();
+        for (a, b) in [(10, 5), (-3, 8)] {
+            assert_eq!(img.eval_scalar(&[a, b]), vec![a + 3 * b + 1]);
+        }
+    }
+
+    #[test]
+    fn reuses_visibility_for_fanout() {
+        // One input consumed by two cells: second route should be free or
+        // cheap and must not double-bind the border face.
+        let grid = Grid::new(2, 2);
+        let mut r = Router::new(grid);
+        let net = 7;
+        r.add_input_net(net, 0);
+        let c00 = CellCoord::new(0, 0);
+        let c01 = CellCoord::new(0, 1);
+        r.cfg.cell_mut(c00).op = Some(Op::Pass);
+        r.cfg.cell_mut(c01).op = Some(Op::Pass);
+        let RouteOutcome::AtInput(p0, d0) = r.route(net, RouteTarget::CellInput(c00)).unwrap()
+        else {
+            panic!()
+        };
+        assert_eq!(p0, c00);
+        r.bind_fu_operand(c00, 0, d0);
+        let RouteOutcome::AtInput(p1, _) = r.route(net, RouteTarget::CellInput(c01)).unwrap()
+        else {
+            panic!()
+        };
+        assert_eq!(p1, c01);
+        assert_eq!(r.cfg.inputs.len(), 1, "input bound exactly once");
+    }
+
+    #[test]
+    fn no_path_when_saturated() {
+        // 1x1 grid: all four out faces consumed -> no route for a new net.
+        let grid = Grid::new(1, 1);
+        let mut r = Router::new(grid);
+        let p = CellCoord::new(0, 0);
+        r.cfg.cell_mut(p).op = Some(Op::Add);
+        for d in DIRS {
+            r.cfg.cell_mut(p).out[d.index()] = OutSrc::Fu;
+        }
+        let net = 3;
+        r.add_input_net(net, 0);
+        // All border in-faces are free, but the consumer needs an in-face;
+        // route CAN succeed (in faces are not blocked by out faces).
+        assert!(r.route(net, RouteTarget::CellInput(p)).is_ok());
+        // A second distinct net to the same cell must use another face.
+        let net2 = 4;
+        r.add_input_net(net2, 1);
+        assert!(r.route(net2, RouteTarget::CellInput(p)).is_ok());
+        // Border-out is impossible: all out faces taken.
+        let net3 = 5;
+        r.add_fu_net(net3, p);
+        assert_eq!(r.route(net3, RouteTarget::BorderOut), Err(RouteError::NoPath));
+    }
+
+    #[test]
+    fn border_out_via_pass_through() {
+        // Producer in the middle of a 3x3; border tap requires one hop
+        // through a neighboring cell's pass-through.
+        let grid = Grid::new(3, 3);
+        let mut r = Router::new(grid);
+        let mid = CellCoord::new(1, 1);
+        r.cfg.cell_mut(mid).op = Some(Op::Add);
+        let net = 9;
+        r.add_fu_net(net, mid);
+        let RouteOutcome::AtBorderOut(p, _) = r.route(net, RouteTarget::BorderOut).unwrap()
+        else {
+            panic!()
+        };
+        assert_ne!(p, mid, "tap must be on a border cell");
+        assert!(grid.border_dist(p) == 0);
+    }
+}

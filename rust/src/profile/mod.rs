@@ -1,0 +1,197 @@
+//! Low-overhead performance monitor (paper §III, the `perf_event` role):
+//! samples the engine's per-function counters, maintains exponentially
+//! weighted rates and flags hot functions worth the analysis phase.
+
+use std::time::Duration;
+
+use crate::jit::engine::Engine;
+
+/// Monitor tunables.
+#[derive(Clone, Copy, Debug)]
+pub struct MonitorParams {
+    /// Minimum share of total observed cycles to call a function hot.
+    pub hot_cycle_share: f64,
+    /// Minimum absolute cycles before any decision (warm-up guard).
+    pub min_cycles: u64,
+    /// Minimum invocations (one-shot functions are not worth offloading).
+    pub min_invocations: u64,
+    /// EWMA smoothing for deltas between samples.
+    pub alpha: f64,
+}
+
+impl Default for MonitorParams {
+    fn default() -> Self {
+        MonitorParams {
+            hot_cycle_share: 0.25,
+            min_cycles: 10_000,
+            min_invocations: 2,
+            alpha: 0.4,
+        }
+    }
+}
+
+/// One sampled row.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Sample {
+    pub cycles: u64,
+    pub mem_accesses: u64,
+    pub invocations: u64,
+    pub wall: Duration,
+    /// EWMA of per-sample cycle deltas (activity rate).
+    pub rate: f64,
+}
+
+/// A hotspot decision.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Hotspot {
+    pub func: u32,
+    pub name: String,
+    pub cycle_share: f64,
+    pub cycles: u64,
+    pub mem_accesses: u64,
+    pub invocations: u64,
+}
+
+pub struct Monitor {
+    pub params: MonitorParams,
+    last: Vec<Sample>,
+}
+
+impl Monitor {
+    pub fn new(params: MonitorParams) -> Monitor {
+        Monitor { params, last: Vec::new() }
+    }
+
+    /// Sample all function counters and return hotspots, hottest first.
+    /// (The real system samples perf_event fds on a timer; we sample the
+    /// interpreter's counters at the same cadence from the coordinator.)
+    pub fn sample(&mut self, engine: &Engine) -> Vec<Hotspot> {
+        let n = engine.n_funcs();
+        self.last.resize(n, Sample::default());
+        let mut rows: Vec<(u32, Sample)> = Vec::with_capacity(n);
+        let mut total_cycles = 0u64;
+        for f in 0..n as u32 {
+            let p = engine.profile(f);
+            let prev = self.last[f as usize];
+            let delta = p.counters.cycles.saturating_sub(prev.cycles);
+            let rate =
+                self.params.alpha * delta as f64 + (1.0 - self.params.alpha) * prev.rate;
+            let s = Sample {
+                cycles: p.counters.cycles,
+                mem_accesses: p.counters.mem_accesses,
+                invocations: p.counters.invocations,
+                wall: p.wall,
+                rate,
+            };
+            total_cycles += p.counters.cycles;
+            rows.push((f, s));
+            self.last[f as usize] = s;
+        }
+        if total_cycles == 0 {
+            return Vec::new();
+        }
+        let mut hot: Vec<Hotspot> = rows
+            .into_iter()
+            .filter_map(|(f, s)| {
+                let share = s.cycles as f64 / total_cycles as f64;
+                (share >= self.params.hot_cycle_share
+                    && s.cycles >= self.params.min_cycles
+                    && s.invocations >= self.params.min_invocations)
+                    .then(|| Hotspot {
+                        func: f,
+                        name: engine.func_name(f).to_string(),
+                        cycle_share: share,
+                        cycles: s.cycles,
+                        mem_accesses: s.mem_accesses,
+                        invocations: s.invocations,
+                    })
+            })
+            .collect();
+        hot.sort_by(|a, b| b.cycle_share.partial_cmp(&a.cycle_share).unwrap());
+        hot
+    }
+
+    /// Last sampled activity rate for a function (EWMA of cycle deltas).
+    pub fn rate(&self, func: u32) -> f64 {
+        self.last.get(func as usize).map(|s| s.rate).unwrap_or(0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::func::{FuncBuilder, Module};
+    use crate::ir::instr::Ty;
+    use crate::jit::interp::{Memory, Val};
+
+    fn hot_and_cold_module() -> Module {
+        let mut m = Module::new();
+        for (name, inner) in [("hot", 64), ("cold", 1)] {
+            let mut b = FuncBuilder::new(name, &[("A", Ty::Ptr), ("n", Ty::I32)]);
+            let (a, n) = (b.param(0), b.param(1));
+            let zero = b.const_i32(0);
+            let reps = b.const_i32(inner);
+            b.counted_loop(zero, reps, |b, _| {
+                let z2 = b.const_i32(0);
+                b.counted_loop(z2, n, |b, i| {
+                    let v = b.load(Ty::I32, a, i);
+                    let w = b.add(v, v);
+                    b.store(Ty::I32, a, i, w);
+                });
+            });
+            m.add(b.ret(None));
+        }
+        m
+    }
+
+    #[test]
+    fn detects_hot_function() {
+        let mut e = Engine::new(hot_and_cold_module()).unwrap();
+        let mut mem = Memory::new();
+        let h = mem.alloc_i32(256);
+        for _ in 0..3 {
+            e.call("hot", &mut mem, &[Val::P(h), Val::I(256)]).unwrap();
+            e.call("cold", &mut mem, &[Val::P(h), Val::I(256)]).unwrap();
+        }
+        let mut mon = Monitor::new(MonitorParams::default());
+        let hot = mon.sample(&e);
+        assert_eq!(hot.len(), 1, "{hot:?}");
+        assert_eq!(hot[0].name, "hot");
+        assert!(hot[0].cycle_share > 0.9);
+    }
+
+    #[test]
+    fn warmup_guard_suppresses_early_decisions() {
+        let mut e = Engine::new(hot_and_cold_module()).unwrap();
+        let mut mem = Memory::new();
+        let h = mem.alloc_i32(4);
+        // One tiny invocation: under min_cycles and min_invocations.
+        e.call("hot", &mut mem, &[Val::P(h), Val::I(1)]).unwrap();
+        let mut mon = Monitor::new(MonitorParams::default());
+        assert!(mon.sample(&e).is_empty());
+    }
+
+    #[test]
+    fn rate_tracks_activity() {
+        let mut e = Engine::new(hot_and_cold_module()).unwrap();
+        let mut mem = Memory::new();
+        let h = mem.alloc_i32(64);
+        let mut mon = Monitor::new(MonitorParams::default());
+        mon.sample(&e);
+        e.call("hot", &mut mem, &[Val::P(h), Val::I(64)]).unwrap();
+        mon.sample(&e);
+        let f = e.func_index("hot").unwrap();
+        assert!(mon.rate(f) > 0.0);
+        // No further activity: rate decays.
+        let r1 = mon.rate(f);
+        mon.sample(&e);
+        assert!(mon.rate(f) < r1);
+    }
+
+    #[test]
+    fn empty_engine_no_hotspots() {
+        let e = Engine::new(Module::new()).unwrap();
+        let mut mon = Monitor::new(MonitorParams::default());
+        assert!(mon.sample(&e).is_empty());
+    }
+}

@@ -1,0 +1,180 @@
+//! `artifacts/manifest.json` — the ABI contract written by python/compile/aot.py.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::dfe::abi;
+use crate::util::json::Json;
+
+/// One AOT-compiled DFE executor variant.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct VariantInfo {
+    pub name: String,
+    pub rows: usize,
+    pub cols: usize,
+    pub n_cells: usize,
+    pub file: PathBuf,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub batch: usize,
+    pub variants: Vec<VariantInfo>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`)", path.display()))?;
+        let v = Json::parse(&text).with_context(|| format!("parsing {}", path.display()))?;
+
+        let abi_obj = v.get("abi").ok_or_else(|| anyhow!("manifest missing 'abi'"))?;
+        let field = |name: &str| -> Result<usize> {
+            abi_obj
+                .get(name)
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow!("manifest abi missing '{name}'"))
+        };
+        // The rust ABI constants are compile-time; refuse to run against
+        // artifacts lowered with a different layout.
+        let (k, ni, no, batch) =
+            (field("n_consts")?, field("n_inputs")?, field("n_outputs")?, field("batch")?);
+        if k != abi::N_CONSTS || ni != abi::N_INPUTS || no != abi::N_OUTPUTS {
+            bail!(
+                "artifact ABI mismatch: manifest K/NI/NO = {k}/{ni}/{no}, \
+                 binary expects {}/{}/{} — re-run `make artifacts`",
+                abi::N_CONSTS,
+                abi::N_INPUTS,
+                abi::N_OUTPUTS
+            );
+        }
+
+        let mut variants = Vec::new();
+        for item in v
+            .get("variants")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing 'variants'"))?
+        {
+            let name = item
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("variant missing name"))?
+                .to_string();
+            let get = |f: &str| {
+                item.get(f)
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| anyhow!("variant {name} missing '{f}'"))
+            };
+            let rows = get("rows")?;
+            let cols = get("cols")?;
+            let n_cells = get("n_cells")?;
+            if n_cells != rows * cols {
+                bail!("variant {name}: n_cells {n_cells} != {rows}x{cols}");
+            }
+            let file = dir.join(
+                item.get("file")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("variant {name} missing 'file'"))?,
+            );
+            variants.push(VariantInfo { name, rows, cols, n_cells, file });
+        }
+        if variants.is_empty() {
+            bail!("manifest has no variants");
+        }
+        variants.sort_by_key(|v| v.n_cells);
+        Ok(Manifest { dir: dir.to_path_buf(), batch, variants })
+    }
+
+    /// Smallest variant whose grid holds `n_cells` cells.
+    pub fn smallest_fitting(&self, n_cells: usize) -> Option<&VariantInfo> {
+        self.variants.iter().find(|v| v.n_cells >= n_cells)
+    }
+
+    pub fn by_name(&self, name: &str) -> Option<&VariantInfo> {
+        self.variants.iter().find(|v| v.name == name)
+    }
+
+    /// Default artifact dir: `$TLO_ARTIFACTS` or `<repo>/artifacts`.
+    pub fn default_dir() -> PathBuf {
+        if let Ok(dir) = std::env::var("TLO_ARTIFACTS") {
+            return PathBuf::from(dir);
+        }
+        // CARGO_MANIFEST_DIR is baked at compile time; fall back to cwd.
+        let repo = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+        let candidate = repo.join("artifacts");
+        if candidate.exists() {
+            candidate
+        } else {
+            PathBuf::from("artifacts")
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path, body: &str) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), body).unwrap();
+    }
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("tlo_manifest_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn loads_valid_manifest() {
+        let d = tmpdir("ok");
+        write_manifest(
+            &d,
+            r#"{"abi": {"n_consts": 16, "n_inputs": 32, "n_outputs": 8, "batch": 512},
+               "variants": [
+                 {"name": "dfe_8x8", "rows": 8, "cols": 8, "n_cells": 64, "file": "dfe_8x8.hlo.txt"},
+                 {"name": "dfe_4x4", "rows": 4, "cols": 4, "n_cells": 16, "file": "dfe_4x4.hlo.txt"}
+               ]}"#,
+        );
+        let m = Manifest::load(&d).unwrap();
+        assert_eq!(m.batch, 512);
+        // sorted by capacity
+        assert_eq!(m.variants[0].name, "dfe_4x4");
+        assert_eq!(m.smallest_fitting(17).unwrap().name, "dfe_8x8");
+        assert_eq!(m.smallest_fitting(64).unwrap().name, "dfe_8x8");
+        assert!(m.smallest_fitting(65).is_none());
+        assert!(m.by_name("dfe_4x4").is_some());
+    }
+
+    #[test]
+    fn rejects_abi_mismatch() {
+        let d = tmpdir("bad_abi");
+        write_manifest(
+            &d,
+            r#"{"abi": {"n_consts": 8, "n_inputs": 32, "n_outputs": 8, "batch": 512},
+               "variants": [{"name": "x", "rows": 1, "cols": 1, "n_cells": 1, "file": "x"}]}"#,
+        );
+        let err = Manifest::load(&d).unwrap_err().to_string();
+        assert!(err.contains("ABI mismatch"), "{err}");
+    }
+
+    #[test]
+    fn rejects_inconsistent_cells() {
+        let d = tmpdir("bad_cells");
+        write_manifest(
+            &d,
+            r#"{"abi": {"n_consts": 16, "n_inputs": 32, "n_outputs": 8, "batch": 512},
+               "variants": [{"name": "x", "rows": 2, "cols": 2, "n_cells": 5, "file": "x"}]}"#,
+        );
+        assert!(Manifest::load(&d).is_err());
+    }
+
+    #[test]
+    fn missing_dir_mentions_make_artifacts() {
+        let err = Manifest::load(Path::new("/nonexistent_tlo")).unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+}

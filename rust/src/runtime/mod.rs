@@ -1,0 +1,10 @@
+//! PJRT runtime: load AOT artifacts (HLO text) and execute DFE images.
+//!
+//! Pattern: `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
+//! `client.compile` → `execute` (see /opt/xla-example/src/bin/load_hlo.rs).
+
+pub mod client;
+pub mod manifest;
+
+pub use client::{DfeExecutable, PjrtRuntime};
+pub use manifest::{Manifest, VariantInfo};

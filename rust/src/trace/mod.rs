@@ -1,0 +1,189 @@
+//! Phase tracing (the paper instruments its prototype with LTTng events;
+//! Fig 6 is the rendered timeline). Events carry a phase tag and a span;
+//! `render_timeline` prints the Fig-6-style summary the `video_pipeline`
+//! example and the `fig6_phases` bench emit.
+
+use std::time::{Duration, Instant};
+
+/// The processing phases of Fig 6.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Phase {
+    Analysis,     // 1 — hotspot assessment + DFG/CFG extraction
+    Jit,          // 2 — stub compilation
+    PlaceRoute,   // 3
+    Configure,    // 4 — DFE configuration download
+    Constants,    // 5 — constant transfer
+    HostToDfe,    // 6 — input data transfer (PC->FPGA)
+    DfeToHost,    // 7 — output data transfer (FPGA->PC)
+    DfeExec,      //     fabric execution (negligible in the paper)
+    HostWork,     //     application work outside the framework
+}
+
+pub const ALL_PHASES: [Phase; 9] = [
+    Phase::Analysis,
+    Phase::Jit,
+    Phase::PlaceRoute,
+    Phase::Configure,
+    Phase::Constants,
+    Phase::HostToDfe,
+    Phase::DfeToHost,
+    Phase::DfeExec,
+    Phase::HostWork,
+];
+
+impl Phase {
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::Analysis => "analysis",
+            Phase::Jit => "jit",
+            Phase::PlaceRoute => "place&route",
+            Phase::Configure => "configuration",
+            Phase::Constants => "constants",
+            Phase::HostToDfe => "PC->FPGA",
+            Phase::DfeToHost => "FPGA->PC",
+            Phase::DfeExec => "dfe-exec",
+            Phase::HostWork => "host-work",
+        }
+    }
+
+    /// The paper's Fig-6 label number, where applicable.
+    pub fn fig6_tag(self) -> Option<u8> {
+        match self {
+            Phase::Analysis => Some(1),
+            Phase::Jit => Some(2),
+            Phase::PlaceRoute => Some(3),
+            Phase::Configure => Some(4),
+            Phase::Constants => Some(5),
+            Phase::HostToDfe => Some(6),
+            Phase::DfeToHost => Some(7),
+            _ => None,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Span {
+    pub phase: Phase,
+    pub start: Duration,
+    pub len: Duration,
+}
+
+/// Event recorder. `simulated` spans (from the timing models) and
+/// wall-clock spans share the same stream; `start` offsets are relative to
+/// recorder creation.
+pub struct Tracer {
+    t0: Instant,
+    /// Virtual clock for simulated spans (advances past wall time).
+    vnow: Duration,
+    pub spans: Vec<Span>,
+}
+
+impl Default for Tracer {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Tracer {
+    pub fn new() -> Tracer {
+        Tracer { t0: Instant::now(), vnow: Duration::ZERO, spans: Vec::new() }
+    }
+
+    /// Record a wall-clock span around `f`.
+    pub fn span<T>(&mut self, phase: Phase, f: impl FnOnce() -> T) -> T {
+        let s = self.t0.elapsed().max(self.vnow);
+        let r = f();
+        let e = self.t0.elapsed().max(s);
+        self.spans.push(Span { phase, start: s, len: e - s });
+        self.vnow = e.max(self.vnow);
+        r
+    }
+
+    /// Record a simulated span of length `len` (advances the virtual
+    /// clock; used for modeled transfer/configuration times).
+    pub fn simulated(&mut self, phase: Phase, len: Duration) {
+        let s = self.vnow.max(self.t0.elapsed());
+        self.spans.push(Span { phase, start: s, len });
+        self.vnow = s + len;
+    }
+
+    /// Total time attributed to a phase.
+    pub fn total(&self, phase: Phase) -> Duration {
+        self.spans.iter().filter(|s| s.phase == phase).map(|s| s.len).sum()
+    }
+
+    pub fn count(&self, phase: Phase) -> usize {
+        self.spans.iter().filter(|s| s.phase == phase).count()
+    }
+
+    /// End-to-end makespan (latest span end).
+    pub fn makespan(&self) -> Duration {
+        self.spans.iter().map(|s| s.start + s.len).max().unwrap_or(Duration::ZERO)
+    }
+
+    /// Fig-6-style phase table.
+    pub fn render_timeline(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "{:<4} {:<14} {:>10} {:>12} {:>12}\n",
+            "tag", "phase", "spans", "total", "mean"
+        ));
+        out.push_str(&"-".repeat(56));
+        out.push('\n');
+        for phase in ALL_PHASES {
+            let n = self.count(phase);
+            if n == 0 {
+                continue;
+            }
+            let total = self.total(phase);
+            let tag = phase.fig6_tag().map(|t| t.to_string()).unwrap_or_default();
+            out.push_str(&format!(
+                "{:<4} {:<14} {:>10} {:>12} {:>12}\n",
+                tag,
+                phase.name(),
+                n,
+                crate::util::fmt_duration(total),
+                crate::util::fmt_duration(total / n as u32),
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wall_and_simulated_spans_compose() {
+        let mut t = Tracer::new();
+        t.span(Phase::Analysis, || std::thread::sleep(Duration::from_millis(2)));
+        t.simulated(Phase::HostToDfe, Duration::from_micros(35));
+        t.simulated(Phase::DfeToHost, Duration::from_micros(16));
+        assert_eq!(t.count(Phase::HostToDfe), 1);
+        assert!(t.total(Phase::Analysis) >= Duration::from_millis(2));
+        // Simulated spans are serialized after the analysis span.
+        assert!(t.makespan() >= t.total(Phase::Analysis) + Duration::from_micros(51));
+    }
+
+    #[test]
+    fn timeline_renders_tags() {
+        let mut t = Tracer::new();
+        t.simulated(Phase::PlaceRoute, Duration::from_millis(1180));
+        t.simulated(Phase::Configure, Duration::from_micros(2100));
+        let s = t.render_timeline();
+        assert!(s.contains("place&route"));
+        assert!(s.contains("3"));
+        assert!(s.contains("1.18s"));
+    }
+
+    #[test]
+    fn totals_sum_over_spans() {
+        let mut t = Tracer::new();
+        for _ in 0..3 {
+            t.simulated(Phase::HostToDfe, Duration::from_micros(10));
+        }
+        assert_eq!(t.total(Phase::HostToDfe), Duration::from_micros(30));
+        assert_eq!(t.count(Phase::HostToDfe), 3);
+    }
+}

@@ -1,0 +1,123 @@
+//! Micro-benchmark harness for `cargo bench` targets (no criterion in the
+//! offline image; every bench sets `harness = false` and drives this).
+//!
+//! Measures wall-clock over warmup + timed iterations, reports
+//! median/mean/std/min, and prints rows in a fixed table layout so every
+//! paper table/figure regenerator has a uniform look. `--quick` (or env
+//! `TLO_BENCH_QUICK=1`) shrinks iteration counts for CI.
+
+use std::time::{Duration, Instant};
+
+use super::{fmt_duration, mean_std, median};
+
+#[derive(Clone, Copy, Debug)]
+pub struct BenchConfig {
+    pub warmup_iters: usize,
+    pub iters: usize,
+}
+
+impl BenchConfig {
+    pub fn from_env() -> Self {
+        let quick = std::env::var("TLO_BENCH_QUICK").map(|v| v == "1").unwrap_or(false)
+            || std::env::args().any(|a| a == "--quick");
+        if quick {
+            BenchConfig { warmup_iters: 1, iters: 3 }
+        } else {
+            BenchConfig { warmup_iters: 3, iters: 10 }
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Stats {
+    pub name: String,
+    pub iters: usize,
+    pub median: Duration,
+    pub mean: Duration,
+    pub std: Duration,
+    pub min: Duration,
+}
+
+impl Stats {
+    pub fn per_iter_ns(&self) -> f64 {
+        self.median.as_nanos() as f64
+    }
+}
+
+/// Time `f` under `cfg`, returning summary stats.
+pub fn bench<F: FnMut()>(name: &str, cfg: BenchConfig, mut f: F) -> Stats {
+    for _ in 0..cfg.warmup_iters {
+        f();
+    }
+    let mut samples = Vec::with_capacity(cfg.iters);
+    for _ in 0..cfg.iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    let (mean, std) = mean_std(&samples);
+    let med = median(&samples);
+    let min = samples.iter().cloned().fold(f64::INFINITY, f64::min);
+    Stats {
+        name: name.to_string(),
+        iters: cfg.iters,
+        median: Duration::from_secs_f64(med),
+        mean: Duration::from_secs_f64(mean),
+        std: Duration::from_secs_f64(std),
+        min: Duration::from_secs_f64(min),
+    }
+}
+
+/// Print one stats row (aligned with `print_header`).
+pub fn print_stats(s: &Stats) {
+    println!(
+        "{:<44} {:>12} {:>12} {:>12} {:>6}",
+        s.name,
+        fmt_duration(s.median),
+        fmt_duration(s.mean),
+        fmt_duration(s.std),
+        s.iters
+    );
+}
+
+pub fn print_header(title: &str) {
+    println!("\n== {title} ==");
+    println!(
+        "{:<44} {:>12} {:>12} {:>12} {:>6}",
+        "benchmark", "median", "mean", "std", "iters"
+    );
+    println!("{}", "-".repeat(90));
+}
+
+/// Convenience: bench and print in one call.
+pub fn run<F: FnMut()>(name: &str, cfg: BenchConfig, f: F) -> Stats {
+    let s = bench(name, cfg, f);
+    print_stats(&s);
+    s
+}
+
+/// Prevent the optimizer from deleting a computed value (ptr read fence —
+/// std::hint::black_box is stable but this keeps MSRV headroom).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_sane_numbers() {
+        let cfg = BenchConfig { warmup_iters: 1, iters: 5 };
+        let mut acc = 0u64;
+        let s = bench("spin", cfg, || {
+            for i in 0..10_000u64 {
+                acc = acc.wrapping_add(black_box(i));
+            }
+        });
+        assert_eq!(s.iters, 5);
+        assert!(s.min <= s.median && s.median <= s.mean + s.std + s.std);
+        assert!(s.median.as_nanos() > 0);
+    }
+}

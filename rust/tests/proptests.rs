@@ -1,0 +1,236 @@
+//! Property-based tests (self-contained generator harness; proptest is not
+//! in the offline image). Core invariants:
+//!   P1  any DFG routed by the Las-Vegas P&R evaluates on the routed
+//!       config's execution image exactly like direct DFG evaluation;
+//!   P2  the cycle-level overlay simulator agrees with the image semantics
+//!       (elastic pipeline ≡ dataflow order);
+//!   P3  transport accounting: tagged wire bytes = 4x payload, time is
+//!       monotone in payload;
+//!   P4  extraction ≡ interpreter semantics on randomized affine kernels;
+//!   P5  P&R is Las-Vegas: if it returns, the config is structurally legal.
+
+use tlo::dfe::grid::Grid;
+use tlo::dfe::opcodes::{Op, ALL_OPS};
+use tlo::dfe::sim::CycleSim;
+use tlo::dfg::graph::{Dfg, NodeKind};
+use tlo::par::{place_and_route, ParParams};
+use tlo::util::prng::Rng;
+
+/// Random DAG-shaped DFG: `n_in` inputs, `n_calc` ops, 1..3 outputs.
+fn random_dfg(rng: &mut Rng, n_in: usize, n_calc: usize) -> Dfg {
+    let mut g = Dfg::new();
+    let mut pool: Vec<usize> = (0..n_in).map(|j| g.input(j)).collect();
+    for _ in 0..rng.below(3) {
+        pool.push(g.constant(rng.range_i64(-50, 50) as i32));
+    }
+    for _ in 0..n_calc {
+        let op = loop {
+            let op = ALL_OPS[rng.below(ALL_OPS.len())];
+            // NOP/PASS make degenerate graphs; keep real compute.
+            if !matches!(op, Op::Nop | Op::Pass) {
+                break op;
+            }
+        };
+        let a = pool[rng.below(pool.len())];
+        let b = pool[rng.below(pool.len())];
+        let id = if op == Op::Mux {
+            let s = pool[rng.below(pool.len())];
+            g.mux(a, b, s)
+        } else {
+            g.calc(op, a, b)
+        };
+        pool.push(id);
+    }
+    let n_out = 1 + rng.below(2);
+    for j in 0..n_out {
+        // Bias outputs toward late nodes so the graph stays mostly live.
+        let pick = pool[pool.len() - 1 - rng.below(pool.len().min(4))];
+        g.output(j, pick);
+    }
+    g.prune_dead()
+}
+
+#[test]
+fn p1_routed_config_matches_dfg_eval() {
+    let mut rng = Rng::new(2024);
+    let mut routed = 0;
+    for case in 0..60u64 {
+        let n_in = 1 + rng.below(4);
+        let n_calc = 1 + rng.below(10);
+        let dfg = random_dfg(&mut rng, n_in, n_calc);
+        if dfg.stats().outputs == 0 || dfg.stats().calc == 0 {
+            continue;
+        }
+        let grid = Grid::new(6, 6);
+        let mut prng = Rng::new(900 + case);
+        let Ok(res) = place_and_route(&dfg, grid, &ParParams::default(), &mut prng) else {
+            continue; // Las-Vegas may exhaust its budget; P5 covers legality
+        };
+        routed += 1;
+        for trial in 0..5 {
+            let mut t = Rng::new(case * 31 + trial);
+            let inputs: Vec<i32> = (0..n_in).map(|_| t.any_i32() % 10_000).collect();
+            let want = dfg.eval(&inputs).unwrap();
+            let got = res.image.eval_scalar(&inputs);
+            assert_eq!(got, want, "case {case} trial {trial}\n{dfg:?}");
+        }
+    }
+    assert!(routed >= 30, "too few routed cases ({routed}) for the property to bite");
+}
+
+#[test]
+fn p2_cycle_sim_matches_image() {
+    let mut rng = Rng::new(77);
+    let mut checked = 0;
+    for case in 0..25u64 {
+        let n_in = 1 + rng.below(3);
+        let n_calc = 1 + rng.below(6);
+        let dfg = random_dfg(&mut rng, n_in, n_calc);
+        if dfg.stats().outputs == 0 || dfg.stats().calc == 0 {
+            continue;
+        }
+        let mut prng = Rng::new(5000 + case);
+        let Ok(res) = place_and_route(&dfg, Grid::new(5, 5), &ParParams::default(), &mut prng)
+        else {
+            continue;
+        };
+        let n = 12;
+        let mut t = Rng::new(case);
+        let streams: Vec<Vec<i32>> =
+            (0..n_in).map(|_| (0..n).map(|_| t.any_i32() % 1000).collect()).collect();
+        let mut sim = CycleSim::new(&res.config).expect("legal config");
+        let out = sim.run_stream(&streams, n).expect("no deadlock");
+        for lane in 0..n {
+            let inputs: Vec<i32> = (0..n_in).map(|j| streams[j][lane]).collect();
+            let want = res.image.eval_scalar(&inputs);
+            for (j, w) in want.iter().enumerate() {
+                assert_eq!(out.outputs[j][lane], *w, "case {case} lane {lane} out {j}");
+            }
+        }
+        checked += 1;
+    }
+    assert!(checked >= 10, "too few cycle-sim cases ({checked})");
+}
+
+#[test]
+fn p3_transport_accounting() {
+    use tlo::transport::{PcieParams, PcieSim, Protocol};
+    let mut rng = Rng::new(3);
+    let mut prev = (0u64, std::time::Duration::ZERO);
+    let mut sizes: Vec<u64> = (0..200).map(|_| 4 * (1 + rng.below(1 << 18) as u64)).collect();
+    sizes.sort_unstable();
+    for payload in sizes {
+        assert_eq!(Protocol::Tagged128.wire_bytes(payload), payload * 4);
+        let mut sim = PcieSim::new(PcieParams::default());
+        let t = sim.transfer(payload);
+        if payload > prev.0 && t.used_dma {
+            // Monotone within the DMA regime (PIO->DMA adds setup).
+            assert!(t.time >= prev.1 || prev.1 == std::time::Duration::ZERO);
+        }
+        if t.used_dma {
+            prev = (payload, t.time);
+        }
+        assert_eq!(sim.total_wire, sim.total_payload * 4);
+    }
+}
+
+#[test]
+fn p4_extraction_matches_interpreter_on_random_affine_kernels() {
+    use tlo::analysis::scop::analyze_function;
+    use tlo::dfg::extract::extract;
+    use tlo::ir::func::{FuncBuilder, Module};
+    use tlo::ir::instr::{BinOp, Ty};
+    use tlo::jit::engine::Engine;
+    use tlo::jit::interp::{Memory, Val};
+    use tlo::offload::{OffloadManager, OffloadParams};
+
+    let mut rng = Rng::new(10);
+    for case in 0..20u64 {
+        // Random elementwise kernel: C[i] = f(A[i], B[i]) with a random
+        // op chain of depth 1..4.
+        let depth = 1 + rng.below(4);
+        let ops: Vec<BinOp> = (0..depth)
+            .map(|_| {
+                [BinOp::Add, BinOp::Sub, BinOp::Mul, BinOp::Min, BinOp::Max, BinOp::Xor]
+                    [rng.below(6)]
+            })
+            .collect();
+        let consts: Vec<i32> = (0..depth).map(|_| rng.range_i64(-9, 9) as i32).collect();
+        let mut m = Module::new();
+        let mut b = FuncBuilder::new(
+            "k",
+            &[("C", Ty::Ptr), ("A", Ty::Ptr), ("B", Ty::Ptr), ("n", Ty::I32)],
+        );
+        let (c, a, bb, n) = (b.param(0), b.param(1), b.param(2), b.param(3));
+        let zero = b.const_i32(0);
+        let ops2 = ops.clone();
+        let consts2 = consts.clone();
+        b.counted_loop(zero, n, move |b, i| {
+            let av = b.load(Ty::I32, a, i);
+            let bv = b.load(Ty::I32, bb, i);
+            let mut acc = b.bin(ops2[0], Ty::I32, av, bv);
+            for d in 1..ops2.len() {
+                let cv = b.const_i32(consts2[d]);
+                acc = b.bin(ops2[d], Ty::I32, acc, cv);
+            }
+            b.store(Ty::I32, c, i, acc);
+        });
+        m.add(b.ret(None));
+
+        // Sanity: it extracts.
+        {
+            let f = m.get("k").unwrap();
+            let an = analyze_function(f);
+            assert!(!an.scops.is_empty(), "case {case}");
+            extract(f, &an.scops[0], 2).expect("extractable");
+        }
+
+        let n_elems = 257usize; // odd -> remainder path with unroll 2
+        let mut engine = Engine::new(m).unwrap();
+        let mut mem = Memory::new();
+        let av: Vec<i32> = (0..n_elems).map(|_| rng.any_i32() % 100_000).collect();
+        let bv: Vec<i32> = (0..n_elems).map(|_| rng.any_i32() % 100_000).collect();
+        let (hc, ha, hb) = (mem.alloc_i32(n_elems), mem.from_i32(&av), mem.from_i32(&bv));
+        let args = [Val::P(hc), Val::P(ha), Val::P(hb), Val::I(n_elems as i32)];
+        engine.call("k", &mut mem, &args).unwrap();
+        let want = mem.i32s(hc).to_vec();
+
+        let mut mgr = OffloadManager::new(OffloadParams {
+            min_dfg_nodes: 1,
+            unroll: 2,
+            seed: case,
+            ..Default::default()
+        });
+        let f = engine.func_index("k").unwrap();
+        mgr.try_offload(&mut engine, f, None).expect("offload");
+        mem.i32s_mut(hc).fill(0);
+        engine.call("k", &mut mem, &args).unwrap();
+        assert_eq!(mem.i32s(hc), &want[..], "case {case} ops {ops:?}");
+    }
+}
+
+#[test]
+fn p5_routed_configs_are_structurally_legal() {
+    let mut rng = Rng::new(555);
+    for case in 0..40u64 {
+        let n_in = 1 + rng.below(3);
+        let n_calc = 1 + rng.below(8);
+        let dfg = random_dfg(&mut rng, n_in, n_calc);
+        if dfg.stats().outputs == 0 || dfg.stats().calc == 0 {
+            continue;
+        }
+        let mut prng = Rng::new(7000 + case);
+        if let Ok(res) = place_and_route(&dfg, Grid::new(6, 6), &ParParams::default(), &mut prng)
+        {
+            // validate() re-traces every net, checks I/O faces are border
+            // and unique, every FU drives something, and the image builds.
+            res.config.validate().unwrap_or_else(|e| panic!("case {case}: {e}"));
+            // Used cells never exceed capacity; every placed node on a
+            // distinct cell.
+            let mut seen = std::collections::HashSet::new();
+            for (_, cell) in &res.placement {
+                assert!(seen.insert(*cell), "case {case}: cell reused");
+            }
+        }
+    }
+}

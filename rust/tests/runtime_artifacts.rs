@@ -1,0 +1,105 @@
+//! PJRT artifact tests: the rust DFE simulator and the AOT Pallas artifact
+//! must agree bit-for-bit on random execution images — the cross-layer
+//! correctness contract (L1 kernel ≡ L3 sim). Skipped gracefully when
+//! `make artifacts` has not run.
+
+use tlo::dfe::abi;
+use tlo::dfe::image::{fig2_image, listing1_image, ExecImage, ImageCell};
+use tlo::dfe::opcodes::{Op, ALL_OPS};
+use tlo::runtime::PjrtRuntime;
+use tlo::util::prng::Rng;
+
+fn runtime_or_skip() -> Option<PjrtRuntime> {
+    match PjrtRuntime::load_default() {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("SKIP (run `make artifacts`): {e:#}");
+            None
+        }
+    }
+}
+
+fn random_image(rng: &mut Rng, max_cells: usize) -> ExecImage {
+    let n_inputs = 1 + rng.below(abi::N_INPUTS.min(8));
+    let n_consts = rng.below(4);
+    let consts: Vec<i32> = (0..n_consts).map(|_| rng.any_i32()).collect();
+    let n_cells = 1 + rng.below(max_cells);
+    let mut cells = Vec::new();
+    for i in 0..n_cells {
+        let limit = abi::CELL_BASE + i;
+        let op = ALL_OPS[rng.below(ALL_OPS.len())];
+        cells.push(ImageCell {
+            op,
+            src1: rng.below(limit),
+            src2: rng.below(limit),
+            sel: rng.below(limit),
+        });
+    }
+    let n_out = 1 + rng.below(abi::N_OUTPUTS - 1);
+    let out_sel: Vec<usize> =
+        (0..n_out).map(|_| rng.below(abi::n_slots(n_cells))).collect();
+    let img = ExecImage { cells, consts, n_inputs, out_sel };
+    img.validate().expect("constructed valid");
+    img
+}
+
+#[test]
+fn manifest_lists_all_variants() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let names: Vec<&str> = rt.manifest.variants.iter().map(|v| v.name.as_str()).collect();
+    for want in ["dfe_4x4", "dfe_8x8", "dfe_12x12", "dfe_15x15", "dfe_24x18"] {
+        assert!(names.contains(&want), "missing {want} in {names:?}");
+    }
+    assert_eq!(rt.manifest.batch, abi::BATCH);
+}
+
+#[test]
+fn pjrt_matches_rust_sim_on_random_images() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let exe = rt.executable("dfe_8x8").expect("compile 8x8");
+    let mut rng = Rng::new(0xC0FFEE);
+    for case in 0..10 {
+        let img = random_image(&mut rng, 64);
+        let batch = abi::BATCH;
+        let x: Vec<i32> = (0..img.n_inputs * batch).map(|_| rng.any_i32()).collect();
+        let want = img.eval_batch(&x, batch);
+        let got = exe.run_batch(&img, &x).expect("pjrt execute");
+        assert_eq!(got, want, "case {case}");
+    }
+}
+
+#[test]
+fn pjrt_runs_fig2_and_listing1_images() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let exe = rt.executable("dfe_4x4").expect("compile 4x4");
+    let mut rng = Rng::new(9);
+    for img in [fig2_image(), listing1_image()] {
+        let lanes = 777; // non-multiple of BATCH exercises chunking
+        let x: Vec<i32> = (0..img.n_inputs * lanes).map(|_| rng.any_i32() % 10_000).collect();
+        let want = img.eval_batch(&x, lanes);
+        let got = exe.run_lanes(&img, &x, lanes).expect("pjrt run_lanes");
+        assert_eq!(got, want);
+    }
+}
+
+#[test]
+fn executable_fitting_picks_smallest_variant() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    assert_eq!(rt.executable_fitting(3).unwrap().info.name, "dfe_4x4");
+    assert_eq!(rt.executable_fitting(17).unwrap().info.name, "dfe_8x8");
+    assert_eq!(rt.executable_fitting(200).unwrap().info.name, "dfe_15x15");
+    assert_eq!(rt.executable_fitting(300).unwrap().info.name, "dfe_24x18");
+    assert!(rt.executable_fitting(10_000).is_err());
+}
+
+#[test]
+fn oversized_image_rejected() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let exe = rt.executable("dfe_4x4").unwrap();
+    let mut rng = Rng::new(1);
+    let img = random_image(&mut rng, 64);
+    if img.n_cells() > 16 {
+        let x = vec![0i32; img.n_inputs * abi::BATCH];
+        assert!(exe.run_batch(&img, &x).is_err());
+    }
+}
