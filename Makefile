@@ -1,0 +1,27 @@
+# Top-level convenience targets. The one that matters at build time:
+#
+#   make artifacts   AOT-lower the Pallas DFE datapath (python/compile/aot.py)
+#                    to HLO-text artifacts + manifest.json under ./artifacts,
+#                    which the rust runtime loads via PJRT. Without it the
+#                    binary falls back to the rust functional simulator and
+#                    rust/tests/runtime_artifacts.rs skips.
+
+PYTHON ?= python3
+
+.PHONY: artifacts build test bench clean
+
+artifacts:
+	cd python && $(PYTHON) -m compile.aot --out-dir ../artifacts
+
+build:
+	cargo build --release
+
+test:
+	cargo test -q
+	$(PYTHON) -m pytest python/tests -q
+
+bench:
+	cargo bench
+
+clean:
+	rm -rf target rust/target artifacts

@@ -54,7 +54,7 @@ fn listing1_module() -> Module {
     m
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> tlo::util::err::Result<()> {
     let args = Args::from_env(&["n"]);
     let n = args.get_usize("n", 8192);
 
@@ -77,7 +77,7 @@ fn main() -> anyhow::Result<()> {
     let mut pjrt = PjrtRuntime::load_default().ok();
     let rec = mgr
         .try_offload(&mut engine, func, pjrt.as_mut())
-        .map_err(|e| anyhow::anyhow!("offload rejected: {e}"))?;
+        .map_err(|e| tlo::anyhow!("offload rejected: {e}"))?;
     println!(
         "if-converted DFG: {} in / {} out / {} calc (CMP + MUX in fabric, Fig 4)",
         rec.inputs, rec.outputs, rec.calc

@@ -37,7 +37,7 @@ fn fig2_module() -> Module {
     m
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> tlo::util::err::Result<()> {
     let args = Args::from_env(&["n", "seed", "unroll"]);
     let n = args.get_usize("n", 4096);
     let unroll = args.get_usize("unroll", 4);
@@ -73,7 +73,7 @@ fn main() -> anyhow::Result<()> {
     }
     let rec = mgr
         .try_offload(&mut engine, func, pjrt.as_mut())
-        .map_err(|e| anyhow::anyhow!("offload rejected: {e}"))?;
+        .map_err(|e| tlo::anyhow!("offload rejected: {e}"))?;
     println!(
         "offloaded '{}': DFG {} in / {} out / {} calc ({} nodes, unroll x{})",
         rec.name, rec.inputs, rec.outputs, rec.calc, rec.dfg_nodes, unroll

@@ -23,7 +23,7 @@ use tlo::workloads::video::{
     alloc_pipeline, conv_args, video_module, FrameSource, DECODE_MS, FRAME_H, FRAME_W,
 };
 
-fn main() -> anyhow::Result<()> {
+fn main() -> tlo::util::err::Result<()> {
     let args = Args::from_env(&["frames", "seed"]);
     let frames = args.get_usize("frames", 24);
     let riffa = args.flag("riffa");
@@ -76,7 +76,7 @@ fn main() -> anyhow::Result<()> {
     );
     let rec = mgr
         .try_offload(&mut engine, func, pjrt.as_mut())
-        .map_err(|e| anyhow::anyhow!("offload rejected: {e}"))?;
+        .map_err(|e| tlo::anyhow!("offload rejected: {e}"))?;
     println!(
         "offloaded conv: DFG {} in / {} out / {} calc (paper: 17/1/16)",
         rec.inputs, rec.outputs, rec.calc
@@ -95,7 +95,7 @@ fn main() -> anyhow::Result<()> {
     if let Some((f, got)) = check.last() {
         let want = tlo::workloads::video::conv_reference(
             f,
-            &[1, -2, 1, 2, -2, 1, 2, -1],
+            &tlo::workloads::video::COEF,
             FRAME_W,
             FRAME_H,
         );

@@ -1,0 +1,7 @@
+"""Make `from compile import ...` resolve whether pytest runs from the
+repo root (`python -m pytest python/tests`, as CI does) or from python/."""
+
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent))

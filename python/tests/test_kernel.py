@@ -12,6 +12,10 @@ from __future__ import annotations
 
 import numpy as np
 import pytest
+
+# The offline image may lack hypothesis; skip this module (not the whole
+# suite) rather than erroring at collection.
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from compile.kernels import opcodes as op

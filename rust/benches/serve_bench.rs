@@ -1,0 +1,73 @@
+//! A4 — serve-layer throughput scaling: the PolyBench mix served by the
+//! multi-tenant offload server at 1, 2 and 4 shard regions of the same
+//! 12x12 overlay.
+//!
+//! What scales: with one shard, four structurally distinct kernels thrash
+//! the single resident configuration (every round pays reconfiguration
+//! downloads + the configuration-FSM epsilon); with four shards each
+//! configuration stays resident and requests only pay the shared-link
+//! transfers, which the round scheduler coalesces per shard. Rollback is
+//! disabled (window = u64::MAX) so the bench isolates shard scaling from
+//! the offload-vs-software economics (rollback_bench covers those).
+//!
+//! Acceptance: aggregate throughput must scale > 1.5x from 1 shard to 4.
+
+use tlo::dfe::grid::Grid;
+use tlo::offload::server::{polybench_mix, OffloadServer, ServeParams};
+use tlo::util::fmt_duration;
+
+fn main() {
+    let quick = std::env::var("TLO_BENCH_QUICK").map(|v| v == "1").unwrap_or(false)
+        || std::env::args().any(|a| a == "--quick");
+    let tenants = 4;
+    let requests: u64 = if quick { 8 } else { 32 };
+
+    println!("== A4: serve throughput vs shard count (PolyBench mix, {tenants} tenants x {requests} requests) ==");
+    println!(
+        "{:>7} {:>14} {:>12} {:>11} {:>10} {:>10}",
+        "shards", "throughput", "makespan", "reconfigs", "execs", "cache"
+    );
+
+    let mut results: Vec<(usize, f64)> = Vec::new();
+    for shards in [1usize, 2, 4] {
+        // 16x12 keeps even the 4-way split at 4x12 = 48 cells per region,
+        // comfortable for every mix DFG's place & route.
+        let params = ServeParams {
+            shards,
+            grid: Grid::new(16, 12),
+            rollback_window: u64::MAX,
+            ..Default::default()
+        };
+        let mut server =
+            OffloadServer::new(params, polybench_mix(tenants)).expect("server setup");
+        let offloaded = server.tenants.iter().filter(|t| t.offload.is_some()).count();
+        assert!(
+            offloaded >= 3,
+            "{shards} shards: only {offloaded}/{tenants} tenants offloaded — scaling \
+             measurement would be meaningless"
+        );
+        let report = server.run(requests);
+        let reconfigs: u64 = report.shards.iter().map(|s| s.reconfigs).sum();
+        let execs: u64 = report.shards.iter().map(|s| s.executed).sum();
+        println!(
+            "{:>7} {:>10.1} r/s {:>12} {:>11} {:>10} {:>9.0}%",
+            shards,
+            report.throughput_rps(),
+            fmt_duration(report.makespan),
+            reconfigs,
+            execs,
+            100.0 * report.cache_hit_rate
+        );
+        results.push((shards, report.throughput_rps()));
+    }
+
+    let (_, rps1) = results[0];
+    let (_, rps4) = results[2];
+    let scaling = rps4 / rps1;
+    println!("\nscaling 1 -> 4 shards: {scaling:.2}x (acceptance target: > 1.5x)");
+    assert!(
+        scaling > 1.5,
+        "shard scaling {scaling:.2}x below the 1.5x acceptance threshold"
+    );
+    println!("PASS: multi-shard serving scales aggregate throughput {scaling:.2}x");
+}

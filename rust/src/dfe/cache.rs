@@ -30,6 +30,18 @@ pub fn dfg_key(dfg: &Dfg) -> u64 {
     h.finish()
 }
 
+/// Tenant-agnostic cache key for the multi-tenant serve layer: the DFG's
+/// structural hash combined with the shard-region geometry it was routed
+/// for. Two tenants running the same kernel share the entry (the paper's
+/// "stored in a cache for later reuse", across address spaces); the same
+/// DFG routed for a differently-shaped region does not.
+pub fn region_key(dfg: u64, grid: crate::dfe::grid::Grid) -> u64 {
+    let mut h = std::collections::hash_map::DefaultHasher::new();
+    dfg.hash(&mut h);
+    (grid.rows as u64, grid.cols as u64).hash(&mut h);
+    h.finish()
+}
+
 /// A cached, ready-to-load configuration.
 #[derive(Clone, Debug)]
 pub struct CachedConfig {
@@ -124,6 +136,17 @@ mod tests {
     fn key_is_structural() {
         assert_eq!(dfg_key(&fig2_dfg()), dfg_key(&fig2_dfg()));
         assert_ne!(dfg_key(&fig2_dfg()), dfg_key(&listing1_dfg()));
+    }
+
+    #[test]
+    fn region_key_distinguishes_geometry_but_not_tenant() {
+        use crate::dfe::grid::Grid;
+        let k = dfg_key(&fig2_dfg());
+        // Same DFG + same region shape -> shared entry across tenants.
+        assert_eq!(region_key(k, Grid::new(4, 8)), region_key(k, Grid::new(4, 8)));
+        // Same DFG routed for another region shape -> distinct entry.
+        assert_ne!(region_key(k, Grid::new(4, 8)), region_key(k, Grid::new(8, 8)));
+        assert_ne!(region_key(k, Grid::new(4, 8)), k);
     }
 
     #[test]

@@ -169,6 +169,83 @@ impl Grid {
         let cols = self.cols;
         (0..self.n_cells()).map(move |i| CellCoord::new(i / cols, i % cols))
     }
+
+    /// Partition the grid into `k` disjoint shard [`Region`]s — contiguous
+    /// strips along the longer axis, balanced to within one row/column —
+    /// for the multi-tenant offload server. Each region is an independent
+    /// place-&-route domain with its own border I/O along the cut (the
+    /// overlay instantiates per-region stream interfaces, like the
+    /// application-specific multi-region overlays of Mbongue et al.).
+    pub fn partition(self, k: usize) -> Result<Vec<Region>, String> {
+        if k == 0 {
+            return Err("cannot partition a grid into 0 regions".to_string());
+        }
+        let along_rows = self.rows >= self.cols;
+        let span = if along_rows { self.rows } else { self.cols };
+        if k > span {
+            return Err(format!(
+                "{k} regions need {k} strips but a {}x{} grid only has {span} along its longer axis",
+                self.rows, self.cols
+            ));
+        }
+        let (base, extra) = (span / k, span % k);
+        let mut regions = Vec::with_capacity(k);
+        let mut at = 0usize;
+        for i in 0..k {
+            let len = base + usize::from(i < extra);
+            regions.push(if along_rows {
+                Region { origin: CellCoord::new(at, 0), grid: Grid::new(len, self.cols) }
+            } else {
+                Region { origin: CellCoord::new(0, at), grid: Grid::new(self.rows, len) }
+            });
+            at += len;
+        }
+        Ok(regions)
+    }
+}
+
+/// A rectangular sub-region of a device grid: one independently
+/// placed-and-routed DFE shard. `grid` holds the region's own dimensions;
+/// `origin` anchors it on the full device grid.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Region {
+    pub origin: CellCoord,
+    pub grid: Grid,
+}
+
+impl Region {
+    pub fn n_cells(self) -> usize {
+        self.grid.n_cells()
+    }
+
+    /// Whether `p` (a coordinate on the *full* grid) lies in this region.
+    pub fn contains(self, p: CellCoord) -> bool {
+        p.r >= self.origin.r
+            && p.r < self.origin.r + self.grid.rows
+            && p.c >= self.origin.c
+            && p.c < self.origin.c + self.grid.cols
+    }
+
+    /// All cells of the region in full-grid coordinates.
+    pub fn cells(self) -> impl Iterator<Item = CellCoord> {
+        let o = self.origin;
+        self.grid.iter_coords().map(move |p| CellCoord::new(o.r + p.r, o.c + p.c))
+    }
+
+    /// Whether two regions share any cell.
+    pub fn overlaps(self, other: Region) -> bool {
+        let r_overlap = self.origin.r < other.origin.r + other.grid.rows
+            && other.origin.r < self.origin.r + self.grid.rows;
+        let c_overlap = self.origin.c < other.origin.c + other.grid.cols
+            && other.origin.c < self.origin.c + self.grid.cols;
+        r_overlap && c_overlap
+    }
+}
+
+impl fmt::Display for Region {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}x{}@{}", self.grid.rows, self.grid.cols, self.origin)
+    }
 }
 
 #[cfg(test)]
@@ -216,6 +293,56 @@ mod tests {
     fn opposite_involution() {
         for d in DIRS {
             assert_eq!(d.opposite().opposite(), d);
+        }
+    }
+
+    #[test]
+    fn partition_covers_without_overlap() {
+        for (r, c, k) in [(8, 8, 2), (8, 8, 4), (12, 12, 3), (3, 9, 4), (5, 4, 5)] {
+            let g = Grid::new(r, c);
+            let regions = g.partition(k).unwrap_or_else(|e| panic!("{r}x{c}/{k}: {e}"));
+            assert_eq!(regions.len(), k);
+            let mut seen = std::collections::HashSet::new();
+            for region in &regions {
+                for cell in region.cells() {
+                    assert!(g.contains(cell), "{region} spills off the grid");
+                    assert!(seen.insert(cell), "cell {cell} shared between regions");
+                }
+            }
+            assert_eq!(seen.len(), g.n_cells(), "{r}x{c}/{k} partition must cover");
+            for i in 0..k {
+                for j in i + 1..k {
+                    assert!(!regions[i].overlaps(regions[j]));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn partition_is_balanced() {
+        let g = Grid::new(10, 4);
+        let regions = g.partition(4).unwrap();
+        let sizes: Vec<usize> = regions.iter().map(|r| r.n_cells()).collect();
+        assert_eq!(sizes.iter().sum::<usize>(), 40);
+        assert!(sizes.iter().max().unwrap() - sizes.iter().min().unwrap() <= g.cols);
+    }
+
+    #[test]
+    fn partition_rejects_degenerate_counts() {
+        assert!(Grid::new(4, 4).partition(0).is_err());
+        assert!(Grid::new(4, 4).partition(5).is_err());
+        assert_eq!(Grid::new(4, 4).partition(1).unwrap()[0].grid, Grid::new(4, 4));
+    }
+
+    #[test]
+    fn region_contains_matches_cells() {
+        let g = Grid::new(6, 5);
+        let regions = g.partition(2).unwrap();
+        for region in &regions {
+            for cell in g.iter_coords() {
+                let in_cells = region.cells().any(|p| p == cell);
+                assert_eq!(region.contains(cell), in_cells, "{region} {cell}");
+            }
         }
     }
 }

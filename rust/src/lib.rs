@@ -12,8 +12,15 @@
 //!   place & route ([`par`]), DFE overlay model ([`dfe`]), PCIe transport
 //!   simulation ([`transport`]), the offload manager with rollback
 //!   ([`offload`]) and phase tracing ([`trace`]).
+//! * Serve layer ([`offload::server`]): the manager generalized to a
+//!   multi-tenant scheduler — N placed-and-routed shard regions on one
+//!   device ([`dfe::grid::Region`]), a cross-tenant LRU configuration
+//!   cache, and per-round transfer coalescing on the shared PCIe link
+//!   ([`transport::BatchQueue`]). `tlo serve --tenants N --shards K`.
 //! * L2/L1 (build-time python): the DFE datapath as a Pallas kernel,
-//!   AOT-lowered to HLO text and executed via PJRT ([`runtime`]).
+//!   AOT-lowered to HLO text and executed via PJRT ([`runtime`], behind
+//!   the `pjrt` cargo feature; the default build uses the rust DFE
+//!   simulator and the vendored utilities in [`util`]).
 
 pub mod analysis;
 pub mod dfe;

@@ -1,16 +1,28 @@
 //! `tlo` — leader entrypoint. Subcommands mirror the examples so the
 //! shipped binary can regenerate every experiment:
-//!   tlo table1            Table-I analysis over the PolyBench suite
-//!   tlo table2 [--device] Table-II resource/Fmax model
-//!   tlo video [--riffa]   §IV-C video pipeline (Fig 6 + fps)
-//!   tlo devices           list modeled FPGA devices
+//!   tlo table1             Table-I analysis over the PolyBench suite
+//!   tlo table2 [--device]  Table-II resource/Fmax model
+//!   tlo video [--riffa]    §IV-C video pipeline (Fig 6 + fps)
+//!   tlo serve [--tenants N --shards K]
+//!                          multi-tenant DFE offload server (shard
+//!                          scheduler + shared config cache + batched
+//!                          PCIe link), verified bit-identical to the
+//!                          single-tenant path
+//!   tlo devices            list modeled FPGA devices
 use tlo::util::cli::Args;
 
+const USAGE: &str = "subcommands: table1 | table2 [--device NAME] | video [--frames N --riffa] \
+| serve [--tenants N --shards K --requests R --grid RxC --tagged --no-verify] | devices";
+
 fn main() {
-    let args = Args::from_env(&["device", "frames", "n", "seed"]);
+    let args = Args::from_env(&[
+        "device", "frames", "n", "seed", "tenants", "shards", "requests", "grid",
+    ]);
     match args.positional.first().map(String::as_str) {
         Some("table1") => table1(),
         Some("table2") => table2(&args),
+        Some("video") => video(&args),
+        Some("serve") => serve(&args),
         Some("devices") => {
             for d in tlo::dfe::resource::devices() {
                 let (r, c) = d.largest_routable();
@@ -19,11 +31,12 @@ fn main() {
         }
         Some(other) => {
             eprintln!("unknown subcommand '{other}'");
+            eprintln!("{USAGE}");
             std::process::exit(2);
         }
         None => {
             println!("tlo — Transparent Live Code Offloading (simulated DFE overlay)");
-            println!("subcommands: table1 | table2 [--device NAME] | devices");
+            println!("{USAGE}");
             println!("experiments: see examples/ and `cargo bench` (DESIGN.md §4)");
         }
     }
@@ -58,4 +71,175 @@ fn table2(args: &Args) {
             println!("  {}", d.estimate(r, c));
         }
     }
+}
+
+/// The §IV-C video pipeline (the doc header advertised this subcommand
+/// long before it existed — it is the compact rendition of
+/// examples/video_pipeline.rs over `workloads::video`).
+fn video(args: &Args) {
+    use std::time::Duration;
+    use tlo::jit::engine::Engine;
+    use tlo::jit::interp::Memory;
+    use tlo::offload::{OffloadManager, OffloadParams};
+    use tlo::trace::Phase;
+    use tlo::transport::PcieParams;
+    use tlo::util::fmt_duration;
+    use tlo::workloads::video as vw;
+
+    let frames = args.get_usize("frames", 24).max(1);
+    let riffa = args.flag("riffa");
+
+    let mut engine = Engine::new(vw::video_module()).expect("video module");
+    let mut mem = Memory::new();
+    let (out, inp, coef) = vw::alloc_pipeline(&mut mem);
+    let mut src = vw::FrameSource::new();
+    let mut frame = vec![0i32; vw::FRAME_W * vw::FRAME_H];
+    let func = engine.func_index("conv").unwrap();
+    let decode = Duration::from_secs_f64(vw::DECODE_MS * 1e-3);
+
+    // Software phase: a few frames to establish the baseline.
+    let warm = 4.min(frames);
+    for _ in 0..warm {
+        src.next_frame(&mut frame);
+        mem.i32s_mut(inp).copy_from_slice(&frame);
+        engine.call("conv", &mut mem, &vw::conv_args(out, inp, coef)).expect("conv");
+    }
+    let prof = engine.profile(func);
+    let sw_frame =
+        decode + Duration::from_secs_f64(1e-9 * prof.counters.cycles as f64 / warm as f64);
+
+    let mut params = OffloadParams {
+        min_dfg_nodes: 8,
+        seed: args.get_u64("seed", 42),
+        ..Default::default()
+    };
+    if riffa {
+        params.pcie = PcieParams::riffa_like();
+    }
+    let mut mgr = OffloadManager::new(params);
+    let rec = match mgr.try_offload(&mut engine, func, None) {
+        Ok(rec) => rec,
+        Err(e) => {
+            eprintln!("offload rejected: {e}");
+            std::process::exit(1);
+        }
+    };
+    println!(
+        "offloaded conv: DFG {} in / {} out / {} calc (paper: 17/1/16)",
+        rec.inputs, rec.outputs, rec.calc
+    );
+
+    for _ in warm..frames {
+        src.next_frame(&mut frame);
+        mem.i32s_mut(inp).copy_from_slice(&frame);
+        mgr.tracer.borrow_mut().simulated(Phase::HostWork, decode);
+        engine.call("conv", &mut mem, &vw::conv_args(out, inp, coef)).expect("conv");
+    }
+    // Numerics check on the last frame against the host reference.
+    let want = vw::conv_reference(&frame, &vw::COEF, vw::FRAME_W, vw::FRAME_H);
+    assert_eq!(mem.i32s(out), &want[..], "offloaded convolution numerics");
+
+    let st = mgr.state(func).unwrap();
+    let st = st.borrow();
+    let off_frame = decode + st.virtual_offload / st.invocations.max(1) as u32;
+    println!(
+        "software  {} / frame -> {:.1} fps",
+        fmt_duration(sw_frame),
+        1.0 / sw_frame.as_secs_f64()
+    );
+    println!(
+        "offloaded {} / frame -> {:.1} fps  ({})",
+        fmt_duration(off_frame),
+        1.0 / off_frame.as_secs_f64(),
+        if riffa {
+            "packed/RIFFA-like protocol"
+        } else {
+            "tagged protocol: transfer-bound, as in the paper (31 vs 83 fps)"
+        }
+    );
+    println!("\n== Fig-6 phase timeline ==\n{}", mgr.tracer.borrow().render_timeline());
+}
+
+/// Multi-tenant offload server over N shard regions (see
+/// `offload::server`). Verifies per-tenant outputs bit-identical to the
+/// single-tenant offload path unless --no-verify.
+fn serve(args: &Args) {
+    use tlo::dfe::grid::Grid;
+    use tlo::offload::server::{run_single_tenant, OffloadServer, ServeParams, serve_mix};
+    use tlo::transport::PcieParams;
+
+    let tenants = args.get_usize("tenants", 4).max(1);
+    let shards = args.get_usize("shards", 2).max(1);
+    let requests = args.get_u64("requests", 8).max(1);
+    let grid = match args.get("grid") {
+        None => Grid::new(12, 12),
+        Some(s) => match parse_grid(s) {
+            Some(g) => g,
+            None => {
+                eprintln!("bad --grid '{s}' (expected RxC, e.g. 12x12)");
+                std::process::exit(2);
+            }
+        },
+    };
+    let mut params = ServeParams {
+        shards,
+        grid,
+        seed: args.get_u64("seed", 0x5EED),
+        ..Default::default()
+    };
+    if args.flag("tagged") {
+        params.pcie = PcieParams::default();
+    }
+    let specs = serve_mix(tenants);
+    println!(
+        "serving {tenants} tenants on {shards} shard(s) of a {}x{} overlay ({} protocol)",
+        grid.rows,
+        grid.cols,
+        if args.flag("tagged") { "tagged 128b/32b" } else { "packed/RIFFA-like" }
+    );
+    let mut server = match OffloadServer::new(params, specs.clone()) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("serve setup failed: {e:#}");
+            std::process::exit(1);
+        }
+    };
+    for (i, r) in server.regions.iter().enumerate() {
+        println!("  shard {i}: region {r}");
+    }
+    let report = server.run(requests);
+    println!("\n{report}");
+
+    if !args.flag("no-verify") {
+        let mut ok = true;
+        for (i, spec) in specs.iter().enumerate() {
+            let want = match run_single_tenant(spec, requests) {
+                Ok(w) => w,
+                Err(e) => {
+                    eprintln!("verify {}: single-tenant replay failed: {e:#}", spec.name);
+                    std::process::exit(1);
+                }
+            };
+            if server.tenant_outputs(i) != want {
+                eprintln!("verify {}: outputs DIVERGE from the single-tenant path", spec.name);
+                ok = false;
+            }
+        }
+        if !ok {
+            std::process::exit(1);
+        }
+        println!(
+            "\nverified: all {} tenant outputs bit-identical to the single-tenant offload path",
+            specs.len()
+        );
+    }
+}
+
+fn parse_grid(s: &str) -> Option<tlo::dfe::grid::Grid> {
+    let (r, c) = s.split_once('x')?;
+    let (r, c): (usize, usize) = (r.trim().parse().ok()?, c.trim().parse().ok()?);
+    if r == 0 || c == 0 {
+        return None;
+    }
+    Some(tlo::dfe::grid::Grid::new(r, c))
 }

@@ -7,6 +7,7 @@
 //! the execution time and we roll back to the initial software should the
 //! produced implementation perform worse than the original one").
 
+pub mod server;
 pub mod stub;
 
 use std::cell::RefCell;
@@ -182,29 +183,7 @@ impl OffloadManager {
         let (off, single) = tracer.borrow_mut().span(Phase::Analysis, {
             let params_unroll = self.params.unroll;
             let f = &engine.module.funcs[func as usize];
-            move || -> Result<(OffloadDfg, OffloadDfg), RejectReason> {
-                let an = analyze_function(f);
-                if an.scops.is_empty() {
-                    let why = an
-                        .rejects
-                        .first()
-                        .map(|r| r.label().to_string())
-                        .unwrap_or_else(|| "no loops".into());
-                    return Err(RejectReason::NoScop(why));
-                }
-                // First extractable SCoP wins (the paper off-loads the
-                // hottest region; our workloads put it first).
-                let mut last_err = None;
-                for scop in &an.scops {
-                    match (extract(f, scop, params_unroll), extract(f, scop, 1)) {
-                        (Ok(o), Ok(s)) => return Ok((o, s)),
-                        (Err(e), _) | (_, Err(e)) => last_err = Some(e),
-                    }
-                }
-                Err(RejectReason::Illegal(
-                    last_err.map(|e| e.label().to_string()).unwrap_or_default(),
-                ))
-            }
+            move || extract_single_scop(f, params_unroll)
         })?;
 
         let stats = off.dfg.stats();
@@ -216,10 +195,11 @@ impl OffloadManager {
         // ---- 2. place & route, via the configuration cache ----
         let key = dfg_key(&off.dfg);
         let mut par_stats = None;
-        let cache_hit = self.cache.get(key).is_some();
+        let mut cache_hit = true;
         let cached = if let Some(c) = self.cache.get(key) {
             c.clone()
         } else {
+            cache_hit = false;
             let grid = self.params.grid;
             let par = self.params.par;
             let rng = &mut self.rng;
@@ -358,6 +338,41 @@ impl OffloadManager {
             }
         }
         rolled
+    }
+}
+
+/// Analysis + extraction under the one-SCoP-per-function offload
+/// contract, shared by the single-tenant manager and the serve layer.
+///
+/// The stub patch replaces the *whole* function, so the offload is only
+/// sound when a single SCoP covers the body: patching a multi-nest
+/// function (atax, bicg, mvt, gemver, ...) would silently drop every
+/// nest but the first. Such functions stay in software until DFG merging
+/// lands (paper: "extract and merge"). Returns the unrolled and the
+/// single-iteration (remainder) extractions.
+pub(crate) fn extract_single_scop(
+    f: &crate::ir::func::Function,
+    unroll: usize,
+) -> Result<(OffloadDfg, OffloadDfg), RejectReason> {
+    let an = analyze_function(f);
+    if an.scops.is_empty() {
+        let why = an
+            .rejects
+            .first()
+            .map(|r| r.label().to_string())
+            .unwrap_or_else(|| "no loops".into());
+        return Err(RejectReason::NoScop(why));
+    }
+    if an.scops.len() > 1 {
+        return Err(RejectReason::Illegal(format!(
+            "{} SCoPs; multi-SCoP functions are not offloaded",
+            an.scops.len()
+        )));
+    }
+    let scop = &an.scops[0];
+    match (extract(f, scop, unroll), extract(f, scop, 1)) {
+        (Ok(o), Ok(s)) => Ok((o, s)),
+        (Err(e), _) | (_, Err(e)) => Err(RejectReason::Illegal(e.label().to_string())),
     }
 }
 
@@ -530,6 +545,24 @@ mod tests {
         let rolled = mgr.check_rollback(&mut engine);
         assert!(rolled.is_empty(), "offload should win at this scale");
         assert!(engine.is_patched(func));
+    }
+
+    #[test]
+    fn multi_scop_functions_are_not_patched() {
+        // atax has two loop nests; patching the whole function with a
+        // stub for the first nest would silently drop the second.
+        let mut m = Module::new();
+        m.add(crate::workloads::polybench::atax());
+        let mut engine = Engine::new(m).unwrap();
+        let mut mgr =
+            OffloadManager::new(OffloadParams { min_dfg_nodes: 1, ..Default::default() });
+        let func = engine.func_index("atax").unwrap();
+        let err = mgr.try_offload(&mut engine, func, None).unwrap_err();
+        assert!(
+            matches!(err, RejectReason::Illegal(ref s) if s.contains("SCoP")),
+            "{err}"
+        );
+        assert!(!engine.is_patched(func));
     }
 
     #[test]

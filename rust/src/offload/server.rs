@@ -1,0 +1,1150 @@
+//! The multi-tenant offload server: the paper's one-engine decision loop
+//! generalized to N independently placed-and-routed DFE shard regions on a
+//! single device, serving several concurrent workload streams.
+//!
+//! Layered on the existing machinery:
+//!   * the device grid is partitioned into disjoint shard [`Region`]s
+//!     (validated against the `dfe::resource` budgets — echoing the
+//!     application-specific multi-region overlays of Mbongue et al.);
+//!   * one LRU [`ConfigCache`] is shared across tenants, keyed by
+//!     [`region_key`] (DFG structure + region geometry), so tenants running
+//!     the same kernel share one place-&-route result;
+//!   * the PCIe link is one arbitrated resource: per-shard configuration
+//!     downloads and data transfers are coalesced per scheduling round on a
+//!     [`BatchQueue`] (single setup per batch), in the spirit of the
+//!     batched shared-accelerator serving of Cong et al.;
+//!   * requests are admitted by a hotness-weighted round robin, with the
+//!     paper's per-tenant rollback: a tenant whose offloaded path loses to
+//!     its own software baseline is unpatched and served in software.
+//!
+//! Timing discipline matches the rest of the crate: numerics are real
+//! (every request executes through the tenant's engine), performance is
+//! virtual (link/shard occupancy on the transport and DFE models), so the
+//! throughput-scaling results are machine-independent. Outputs are
+//! bit-identical to the single-tenant offload path by construction —
+//! placement affects timing, never values — and `tests/serve.rs` plus
+//! `tlo serve --verify` enforce it.
+
+use std::cell::RefCell;
+use std::fmt;
+use std::rc::Rc;
+use std::time::Duration;
+
+use crate::dfe::cache::{dfg_key, region_key, CacheStats, CachedConfig, ConfigCache};
+use crate::dfe::grid::{Grid, Region};
+use crate::dfe::resource::{device_by_name, Device};
+use crate::ir::func::Module;
+use crate::jit::engine::Engine;
+use crate::jit::interp::{Memory, Val};
+use crate::par::{place_and_route, ParParams};
+use crate::trace::{Phase, Tracer};
+use crate::transport::{BatchQueue, PcieParams, PcieSim};
+use crate::util::err::{Error, Result};
+use crate::{anyhow, bail};
+use crate::util::fmt_duration;
+use crate::util::prng::Rng;
+use crate::workloads::{polybench, video};
+
+use super::stub::{run_offloaded, DfeBackend, TimeModel};
+use super::{OffloadManager, OffloadParams, RejectReason, RuntimeState};
+
+/// Software warmup invocations per tenant before the offload decision
+/// (establishes the rollback baseline, like the paper's "after running the
+/// application for a few seconds").
+pub const WARMUP_REQUESTS: u64 = 2;
+
+/// Server tunables.
+#[derive(Clone, Debug)]
+pub struct ServeParams {
+    /// Number of shard regions the device grid is partitioned into.
+    pub shards: usize,
+    /// Full overlay grid on the device (partitioned, then each shard is an
+    /// independent place-&-route domain).
+    pub grid: Grid,
+    /// Device powering the resource/Fmax model (Table II name).
+    pub device: String,
+    /// Shared-link parameters. Default is the packed RIFFA-like protocol:
+    /// the serving path is the paper's own "fix the transport" projection;
+    /// pass `PcieParams::default()` for the tagged prototype protocol.
+    pub pcie: PcieParams,
+    pub par: ParParams,
+    pub min_dfg_nodes: usize,
+    /// Offloaded invocations observed before a rollback decision.
+    pub rollback_window: u64,
+    pub cache_capacity: usize,
+    /// Seconds per interpreter cycle (virtual host clock).
+    pub sec_per_cycle: f64,
+    pub seed: u64,
+    /// Configuration-FSM latency per overlay reconfiguration (the same
+    /// epsilon the single-tenant manager charges).
+    pub reconfig_epsilon: Duration,
+    /// Requests admitted per scheduling round; transfers for the same
+    /// shard within a round are coalesced. 0 = one slot per tenant.
+    pub batch_window: usize,
+}
+
+impl Default for ServeParams {
+    fn default() -> Self {
+        ServeParams {
+            shards: 2,
+            grid: Grid::new(12, 12),
+            device: "Virtex 7 (VC707)".into(),
+            pcie: PcieParams::riffa_like(),
+            par: ParParams::default(),
+            min_dfg_nodes: 1,
+            rollback_window: 8,
+            cache_capacity: 32,
+            sec_per_cycle: 1e-9,
+            seed: 0x5EED,
+            reconfig_epsilon: Duration::from_micros(600),
+            batch_window: 0,
+        }
+    }
+}
+
+/// One tenant's workload stream, as data the server can drive and the
+/// verification path can replay: module builder, memory setup, optional
+/// per-request input refresh, and the handles that constitute the
+/// tenant's observable output.
+#[derive(Clone)]
+pub struct TenantSpec {
+    pub name: String,
+    pub module: fn() -> Module,
+    /// Function to serve (must exist in `module`).
+    pub func: &'static str,
+    /// Innermost-loop unroll factor for extraction.
+    pub unroll: usize,
+    /// Allocates the tenant's buffers and returns the call arguments.
+    pub setup: fn(&mut Memory) -> Vec<Val>,
+    /// Optional per-request input refresh; `seq` counts all invocations
+    /// including warmup, so replays are exact.
+    pub refresh: Option<fn(&mut Memory, &[Val], u64)>,
+    /// Handles whose final contents are the tenant's observable output.
+    /// Must enumerate *every* array the function writes: this set is both
+    /// the bit-identity verification surface and the restore set for the
+    /// failure rollback (a trapped offload replays in software after
+    /// restoring these handles to their pre-call contents).
+    pub outputs: fn(&[Val]) -> Vec<u32>,
+}
+
+/// A tenant's accepted offload, as scheduled on the shards.
+#[derive(Clone, Debug)]
+pub struct TenantOffload {
+    /// Shared cache key ([`region_key`]) — doubles as the shard-resident
+    /// configuration identity.
+    pub key: u64,
+    /// Whether admission reused another tenant's routed configuration.
+    pub cache_hit: bool,
+    pub config_words: u64,
+}
+
+/// One admitted tenant: its own engine + address space, plus the live
+/// offload/rollback state.
+pub struct Tenant {
+    pub spec: TenantSpec,
+    pub engine: Engine,
+    pub mem: Memory,
+    pub args: Vec<Val>,
+    pub func: u32,
+    pub out_handles: Vec<u32>,
+    /// Scheduling weight (observed interpreter cycles at admission).
+    pub hotness: f64,
+    pub baseline_per_inv: Duration,
+    pub served: u64,
+    pub rolled_back: bool,
+    /// Why the tenant serves in software, when it does.
+    pub reject: Option<String>,
+    pub offload: Option<TenantOffload>,
+    pub state: Option<Rc<RefCell<RuntimeState>>>,
+    /// Per-tenant (uncontended) transfer accounting — the same numbers the
+    /// single-tenant manager would produce, used for rollback economics.
+    pub pcie: Rc<RefCell<PcieSim>>,
+}
+
+/// One shard region's live state.
+#[derive(Clone, Copy, Debug)]
+pub struct ShardState {
+    pub region: Region,
+    /// Configuration currently loaded (a [`region_key`]).
+    pub resident: Option<u64>,
+    pub busy_until: Duration,
+    pub reconfigs: u64,
+    pub executed: u64,
+}
+
+pub struct OffloadServer {
+    pub params: ServeParams,
+    pub device: Device,
+    pub regions: Vec<Region>,
+    /// Common routing grid: the smallest region shape, so every cached
+    /// configuration loads onto any shard.
+    pub route_grid: Grid,
+    pub cache: ConfigCache,
+    pub tenants: Vec<Tenant>,
+    pub shards: Vec<ShardState>,
+    pub link: BatchQueue,
+    pub tracer: Rc<RefCell<Tracer>>,
+    /// Virtual server clock (advanced per scheduling round).
+    pub clock: Duration,
+    rng: Rng,
+}
+
+impl OffloadServer {
+    pub fn new(params: ServeParams, specs: Vec<TenantSpec>) -> Result<OffloadServer> {
+        if specs.is_empty() {
+            bail!("serve needs at least one tenant");
+        }
+        if params.shards == 0 {
+            bail!("serve needs at least one shard");
+        }
+        let device = device_by_name(&params.device)
+            .ok_or_else(|| anyhow!("unknown device '{}'", params.device))?;
+        let est = device.estimate(params.grid.rows, params.grid.cols);
+        if !est.routable {
+            bail!(
+                "overlay {}x{} exceeds the {} resource budget ({:.1}% LUTs, ceiling {:.0}%)",
+                params.grid.rows,
+                params.grid.cols,
+                device.name,
+                est.lut_pct,
+                device.tool.route_ceiling_pct()
+            );
+        }
+        let regions = params.grid.partition(params.shards).map_err(Error::msg)?;
+        // Per-region budget validation: every shard must itself be a
+        // routable overlay on this device.
+        for r in &regions {
+            let e = device.estimate(r.grid.rows, r.grid.cols);
+            if !e.routable {
+                bail!("shard region {r} unroutable on {}", device.name);
+            }
+        }
+        let route_grid = Grid::new(
+            regions.iter().map(|r| r.grid.rows).min().unwrap(),
+            regions.iter().map(|r| r.grid.cols).min().unwrap(),
+        );
+        let shards = regions
+            .iter()
+            .map(|&region| ShardState {
+                region,
+                resident: None,
+                busy_until: Duration::ZERO,
+                reconfigs: 0,
+                executed: 0,
+            })
+            .collect();
+        let link = BatchQueue::new(params.pcie, params.shards);
+        let mut server = OffloadServer {
+            device,
+            regions: regions.clone(),
+            route_grid,
+            cache: ConfigCache::new(params.cache_capacity),
+            tenants: Vec::new(),
+            shards,
+            link,
+            tracer: Rc::new(RefCell::new(Tracer::new())),
+            clock: Duration::ZERO,
+            rng: Rng::new(params.seed),
+            params,
+        };
+        for spec in specs {
+            server.admit(spec)?;
+        }
+        Ok(server)
+    }
+
+    pub fn n_tenants(&self) -> usize {
+        self.tenants.len()
+    }
+
+    /// A tenant's observable output arrays (for verification).
+    pub fn tenant_outputs(&self, i: usize) -> Vec<Vec<i32>> {
+        let t = &self.tenants[i];
+        t.out_handles.iter().map(|&h| t.mem.i32s(h).to_vec()).collect()
+    }
+
+    /// Admit one tenant: warm its software profile, then attempt the
+    /// offload through the shared cache onto the route grid. Offload
+    /// rejection is not an error — the tenant serves in software.
+    fn admit(&mut self, spec: TenantSpec) -> Result<()> {
+        let mut engine = Engine::new((spec.module)())?;
+        let mut mem = Memory::new();
+        let args = (spec.setup)(&mut mem);
+        let func = engine
+            .func_index(spec.func)
+            .ok_or_else(|| anyhow!("tenant {}: unknown function '{}'", spec.name, spec.func))?;
+        for seq in 0..WARMUP_REQUESTS {
+            if let Some(refresh) = spec.refresh {
+                refresh(&mut mem, &args, seq);
+            }
+            engine
+                .call_idx(func, &mut mem, &args)
+                .map_err(|e| anyhow!("tenant {} warmup: {e}", spec.name))?;
+        }
+        let prof = engine.profile(func);
+        let baseline_per_inv = Duration::from_secs_f64(
+            self.params.sec_per_cycle * prof.counters.cycles as f64
+                / prof.counters.invocations.max(1) as f64,
+        );
+        let hotness = crate::profile::hotness(&engine, func);
+        let out_handles = (spec.outputs)(&args);
+        let mut tenant = Tenant {
+            spec,
+            engine,
+            mem,
+            args,
+            func,
+            out_handles,
+            hotness,
+            baseline_per_inv,
+            served: 0,
+            rolled_back: false,
+            reject: None,
+            offload: None,
+            state: None,
+            pcie: Rc::new(RefCell::new(PcieSim::new(self.params.pcie))),
+        };
+        if let Err(reason) = self.offload_tenant(&mut tenant) {
+            tenant.reject = Some(reason.to_string());
+        }
+        self.tenants.push(tenant);
+        Ok(())
+    }
+
+    /// The single-tenant pipeline (analysis → cache/P&R → patch), against
+    /// the shard route grid and the *shared* configuration cache.
+    fn offload_tenant(&mut self, t: &mut Tenant) -> std::result::Result<(), RejectReason> {
+        let extraction = {
+            let f = &t.engine.module.funcs[t.func as usize];
+            super::extract_single_scop(f, t.spec.unroll)
+        };
+        let (off, single) = extraction?;
+
+        let nodes = off.dfg.len();
+        if nodes < self.params.min_dfg_nodes {
+            return Err(RejectReason::TooSmall { nodes, min: self.params.min_dfg_nodes });
+        }
+
+        let key = region_key(dfg_key(&off.dfg), self.route_grid);
+        let mut cache_hit = true;
+        let cached = if let Some(c) = self.cache.get(key) {
+            c.clone()
+        } else {
+            cache_hit = false;
+            let result =
+                place_and_route(&off.dfg, self.route_grid, &self.params.par, &mut self.rng)
+                    .map_err(|e| RejectReason::Unroutable(e.to_string()))?;
+            let c = CachedConfig {
+                config: result.config,
+                image: result.image,
+                variant: format!("dfe_{}x{}", self.route_grid.rows, self.route_grid.cols),
+            };
+            self.cache.insert(key, c.clone());
+            c
+        };
+
+        let est = self.device.estimate(self.route_grid.rows, self.route_grid.cols);
+        let (fill, ii) = super::measure_pipeline(&cached.config, cached.image.n_inputs);
+        let tm = TimeModel {
+            sec_per_cycle: self.params.sec_per_cycle,
+            fmax_hz: est.fmax_mhz * 1e6,
+            fill_latency: fill,
+            initiation_interval: ii,
+        };
+
+        let state = Rc::new(RefCell::new(RuntimeState {
+            baseline_per_inv: t.baseline_per_inv,
+            ..Default::default()
+        }));
+        let config_words = cached.config.config_words() as u64;
+        let image = cached.image.clone();
+        let pcie = t.pcie.clone();
+        let st = state.clone();
+        t.engine.patch_hook(
+            t.func,
+            Box::new(move |mem, args| {
+                let mut link = pcie.borrow_mut();
+                match run_offloaded(
+                    &off, &single, &image, &DfeBackend::Sim, &tm, &mut link, mem, args,
+                ) {
+                    Ok(report) => {
+                        let mut s = st.borrow_mut();
+                        s.invocations += 1;
+                        s.virtual_offload += report.offload_time();
+                        s.last_report = report;
+                        Ok(None)
+                    }
+                    Err(trap) => {
+                        st.borrow_mut().failed = true;
+                        Err(trap)
+                    }
+                }
+            }),
+        );
+        t.offload = Some(TenantOffload { key, cache_hit, config_words });
+        t.state = Some(state);
+        Ok(())
+    }
+
+    /// Serve `requests_per_tenant` requests per tenant to completion and
+    /// return the aggregate report. Numerics execute immediately; link and
+    /// shard occupancy advance the virtual clock round by round.
+    pub fn run(&mut self, requests_per_tenant: u64) -> ServeReport {
+        let n_t = self.tenants.len();
+        let window = if self.params.batch_window == 0 { n_t } else { self.params.batch_window };
+        let epsilon = self.params.reconfig_epsilon;
+        let mut remaining: Vec<u64> = vec![requests_per_tenant; n_t];
+        let mut host_free = self.clock;
+
+        while remaining.iter().any(|&r| r > 0) {
+            let round_start = self.clock;
+
+            // ---- admission: hotness-weighted round robin ----
+            let mut order: Vec<usize> = (0..n_t).filter(|&i| remaining[i] > 0).collect();
+            order.sort_by(|&a, &b| {
+                self.tenants[b]
+                    .hotness
+                    .partial_cmp(&self.tenants[a].hotness)
+                    .unwrap_or(std::cmp::Ordering::Equal)
+                    .then(a.cmp(&b))
+            });
+            let hotness: Vec<f64> = self.tenants.iter().map(|t| t.hotness).collect();
+            let mut batch = pick_batch(&order, &hotness, &remaining, window);
+            // Shard affinity: same-configuration requests back-to-back.
+            batch.sort_by_key(|&ti| {
+                self.tenants[ti].offload.as_ref().map(|o| o.key).unwrap_or(0)
+            });
+
+            struct PendingExec {
+                shard: usize,
+                exec: Duration,
+                d2h: u64,
+            }
+            let mut pending: Vec<PendingExec> = Vec::new();
+            let mut recfg_extra = vec![Duration::ZERO; self.shards.len()];
+            let mut round_load = vec![0u32; self.shards.len()];
+            let mut sw_time = Duration::ZERO;
+
+            for &ti in &batch {
+                remaining[ti] -= 1;
+                let seq = WARMUP_REQUESTS + self.tenants[ti].served;
+                // Numerics now; virtual time modeled below.
+                {
+                    let tenant = &mut self.tenants[ti];
+                    if let Some(refresh) = tenant.spec.refresh {
+                        refresh(&mut tenant.mem, &tenant.args, seq);
+                    }
+                }
+                // Snapshot the observable outputs before an offloaded
+                // call: a trap mid-scatter can leave Accumulate outputs
+                // partially folded, and a blind software replay on top
+                // would double-count them.
+                let snapshot: Option<Vec<(u32, Vec<i32>)>> = {
+                    let t = &self.tenants[ti];
+                    (!t.rolled_back && t.offload.is_some() && t.engine.is_patched(t.func))
+                        .then(|| {
+                            t.out_handles
+                                .iter()
+                                .map(|&h| (h, t.mem.i32s(h).to_vec()))
+                                .collect()
+                        })
+                };
+                let call_ok = {
+                    let tenant = &mut self.tenants[ti];
+                    tenant
+                        .engine
+                        .call_idx(tenant.func, &mut tenant.mem, &tenant.args)
+                        .is_ok()
+                };
+                if !call_ok {
+                    // Trap in the offloaded path: restore the pre-call
+                    // outputs, roll back to software and replay the
+                    // request exactly (failure rollback).
+                    let tenant = &mut self.tenants[ti];
+                    tenant.engine.unpatch(tenant.func);
+                    tenant.rolled_back = true;
+                    if let Some(snap) = snapshot {
+                        for (h, data) in snap {
+                            tenant.mem.i32s_mut(h).copy_from_slice(&data);
+                        }
+                    }
+                    if let Err(e) =
+                        tenant.engine.call_idx(tenant.func, &mut tenant.mem, &tenant.args)
+                    {
+                        tenant.reject = Some(format!("software replay failed: {e}"));
+                    }
+                }
+                let offloaded = {
+                    let t = &self.tenants[ti];
+                    !t.rolled_back && t.offload.is_some() && t.engine.is_patched(t.func)
+                };
+                if offloaded {
+                    let (key, cfg_bytes, report) = {
+                        let t = &self.tenants[ti];
+                        let o = t.offload.as_ref().unwrap();
+                        let report = t.state.as_ref().unwrap().borrow().last_report;
+                        (o.key, o.config_words * 4, report)
+                    };
+                    let shard = pick_shard(&self.shards, &round_load, key);
+                    round_load[shard] += 1;
+                    if self.shards[shard].resident != Some(key) {
+                        self.shards[shard].resident = Some(key);
+                        self.shards[shard].reconfigs += 1;
+                        recfg_extra[shard] += epsilon;
+                        self.link.enqueue(shard, cfg_bytes);
+                        self.tracer.borrow_mut().simulated(Phase::Configure, epsilon);
+                    }
+                    self.link.enqueue(shard, report.h2d_bytes);
+                    pending.push(PendingExec {
+                        shard,
+                        exec: report.dfe_exec,
+                        d2h: report.d2h_bytes,
+                    });
+                } else {
+                    // Software request: the host is one serialized core.
+                    let t = &self.tenants[ti];
+                    host_free = host_free.max(round_start) + t.baseline_per_inv;
+                    sw_time += t.baseline_per_inv;
+                }
+                self.tenants[ti].served += 1;
+            }
+
+            // ---- upstream: coalesced per-shard batches on the link ----
+            let up_done_list = self.link.flush(round_start);
+            let mut up_done = vec![round_start; self.shards.len()];
+            for (s, done) in up_done_list {
+                up_done[s] = done;
+            }
+
+            // ---- execute: serially per shard, overlapped across shards ----
+            let mut queue_wait = Duration::ZERO;
+            for p in &pending {
+                let s = p.shard;
+                let mut start = up_done[s].max(self.shards[s].busy_until).max(round_start);
+                start += std::mem::take(&mut recfg_extra[s]);
+                queue_wait += start.saturating_sub(round_start);
+                self.shards[s].busy_until = start + p.exec;
+                self.shards[s].executed += 1;
+            }
+
+            // ---- downstream: coalesced per shard after its last exec ----
+            for p in &pending {
+                self.link.enqueue(p.shard, p.d2h);
+            }
+            let ready: Vec<Duration> = self.shards.iter().map(|s| s.busy_until).collect();
+            let down_done = self.link.flush_after(&ready);
+
+            let mut end = round_start.max(host_free);
+            for s in &self.shards {
+                end = end.max(s.busy_until);
+            }
+            for (_, done) in down_done {
+                end = end.max(done);
+            }
+            {
+                let mut tr = self.tracer.borrow_mut();
+                if sw_time > Duration::ZERO {
+                    tr.simulated(Phase::HostWork, sw_time);
+                }
+                if queue_wait > Duration::ZERO {
+                    tr.simulated(Phase::Queue, queue_wait);
+                }
+            }
+            self.clock = end;
+
+            // ---- per-tenant rollback pass over this round ----
+            for &ti in &batch {
+                let t = &mut self.tenants[ti];
+                if t.rolled_back {
+                    continue;
+                }
+                let Some(state) = t.state.clone() else { continue };
+                let st = state.borrow();
+                let decided =
+                    st.failed || st.invocations >= self.params.rollback_window;
+                if decided && st.invocations > 0 {
+                    let per_inv = st.virtual_offload / st.invocations as u32;
+                    if st.failed || per_inv > t.baseline_per_inv {
+                        drop(st);
+                        t.engine.unpatch(t.func);
+                        t.rolled_back = true;
+                    }
+                }
+            }
+        }
+        self.report()
+    }
+
+    fn report(&self) -> ServeReport {
+        let tenants = self
+            .tenants
+            .iter()
+            .map(|t| TenantReport {
+                name: t.spec.name.clone(),
+                requests: t.served,
+                offloaded: t.offload.is_some(),
+                cache_hit: t.offload.as_ref().map(|o| o.cache_hit).unwrap_or(false),
+                rolled_back: t.rolled_back,
+                reject: t.reject.clone(),
+                baseline_per_inv: t.baseline_per_inv,
+                virtual_offload: t
+                    .state
+                    .as_ref()
+                    .map(|s| s.borrow().virtual_offload)
+                    .unwrap_or_default(),
+                invocations: t.state.as_ref().map(|s| s.borrow().invocations).unwrap_or(0),
+            })
+            .collect();
+        let shards = self
+            .shards
+            .iter()
+            .map(|s| ShardReport {
+                region: s.region,
+                executed: s.executed,
+                reconfigs: s.reconfigs,
+                busy: s.busy_until,
+            })
+            .collect();
+        ServeReport {
+            tenants,
+            shards,
+            makespan: self.clock,
+            total_requests: self.tenants.iter().map(|t| t.served).sum(),
+            link_payload: self.link.sim.total_payload,
+            link_wire: self.link.sim.total_wire,
+            link_batches: self.link.sim.transfers,
+            cache: self.cache.stats,
+            cache_hit_rate: self.cache.hit_rate(),
+        }
+    }
+}
+
+/// Prefer the shard already holding `key`'s configuration; otherwise the
+/// least-loaded shard (fewest requests assigned this round, then earliest
+/// idle — `busy_until` alone is stale inside a round).
+fn pick_shard(shards: &[ShardState], round_load: &[u32], key: u64) -> usize {
+    for (i, s) in shards.iter().enumerate() {
+        if s.resident == Some(key) {
+            return i;
+        }
+    }
+    let mut best = 0;
+    for i in 1..shards.len() {
+        if (round_load[i], shards[i].busy_until) < (round_load[best], shards[best].busy_until) {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Hotness-weighted round robin: every active tenant gets at least one
+/// slot per pass (fairness), hotter tenants claim the leftover window
+/// proportionally to their weight.
+fn pick_batch(order: &[usize], hotness: &[f64], remaining: &[u64], window: usize) -> Vec<usize> {
+    if order.is_empty() || window == 0 {
+        return Vec::new();
+    }
+    let total: f64 = order.iter().map(|&t| hotness[t].max(1.0)).sum();
+    let mut credit: Vec<u64> = remaining.to_vec();
+    let mut batch = Vec::with_capacity(window);
+    for &t in order {
+        let share = ((window as f64) * hotness[t].max(1.0) / total).floor() as usize;
+        for _ in 0..share.max(1) {
+            if credit[t] > 0 && batch.len() < window {
+                batch.push(t);
+                credit[t] -= 1;
+            }
+        }
+    }
+    loop {
+        let mut progressed = false;
+        for &t in order {
+            if batch.len() >= window {
+                return batch;
+            }
+            if credit[t] > 0 {
+                batch.push(t);
+                credit[t] -= 1;
+                progressed = true;
+            }
+        }
+        if !progressed {
+            return batch;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Reports
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Debug)]
+pub struct TenantReport {
+    pub name: String,
+    pub requests: u64,
+    pub offloaded: bool,
+    pub cache_hit: bool,
+    pub rolled_back: bool,
+    pub reject: Option<String>,
+    pub baseline_per_inv: Duration,
+    pub virtual_offload: Duration,
+    pub invocations: u64,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct ShardReport {
+    pub region: Region,
+    pub executed: u64,
+    pub reconfigs: u64,
+    pub busy: Duration,
+}
+
+#[derive(Clone, Debug)]
+pub struct ServeReport {
+    pub tenants: Vec<TenantReport>,
+    pub shards: Vec<ShardReport>,
+    pub makespan: Duration,
+    pub total_requests: u64,
+    pub link_payload: u64,
+    pub link_wire: u64,
+    pub link_batches: u64,
+    pub cache: CacheStats,
+    pub cache_hit_rate: f64,
+}
+
+impl ServeReport {
+    /// Aggregate request throughput over the virtual makespan.
+    pub fn throughput_rps(&self) -> f64 {
+        if self.makespan.is_zero() {
+            0.0
+        } else {
+            self.total_requests as f64 / self.makespan.as_secs_f64()
+        }
+    }
+}
+
+impl fmt::Display for ServeReport {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(
+            f,
+            "{:<16} {:>6} {:>8} {:>10} {:>13} {:>13}  status",
+            "tenant", "reqs", "offload", "cache", "baseline/req", "offload/req"
+        )?;
+        for t in &self.tenants {
+            let per_inv = if t.invocations > 0 {
+                t.virtual_offload / t.invocations as u32
+            } else {
+                Duration::ZERO
+            };
+            let status = if t.rolled_back {
+                "rolled-back"
+            } else {
+                t.reject.as_deref().unwrap_or("ok")
+            };
+            writeln!(
+                f,
+                "{:<16} {:>6} {:>8} {:>10} {:>13} {:>13}  {}",
+                t.name,
+                t.requests,
+                if t.offloaded { "yes" } else { "no" },
+                if t.cache_hit {
+                    "hit"
+                } else if t.offloaded {
+                    "miss"
+                } else {
+                    "-"
+                },
+                fmt_duration(t.baseline_per_inv),
+                fmt_duration(per_inv),
+                status
+            )?;
+        }
+        for (i, s) in self.shards.iter().enumerate() {
+            writeln!(
+                f,
+                "shard {i} [{}]: {} execs, {} reconfigs, busy {}",
+                s.region,
+                s.executed,
+                s.reconfigs,
+                fmt_duration(s.busy)
+            )?;
+        }
+        writeln!(
+            f,
+            "link: {} coalesced batches, {:.2} MB payload, {:.2} MB wire",
+            self.link_batches,
+            self.link_payload as f64 / 1e6,
+            self.link_wire as f64 / 1e6
+        )?;
+        writeln!(
+            f,
+            "config cache: {} hits / {} misses ({:.0}% hit rate), {} evictions",
+            self.cache.hits,
+            self.cache.misses,
+            100.0 * self.cache_hit_rate,
+            self.cache.evictions
+        )?;
+        write!(
+            f,
+            "makespan {} for {} requests -> {:.1} req/s aggregate",
+            fmt_duration(self.makespan),
+            self.total_requests,
+            self.throughput_rps()
+        )
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Workload mixes (PolyBench + the §IV-C video pipeline)
+// ---------------------------------------------------------------------------
+
+const GEMM_N: usize = 10;
+const TRMM_N: usize = 10;
+const SYR2K_N: usize = 8;
+const GESUMMV_N: usize = 20;
+
+fn gemm_module() -> Module {
+    let mut m = Module::new();
+    m.add(polybench::gemm());
+    m
+}
+
+fn trmm_module() -> Module {
+    let mut m = Module::new();
+    m.add(polybench::trmm());
+    m
+}
+
+fn syr2k_module() -> Module {
+    let mut m = Module::new();
+    m.add(polybench::syr2k());
+    m
+}
+
+fn gesummv_module() -> Module {
+    let mut m = Module::new();
+    m.add(polybench::gesummv());
+    m
+}
+
+fn mat(n: usize, f: impl Fn(usize) -> i32) -> Vec<i32> {
+    (0..n).map(f).collect()
+}
+
+/// gemm(C, A, B, alpha, n): C accumulates across requests.
+fn gemm_setup(mem: &mut Memory) -> Vec<Val> {
+    let n = GEMM_N;
+    let ha = mem.from_i32(&mat(n * n, |i| (i as i32 % 13) - 6));
+    let hb = mem.from_i32(&mat(n * n, |i| (i as i32 % 7) - 3));
+    let hc = mem.alloc_i32(n * n);
+    vec![Val::P(hc), Val::P(ha), Val::P(hb), Val::I(2), Val::I(n as i32)]
+}
+
+/// trmm(Bout, A, B, n).
+fn trmm_setup(mem: &mut Memory) -> Vec<Val> {
+    let n = TRMM_N;
+    let ha = mem.from_i32(&mat(n * n, |i| (i as i32 % 11) - 5));
+    let hb = mem.from_i32(&mat(n * n, |i| (i as i32 % 5) - 2));
+    let hbo = mem.alloc_i32(n * n);
+    vec![Val::P(hbo), Val::P(ha), Val::P(hb), Val::I(n as i32)]
+}
+
+/// syr2k(C, A, B, alpha, n).
+fn syr2k_setup(mem: &mut Memory) -> Vec<Val> {
+    let n = SYR2K_N;
+    let ha = mem.from_i32(&mat(n * n, |i| (i as i32 % 9) - 4));
+    let hb = mem.from_i32(&mat(n * n, |i| (i as i32 % 6) - 3));
+    let hc = mem.alloc_i32(n * n);
+    vec![Val::P(hc), Val::P(ha), Val::P(hb), Val::I(3), Val::I(n as i32)]
+}
+
+/// gesummv(A, B, x, tmp, y, alpha, beta, n).
+fn gesummv_setup(mem: &mut Memory) -> Vec<Val> {
+    let n = GESUMMV_N;
+    let ha = mem.from_i32(&mat(n * n, |i| (i as i32 % 8) - 4));
+    let hb = mem.from_i32(&mat(n * n, |i| (i as i32 % 10) - 5));
+    let hx = mem.from_i32(&mat(n, |i| (i as i32 % 15) - 7));
+    let htmp = mem.alloc_i32(n);
+    let hy = mem.alloc_i32(n);
+    vec![
+        Val::P(ha),
+        Val::P(hb),
+        Val::P(hx),
+        Val::P(htmp),
+        Val::P(hy),
+        Val::I(3),
+        Val::I(2),
+        Val::I(n as i32),
+    ]
+}
+
+fn conv_setup(mem: &mut Memory) -> Vec<Val> {
+    let (out, inp, coef) = video::alloc_pipeline(mem);
+    video::conv_args(out, inp, coef)
+}
+
+fn conv_refresh(mem: &mut Memory, args: &[Val], seq: u64) {
+    let mut src = video::FrameSource { frame_no: seq as u32 };
+    let mut frame = vec![0i32; video::FRAME_W * video::FRAME_H];
+    src.next_frame(&mut frame);
+    mem.i32s_mut(args[1].as_ptr()).copy_from_slice(&frame);
+}
+
+fn out0(args: &[Val]) -> Vec<u32> {
+    vec![args[0].as_ptr()]
+}
+
+fn out_gesummv(args: &[Val]) -> Vec<u32> {
+    vec![args[3].as_ptr(), args[4].as_ptr()]
+}
+
+pub fn gemm_spec() -> TenantSpec {
+    TenantSpec {
+        name: "gemm".into(),
+        module: gemm_module,
+        func: "gemm",
+        unroll: 2,
+        setup: gemm_setup,
+        refresh: None,
+        outputs: out0,
+    }
+}
+
+pub fn trmm_spec() -> TenantSpec {
+    TenantSpec {
+        name: "trmm".into(),
+        module: trmm_module,
+        func: "trmm",
+        unroll: 2,
+        setup: trmm_setup,
+        refresh: None,
+        outputs: out0,
+    }
+}
+
+pub fn syr2k_spec() -> TenantSpec {
+    TenantSpec {
+        name: "syr2k".into(),
+        module: syr2k_module,
+        func: "syr2k",
+        unroll: 2,
+        setup: syr2k_setup,
+        refresh: None,
+        outputs: out0,
+    }
+}
+
+pub fn gesummv_spec() -> TenantSpec {
+    TenantSpec {
+        name: "gesummv".into(),
+        module: gesummv_module,
+        func: "gesummv",
+        unroll: 2,
+        setup: gesummv_setup,
+        refresh: None,
+        outputs: out_gesummv,
+    }
+}
+
+pub fn conv_spec() -> TenantSpec {
+    TenantSpec {
+        name: "conv".into(),
+        module: video::video_module,
+        func: "conv",
+        unroll: 1,
+        setup: conv_setup,
+        refresh: Some(conv_refresh),
+        outputs: out0,
+    }
+}
+
+/// The PolyBench serving mix: four structurally distinct offloadable
+/// kernels (distinct DFGs, so distinct shard configurations), cycled over
+/// `tenants` streams.
+pub fn polybench_mix(tenants: usize) -> Vec<TenantSpec> {
+    let base = [gemm_spec(), trmm_spec(), syr2k_spec(), gesummv_spec()];
+    (0..tenants)
+        .map(|i| {
+            let mut s = base[i % base.len()].clone();
+            s.name = format!("{}-t{i}", s.name);
+            s
+        })
+        .collect()
+}
+
+/// The full mix: PolyBench plus the §IV-C video convolution pipeline.
+pub fn serve_mix(tenants: usize) -> Vec<TenantSpec> {
+    let base =
+        [gemm_spec(), trmm_spec(), syr2k_spec(), gesummv_spec(), conv_spec()];
+    (0..tenants)
+        .map(|i| {
+            let mut s = base[i % base.len()].clone();
+            s.name = format!("{}-t{i}", s.name);
+            s
+        })
+        .collect()
+}
+
+/// Replay one tenant's exact request stream through the *single-tenant*
+/// offload path (fresh engine + [`OffloadManager`]), returning its
+/// observable outputs — the serve layer's bit-identity oracle.
+pub fn run_single_tenant(spec: &TenantSpec, requests: u64) -> Result<Vec<Vec<i32>>> {
+    let mut engine = Engine::new((spec.module)())?;
+    let mut mem = Memory::new();
+    let args = (spec.setup)(&mut mem);
+    let func = engine
+        .func_index(spec.func)
+        .ok_or_else(|| anyhow!("unknown function '{}'", spec.func))?;
+    for seq in 0..WARMUP_REQUESTS {
+        if let Some(refresh) = spec.refresh {
+            refresh(&mut mem, &args, seq);
+        }
+        engine.call_idx(func, &mut mem, &args)?;
+    }
+    let mut mgr = OffloadManager::new(OffloadParams {
+        min_dfg_nodes: 1,
+        unroll: spec.unroll,
+        ..Default::default()
+    });
+    // Offload rejection is fine: the software path is the same numerics.
+    let _ = mgr.try_offload(&mut engine, func, None);
+    for k in 0..requests {
+        let seq = WARMUP_REQUESTS + k;
+        if let Some(refresh) = spec.refresh {
+            refresh(&mut mem, &args, seq);
+        }
+        engine.call_idx(func, &mut mem, &args)?;
+    }
+    Ok((spec.outputs)(&args).into_iter().map(|h| mem.i32s(h).to_vec()).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn partition_validates_resource_budget() {
+        // 24x18 busts the Spartan 6 budget outright.
+        let params = ServeParams {
+            grid: Grid::new(24, 18),
+            device: "Spartan 6".into(),
+            ..Default::default()
+        };
+        let err = OffloadServer::new(params, vec![gemm_spec()]).unwrap_err();
+        assert!(err.to_string().contains("resource budget"), "{err}");
+    }
+
+    #[test]
+    fn regions_are_disjoint_and_cover() {
+        let server =
+            OffloadServer::new(ServeParams::default(), polybench_mix(2)).expect("server");
+        let grid = server.params.grid;
+        let mut seen = std::collections::HashSet::new();
+        for r in &server.regions {
+            for cell in r.cells() {
+                assert!(seen.insert(cell), "cell {cell} in two regions");
+            }
+        }
+        assert_eq!(seen.len(), grid.n_cells());
+    }
+
+    #[test]
+    fn serve_offloads_and_completes() {
+        let mut server =
+            OffloadServer::new(ServeParams::default(), polybench_mix(4)).expect("server");
+        let offloaded = server.tenants.iter().filter(|t| t.offload.is_some()).count();
+        assert!(offloaded >= 3, "only {offloaded}/4 tenants offloaded");
+        let report = server.run(4);
+        assert_eq!(report.total_requests, 16);
+        assert!(report.makespan > Duration::ZERO);
+        assert!(report.throughput_rps() > 0.0);
+        let executed: u64 = report.shards.iter().map(|s| s.executed).sum();
+        assert!(executed > 0, "no shard executions recorded");
+    }
+
+    #[test]
+    fn shared_cache_hits_across_same_kernel_tenants() {
+        // Four tenants of the same kernel: one P&R, three shared hits.
+        let specs: Vec<TenantSpec> = (0..4)
+            .map(|i| {
+                let mut s = gemm_spec();
+                s.name = format!("gemm-{i}");
+                s
+            })
+            .collect();
+        let server = OffloadServer::new(ServeParams::default(), specs).expect("server");
+        assert!(server.cache.stats.hits >= 3, "{:?}", server.cache.stats);
+        let hits = server.tenants.iter().filter(|t| {
+            t.offload.as_ref().map(|o| o.cache_hit).unwrap_or(false)
+        });
+        assert_eq!(hits.count(), 3);
+    }
+
+    #[test]
+    fn multi_scop_tenant_serves_in_software_correctly() {
+        // atax has two loop nests; patching the whole function would drop
+        // the second, so the server must keep it in software.
+        fn atax_module() -> Module {
+            let mut m = Module::new();
+            m.add(polybench::atax());
+            m
+        }
+        fn atax_setup(mem: &mut Memory) -> Vec<Val> {
+            let n = 8usize;
+            let ha = mem.from_i32(&mat(n * n, |i| (i as i32 % 5) - 2));
+            let hx = mem.from_i32(&mat(n, |i| i as i32 - 3));
+            let hy = mem.alloc_i32(n);
+            let htmp = mem.alloc_i32(n);
+            vec![Val::P(ha), Val::P(hx), Val::P(hy), Val::P(htmp), Val::I(n as i32)]
+        }
+        fn atax_outs(args: &[Val]) -> Vec<u32> {
+            vec![args[2].as_ptr(), args[3].as_ptr()]
+        }
+        let spec = TenantSpec {
+            name: "atax".into(),
+            module: atax_module,
+            func: "atax",
+            unroll: 2,
+            setup: atax_setup,
+            refresh: None,
+            outputs: atax_outs,
+        };
+        let mut server =
+            OffloadServer::new(ServeParams::default(), vec![spec.clone()]).expect("server");
+        assert!(server.tenants[0].offload.is_none());
+        assert!(server.tenants[0].reject.as_deref().unwrap_or("").contains("SCoP"));
+        server.run(3);
+        let want = run_single_tenant(&spec, 3).expect("single-tenant replay");
+        assert_eq!(server.tenant_outputs(0), want);
+    }
+
+    #[test]
+    fn pick_batch_weights_hot_tenants() {
+        let order = [0usize, 1];
+        let hotness = [3000.0, 1000.0];
+        let remaining = [10u64, 10];
+        let batch = pick_batch(&order, &hotness, &remaining, 4);
+        assert_eq!(batch.len(), 4);
+        let hot = batch.iter().filter(|&&t| t == 0).count();
+        let cold = batch.iter().filter(|&&t| t == 1).count();
+        assert!(hot >= cold, "hot {hot} vs cold {cold}");
+        assert!(cold >= 1, "fairness floor violated");
+    }
+
+    #[test]
+    fn pick_shard_prefers_resident_configuration() {
+        let region = Region { origin: crate::dfe::grid::CellCoord::new(0, 0), grid: Grid::new(2, 2) };
+        let mk = |resident, busy_ms| ShardState {
+            region,
+            resident,
+            busy_until: Duration::from_millis(busy_ms),
+            reconfigs: 0,
+            executed: 0,
+        };
+        let shards = vec![mk(Some(7), 100), mk(None, 0)];
+        assert_eq!(pick_shard(&shards, &[0, 0], 7), 0, "affinity beats idleness");
+        assert_eq!(pick_shard(&shards, &[0, 0], 9), 1, "miss goes to the idle shard");
+        // Same-round load breaks ties before busy_until.
+        assert_eq!(pick_shard(&shards, &[0, 3], 9), 0, "round load dominates");
+    }
+}

@@ -85,6 +85,10 @@ pub struct StubReport {
     pub dfe_to_host: Duration,
     pub dfe_exec: Duration,
     pub remainder_elements: u64,
+    /// Payload bytes moved each way (consumed by the serve layer's shared
+    /// link model, which re-times them under batching + contention).
+    pub h2d_bytes: u64,
+    pub d2h_bytes: u64,
 }
 
 impl StubReport {
@@ -206,12 +210,14 @@ pub fn run_offloaded(
         }
         // Account PC->FPGA (payload both data words and their addresses
         // are implicit; the tagged protocol quadruples it on the wire).
-        report.host_to_dfe = pcie.transfer((n_in * n * 4) as u64).time;
+        report.h2d_bytes = (n_in * n * 4) as u64;
+        report.host_to_dfe = pcie.transfer(report.h2d_bytes).time;
 
         // Execute.
         let out = backend.run(image, &x, n)?;
         report.dfe_exec = tm.dfe_exec_time(n as u64);
-        report.dfe_to_host = pcie.transfer((n_out * n * 4) as u64).time;
+        report.d2h_bytes = (n_out * n * 4) as u64;
+        report.dfe_to_host = pcie.transfer(report.d2h_bytes).time;
 
         // Scatter.
         for (j, o) in off.outputs.iter().enumerate() {

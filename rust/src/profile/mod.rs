@@ -52,6 +52,14 @@ pub struct Hotspot {
     pub invocations: u64,
 }
 
+/// Scheduling weight for the serve layer's hotness-weighted round robin:
+/// total interpreter cycles observed for `func` (the same signal the
+/// hotspot monitor ranks by — hotter tenants earn proportionally more
+/// scheduling slots).
+pub fn hotness(engine: &Engine, func: u32) -> f64 {
+    engine.profile(func).counters.cycles as f64
+}
+
 pub struct Monitor {
     pub params: MonitorParams,
     last: Vec<Sample>,

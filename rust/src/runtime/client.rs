@@ -6,149 +6,245 @@
 //! while per-DFG behaviour arrives as operands (≈ overlay reconfiguration,
 //! which the paper measures in milliseconds).
 //!
-//! Interchange is HLO *text* — see python/compile/aot.py and
-//! /opt/xla-example/README.md for why serialized protos are rejected by
-//! xla_extension 0.5.1.
+//! The XLA bindings are behind the `pjrt` cargo feature: the offline build
+//! image has no crates.io registry, so the default build compiles a stub
+//! whose `load` fails gracefully and every caller falls back to the rust
+//! functional simulator (`dfe::image::ExecImage::eval*` — numerically
+//! identical by the contract tested in rust/tests/runtime_artifacts.rs).
+//! Interchange is HLO *text* — see python/compile/aot.py for why serialized
+//! protos are rejected by xla_extension 0.5.1.
 
-use std::collections::HashMap;
-use std::path::Path;
-
-use anyhow::{bail, Context, Result};
+use crate::util::err::{Context as _, Result};
 
 use super::manifest::{Manifest, VariantInfo};
-use crate::dfe::abi;
-use crate::dfe::image::ExecImage;
 
-/// A compiled DFE executor for one grid-size variant.
-pub struct DfeExecutable {
-    pub info: VariantInfo,
-    pub batch: usize,
-    exe: xla::PjRtLoadedExecutable,
+// ---------------------------------------------------------------------------
+// Real implementation (requires a vendored `xla` crate; see Cargo.toml).
+// ---------------------------------------------------------------------------
+#[cfg(feature = "pjrt")]
+mod imp {
+    use std::collections::HashMap;
+    use std::path::Path;
+
+    use super::{Manifest, VariantInfo};
+    use crate::bail;
+    use crate::dfe::abi;
+    use crate::dfe::image::ExecImage;
+    use crate::util::err::{Context, Result};
+
+    /// A compiled DFE executor for one grid-size variant.
+    pub struct DfeExecutable {
+        pub info: VariantInfo,
+        pub batch: usize,
+        exe: xla::PjRtLoadedExecutable,
+    }
+
+    impl DfeExecutable {
+        /// Execute `image` over a slot-major batch `x` (`n_inputs * batch`
+        /// words; `batch` must equal the ABI batch). Returns the
+        /// out_sel-many output rows, slot-major.
+        pub fn run_batch(&self, image: &ExecImage, x: &[i32]) -> Result<Vec<i32>> {
+            if x.len() != image.n_inputs * self.batch {
+                bail!(
+                    "input length {} != n_inputs {} * batch {}",
+                    x.len(),
+                    image.n_inputs,
+                    self.batch
+                );
+            }
+            let ([opcode, src1, src2, sel], consts, out_sel) =
+                image.padded_operands(self.info.n_cells)?;
+
+            // Pad external inputs to the fixed NI rows of the artifact.
+            let mut xp = vec![0i32; abi::N_INPUTS * self.batch];
+            xp[..x.len()].copy_from_slice(x);
+
+            let lit = |v: &[i32]| xla::Literal::vec1(v);
+            let x_lit = xla::Literal::vec1(&xp)
+                .reshape(&[abi::N_INPUTS as i64, self.batch as i64])
+                .context("reshape x")?;
+            let args = [
+                lit(&opcode),
+                lit(&src1),
+                lit(&src2),
+                lit(&sel),
+                lit(&consts),
+                lit(&out_sel),
+                x_lit,
+            ];
+            let result = self
+                .exe
+                .execute::<xla::Literal>(&args)
+                .context("PJRT execute")?[0][0]
+                .to_literal_sync()
+                .context("device->host")?;
+            // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+            let out = result.to_tuple1().context("unwrap result tuple")?;
+            let full = out.to_vec::<i32>().context("literal to vec")?;
+            debug_assert_eq!(full.len(), abi::N_OUTPUTS * self.batch);
+            Ok(full[..image.out_sel.len() * self.batch].to_vec())
+        }
+
+        /// Execute over an arbitrary number of lanes by chunking into ABI
+        /// batches (the paper's DMA-block streaming); lanes beyond `n` in
+        /// the final chunk are zero-padded and discarded.
+        pub fn run_lanes(
+            &self,
+            image: &ExecImage,
+            x: &[i32],
+            n_lanes: usize,
+        ) -> Result<Vec<i32>> {
+            if x.len() != image.n_inputs * n_lanes {
+                bail!(
+                    "input length {} != n_inputs {} * lanes {}",
+                    x.len(),
+                    image.n_inputs,
+                    n_lanes
+                );
+            }
+            let n_out = image.out_sel.len();
+            let mut out = vec![0i32; n_out * n_lanes];
+            let mut chunk = vec![0i32; image.n_inputs * self.batch];
+            let mut lane = 0;
+            while lane < n_lanes {
+                let take = (n_lanes - lane).min(self.batch);
+                chunk.fill(0);
+                for j in 0..image.n_inputs {
+                    let src = &x[j * n_lanes + lane..j * n_lanes + lane + take];
+                    chunk[j * self.batch..j * self.batch + take].copy_from_slice(src);
+                }
+                let r = self.run_batch(image, &chunk)?;
+                for j in 0..n_out {
+                    out[j * n_lanes + lane..j * n_lanes + lane + take]
+                        .copy_from_slice(&r[j * self.batch..j * self.batch + take]);
+                }
+                lane += take;
+            }
+            Ok(out)
+        }
+    }
+
+    /// Owns the PJRT client and the per-variant compiled executables.
+    ///
+    /// NOT `Send`: PJRT handles are raw pointers. The coordinator confines
+    /// the runtime to its executor thread and communicates over channels.
+    pub struct PjrtRuntime {
+        pub manifest: Manifest,
+        client: xla::PjRtClient,
+        compiled: HashMap<String, std::rc::Rc<DfeExecutable>>,
+    }
+
+    impl PjrtRuntime {
+        pub fn load(artifacts_dir: &Path) -> Result<PjrtRuntime> {
+            let manifest = Manifest::load(artifacts_dir)?;
+            let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+            Ok(PjrtRuntime { manifest, client, compiled: HashMap::new() })
+        }
+
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        /// Compile (or fetch cached) the executor for a named variant.
+        pub fn executable(&mut self, name: &str) -> Result<std::rc::Rc<DfeExecutable>> {
+            if let Some(e) = self.compiled.get(name) {
+                return Ok(e.clone());
+            }
+            let info = self
+                .manifest
+                .by_name(name)
+                .with_context(|| format!("unknown variant '{name}'"))?
+                .clone();
+            let proto = xla::HloModuleProto::from_text_file(
+                info.file.to_str().context("artifact path not utf-8")?,
+            )
+            .with_context(|| format!("parsing {}", info.file.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe =
+                self.client.compile(&comp).with_context(|| format!("compiling {name}"))?;
+            let wrapped = std::rc::Rc::new(DfeExecutable {
+                info,
+                batch: self.manifest.batch,
+                exe,
+            });
+            self.compiled.insert(name.to_string(), wrapped.clone());
+            Ok(wrapped)
+        }
+    }
 }
 
-impl DfeExecutable {
-    /// Execute `image` over a slot-major batch `x` (`n_inputs * batch`
-    /// words; `batch` must equal the ABI batch). Returns the out_sel-many
-    /// output rows, slot-major.
-    pub fn run_batch(&self, image: &ExecImage, x: &[i32]) -> Result<Vec<i32>> {
-        if x.len() != image.n_inputs * self.batch {
+// ---------------------------------------------------------------------------
+// Stub implementation (default build): same surface, `load` always fails
+// with an actionable message and callers fall back to the rust simulator.
+// ---------------------------------------------------------------------------
+#[cfg(not(feature = "pjrt"))]
+mod imp {
+    use std::path::Path;
+
+    use super::{Manifest, VariantInfo};
+    use crate::bail;
+    use crate::dfe::image::ExecImage;
+    use crate::util::err::Result;
+
+    /// Stub executor: never constructed (``load`` always errors), but the
+    /// type keeps `offload::stub::DfeBackend::Pjrt` well-formed.
+    pub struct DfeExecutable {
+        pub info: VariantInfo,
+        pub batch: usize,
+    }
+
+    impl DfeExecutable {
+        pub fn run_batch(&self, _image: &ExecImage, _x: &[i32]) -> Result<Vec<i32>> {
+            bail!("PJRT datapath not built (enable the `pjrt` cargo feature)")
+        }
+
+        pub fn run_lanes(
+            &self,
+            _image: &ExecImage,
+            _x: &[i32],
+            _n_lanes: usize,
+        ) -> Result<Vec<i32>> {
+            bail!("PJRT datapath not built (enable the `pjrt` cargo feature)")
+        }
+    }
+
+    /// Stub runtime: validates the artifact directory, then reports that
+    /// the PJRT backend is compiled out.
+    pub struct PjrtRuntime {
+        pub manifest: Manifest,
+    }
+
+    impl PjrtRuntime {
+        pub fn load(artifacts_dir: &Path) -> Result<PjrtRuntime> {
+            // Surface the *right* message: missing artifacts point at the
+            // top-level `make artifacts`; present artifacts point at the
+            // compiled-out feature.
+            Manifest::load(artifacts_dir)?;
             bail!(
-                "input length {} != n_inputs {} * batch {}",
-                x.len(),
-                image.n_inputs,
-                self.batch
-            );
+                "artifacts found at {} but this binary was built without the \
+                 `pjrt` cargo feature; executing on the rust DFE simulator instead",
+                artifacts_dir.display()
+            )
         }
-        let ([opcode, src1, src2, sel], consts, out_sel) =
-            image.padded_operands(self.info.n_cells)?;
 
-        // Pad external inputs to the fixed NI rows of the artifact.
-        let mut xp = vec![0i32; abi::N_INPUTS * self.batch];
-        xp[..x.len()].copy_from_slice(x);
-
-        let lit = |v: &[i32]| xla::Literal::vec1(v);
-        let x_lit = xla::Literal::vec1(&xp)
-            .reshape(&[abi::N_INPUTS as i64, self.batch as i64])
-            .context("reshape x")?;
-        let args = [
-            lit(&opcode),
-            lit(&src1),
-            lit(&src2),
-            lit(&sel),
-            lit(&consts),
-            lit(&out_sel),
-            x_lit,
-        ];
-        let result = self
-            .exe
-            .execute::<xla::Literal>(&args)
-            .context("PJRT execute")?[0][0]
-            .to_literal_sync()
-            .context("device->host")?;
-        // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
-        let out = result.to_tuple1().context("unwrap result tuple")?;
-        let full = out.to_vec::<i32>().context("literal to vec")?;
-        debug_assert_eq!(full.len(), abi::N_OUTPUTS * self.batch);
-        Ok(full[..image.out_sel.len() * self.batch].to_vec())
-    }
-
-    /// Execute over an arbitrary number of lanes by chunking into ABI
-    /// batches (the paper's DMA-block streaming); lanes beyond `n` in the
-    /// final chunk are zero-padded and discarded.
-    pub fn run_lanes(&self, image: &ExecImage, x: &[i32], n_lanes: usize) -> Result<Vec<i32>> {
-        if x.len() != image.n_inputs * n_lanes {
-            bail!("input length {} != n_inputs {} * lanes {}", x.len(), image.n_inputs, n_lanes);
+        pub fn platform(&self) -> String {
+            "pjrt-disabled".to_string()
         }
-        let n_out = image.out_sel.len();
-        let mut out = vec![0i32; n_out * n_lanes];
-        let mut chunk = vec![0i32; image.n_inputs * self.batch];
-        let mut lane = 0;
-        while lane < n_lanes {
-            let take = (n_lanes - lane).min(self.batch);
-            chunk.fill(0);
-            for j in 0..image.n_inputs {
-                let src = &x[j * n_lanes + lane..j * n_lanes + lane + take];
-                chunk[j * self.batch..j * self.batch + take].copy_from_slice(src);
-            }
-            let r = self.run_batch(image, &chunk)?;
-            for j in 0..n_out {
-                out[j * n_lanes + lane..j * n_lanes + lane + take]
-                    .copy_from_slice(&r[j * self.batch..j * self.batch + take]);
-            }
-            lane += take;
+
+        pub fn executable(&mut self, name: &str) -> Result<std::rc::Rc<DfeExecutable>> {
+            bail!("PJRT datapath not built (enable the `pjrt` cargo feature): {name}")
         }
-        Ok(out)
     }
 }
 
-/// Owns the PJRT client and the per-variant compiled executables.
-///
-/// NOT `Send`: PJRT handles are raw pointers. The coordinator confines the
-/// runtime to its executor thread and communicates over channels.
-pub struct PjrtRuntime {
-    pub manifest: Manifest,
-    client: xla::PjRtClient,
-    compiled: HashMap<String, std::rc::Rc<DfeExecutable>>,
-}
+pub use imp::{DfeExecutable, PjrtRuntime};
 
 impl PjrtRuntime {
-    pub fn load(artifacts_dir: &Path) -> Result<PjrtRuntime> {
-        let manifest = Manifest::load(artifacts_dir)?;
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(PjrtRuntime { manifest, client, compiled: HashMap::new() })
-    }
-
+    /// Load from the default artifact directory (see
+    /// [`Manifest::default_dir`]); the error message tells the user to run
+    /// `make artifacts` at the repo root when the artifacts are missing.
     pub fn load_default() -> Result<PjrtRuntime> {
         Self::load(&Manifest::default_dir())
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Compile (or fetch cached) the executor for a named variant.
-    pub fn executable(&mut self, name: &str) -> Result<std::rc::Rc<DfeExecutable>> {
-        if let Some(e) = self.compiled.get(name) {
-            return Ok(e.clone());
-        }
-        let info = self
-            .manifest
-            .by_name(name)
-            .with_context(|| format!("unknown variant '{name}'"))?
-            .clone();
-        let proto = xla::HloModuleProto::from_text_file(
-            info.file.to_str().context("artifact path not utf-8")?,
-        )
-        .with_context(|| format!("parsing {}", info.file.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self.client.compile(&comp).with_context(|| format!("compiling {name}"))?;
-        let wrapped = std::rc::Rc::new(DfeExecutable {
-            info,
-            batch: self.manifest.batch,
-            exe,
-        });
-        self.compiled.insert(name.to_string(), wrapped.clone());
-        Ok(wrapped)
     }
 
     /// Executor for the smallest variant that fits `n_cells`.

@@ -2,7 +2,8 @@
 
 use std::path::{Path, PathBuf};
 
-use anyhow::{anyhow, bail, Context, Result};
+use crate::util::err::{Context, Result};
+use crate::{anyhow, bail};
 
 use crate::dfe::abi;
 use crate::util::json::Json;
@@ -28,7 +29,9 @@ impl Manifest {
     pub fn load(dir: &Path) -> Result<Manifest> {
         let path = dir.join("manifest.json");
         let text = std::fs::read_to_string(&path)
-            .with_context(|| format!("reading {} (run `make artifacts`)", path.display()))?;
+            .with_context(|| {
+                format!("reading {} (run `make artifacts` at the repo root)", path.display())
+            })?;
         let v = Json::parse(&text).with_context(|| format!("parsing {}", path.display()))?;
 
         let abi_obj = v.get("abi").ok_or_else(|| anyhow!("manifest missing 'abi'"))?;
@@ -97,19 +100,22 @@ impl Manifest {
         self.variants.iter().find(|v| v.name == name)
     }
 
-    /// Default artifact dir: `$TLO_ARTIFACTS` or `<repo>/artifacts`.
+    /// Default artifact dir: `$TLO_ARTIFACTS`, `rust/artifacts`, the repo
+    /// root `artifacts/` (where the top-level `make artifacts` writes), or
+    /// `./artifacts` relative to the cwd, in that order.
     pub fn default_dir() -> PathBuf {
         if let Ok(dir) = std::env::var("TLO_ARTIFACTS") {
             return PathBuf::from(dir);
         }
-        // CARGO_MANIFEST_DIR is baked at compile time; fall back to cwd.
-        let repo = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
-        let candidate = repo.join("artifacts");
-        if candidate.exists() {
-            candidate
-        } else {
-            PathBuf::from("artifacts")
+        // CARGO_MANIFEST_DIR (rust/) is baked at compile time; the Makefile
+        // target writes to its parent. Fall back to cwd.
+        let manifest_dir = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+        for candidate in [manifest_dir.join("artifacts"), manifest_dir.join("../artifacts")] {
+            if candidate.exists() {
+                return candidate;
+            }
         }
+        PathBuf::from("artifacts")
     }
 }
 

@@ -17,9 +17,10 @@ pub enum Phase {
     DfeToHost,    // 7 — output data transfer (FPGA->PC)
     DfeExec,      //     fabric execution (negligible in the paper)
     HostWork,     //     application work outside the framework
+    Queue,        //     serve layer: requests waiting for the link/shard
 }
 
-pub const ALL_PHASES: [Phase; 9] = [
+pub const ALL_PHASES: [Phase; 10] = [
     Phase::Analysis,
     Phase::Jit,
     Phase::PlaceRoute,
@@ -29,6 +30,7 @@ pub const ALL_PHASES: [Phase; 9] = [
     Phase::DfeToHost,
     Phase::DfeExec,
     Phase::HostWork,
+    Phase::Queue,
 ];
 
 impl Phase {
@@ -43,6 +45,7 @@ impl Phase {
             Phase::DfeToHost => "FPGA->PC",
             Phase::DfeExec => "dfe-exec",
             Phase::HostWork => "host-work",
+            Phase::Queue => "queue-wait",
         }
     }
 

@@ -1,0 +1,153 @@
+//! Minimal error type with context chaining — a vendored stand-in for the
+//! `anyhow` crate, which the offline build image does not ship (the image
+//! has no crates.io registry; see Cargo.toml). API-compatible with the
+//! subset this crate uses: `Result`, `Context::{context,with_context}`,
+//! and the `anyhow!` / `bail!` macros (re-exported below).
+
+use std::fmt;
+
+/// An error as a chain of messages, outermost context first.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+/// `Result` defaulting to [`Error`], like `anyhow::Result`.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Construct from a printable message.
+    pub fn msg(m: impl fmt::Display) -> Error {
+        Error { chain: vec![m.to_string()] }
+    }
+
+    /// Prepend a context message (the new outermost frame).
+    pub fn wrap(mut self, m: impl fmt::Display) -> Error {
+        self.chain.insert(0, m.to_string());
+        self
+    }
+
+    /// The message chain, outermost context first.
+    pub fn chain(&self) -> &[String] {
+        &self.chain
+    }
+}
+
+impl fmt::Display for Error {
+    /// `{}` prints the outermost message; `{:#}` prints the full chain.
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            f.write_str(&self.chain.join(": "))
+        } else {
+            f.write_str(&self.chain[0])
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.chain.join(": "))
+    }
+}
+
+/// Any std error converts, capturing its source chain. (Like `anyhow`,
+/// [`Error`] itself deliberately does not implement `std::error::Error`,
+/// which keeps this blanket impl coherent.)
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// Context-attaching extension for `Result` and `Option`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| e.into().wrap(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().wrap(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Format an [`Error`] in place, `anyhow!`-style.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => { $crate::util::err::Error::msg(format!($($arg)*)) };
+}
+
+/// Early-return with a formatted [`Error`], `anyhow::bail!`-style.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => { return Err($crate::util::err::Error::msg(format!($($arg)*))) };
+}
+
+// `#[macro_export]` places `anyhow!`/`bail!` at the crate root: import
+// them with `use crate::{anyhow, bail};` (or invoke as `tlo::anyhow!`).
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fail_io() -> Result<String> {
+        std::fs::read_to_string("/nonexistent_tlo_err_test")
+            .with_context(|| "reading config (run `make artifacts`)".to_string())
+    }
+
+    #[test]
+    fn context_chain_renders() {
+        let e = fail_io().unwrap_err();
+        assert!(e.to_string().contains("make artifacts"));
+        assert!(format!("{e:#}").contains("make artifacts"));
+        assert!(e.chain().len() >= 2, "{:?}", e.chain());
+    }
+
+    #[test]
+    fn macros_construct_and_bail() {
+        fn inner(x: i32) -> Result<i32> {
+            if x < 0 {
+                bail!("negative input {x}");
+            }
+            Ok(x * 2)
+        }
+        assert_eq!(inner(4).unwrap(), 8);
+        let e = inner(-1).unwrap_err();
+        assert_eq!(e.to_string(), "negative input -1");
+        let e2 = anyhow!("code {}", 7);
+        assert_eq!(e2.to_string(), "code 7");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        assert_eq!(v.context("missing").unwrap_err().to_string(), "missing");
+        assert_eq!(Some(3u32).context("missing").unwrap(), 3);
+    }
+
+    #[test]
+    fn display_outermost_only_plain() {
+        let e = Error::msg("root").wrap("outer");
+        assert_eq!(e.to_string(), "outer");
+        assert_eq!(format!("{e:#}"), "outer: root");
+    }
+}

@@ -1,11 +1,12 @@
 //! Small self-contained utilities.
 //!
-//! The build image is offline and only ships the `xla` crate's dependency
-//! closure, so JSON parsing, PRNG, CLI parsing and micro-benchmarking are
-//! implemented here instead of pulling serde/rand/clap/criterion.
+//! The build image is offline, so JSON parsing, PRNG, CLI parsing,
+//! error plumbing and micro-benchmarking are implemented here instead of
+//! pulling serde/rand/clap/anyhow/criterion.
 
 pub mod bench;
 pub mod cli;
+pub mod err;
 pub mod json;
 pub mod prng;
 

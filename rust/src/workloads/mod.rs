@@ -1,4 +1,7 @@
 //! Workload library: the PolyBench suite (Table I) and the video-conv
 //! pipeline (§IV-C) authored on the mini-IR.
+//!
+//! The multi-tenant serving mixes built from these kernels live in
+//! [`crate::offload::server`] (`polybench_mix` / `serve_mix`).
 pub mod polybench;
 pub mod video;

@@ -20,6 +20,11 @@ pub const FRAME_H: usize = 120;
 /// colorspace in the paper; visible as the gaps in Fig 6).
 pub const DECODE_MS: f64 = 10.3;
 
+/// The pipeline's 8 neighbour coefficients (the center tap is the
+/// constant 1, one of the paper's constant-masked inputs). Single source
+/// of truth for `alloc_pipeline`, the reference conv and every harness.
+pub const COEF: [i32; 8] = [1, -2, 1, 2, -2, 1, 2, -1];
+
 /// conv: for y in 1..h-1, x in 1..w-1:
 ///   out[y][x] = in[y][x] + sum_{8 neighbours} coef[t] * in[y+dy][x+dx]
 pub fn conv_func() -> Function {
@@ -129,7 +134,7 @@ pub fn conv_reference(inp: &[i32], coef: &[i32], w: usize, h: usize) -> Vec<i32>
 pub fn alloc_pipeline(mem: &mut Memory) -> (u32, u32, u32) {
     let out = mem.alloc_i32(FRAME_W * FRAME_H);
     let inp = mem.alloc_i32(FRAME_W * FRAME_H);
-    let coef = mem.from_i32(&[1, -2, 1, 2, -2, 1, 2, -1]);
+    let coef = mem.from_i32(&COEF);
     (out, inp, coef)
 }
 
@@ -174,7 +179,7 @@ mod tests {
         src.next_frame(&mut frame);
         mem.i32s_mut(inp).copy_from_slice(&frame);
         engine.call("conv", &mut mem, &conv_args(out, inp, coef)).unwrap();
-        let want = conv_reference(&frame, &[1, -2, 1, 2, -2, 1, 2, -1], FRAME_W, FRAME_H);
+        let want = conv_reference(&frame, &COEF, FRAME_W, FRAME_H);
         assert_eq!(mem.i32s(out), &want[..]);
     }
 
@@ -196,7 +201,7 @@ mod tests {
         mgr.try_offload(&mut engine, func, None).expect("offload conv");
         mem.i32s_mut(out).fill(0);
         engine.call("conv", &mut mem, &conv_args(out, inp, coef)).unwrap();
-        let want = conv_reference(&frame, &[1, -2, 1, 2, -2, 1, 2, -1], FRAME_W, FRAME_H);
+        let want = conv_reference(&frame, &COEF, FRAME_W, FRAME_H);
         assert_eq!(mem.i32s(out), &want[..]);
     }
 }

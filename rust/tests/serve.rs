@@ -1,0 +1,204 @@
+//! Serve-layer properties (self-contained generator harness, like
+//! tests/proptests.rs — proptest is not in the offline image):
+//!   S1  any partition of any grid into N shard regions is disjoint and
+//!       covering — no cell is ever shared between regions;
+//!   S2  any interleaving of K tenants across N shards (random mixes,
+//!       shard counts, batch windows and request counts) produces outputs
+//!       that match a pure-interpreter replay of the same streams;
+//!   S3  the shared-key config cache hit-rate with multiple tenants is >=
+//!       the single-tenant baseline (and >= 50 % for a same-kernel mix);
+//!   S4  serve outputs are bit-identical to the single-tenant offload
+//!       path (the acceptance contract behind `tlo serve --verify`).
+
+use tlo::dfe::grid::Grid;
+use tlo::jit::engine::Engine;
+use tlo::jit::interp::Memory;
+use tlo::offload::server::{
+    gemm_spec, gesummv_spec, polybench_mix, run_single_tenant, syr2k_spec, trmm_spec,
+    OffloadServer, ServeParams, TenantSpec, WARMUP_REQUESTS,
+};
+use tlo::offload::{OffloadManager, OffloadParams};
+use tlo::util::prng::Rng;
+
+/// Pure-software replay of a tenant stream: the interpreter oracle.
+fn interpreter_outputs(spec: &TenantSpec, requests: u64) -> Vec<Vec<i32>> {
+    let mut engine = Engine::new((spec.module)()).unwrap();
+    let mut mem = Memory::new();
+    let args = (spec.setup)(&mut mem);
+    let func = engine.func_index(spec.func).unwrap();
+    for seq in 0..WARMUP_REQUESTS + requests {
+        if let Some(refresh) = spec.refresh {
+            refresh(&mut mem, &args, seq);
+        }
+        engine.call_idx(func, &mut mem, &args).unwrap();
+    }
+    (spec.outputs)(&args).into_iter().map(|h| mem.i32s(h).to_vec()).collect()
+}
+
+#[test]
+fn s1_random_partitions_never_share_a_cell() {
+    let mut rng = Rng::new(0x5A1);
+    for case in 0..200u64 {
+        let rows = 1 + rng.below(20);
+        let cols = 1 + rng.below(20);
+        let g = Grid::new(rows, cols);
+        let k = 1 + rng.below(rows.max(cols));
+        let Ok(regions) = g.partition(k) else {
+            assert!(k > rows.max(cols), "case {case}: partition refused a feasible k={k}");
+            continue;
+        };
+        assert_eq!(regions.len(), k, "case {case}");
+        let mut seen = std::collections::HashSet::new();
+        for r in &regions {
+            for cell in r.cells() {
+                assert!(g.contains(cell), "case {case}: {cell} off-grid");
+                assert!(seen.insert(cell), "case {case}: cell {cell} in two regions");
+            }
+        }
+        assert_eq!(seen.len(), g.n_cells(), "case {case}: partition must cover");
+        for i in 0..k {
+            for j in i + 1..k {
+                assert!(!regions[i].overlaps(regions[j]), "case {case}: {i}/{j} overlap");
+            }
+        }
+    }
+}
+
+#[test]
+fn s2_random_interleavings_match_the_interpreter() {
+    let pool: [fn() -> TenantSpec; 4] = [gemm_spec, trmm_spec, syr2k_spec, gesummv_spec];
+    let mut rng = Rng::new(0x5A2);
+    for case in 0..6u64 {
+        let n_tenants = 2 + rng.below(3); // 2..=4
+        let shards = 1 + rng.below(4); // 1..=4
+        let requests = 1 + rng.below(4) as u64; // 1..=4
+        let batch_window = rng.below(2 * n_tenants + 1); // 0 = per-tenant
+        let specs: Vec<TenantSpec> = (0..n_tenants)
+            .map(|i| {
+                let mut s = pool[rng.below(pool.len())]();
+                s.name = format!("{}-c{case}t{i}", s.name);
+                s
+            })
+            .collect();
+        let params = ServeParams {
+            shards,
+            batch_window,
+            seed: 0xC0DE + case,
+            ..Default::default()
+        };
+        let mut server = OffloadServer::new(params, specs.clone())
+            .unwrap_or_else(|e| panic!("case {case}: {e:#}"));
+        // The disjointness invariant holds on the live server too.
+        for i in 0..server.regions.len() {
+            for j in i + 1..server.regions.len() {
+                assert!(!server.regions[i].overlaps(server.regions[j]));
+            }
+        }
+        server.run(requests);
+        for (i, spec) in specs.iter().enumerate() {
+            let want = interpreter_outputs(spec, requests);
+            assert_eq!(
+                server.tenant_outputs(i),
+                want,
+                "case {case} ({shards} shards, window {batch_window}): tenant {} diverges",
+                spec.name
+            );
+        }
+    }
+}
+
+#[test]
+fn s3_shared_cache_hit_rate_at_least_single_tenant_baseline() {
+    // Single-tenant baseline: one manager, one offload — all misses.
+    let mut engine = Engine::new({
+        let mut m = tlo::ir::func::Module::new();
+        m.add(tlo::workloads::polybench::gemm());
+        m
+    })
+    .unwrap();
+    let mut mgr = OffloadManager::new(OffloadParams {
+        min_dfg_nodes: 1,
+        unroll: 2,
+        ..Default::default()
+    });
+    let func = engine.func_index("gemm").unwrap();
+    mgr.try_offload(&mut engine, func, None).expect("gemm offloads");
+    let single_manager_rate = mgr.cache.hit_rate();
+
+    // Single-tenant server: same shape, one tenant.
+    let single_server =
+        OffloadServer::new(ServeParams::default(), vec![gemm_spec()]).expect("server");
+    let single_server_rate = single_server.cache.hit_rate();
+
+    // Multi-tenant server with shared keys: 4 tenants of the same kernel.
+    let specs: Vec<TenantSpec> = (0..4)
+        .map(|i| {
+            let mut s = gemm_spec();
+            s.name = format!("gemm-{i}");
+            s
+        })
+        .collect();
+    let multi = OffloadServer::new(ServeParams::default(), specs).expect("server");
+    let multi_rate = multi.cache.hit_rate();
+
+    assert!(
+        multi_rate >= single_manager_rate,
+        "shared-key hit rate {multi_rate} < manager baseline {single_manager_rate}"
+    );
+    assert!(
+        multi_rate >= single_server_rate,
+        "shared-key hit rate {multi_rate} < single-tenant server {single_server_rate}"
+    );
+    assert!(multi_rate >= 0.5, "same-kernel mix should mostly hit, got {multi_rate}");
+    // And only one place&route happened for the four tenants.
+    assert_eq!(multi.cache.len(), 1);
+}
+
+#[test]
+fn s4_serve_outputs_bit_identical_to_single_tenant_offload_path() {
+    let requests = 5u64;
+    let specs = polybench_mix(4);
+    let mut server = OffloadServer::new(
+        ServeParams { shards: 2, ..Default::default() },
+        specs.clone(),
+    )
+    .expect("server");
+    // The mix must actually exercise the shards for the comparison to
+    // mean anything.
+    let offloaded = server.tenants.iter().filter(|t| t.offload.is_some()).count();
+    assert!(offloaded >= 3, "only {offloaded}/4 tenants offloaded");
+    let report = server.run(requests);
+    assert_eq!(report.total_requests, 4 * requests);
+    for (i, spec) in specs.iter().enumerate() {
+        let want = run_single_tenant(spec, requests).expect("single-tenant replay");
+        assert_eq!(
+            server.tenant_outputs(i),
+            want,
+            "tenant {} diverges from the single-tenant offload path",
+            spec.name
+        );
+    }
+}
+
+#[test]
+fn s5_tagged_protocol_interleavings_also_match() {
+    // The paper's tagged prototype protocol (transfer-bound, rollbacks
+    // likely) must preserve numerics just the same.
+    let specs = polybench_mix(3);
+    let params = ServeParams {
+        shards: 3,
+        pcie: tlo::transport::PcieParams::default(),
+        rollback_window: 2,
+        ..Default::default()
+    };
+    let mut server = OffloadServer::new(params, specs.clone()).expect("server");
+    server.run(4);
+    for (i, spec) in specs.iter().enumerate() {
+        assert_eq!(
+            server.tenant_outputs(i),
+            interpreter_outputs(spec, 4),
+            "tenant {} diverges under the tagged protocol",
+            spec.name
+        );
+    }
+}
