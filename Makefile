@@ -5,6 +5,14 @@
 #                    which the rust runtime loads via PJRT. Without it the
 #                    binary falls back to the rust functional simulator and
 #                    rust/tests/runtime_artifacts.rs skips.
+#
+#   make bench       Run the harness=false benches in a fixed order and
+#                    write BENCH_dfe.json (wave executor vs CycleSim,
+#                    elements/sec + asserted >=5x speedup) and
+#                    BENCH_serve.json (shard-scaling throughput) at the
+#                    repo root, so the perf trajectory is tracked across
+#                    PRs. Set TLO_BENCH_QUICK=1 for the CI smoke run
+#                    (small n, same assertions).
 
 PYTHON ?= python3
 
@@ -20,8 +28,17 @@ test:
 	cargo test -q
 	$(PYTHON) -m pytest python/tests -q
 
+# Fixed order: the two JSON-emitting trajectory benches first, then the
+# paper-table/figure regenerators.
 bench:
-	cargo bench
+	TLO_BENCH_JSON=$(CURDIR)/BENCH_dfe.json cargo bench --bench hotpath
+	TLO_BENCH_JSON=$(CURDIR)/BENCH_serve.json cargo bench --bench serve_bench
+	cargo bench --bench pcie_transport
+	cargo bench --bench rollback_bench
+	cargo bench --bench par_bench
+	cargo bench --bench fig6_phases
+	cargo bench --bench table1
+	cargo bench --bench table2
 
 clean:
-	rm -rf target rust/target artifacts
+	rm -rf target rust/target artifacts BENCH_dfe.json BENCH_serve.json

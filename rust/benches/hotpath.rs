@@ -1,16 +1,77 @@
 //! §Perf — hot-path microbenchmarks for the three layers' rust-side
 //! components: interpreter throughput (L3 software baseline), DFE image
-//! evaluation (rust sim lane), cycle-level overlay sim, and the router.
-//! Used by the performance pass; before/after numbers in EXPERIMENTS.md.
+//! evaluation (rust sim lane), cycle-level overlay sim, and — the
+//! headline — the compiled wave executor (`dfe::exec`) against `CycleSim`
+//! on the PolyBench streaming mix, with an asserted ≥5x element-throughput
+//! speedup. Used by the performance pass; before/after numbers in
+//! EXPERIMENTS.md.
+//!
+//! With `TLO_BENCH_JSON=<path>` (set by `make bench`), writes the mix
+//! results as JSON so the perf trajectory is tracked across PRs.
 
+use tlo::analysis::scop::analyze_function;
 use tlo::dfe::config::fig2_config;
+use tlo::dfe::exec::CompiledFabric;
+use tlo::dfe::grid::Grid;
 use tlo::dfe::image::{fig2_image, listing1_image};
-use tlo::dfe::sim::simulate;
+use tlo::dfe::sim::CycleSim;
+use tlo::dfg::extract::extract;
 use tlo::ir::func::{FuncBuilder, Module};
 use tlo::ir::instr::Ty;
 use tlo::jit::engine::Engine;
 use tlo::jit::interp::{Memory, Val};
+use tlo::par::{place_and_route, ParParams};
 use tlo::util::bench::{black_box, print_header, run, BenchConfig};
+use tlo::util::json::escape;
+use tlo::util::prng::Rng;
+use tlo::workloads::polybench;
+
+/// One routed PolyBench kernel of the streaming mix.
+struct MixCase {
+    name: &'static str,
+    config: tlo::dfe::GridConfig,
+    fabric: CompiledFabric,
+    streams: Vec<Vec<i32>>,
+}
+
+/// Route the serve-layer mix kernels (gemm / trmm / syr2k / gesummv,
+/// unroll 2 — the same extractions `OffloadServer` schedules) onto an
+/// 8x8 overlay and prepare random input streams of `n` elements.
+fn build_mix(n: usize) -> Vec<MixCase> {
+    let kernels: [(&'static str, fn() -> tlo::ir::func::Function); 4] = [
+        ("gemm", polybench::gemm),
+        ("trmm", polybench::trmm),
+        ("syr2k", polybench::syr2k),
+        ("gesummv", polybench::gesummv),
+    ];
+    let mut mix = Vec::new();
+    for (i, (name, func)) in kernels.into_iter().enumerate() {
+        let f = func();
+        let an = analyze_function(&f);
+        let Some(scop) = an.scops.first() else {
+            println!("  (skipping {name}: no SCoP)");
+            continue;
+        };
+        let Ok(off) = extract(&f, scop, 2) else {
+            println!("  (skipping {name}: not extractable)");
+            continue;
+        };
+        let mut rng = Rng::new(0xBE9C + i as u64);
+        let Ok(res) = place_and_route(&off.dfg, Grid::new(8, 8), &ParParams::default(), &mut rng)
+        else {
+            println!("  (skipping {name}: unroutable on 8x8)");
+            continue;
+        };
+        let fabric = CompiledFabric::compile(&res.config)
+            .expect("routed configs lower to a wave schedule");
+        let mut t = Rng::new(77 * i as u64 + 1);
+        let streams: Vec<Vec<i32>> = (0..fabric.n_inputs)
+            .map(|_| (0..n).map(|_| t.any_i32() % 100_000).collect())
+            .collect();
+        mix.push(MixCase { name, config: res.config, fabric, streams });
+    }
+    mix
+}
 
 fn main() {
     let cfg = BenchConfig::from_env();
@@ -54,10 +115,116 @@ fn main() {
         black_box(img2.eval_batch(&x, batch));
     });
 
-    print_header("cycle-level overlay simulator");
+    print_header("cycle-level overlay simulator (fig2 reference)");
     let config = fig2_config();
     let streams: Vec<Vec<i32>> = vec![(0..512).collect(), (0..512).rev().collect()];
     run("cyclesim/fig2-512-elements", cfg, || {
-        black_box(simulate(&config, &streams, 512).unwrap());
+        black_box(
+            CycleSim::new(&config).unwrap().run_stream(&streams, 512).unwrap(),
+        );
     });
+    let fig2_fabric = CompiledFabric::compile(&config).unwrap();
+    run("wave/fig2-512-elements", cfg, || {
+        black_box(fig2_fabric.run_stream(&streams, 512).unwrap());
+    });
+
+    // ---- the headline: wave executor vs CycleSim, PolyBench mix ----
+    let quick = cfg.iters <= 3;
+    let n_elems: usize = if quick { 512 } else { 4096 };
+    print_header("wave executor vs CycleSim — PolyBench streaming mix");
+    let mix = build_mix(n_elems);
+    assert!(
+        mix.len() >= 3,
+        "only {}/4 mix kernels routed — the speedup measurement would be \
+         unrepresentative",
+        mix.len()
+    );
+
+    struct Row {
+        name: &'static str,
+        cyc_s: f64,
+        wave_s: f64,
+    }
+    let mut rows: Vec<Row> = Vec::new();
+    for case in &mix {
+        // Outputs must agree before their speeds are comparable.
+        let want = CycleSim::new(&case.config)
+            .unwrap()
+            .run_stream(&case.streams, n_elems)
+            .unwrap();
+        let got = case.fabric.run_stream(&case.streams, n_elems).unwrap();
+        assert_eq!(got.outputs, want.outputs, "{}: engines diverge", case.name);
+
+        let c = run(&format!("cyclesim/{}-{}el", case.name, n_elems), cfg, || {
+            black_box(
+                CycleSim::new(&case.config)
+                    .unwrap()
+                    .run_stream(&case.streams, n_elems)
+                    .unwrap(),
+            );
+        });
+        let w = run(&format!("wave/{}-{}el", case.name, n_elems), cfg, || {
+            black_box(case.fabric.run_stream(&case.streams, n_elems).unwrap());
+        });
+        rows.push(Row {
+            name: case.name,
+            cyc_s: c.median.as_secs_f64(),
+            wave_s: w.median.as_secs_f64(),
+        });
+    }
+
+    println!(
+        "\n{:<10} {:>16} {:>16} {:>9}",
+        "kernel", "cyclesim el/s", "wave el/s", "speedup"
+    );
+    let (mut cyc_total, mut wave_total) = (0.0f64, 0.0f64);
+    for r in &rows {
+        cyc_total += r.cyc_s;
+        wave_total += r.wave_s;
+        println!(
+            "{:<10} {:>16.0} {:>16.0} {:>8.1}x",
+            r.name,
+            n_elems as f64 / r.cyc_s,
+            n_elems as f64 / r.wave_s,
+            r.cyc_s / r.wave_s
+        );
+    }
+    let speedup = cyc_total / wave_total;
+    println!(
+        "\naggregate element throughput speedup: {speedup:.1}x (acceptance: >= 5x)"
+    );
+    assert!(
+        speedup >= 5.0,
+        "wave executor speedup {speedup:.2}x below the 5x acceptance threshold"
+    );
+    println!("PASS: compiled wave executor is {speedup:.1}x CycleSim on the mix");
+
+    // ---- perf-trajectory JSON (written by `make bench`) ----
+    if let Ok(path) = std::env::var("TLO_BENCH_JSON") {
+        let mut kernels = String::new();
+        for (i, r) in rows.iter().enumerate() {
+            if i > 0 {
+                kernels.push(',');
+            }
+            kernels.push_str(&format!(
+                "\n    {{\"name\": \"{}\", \"cyclesim_elements_per_sec\": {:.1}, \
+                 \"wave_elements_per_sec\": {:.1}, \"speedup\": {:.3}}}",
+                escape(r.name),
+                n_elems as f64 / r.cyc_s,
+                n_elems as f64 / r.wave_s,
+                r.cyc_s / r.wave_s
+            ));
+        }
+        let doc = format!(
+            "{{\n  \"bench\": \"hotpath\",\n  \"mode\": \"{}\",\n  \
+             \"elements\": {},\n  \"kernels\": [{}\n  ],\n  \
+             \"aggregate_speedup\": {:.3},\n  \"threshold\": 5.0\n}}\n",
+            if quick { "quick" } else { "full" },
+            n_elems,
+            kernels,
+            speedup
+        );
+        std::fs::write(&path, doc).expect("write TLO_BENCH_JSON");
+        println!("wrote {path}");
+    }
 }

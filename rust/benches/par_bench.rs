@@ -89,7 +89,7 @@ fn main() {
     let r = place_and_route(&off.dfg, Grid::new(24, 18), &params, &mut rng).unwrap();
     cache.insert(
         dfg_key(&off.dfg),
-        CachedConfig { config: r.config, image: r.image, variant: "dfe_24x18".into() },
+        CachedConfig::new(r.config, r.image, "dfe_24x18".into()),
     );
     run("par/cache-hit", cfg, || {
         black_box(cache.get(dfg_key(&off.dfg)).is_some());

@@ -11,6 +11,9 @@
 //! the offload-vs-software economics (rollback_bench covers those).
 //!
 //! Acceptance: aggregate throughput must scale > 1.5x from 1 shard to 4.
+//!
+//! With `TLO_BENCH_JSON=<path>` (set by `make bench`), writes the scaling
+//! results as JSON so the perf trajectory is tracked across PRs.
 
 use tlo::dfe::grid::Grid;
 use tlo::offload::server::{polybench_mix, OffloadServer, ServeParams};
@@ -29,6 +32,7 @@ fn main() {
     );
 
     let mut results: Vec<(usize, f64)> = Vec::new();
+    let mut json_rows: Vec<String> = Vec::new();
     for shards in [1usize, 2, 4] {
         // 16x12 keeps even the 4-way split at 4x12 = 48 cells per region,
         // comfortable for every mix DFG's place & route.
@@ -59,6 +63,17 @@ fn main() {
             100.0 * report.cache_hit_rate
         );
         results.push((shards, report.throughput_rps()));
+        json_rows.push(format!(
+            "\n    {{\"shards\": {}, \"requests_per_sec\": {:.2}, \
+             \"makespan_sec\": {:.6}, \"reconfigs\": {}, \"execs\": {}, \
+             \"cache_hit_rate\": {:.3}}}",
+            shards,
+            report.throughput_rps(),
+            report.makespan.as_secs_f64(),
+            reconfigs,
+            execs,
+            report.cache_hit_rate
+        ));
     }
 
     let (_, rps1) = results[0];
@@ -70,4 +85,20 @@ fn main() {
         "shard scaling {scaling:.2}x below the 1.5x acceptance threshold"
     );
     println!("PASS: multi-shard serving scales aggregate throughput {scaling:.2}x");
+
+    if let Ok(path) = std::env::var("TLO_BENCH_JSON") {
+        let doc = format!(
+            "{{\n  \"bench\": \"serve\",\n  \"mode\": \"{}\",\n  \
+             \"tenants\": {},\n  \"requests_per_tenant\": {},\n  \
+             \"points\": [{}\n  ],\n  \"scaling_1_to_4\": {:.3},\n  \
+             \"threshold\": 1.5\n}}\n",
+            if quick { "quick" } else { "full" },
+            tenants,
+            requests,
+            json_rows.join(","),
+            scaling
+        );
+        std::fs::write(&path, doc).expect("write TLO_BENCH_JSON");
+        println!("wrote {path}");
+    }
 }

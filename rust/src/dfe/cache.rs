@@ -9,8 +9,10 @@
 
 use std::collections::HashMap;
 use std::hash::{Hash, Hasher};
+use std::rc::Rc;
 
 use super::config::GridConfig;
+use super::exec::CompiledFabric;
 use super::image::ExecImage;
 use crate::dfg::graph::{Dfg, NodeKind};
 
@@ -42,13 +44,29 @@ pub fn region_key(dfg: u64, grid: crate::dfe::grid::Grid) -> u64 {
     h.finish()
 }
 
-/// A cached, ready-to-load configuration.
+/// A cached, ready-to-load configuration. Carries the compiled wave
+/// executor (`dfe::exec`) lowered once at insert time, so a cache hit —
+/// single-tenant re-offload or a second tenant of the same kernel — skips
+/// both place & route *and* the lowering. `None` only for configurations
+/// the lowering refuses (not feed-forward); those execute on `CycleSim`.
 #[derive(Clone, Debug)]
 pub struct CachedConfig {
     pub config: GridConfig,
     pub image: ExecImage,
+    pub fabric: Option<Rc<CompiledFabric>>,
     /// Which artifact variant (grid size) it targets.
     pub variant: String,
+}
+
+impl CachedConfig {
+    /// Build an entry from a routed configuration, lowering the wave
+    /// executor eagerly (routed configs are feed-forward, so in practice
+    /// `fabric` is always `Some`; structural illegality can't happen for a
+    /// config that already produced `image`).
+    pub fn new(config: GridConfig, image: ExecImage, variant: String) -> CachedConfig {
+        let fabric = CompiledFabric::compile(&config).ok().map(Rc::new);
+        CachedConfig { config, image, fabric, variant }
+    }
 }
 
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -129,7 +147,14 @@ mod tests {
     fn dummy_entry() -> CachedConfig {
         let config = fig2_config();
         let image = config.to_image().unwrap();
-        CachedConfig { config, image, variant: "dfe_4x4".into() }
+        CachedConfig::new(config, image, "dfe_4x4".into())
+    }
+
+    #[test]
+    fn cached_entry_carries_compiled_fabric() {
+        let entry = dummy_entry();
+        let fabric = entry.fabric.as_ref().expect("fig2 lowers to a wave schedule");
+        assert!(fabric.n_ops() > 0);
     }
 
     #[test]

@@ -103,6 +103,10 @@ pub enum ConfigError {
     FuUnused(CellCoord),
     RoutingCycle(CellCoord, Dir),
     MissingOperand(CellCoord, &'static str),
+    /// A bound external input stream is absent or shorter than the
+    /// requested element count (`got` is the provided length; an entirely
+    /// missing stream reports 0).
+    StreamTooShort { index: usize, need: usize, got: usize },
     Image(super::image::ImageError),
 }
 
@@ -125,6 +129,9 @@ impl fmt::Display for ConfigError {
             ConfigError::MissingOperand(p, which) => {
                 write!(f, "cell {p} op is missing operand {which}")
             }
+            ConfigError::StreamTooShort { index, need, got } => {
+                write!(f, "input stream {index} has {got} elements, run needs {need}")
+            }
             ConfigError::Image(e) => write!(f, "image build failed: {e}"),
         }
     }
@@ -146,6 +153,35 @@ enum Driver {
     Const(i32),
 }
 
+/// Immediate driver of a cell input face: the neighbor's facing output
+/// register, or an external input stream on a border face. Shared by both
+/// execution engines (`dfe::sim`, `dfe::exec`) so their legality surfaces
+/// cannot drift.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaceDriver {
+    ExtIn(usize),
+    Out(CellCoord, Dir),
+}
+
+/// Validate that every stream in `indices` exists and covers `n`
+/// elements — the shared input-legality check of both execution engines
+/// (an absent or short stream is a [`ConfigError::StreamTooShort`], never
+/// a silent zero-fill). Callers must pass indices in ascending order so
+/// both engines report the same index when several streams are short.
+pub fn check_streams(
+    indices: impl Iterator<Item = usize>,
+    inputs: &[Vec<i32>],
+    n: usize,
+) -> Result<(), ConfigError> {
+    for j in indices {
+        let got = inputs.get(j).map(|s| s.len()).unwrap_or(0);
+        if got < n {
+            return Err(ConfigError::StreamTooShort { index: j, need: n, got });
+        }
+    }
+    Ok(())
+}
+
 impl GridConfig {
     pub fn empty(grid: Grid) -> GridConfig {
         GridConfig {
@@ -162,6 +198,39 @@ impl GridConfig {
 
     pub fn cell_mut(&mut self, p: CellCoord) -> &mut CellConfig {
         &mut self.cells[self.grid.index(p)]
+    }
+
+    /// Immediate driver of cell input face `(p, d)`: the external input
+    /// bound to a border face, or the neighbor's facing output register —
+    /// erroring on undriven faces. The single source of truth for face
+    /// resolution in `CycleSim::new` and `CompiledFabric::compile`.
+    pub fn face_driver(&self, p: CellCoord, d: Dir) -> Result<FaceDriver, ConfigError> {
+        match self.grid.neighbor(p, d) {
+            None => {
+                let io = self
+                    .inputs
+                    .iter()
+                    .find(|io| io.cell == p && io.dir == d)
+                    .ok_or(ConfigError::UndrivenInput { cell: p, dir: d })?;
+                Ok(FaceDriver::ExtIn(io.index))
+            }
+            Some(q) => {
+                let qd = d.opposite();
+                if self.cell(q).out[qd.index()] == OutSrc::None {
+                    Err(ConfigError::UndrivenInput { cell: p, dir: d })
+                } else {
+                    Ok(FaceDriver::Out(q, qd))
+                }
+            }
+        }
+    }
+
+    /// Validate the provided input streams against this configuration's
+    /// bound input indices, in ascending order (see [`check_streams`]).
+    pub fn check_streams(&self, inputs: &[Vec<i32>], n: usize) -> Result<(), ConfigError> {
+        let mut bound: Vec<usize> = self.inputs.iter().map(|io| io.index).collect();
+        bound.sort_unstable();
+        check_streams(bound.into_iter(), inputs, n)
     }
 
     /// Cells with a configured op (the "operator" role).

@@ -1,0 +1,757 @@
+//! Compiled wave executor: the DFE hot path, lowered once per
+//! configuration instead of re-simulated every cycle.
+//!
+//! [`super::sim::CycleSim`] is the ground-truth elastic-pipeline model —
+//! every producer a 1-deep token buffer, every cycle a full sweep over
+//! cells with `HashMap` latch lookups. That is O(cells × cycles) with
+//! hashing per stream element: exactly the wrong shape for a fabric whose
+//! raison d'être is that "optimizations are made at run-time" must cost
+//! almost nothing (paper §I; ROADMAP north star "as fast as the hardware
+//! allows").
+//!
+//! [`CompiledFabric`] lowers a validated [`GridConfig`] **once** into a
+//! flat, topologically ordered wave schedule:
+//!   * every producer endpoint (external input head, FU result register,
+//!     cell output face) becomes a dense `usize` — zero HashMaps survive
+//!     into the run loop;
+//!   * pass-through routes are resolved to aliases at compile time, so the
+//!     schedule contains only FU firings over a slot-major SoA buffer;
+//!   * elements stream through in chunks of [`CHUNK`] lanes, op-outer /
+//!     lane-inner, so the inner loop is branch-light and cache-friendly;
+//!   * fill latency and initiation interval are derived *analytically*
+//!     from the registered-stage depth of the producer graph (see
+//!     [`CompiledFabric::fill_latency`]) instead of observed cycle counts.
+//!
+//! Only cleanly feed-forward configurations lower. Anything the elastic
+//! model would stall on is refused with [`CompileError::NotFeedForward`]
+//! and the caller falls back to `CycleSim`, which handles (or deadlock-
+//! detects) it: a producer-graph cycle (even a dead routing ring off to
+//! the side), a dangling producer nobody consumes, or a configured-but-
+//! unread FU operand. [`execute`] packages that fallback; `SimResult`
+//! stays the single result type so callers don't change. Differential
+//! fuzzing (`tests/exec_fuzz.rs`) holds the two engines bit-identical on
+//! every configuration the lowering accepts.
+
+use std::collections::HashMap;
+
+use super::config::{ConfigError, FaceDriver, FuSrc, GridConfig, OutSrc};
+use super::grid::{CellCoord, Dir, DIRS};
+use super::opcodes::Op;
+use super::sim::{CycleSim, SimResult};
+
+/// Lanes per wave: the SoA working set is `n_slots × CHUNK × 4` bytes, so
+/// 256 keeps even a fully used 24×18 overlay (~600 slots) inside L2 while
+/// amortizing the per-op schedule walk over enough lanes to hide it.
+pub const CHUNK: usize = 256;
+
+/// Why a configuration did not lower to a [`CompiledFabric`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum CompileError {
+    /// Structurally illegal — `CycleSim` rejects it identically, so there
+    /// is nothing to fall back to.
+    Illegal(ConfigError),
+    /// The producer graph has a cycle (or one the lowering cannot rule
+    /// out): not wave-schedulable. The caller should fall back to the
+    /// elastic cycle-level simulator.
+    NotFeedForward { at: CellCoord, dir: Dir },
+}
+
+impl std::fmt::Display for CompileError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CompileError::Illegal(e) => write!(f, "{e}"),
+            CompileError::NotFeedForward { at, dir } => {
+                write!(f, "producer graph not feed-forward through {at}{dir}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CompileError {}
+
+/// One scheduled FU firing: `slot[dst] = op(slot[a], slot[b], slot[s])`,
+/// all operands resolved to dense slot indices at compile time (constants
+/// live in pre-filled slots; unused operands read the zero slot).
+#[derive(Clone, Copy, Debug)]
+struct WaveOp {
+    op: Op,
+    dst: usize,
+    a: usize,
+    b: usize,
+    s: usize,
+}
+
+/// A configuration lowered to a wave schedule. Immutable after
+/// compilation; `run_stream`/`run_batch` are `&self`, so one compiled
+/// artifact serves any number of invocations (and cache hits skip the
+/// lowering entirely — see `dfe::cache::CachedConfig`).
+#[derive(Clone, Debug)]
+pub struct CompiledFabric {
+    /// Value slots: `[0] = zero`, then constants, then one per external
+    /// input stream, then one per FU in schedule order.
+    n_slots: usize,
+    /// Slot pre-image for constants: (slot, value), filled once per wave
+    /// buffer and never overwritten.
+    consts: Vec<(usize, i32)>,
+    /// External input bindings: (slot, stream index).
+    ext_ins: Vec<(usize, usize)>,
+    /// FU firings in topological order.
+    ops: Vec<WaveOp>,
+    /// External output taps: (stream index, slot), sorted by stream index.
+    outs: Vec<(usize, usize)>,
+    /// Dense output stream count (max bound index + 1).
+    n_out_streams: usize,
+    /// Registered-stage depth of the deepest tapped path (drives the
+    /// total-cycles model: the last stream finishes at `drain_depth +
+    /// (n - 1)` with II = 1).
+    drain_depth: u64,
+    /// Number of input streams the fabric reads (max bound index + 1).
+    pub n_inputs: usize,
+    /// Cycles until the first element emerges, derived analytically as
+    /// `1 + min(tap depths)`: each FU result register and each routed
+    /// cell output face on the shallowest input→output path costs one
+    /// cycle (external input heads cost zero — they refill and offer in
+    /// the same phase), plus one cycle for the external sink to consume.
+    /// This matches `CycleSim`'s transfer-then-fire cycle structure
+    /// exactly: the first wavefront never sees backpressure, so the
+    /// measured fill equals the analytic one on every feed-forward
+    /// configuration (enforced by `tests/exec_fuzz.rs`).
+    pub fill_latency: u64,
+    /// Steady-state cycles per element. A feed-forward overlay is fully
+    /// pipelined, so the analytic model is II = 1.0 — the paper's headline
+    /// property, which the physical overlay ([11] Capalija & Abdelrahman)
+    /// reaches through sufficiently deep elastic FIFOs. `CycleSim`'s
+    /// conservative 1-deep buffers can throttle reconvergent forks with
+    /// depth imbalance (slack mismatch) up to ~one pipeline round trip per
+    /// element; the documented tolerance (measured II ∈ [1, drain depth +
+    /// slack]) lives in `tests/exec_fuzz.rs`.
+    pub initiation_interval: f64,
+}
+
+/// Producer endpoints, mirrored from `CycleSim` but compiled away before
+/// the run loop.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+enum Producer {
+    Out(CellCoord, Dir),
+    Fu(CellCoord),
+    ExtIn(usize),
+}
+
+impl CompiledFabric {
+    /// Lower `cfg` into a wave schedule. Fails with
+    /// [`CompileError::Illegal`] on the same legality surface as
+    /// `CycleSim::new` / `GridConfig::to_image` (undriven consumers,
+    /// missing operands, untapped outputs), and with
+    /// [`CompileError::NotFeedForward`] on anything the elastic model can
+    /// still represent but a wave schedule cannot reproduce faithfully: a
+    /// producer-graph cycle, a dangling producer nobody consumes, or a
+    /// configured-but-unread FU operand (the latter two stall `CycleSim`'s
+    /// fork-retire semantics). Callers fall back instead of erroring.
+    pub fn compile(cfg: &GridConfig) -> Result<CompiledFabric, CompileError> {
+        let ill = CompileError::Illegal;
+
+        // Producer of a cell input face, via the shared resolver
+        // (`GridConfig::face_driver`) so the legality surface cannot
+        // drift from `CycleSim::new`.
+        let driver_of_face = |p: CellCoord, d: Dir| -> Result<Producer, CompileError> {
+            Ok(match cfg.face_driver(p, d).map_err(ill)? {
+                FaceDriver::ExtIn(j) => Producer::ExtIn(j),
+                FaceDriver::Out(q, qd) => Producer::Out(q, qd),
+            })
+        };
+
+        // ---- 1. intern producers, collect dependency edges ----
+        let mut producers: Vec<Producer> = Vec::new();
+        let mut prod_idx: HashMap<Producer, usize> = HashMap::new();
+        // deps[p] = producers that must fire before p (compile-time only).
+        let mut deps: Vec<Vec<usize>> = Vec::new();
+        let mut intern = |producers: &mut Vec<Producer>,
+                          deps: &mut Vec<Vec<usize>>,
+                          prod_idx: &mut HashMap<Producer, usize>,
+                          p: Producer| {
+            *prod_idx.entry(p).or_insert_with(|| {
+                producers.push(p);
+                deps.push(Vec::new());
+                producers.len() - 1
+            })
+        };
+
+        // Every producer that exists in the configuration is interned —
+        // including ones feeding nothing on the way to an output, and
+        // including both halves of a dead routing ring. A cycle anywhere
+        // refuses the lowering (NotFeedForward) rather than silently
+        // pruning it, so the fallback semantics stay CycleSim's.
+        for p in cfg.grid.iter_coords() {
+            let cell = cfg.cell(p);
+            if let Some(op) = cell.op {
+                let fi = intern(&mut producers, &mut deps, &mut prod_idx, Producer::Fu(p));
+                let operands: [(FuSrc, bool); 3] = [
+                    (cell.fu1, true),
+                    (cell.fu2, op.uses_rhs()),
+                    (cell.fsel, op.uses_sel()),
+                ];
+                for (k, (src, required)) in operands.into_iter().enumerate() {
+                    match src {
+                        FuSrc::In(d) => {
+                            // Resolve first so undriven faces error exactly
+                            // like CycleSim::new, whether or not the
+                            // operand is read.
+                            let drv = driver_of_face(p, d)?;
+                            if !required {
+                                // A configured-but-unread In operand fills
+                                // an elastic latch CycleSim never drains —
+                                // the upstream producer stalls. Not wave-
+                                // schedulable; fall back so both engines
+                                // keep identical behavior.
+                                return Err(CompileError::NotFeedForward {
+                                    at: p,
+                                    dir: d,
+                                });
+                            }
+                            let di =
+                                intern(&mut producers, &mut deps, &mut prod_idx, drv);
+                            deps[fi].push(di);
+                        }
+                        FuSrc::Const(_) => {}
+                        FuSrc::None => {
+                            if required {
+                                return Err(ill(ConfigError::MissingOperand(
+                                    p,
+                                    ["fu1", "fu2", "sel"][k],
+                                )));
+                            }
+                        }
+                    }
+                }
+            }
+            for d in DIRS {
+                match cell.out[d.index()] {
+                    OutSrc::None => {}
+                    OutSrc::Fu => {
+                        if cell.op.is_none() {
+                            return Err(ill(ConfigError::NoFu(p)));
+                        }
+                        let oi = intern(
+                            &mut producers,
+                            &mut deps,
+                            &mut prod_idx,
+                            Producer::Out(p, d),
+                        );
+                        let fi =
+                            intern(&mut producers, &mut deps, &mut prod_idx, Producer::Fu(p));
+                        deps[oi].push(fi);
+                    }
+                    OutSrc::In(d2) => {
+                        let drv = driver_of_face(p, d2)?;
+                        let oi = intern(
+                            &mut producers,
+                            &mut deps,
+                            &mut prod_idx,
+                            Producer::Out(p, d),
+                        );
+                        let di = intern(&mut producers, &mut deps, &mut prod_idx, drv);
+                        deps[oi].push(di);
+                    }
+                }
+            }
+        }
+        // External outputs tap border faces.
+        let mut out_taps: Vec<(usize, usize)> = Vec::new(); // (stream j, producer)
+        for io in &cfg.outputs {
+            if cfg.cell(io.cell).out[io.dir.index()] == OutSrc::None {
+                return Err(ill(ConfigError::UndrivenOutput { cell: io.cell, dir: io.dir }));
+            }
+            let pi = intern(
+                &mut producers,
+                &mut deps,
+                &mut prod_idx,
+                Producer::Out(io.cell, io.dir),
+            );
+            out_taps.push((io.index, pi));
+        }
+
+        // ---- 2. Kahn topological order; a leftover node means a cycle ----
+        let n = producers.len();
+        let mut indeg = vec![0usize; n];
+        let mut consumers: Vec<Vec<usize>> = vec![Vec::new(); n];
+        for (pi, ds) in deps.iter().enumerate() {
+            indeg[pi] = ds.len();
+            for &d in ds {
+                consumers[d].push(pi);
+            }
+        }
+        let mut stack: Vec<usize> = (0..n).filter(|&i| indeg[i] == 0).collect();
+        let mut order: Vec<usize> = Vec::with_capacity(n);
+        while let Some(i) = stack.pop() {
+            order.push(i);
+            for &c in &consumers[i] {
+                indeg[c] -= 1;
+                if indeg[c] == 0 {
+                    stack.push(c);
+                }
+            }
+        }
+        if order.len() != n {
+            let offender = (0..n).find(|&i| indeg[i] > 0).unwrap();
+            let (at, dir) = match producers[offender] {
+                Producer::Out(p, d) => (p, d),
+                Producer::Fu(p) => (p, Dir::N),
+                Producer::ExtIn(_) => (cfg.grid.coord(0), Dir::N),
+            };
+            return Err(CompileError::NotFeedForward { at, dir });
+        }
+        // A producer nobody consumes — no dependent and no external tap
+        // (a dangling out face, or an FU whose result no face routes) —
+        // stalls the elastic model: CycleSim either never interns it (its
+        // route latch fills and is never drained) or never fires it, so
+        // the upstream fork deadlocks into the budget. Not wave-
+        // schedulable; fall back so both engines keep identical behavior.
+        // (ExtIn producers are only interned when consumed, so they never
+        // trigger this.)
+        let mut tapped = vec![false; n];
+        for &(_, pi) in &out_taps {
+            tapped[pi] = true;
+        }
+        for i in 0..n {
+            if consumers[i].is_empty() && !tapped[i] {
+                match producers[i] {
+                    Producer::Out(p, d) => {
+                        return Err(CompileError::NotFeedForward { at: p, dir: d })
+                    }
+                    Producer::Fu(p) => {
+                        return Err(CompileError::NotFeedForward { at: p, dir: Dir::N })
+                    }
+                    Producer::ExtIn(_) => {}
+                }
+            }
+        }
+
+        // ---- 3. analytic pipeline depth over the topological order ----
+        // FU result registers and routed out-face registers are one stage
+        // each: depth[p] = 1 + max(depth[deps]), constants contributing 0.
+        // External input heads are depth 0 — the elastic model refills and
+        // offers the head buffer within one phase, so the first operand
+        // reaches its latch in the same cycle the stream starts.
+        let mut depth = vec![0u64; n];
+        for &i in &order {
+            depth[i] = match producers[i] {
+                Producer::ExtIn(_) => 0,
+                _ => 1 + deps[i].iter().map(|&d| depth[d]).max().unwrap_or(0),
+            };
+        }
+
+        // ---- 4. assign value slots; routes become aliases ----
+        // Layout: slot 0 = zero, then interned constants, then external
+        // input streams (one slot per bound index), then FU results.
+        let mut consts: Vec<(usize, i32)> = Vec::new();
+        let mut const_slot_of: HashMap<i32, usize> = HashMap::new();
+        let mut next_slot = 1usize; // slot 0 is the zero slot
+
+        let n_inputs = cfg.inputs.iter().map(|io| io.index + 1).max().unwrap_or(0);
+        let mut ext_slot = vec![usize::MAX; n_inputs];
+        let mut ext_ins: Vec<(usize, usize)> = Vec::new();
+
+        // Constants first so their slots are stable before FU slots.
+        for p in cfg.grid.iter_coords() {
+            let cell = cfg.cell(p);
+            if let Some(op) = cell.op {
+                let used = [true, op.uses_rhs(), op.uses_sel()];
+                for (k, src) in [cell.fu1, cell.fu2, cell.fsel].into_iter().enumerate() {
+                    if let FuSrc::Const(v) = src {
+                        if used[k] && v != 0 {
+                            const_slot_of.entry(v).or_insert_with(|| {
+                                let s = next_slot;
+                                next_slot += 1;
+                                consts.push((s, v));
+                                s
+                            });
+                        }
+                    }
+                }
+            }
+        }
+        for (j, slot) in ext_slot.iter_mut().enumerate() {
+            if cfg.inputs.iter().any(|io| io.index == j) {
+                *slot = next_slot;
+                next_slot += 1;
+                ext_ins.push((*slot, j));
+            }
+        }
+
+        // slot_of[producer]: FUs get fresh slots in topo order, routes and
+        // input heads alias their source (topo order guarantees the source
+        // is resolved first).
+        let mut slot_of = vec![usize::MAX; n];
+        let mut ops: Vec<WaveOp> = Vec::new();
+        for &i in &order {
+            match producers[i] {
+                Producer::ExtIn(j) => slot_of[i] = ext_slot[j],
+                Producer::Out(p, d) => {
+                    // Single dependency: FU result or pass-through source.
+                    debug_assert_eq!(deps[i].len(), 1, "out face {p}{d} has one driver");
+                    slot_of[i] = slot_of[deps[i][0]];
+                }
+                Producer::Fu(p) => {
+                    let cell = cfg.cell(p);
+                    let op = cell.op.expect("Fu producer implies an op");
+                    let dst = next_slot;
+                    next_slot += 1;
+                    slot_of[i] = dst;
+                    let resolve = |src: FuSrc, used: bool| -> usize {
+                        if !used {
+                            return 0; // zero slot
+                        }
+                        match src {
+                            FuSrc::Const(0) | FuSrc::None => 0,
+                            FuSrc::Const(v) => const_slot_of[&v],
+                            FuSrc::In(d) => {
+                                // Re-derive the driver; interned above, so
+                                // the lookups cannot fail.
+                                let drv = match cfg
+                                    .face_driver(p, d)
+                                    .expect("validated above")
+                                {
+                                    FaceDriver::ExtIn(j) => Producer::ExtIn(j),
+                                    FaceDriver::Out(q, qd) => Producer::Out(q, qd),
+                                };
+                                slot_of[prod_idx[&drv]]
+                            }
+                        }
+                    };
+                    ops.push(WaveOp {
+                        op,
+                        dst,
+                        a: resolve(cell.fu1, true),
+                        b: resolve(cell.fu2, op.uses_rhs()),
+                        s: resolve(cell.fsel, op.uses_sel()),
+                    });
+                }
+            }
+        }
+
+        // ---- 5. output taps + analytic timing ----
+        let mut outs: Vec<(usize, usize)> = out_taps
+            .iter()
+            .map(|&(j, pi)| (j, slot_of[pi]))
+            .collect();
+        outs.sort_by_key(|&(j, _)| j);
+        let n_out_streams = cfg.outputs.iter().map(|io| io.index + 1).max().unwrap_or(0);
+        // +1: the external sink consumes the tapped face's buffer one
+        // cycle after it fills. Fill tracks the *first* output token
+        // (CycleSim's definition), drain the deepest stream.
+        let fill_latency =
+            1 + out_taps.iter().map(|&(_, pi)| depth[pi]).min().unwrap_or(0);
+        let drain_depth =
+            1 + out_taps.iter().map(|&(_, pi)| depth[pi]).max().unwrap_or(0);
+
+        Ok(CompiledFabric {
+            n_slots: next_slot,
+            consts,
+            ext_ins,
+            ops,
+            outs,
+            n_out_streams,
+            drain_depth,
+            n_inputs,
+            fill_latency,
+            initiation_interval: 1.0,
+        })
+    }
+
+    /// Number of scheduled FU firings (one per configured op cell).
+    pub fn n_ops(&self) -> usize {
+        self.ops.len()
+    }
+
+    /// Stream `n` elements through the compiled schedule. Same contract
+    /// and result type as `CycleSim::run_stream`; outputs are bit-identical
+    /// on any feed-forward configuration, timing fields are the analytic
+    /// model (fill = pipeline depth, II = 1).
+    pub fn run_stream(
+        &self,
+        inputs: &[Vec<i32>],
+        n: usize,
+    ) -> Result<SimResult, ConfigError> {
+        // ext_ins is built in ascending stream-index order, so the shared
+        // check reports the same index as `GridConfig::check_streams`.
+        super::config::check_streams(self.ext_ins.iter().map(|&(_, j)| j), inputs, n)?;
+        let mut outputs: Vec<Vec<i32>> =
+            (0..self.n_out_streams).map(|_| Vec::with_capacity(n)).collect();
+
+        let mut buf = vec![0i32; self.n_slots * CHUNK];
+        for &(slot, v) in &self.consts {
+            buf[slot * CHUNK..(slot + 1) * CHUNK].fill(v);
+        }
+
+        let mut at = 0usize;
+        while at < n {
+            let m = CHUNK.min(n - at);
+            for &(slot, j) in &self.ext_ins {
+                buf[slot * CHUNK..slot * CHUNK + m]
+                    .copy_from_slice(&inputs[j][at..at + m]);
+            }
+            self.wave(&mut buf, m);
+            for &(j, slot) in &self.outs {
+                outputs[j].extend_from_slice(&buf[slot * CHUNK..slot * CHUNK + m]);
+            }
+            at += m;
+        }
+
+        // Total cycles: the deepest stream's last element arrives at
+        // drain_depth + (n - 1) under the steady-state II of 1.
+        let cycles = if n == 0 {
+            0
+        } else {
+            self.drain_depth
+                + ((n as f64 - 1.0) * self.initiation_interval).ceil() as u64
+        };
+        Ok(SimResult {
+            outputs,
+            fill_latency: self.fill_latency,
+            cycles,
+            initiation_interval: self.initiation_interval,
+        })
+    }
+
+    /// Batch entry point in the artifact ABI layout (`x[j * lanes + lane]`
+    /// slot-major in, `[n_out, lanes]` slot-major out, rows in bound-output
+    /// index order exactly like `ExecImage::out_sel`) — the drop-in
+    /// replacement for `ExecImage::eval_batch` on the offload hot path.
+    pub fn run_batch(&self, x: &[i32], lanes: usize) -> Vec<i32> {
+        debug_assert!(x.len() >= self.n_inputs * lanes);
+        let mut out = vec![0i32; self.outs.len() * lanes];
+        let mut buf = vec![0i32; self.n_slots * CHUNK];
+        for &(slot, v) in &self.consts {
+            buf[slot * CHUNK..(slot + 1) * CHUNK].fill(v);
+        }
+        let mut at = 0usize;
+        while at < lanes {
+            let m = CHUNK.min(lanes - at);
+            for &(slot, j) in &self.ext_ins {
+                buf[slot * CHUNK..slot * CHUNK + m]
+                    .copy_from_slice(&x[j * lanes + at..j * lanes + at + m]);
+            }
+            self.wave(&mut buf, m);
+            for (row, &(_, slot)) in self.outs.iter().enumerate() {
+                out[row * lanes + at..row * lanes + at + m]
+                    .copy_from_slice(&buf[slot * CHUNK..slot * CHUNK + m]);
+            }
+            at += m;
+        }
+        out
+    }
+
+    /// Fire the whole schedule over `m` lanes of the wave buffer. Op-outer,
+    /// lane-inner: each firing reads three resolved slot rows and writes
+    /// one, so the inner loop is a straight-line arithmetic sweep.
+    #[inline]
+    fn wave(&self, buf: &mut [i32], m: usize) {
+        for w in &self.ops {
+            let (a0, b0, s0, d0) = (w.a * CHUNK, w.b * CHUNK, w.s * CHUNK, w.dst * CHUNK);
+            let op = w.op;
+            for lane in 0..m {
+                let r = op.eval(buf[a0 + lane], buf[b0 + lane], buf[s0 + lane]);
+                buf[d0 + lane] = r;
+            }
+        }
+    }
+}
+
+/// Execute `n` stream elements on the fastest engine that can represent
+/// the configuration: the compiled wave executor when the lowering proves
+/// the fabric feed-forward (the common case for anything `dfg::extract` +
+/// `par::route` emit), the elastic [`CycleSim`] otherwise. Structural
+/// illegality errors out of both paths identically.
+pub fn execute(
+    cfg: &GridConfig,
+    inputs: &[Vec<i32>],
+    n: usize,
+) -> Result<SimResult, ConfigError> {
+    match CompiledFabric::compile(cfg) {
+        Ok(fabric) => fabric.run_stream(inputs, n),
+        Err(CompileError::Illegal(e)) => Err(e),
+        Err(CompileError::NotFeedForward { .. }) => {
+            CycleSim::new(cfg)?.run_stream(inputs, n)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dfe::config::{fig2_config, IoAssign};
+    use crate::dfe::grid::Grid;
+
+    #[test]
+    fn fig2_wave_matches_formula_and_cyclesim() {
+        let cfg = fig2_config();
+        let fabric = CompiledFabric::compile(&cfg).expect("fig2 is feed-forward");
+        let n = 100;
+        let a: Vec<i32> = (0..n as i32).collect();
+        let b: Vec<i32> = (0..n as i32).map(|x| 3 * x - 11).collect();
+        let res = fabric.run_stream(&[a.clone(), b.clone()], n).unwrap();
+        let want: Vec<i32> = (0..n).map(|i| a[i] + 3 * b[i] + 1).collect();
+        assert_eq!(res.outputs[0], want);
+
+        let cyc = CycleSim::new(&cfg).unwrap().run_stream(&[a, b], n).unwrap();
+        assert_eq!(res.outputs, cyc.outputs, "wave ≡ CycleSim");
+        // Analytic fill equals the measured fill on this contention-free
+        // pipeline: ExtIn → Fu(0,0) → Out(0,0)S → Fu(1,0) → Out(1,0)E →
+        // Fu(1,1) → Out(1,1)E = 7 registered stages.
+        assert_eq!(res.fill_latency, 7);
+        assert_eq!(cyc.fill_latency, 7, "CycleSim measures the same depth");
+        assert_eq!(res.initiation_interval, 1.0);
+    }
+
+    #[test]
+    fn chunk_boundaries_are_seamless() {
+        let cfg = fig2_config();
+        let fabric = CompiledFabric::compile(&cfg).unwrap();
+        for n in [CHUNK - 1, CHUNK, CHUNK + 1, 3 * CHUNK + 17] {
+            let a: Vec<i32> = (0..n as i32).collect();
+            let b: Vec<i32> = (0..n as i32).rev().collect();
+            let res = fabric.run_stream(&[a.clone(), b.clone()], n).unwrap();
+            for i in 0..n {
+                assert_eq!(res.outputs[0][i], a[i] + 3 * b[i] + 1, "n={n} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn run_batch_matches_image_eval_batch() {
+        let cfg = fig2_config();
+        let fabric = CompiledFabric::compile(&cfg).unwrap();
+        let img = cfg.to_image().unwrap();
+        let lanes = 300;
+        let x: Vec<i32> = (0..2 * lanes as i32).map(|v| v * 7 - 900).collect();
+        assert_eq!(fabric.run_batch(&x, lanes), img.eval_batch(&x, lanes));
+    }
+
+    #[test]
+    fn short_stream_is_an_error_not_zero_fill() {
+        let cfg = fig2_config();
+        let fabric = CompiledFabric::compile(&cfg).unwrap();
+        // Stream 1 too short.
+        let r = fabric.run_stream(&[vec![1, 2, 3], vec![4, 5]], 3);
+        assert_eq!(
+            r.unwrap_err(),
+            ConfigError::StreamTooShort { index: 1, need: 3, got: 2 }
+        );
+        // Stream entirely absent.
+        let r = fabric.run_stream(&[vec![1, 2, 3]], 3);
+        assert_eq!(
+            r.unwrap_err(),
+            ConfigError::StreamTooShort { index: 1, need: 3, got: 0 }
+        );
+    }
+
+    #[test]
+    fn zero_elements_is_fine() {
+        let cfg = fig2_config();
+        let fabric = CompiledFabric::compile(&cfg).unwrap();
+        let res = fabric.run_stream(&[vec![], vec![]], 0).unwrap();
+        assert!(res.outputs[0].is_empty());
+        assert_eq!(res.cycles, 0);
+    }
+
+    #[test]
+    fn dead_ring_refuses_to_lower_and_execute_falls_back() {
+        use crate::dfe::config::OutSrc;
+        use crate::dfe::opcodes::Op;
+        // A legal feed-forward path (row 0) plus a dead two-cell routing
+        // ring (row 1) that never receives a token. CycleSim runs this
+        // fine — the ring just never fires — but the lowering cannot wave-
+        // schedule it, so it must refuse rather than mis-lower.
+        let grid = Grid::new(2, 2);
+        let mut cfg = GridConfig::empty(grid);
+        let c00 = CellCoord::new(0, 0);
+        let c10 = CellCoord::new(1, 0);
+        let c11 = CellCoord::new(1, 1);
+        {
+            let cell = cfg.cell_mut(c00);
+            cell.op = Some(Op::Add);
+            cell.fu1 = FuSrc::In(Dir::W);
+            cell.fu2 = FuSrc::Const(5);
+            cell.out[Dir::E.index()] = OutSrc::Fu;
+        }
+        cfg.inputs.push(IoAssign { cell: c00, dir: Dir::W, index: 0 });
+        cfg.outputs.push(IoAssign { cell: CellCoord::new(0, 1), dir: Dir::E, index: 0 });
+        cfg.cell_mut(CellCoord::new(0, 1)).out[Dir::E.index()] = OutSrc::In(Dir::W);
+        // The ring: (1,0).E ← its own E input ← (1,1).W out ← (1,1)'s W
+        // input ← (1,0).E out.
+        cfg.cell_mut(c10).out[Dir::E.index()] = OutSrc::In(Dir::E);
+        cfg.cell_mut(c11).out[Dir::W.index()] = OutSrc::In(Dir::W);
+
+        assert!(matches!(
+            CompiledFabric::compile(&cfg),
+            Err(CompileError::NotFeedForward { .. })
+        ));
+        // execute() falls back to CycleSim and completes.
+        let a: Vec<i32> = (0..20).collect();
+        let res = execute(&cfg, &[a.clone()], 20).unwrap();
+        let cyc = CycleSim::new(&cfg).unwrap().run_stream(&[a], 20).unwrap();
+        assert_eq!(res.outputs, cyc.outputs);
+        assert_eq!(res.outputs[0], (5..25).collect::<Vec<i32>>());
+    }
+
+    #[test]
+    fn dangling_fork_falls_back_to_cyclesim() {
+        use crate::dfe::config::OutSrc;
+        // fig2 plus an extra, never-consumed OutSrc::Fu face on (1,1):
+        // CycleSim never interns that face's producer, so its route latch
+        // fills once and never drains — the FU's fork stalls and the run
+        // deadlocks into the budget. The lowering must refuse so execute()
+        // reproduces CycleSim's behavior instead of silently succeeding.
+        let mut cfg = fig2_config();
+        cfg.cell_mut(CellCoord::new(1, 1)).out[Dir::N.index()] = OutSrc::Fu;
+        assert!(matches!(
+            CompiledFabric::compile(&cfg),
+            Err(CompileError::NotFeedForward { .. })
+        ));
+        let n = 8;
+        let a: Vec<i32> = (0..n as i32).collect();
+        let b: Vec<i32> = (0..n as i32).collect();
+        let via_exec = execute(&cfg, &[a.clone(), b.clone()], n);
+        let via_cyc = CycleSim::new(&cfg).unwrap().run_stream(&[a, b], n);
+        assert_eq!(via_exec.unwrap_err(), via_cyc.unwrap_err());
+    }
+
+    #[test]
+    fn unread_in_operand_falls_back_to_cyclesim() {
+        // fig2 with (1,1)'s unused sel mux pointed at a driven face: the
+        // elastic model latches the value but never consumes it, stalling
+        // the upstream fork. The lowering refuses; both engines then
+        // report the same deadlock.
+        let mut cfg = fig2_config();
+        cfg.cell_mut(CellCoord::new(1, 1)).fsel = FuSrc::In(Dir::W); // Add: sel unread
+        assert!(matches!(
+            CompiledFabric::compile(&cfg),
+            Err(CompileError::NotFeedForward { .. })
+        ));
+        let n = 8;
+        let a: Vec<i32> = (0..n as i32).collect();
+        let b: Vec<i32> = (0..n as i32).collect();
+        let via_exec = execute(&cfg, &[a.clone(), b.clone()], n);
+        let via_cyc = CycleSim::new(&cfg).unwrap().run_stream(&[a, b], n);
+        assert_eq!(via_exec.unwrap_err(), via_cyc.unwrap_err());
+    }
+
+    #[test]
+    fn illegal_config_errors_in_both_paths() {
+        let grid = Grid::new(1, 1);
+        let mut cfg = GridConfig::empty(grid);
+        let p = CellCoord::new(0, 0);
+        {
+            let cell = cfg.cell_mut(p);
+            cell.op = Some(Op::Pass);
+            cell.fu1 = FuSrc::In(Dir::W); // undriven
+            cell.out[Dir::E.index()] = OutSrc::Fu;
+        }
+        cfg.outputs.push(IoAssign { cell: p, dir: Dir::E, index: 0 });
+        assert!(matches!(
+            CompiledFabric::compile(&cfg),
+            Err(CompileError::Illegal(ConfigError::UndrivenInput { .. }))
+        ));
+        assert!(execute(&cfg, &[], 1).is_err());
+    }
+}

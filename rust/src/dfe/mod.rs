@@ -1,10 +1,12 @@
 //! The Data Flow Engine (paper §III-A): overlay model, configuration,
-//! functional + cycle simulation, execution images, configuration cache
-//! and the per-device resource model (Table II).
+//! functional + cycle simulation, the compiled wave executor (the hot
+//! path), execution images, configuration cache and the per-device
+//! resource model (Table II).
 
 pub mod abi;
 pub mod cache;
 pub mod config;
+pub mod exec;
 pub mod grid;
 pub mod image;
 pub mod opcodes;
@@ -12,6 +14,7 @@ pub mod resource;
 pub mod sim;
 
 pub use config::{CellConfig, ConfigError, FuSrc, GridConfig, IoAssign, OutSrc};
+pub use exec::{execute, CompileError, CompiledFabric};
 pub use grid::{CellCoord, Dir, Grid, Port};
 pub use image::{ExecImage, ImageBuilder, ImageCell, ImageError};
 pub use opcodes::Op;

@@ -82,26 +82,12 @@ impl<'a> CycleSim<'a> {
     /// Build the elastic network from a configuration. Fails on undriven
     /// consumers (same legality surface as `GridConfig::to_image`).
     pub fn new(cfg: &'a GridConfig) -> Result<CycleSim<'a>, ConfigError> {
-        // Producer of a cell input face: neighbor's facing out, or ExtIn.
+        // Producer of a cell input face, via the shared resolver.
         let driver_of_face = |p: CellCoord, d: Dir| -> Result<Producer, ConfigError> {
-            match cfg.grid.neighbor(p, d) {
-                None => {
-                    let io = cfg
-                        .inputs
-                        .iter()
-                        .find(|io| io.cell == p && io.dir == d)
-                        .ok_or(ConfigError::UndrivenInput { cell: p, dir: d })?;
-                    Ok(Producer::ExtIn(io.index))
-                }
-                Some(q) => {
-                    let qd = d.opposite();
-                    if cfg.cell(q).out[qd.index()] == OutSrc::None {
-                        Err(ConfigError::UndrivenInput { cell: p, dir: d })
-                    } else {
-                        Ok(Producer::Out(q, qd))
-                    }
-                }
-            }
+            Ok(match cfg.face_driver(p, d)? {
+                super::config::FaceDriver::ExtIn(j) => Producer::ExtIn(j),
+                super::config::FaceDriver::Out(q, qd) => Producer::Out(q, qd),
+            })
         };
 
         let mut producers = Vec::new();
@@ -191,8 +177,12 @@ impl<'a> CycleSim<'a> {
     }
 
     /// Run `n` stream elements through the fabric. `inputs[j]` is the
-    /// stream for external input j (all length >= n).
+    /// stream for external input j; every bound input stream must cover
+    /// all `n` elements or the run is rejected with
+    /// [`ConfigError::StreamTooShort`] (an absent or short stream used to
+    /// be silently zero-filled, corrupting outputs).
     pub fn run_stream(&mut self, inputs: &[Vec<i32>], n: usize) -> Result<SimResult, ConfigError> {
+        self.cfg.check_streams(inputs, n)?;
         let n_out_streams = self
             .cfg
             .outputs
@@ -214,11 +204,14 @@ impl<'a> CycleSim<'a> {
         let mut cycle: u64 = 0;
         let mut fill_latency: u64 = 0;
         let mut first_out_seen = false;
-        let mut second_out_cycle: u64 = 0;
-        // Upper bound: a legal pipeline makes progress every few cycles;
-        // n elements through <= cells+perimeter stages can't need more
-        // than this — treat exceeding it as deadlock (illegal config).
-        let budget = 64 + (n as u64 + self.producers.len() as u64) * 8;
+        // Upper bound: a legal pipeline advances every element within one
+        // producer-graph round trip — reconvergent forks with depth
+        // imbalance throttle the 1-deep elastic buffers to at worst
+        // II ≈ round trip (slack mismatch), never zero progress — so a
+        // run exceeding roundtrip cycles per element plus fill slack is a
+        // deadlock (illegal config).
+        let roundtrip = 2 * self.producers.len() as u64 + 8;
+        let budget = 256 + (n as u64 + 4) * roundtrip;
 
         let done = |outputs: &Vec<Vec<i32>>, cfgo: &GridConfig| {
             cfgo.outputs.iter().all(|io| outputs[io.index].len() >= n)
@@ -235,13 +228,14 @@ impl<'a> CycleSim<'a> {
             if !first_out_seen && outputs.iter().any(|o| !o.is_empty()) {
                 first_out_seen = true;
                 fill_latency = cycle;
-            } else if first_out_seen
-                && second_out_cycle == 0
-                && outputs.iter().any(|o| o.len() >= 2)
-            {
-                second_out_cycle = cycle;
             }
         }
+        // Initiation interval: steady-state cycles per element. The first
+        // element emerges after `fill_latency` cycles; the remaining n-1
+        // each cost II cycles, so II = (total - fill) / (n - 1). A
+        // feed-forward fabric pipelines to II ≈ 1; reconvergent paths of
+        // unequal depth can push it toward 2 through the 1-deep elastic
+        // buffers.
         let initiation_interval = if n > 1 {
             (cycle - fill_latency) as f64 / (n as f64 - 1.0)
         } else {
@@ -263,8 +257,9 @@ impl<'a> CycleSim<'a> {
             // External input heads refill lazily.
             if let Producer::ExtIn(j) = self.producers[pi] {
                 if !self.bufs[pi].full && in_pos[j] < n {
-                    self.bufs[pi].val =
-                        inputs.get(j).and_then(|s| s.get(in_pos[j])).copied().unwrap_or(0);
+                    // Streams are length-validated in run_stream, so the
+                    // head element always exists.
+                    self.bufs[pi].val = inputs[j][in_pos[j]];
                     self.bufs[pi].full = true;
                     self.bufs[pi].taken = 0;
                     in_pos[j] += 1;
@@ -372,13 +367,17 @@ impl<'a> CycleSim<'a> {
     }
 }
 
-/// Convenience: simulate `n` elements and return just the output streams.
+/// Convenience: run `n` elements through the fastest engine for the
+/// configuration — the compiled wave executor (`dfe::exec`) when it
+/// lowers, this module's elastic `CycleSim` otherwise. Timing fields come
+/// from the engine that ran (analytic on the wave path, measured on the
+/// cycle path).
 pub fn simulate(
     cfg: &GridConfig,
     inputs: &[Vec<i32>],
     n: usize,
 ) -> Result<SimResult, ConfigError> {
-    CycleSim::new(cfg)?.run_stream(inputs, n)
+    super::exec::execute(cfg, inputs, n)
 }
 
 #[cfg(test)]

@@ -209,11 +209,13 @@ impl OffloadManager {
                 .span(Phase::PlaceRoute, || place_and_route(dfg, grid, &par, rng))
                 .map_err(|e| RejectReason::Unroutable(e.to_string()))?;
             par_stats = Some(result.stats);
-            let c = CachedConfig {
-                config: result.config,
-                image: result.image,
-                variant: format!("dfe_{}x{}", grid.rows, grid.cols),
-            };
+            // CachedConfig::new lowers the wave executor once here; every
+            // later cache hit reuses the compiled artifact.
+            let c = CachedConfig::new(
+                result.config,
+                result.image,
+                format!("dfe_{}x{}", grid.rows, grid.cols),
+            );
             self.cache.insert(key, c.clone());
             c
         };
@@ -232,10 +234,11 @@ impl OffloadManager {
         };
         tracer.borrow_mut().simulated(Phase::Constants, constants_time);
 
-        // ---- 4. timing model (Fmax from Table II, fill/II from the
-        //         cycle simulator) ----
+        // ---- 4. timing model (Fmax from Table II, fill/II analytic from
+        //         the compiled fabric; cycle-sim measurement only for
+        //         configs that didn't lower) ----
         let est = self.device.estimate(self.params.grid.rows, self.params.grid.cols);
-        let (fill, ii) = measure_pipeline(&cached.config, cached.image.n_inputs);
+        let (fill, ii) = pipeline_model(&cached);
         let tm = TimeModel {
             sec_per_cycle: self.params.sec_per_cycle,
             fmax_hz: est.fmax_mhz * 1e6,
@@ -252,7 +255,12 @@ impl OffloadManager {
                     .map_err(|e| RejectReason::Unroutable(format!("artifact: {e}")))?;
                 DfeBackend::Pjrt(exe)
             }
-            None => DfeBackend::Sim,
+            // Sim side: the compiled wave executor when the config lowered
+            // (always, for routed configs), the image evaluator otherwise.
+            None => match &cached.fabric {
+                Some(f) => DfeBackend::Fabric(f.clone()),
+                None => DfeBackend::Sim,
+            },
         };
         let jit_time = engine.jit_times.get(func as usize).copied().unwrap_or_default();
         tracer.borrow_mut().simulated(Phase::Jit, jit_time.max(Duration::from_micros(50)));
@@ -376,8 +384,20 @@ pub(crate) fn extract_single_scop(
     }
 }
 
-/// Measure pipeline fill latency and initiation interval on the cycle
+/// Pipeline fill latency and initiation interval for the timing model:
+/// analytic (registered-stage depth, II = 1) when the configuration
+/// lowered to a compiled fabric, otherwise measured on the cycle
 /// simulator with a short synthetic stream.
+pub(crate) fn pipeline_model(cached: &CachedConfig) -> (f64, f64) {
+    match &cached.fabric {
+        Some(f) => (f.fill_latency as f64, f.initiation_interval),
+        None => measure_pipeline(&cached.config, cached.image.n_inputs),
+    }
+}
+
+/// Measure pipeline fill latency and initiation interval on the cycle
+/// simulator with a short synthetic stream (fallback for configurations
+/// the wave lowering refused).
 fn measure_pipeline(config: &crate::dfe::config::GridConfig, n_inputs: usize) -> (f64, f64) {
     let n = 16;
     let streams: Vec<Vec<i32>> = (0..n_inputs.max(1))

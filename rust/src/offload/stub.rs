@@ -34,6 +34,10 @@ use crate::transport::PcieSim;
 pub enum DfeBackend {
     /// Rust functional simulator (always available; used by tests/benches).
     Sim,
+    /// The compiled wave executor (`dfe::exec`) — the default sim-side hot
+    /// path: same numerics as `Sim`, lowered once per configuration and
+    /// shared via the config cache.
+    Fabric(std::rc::Rc<crate::dfe::exec::CompiledFabric>),
     /// The AOT Pallas artifact through PJRT (the shipped datapath).
     Pjrt(std::rc::Rc<DfeExecutable>),
 }
@@ -42,6 +46,7 @@ impl DfeBackend {
     fn run(&self, image: &ExecImage, x: &[i32], lanes: usize) -> Result<Vec<i32>, Trap> {
         match self {
             DfeBackend::Sim => Ok(image.eval_batch(x, lanes)),
+            DfeBackend::Fabric(fabric) => Ok(fabric.run_batch(x, lanes)),
             DfeBackend::Pjrt(exe) => exe
                 .run_lanes(image, x, lanes)
                 .map_err(|e| Trap::OutOfBounds {
