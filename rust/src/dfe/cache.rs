@@ -32,6 +32,41 @@ pub fn dfg_key(dfg: &Dfg) -> u64 {
     h.finish()
 }
 
+/// Specialization signature: the adaptive respecialization controller's
+/// cache-key component (unroll factor × observed trip-count bucket), so
+/// the generic artifact and any number of profile-chosen specializations
+/// of the same source loop coexist in the cache and tier demotion is a
+/// cache hit, never a re-route. `trip_bucket` is the log2 bucket
+/// ([`crate::jit::engine::Histogram::bucket_of`]) of the batch size the
+/// artifact was specialized for; 0 means "generic, no trip assumption".
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, Default)]
+pub struct SpecSignature {
+    pub unroll: u32,
+    pub trip_bucket: u32,
+}
+
+impl SpecSignature {
+    pub fn new(unroll: usize, trip_bucket: usize) -> SpecSignature {
+        SpecSignature { unroll: unroll as u32, trip_bucket: trip_bucket as u32 }
+    }
+
+    /// The generic tier's signature: no trip-count assumption.
+    pub fn generic(unroll: usize) -> SpecSignature {
+        SpecSignature::new(unroll, 0)
+    }
+}
+
+/// Cache key of a DFG hash specialized under `sig`. Deliberately distinct
+/// from the bare DFG key even for the default signature, so artifacts
+/// routed through the specialization-aware path never collide with keys
+/// minted by other schemes.
+pub fn spec_key(dfg: u64, sig: SpecSignature) -> u64 {
+    let mut h = std::collections::hash_map::DefaultHasher::new();
+    dfg.hash(&mut h);
+    (sig.unroll as u64, sig.trip_bucket as u64).hash(&mut h);
+    h.finish()
+}
+
 /// Tenant-agnostic cache key for the multi-tenant serve layer: the DFG's
 /// structural hash combined with the shard-region geometry it was routed
 /// for. Two tenants running the same kernel share the entry (the paper's
@@ -172,6 +207,22 @@ mod tests {
         // Same DFG routed for another region shape -> distinct entry.
         assert_ne!(region_key(k, Grid::new(4, 8)), region_key(k, Grid::new(8, 8)));
         assert_ne!(region_key(k, Grid::new(4, 8)), k);
+    }
+
+    #[test]
+    fn spec_key_separates_signatures_and_preserves_identity() {
+        let k = dfg_key(&fig2_dfg());
+        // Same DFG + same signature -> same entry (cache hits across
+        // respecializations back to a previously routed tier).
+        assert_eq!(spec_key(k, SpecSignature::new(4, 7)), spec_key(k, SpecSignature::new(4, 7)));
+        // Unroll and trip-bucket components both separate artifacts.
+        assert_ne!(spec_key(k, SpecSignature::generic(1)), spec_key(k, SpecSignature::generic(4)));
+        assert_ne!(spec_key(k, SpecSignature::new(4, 3)), spec_key(k, SpecSignature::new(4, 7)));
+        // Never collides with the bare structural key.
+        assert_ne!(spec_key(k, SpecSignature::default()), k);
+        // Distinct DFGs stay distinct under any shared signature.
+        let k2 = dfg_key(&listing1_dfg());
+        assert_ne!(spec_key(k, SpecSignature::generic(2)), spec_key(k2, SpecSignature::generic(2)));
     }
 
     #[test]

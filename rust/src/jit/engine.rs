@@ -31,6 +31,86 @@ pub struct FnProfile {
     pub wall: Duration,
 }
 
+/// Bucket count for [`Histogram`]: bucket 0 holds the value 0, bucket k
+/// holds `[2^(k-1), 2^k)`, the top bucket absorbs everything above.
+pub const HIST_BUCKETS: usize = 33;
+
+/// Log2-bucketed histogram of per-invocation observations (trip counts,
+/// offloaded batch sizes). Cheap enough to update on every completed
+/// invocation; the adaptive respecialization controller reads the
+/// dominant bucket to pick unroll factors and tier boundaries.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Histogram {
+    pub buckets: [u64; HIST_BUCKETS],
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram { buckets: [0; HIST_BUCKETS] }
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram::default()
+    }
+
+    /// Bucket index for a value (0 → 0, otherwise `1 + floor(log2 v)`).
+    pub fn bucket_of(v: u64) -> usize {
+        if v == 0 {
+            0
+        } else {
+            (64 - v.leading_zeros() as usize).min(HIST_BUCKETS - 1)
+        }
+    }
+
+    /// Smallest value falling into bucket `b` (its representative).
+    pub fn bucket_floor(b: usize) -> u64 {
+        if b == 0 {
+            0
+        } else {
+            1u64 << (b - 1)
+        }
+    }
+
+    pub fn record(&mut self, v: u64) {
+        self.record_n(v, 1);
+    }
+
+    pub fn record_n(&mut self, v: u64, n: u64) {
+        self.buckets[Self::bucket_of(v)] += n;
+    }
+
+    pub fn total(&self) -> u64 {
+        self.buckets.iter().sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.total() == 0
+    }
+
+    /// Most-populated bucket (ties resolve to the larger bucket, i.e. the
+    /// larger observed values — the safer side for unroll decisions).
+    pub fn dominant_bucket(&self) -> Option<usize> {
+        let mut best: Option<usize> = None;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            if c > 0 && best.map(|b| c >= self.buckets[b]).unwrap_or(true) {
+                best = Some(i);
+            }
+        }
+        best
+    }
+
+    /// Representative (floor) of the dominant bucket; 0 when empty.
+    pub fn dominant_floor(&self) -> u64 {
+        self.dominant_bucket().map(Self::bucket_floor).unwrap_or(0)
+    }
+
+    pub fn clear(&mut self) {
+        self.buckets = [0; HIST_BUCKETS];
+    }
+}
+
 #[derive(Debug)]
 pub enum EngineError {
     Verify(String),
@@ -58,6 +138,11 @@ pub struct Engine {
     table: Vec<CallTarget>,
     name_to_idx: HashMap<String, u32>,
     profiles: Vec<FnProfile>,
+    /// Per-function trip-count histograms: one observation (the frame's
+    /// back-edge count) per completed bytecode invocation. Offloaded
+    /// (hook) invocations are tracked as batch-size histograms by the
+    /// stub's `RuntimeState` instead.
+    trip_hists: Vec<Histogram>,
     /// JIT-compile wall time per function (Fig 6 phase 2).
     pub jit_times: Vec<Duration>,
     /// Execution fuel ceiling per top-level call (tests override).
@@ -85,7 +170,17 @@ impl Engine {
         }
         let table = (0..compiled.len()).map(CallTarget::Bytecode).collect();
         let profiles = vec![FnProfile::default(); compiled.len()];
-        Ok(Engine { module, compiled, table, name_to_idx, profiles, jit_times, fuel_limit: u64::MAX })
+        let trip_hists = vec![Histogram::default(); compiled.len()];
+        Ok(Engine {
+            module,
+            compiled,
+            table,
+            name_to_idx,
+            profiles,
+            trip_hists,
+            jit_times,
+            fuel_limit: u64::MAX,
+        })
     }
 
     pub fn func_index(&self, name: &str) -> Option<u32> {
@@ -133,6 +228,20 @@ impl Engine {
         for p in &mut self.profiles {
             *p = FnProfile::default();
         }
+    }
+
+    /// Snapshot-and-reset one function's profile row. Called by the
+    /// offload manager at call-table patch time so the monitor only ever
+    /// sees post-patch data — pre-offload interpreter samples must not
+    /// pollute post-offload wall-time averages.
+    pub fn take_profile(&mut self, func: u32) -> FnProfile {
+        std::mem::take(&mut self.profiles[func as usize])
+    }
+
+    /// Per-invocation loop-trip histogram observed for `func` (bytecode
+    /// invocations only).
+    pub fn trip_hist(&self, func: u32) -> &Histogram {
+        &self.trip_hists[func as usize]
     }
 
     /// Call a function by name.
@@ -205,7 +314,9 @@ impl Engine {
                 p.counters.cycles += frame.counters.cycles;
                 p.counters.mem_accesses += frame.counters.mem_accesses;
                 p.counters.insts += frame.counters.insts;
+                p.counters.loop_trips += frame.counters.loop_trips;
                 p.wall += t0.elapsed();
+                self.trip_hists[func as usize].record(frame.counters.loop_trips);
                 Ok(result)
             }
         }
@@ -305,5 +416,61 @@ mod tests {
     fn jit_times_recorded() {
         let e = Engine::new(module_with_square_and_driver()).unwrap();
         assert_eq!(e.jit_times.len(), 2);
+    }
+
+    #[test]
+    fn histogram_buckets_and_dominant() {
+        assert_eq!(Histogram::bucket_of(0), 0);
+        assert_eq!(Histogram::bucket_of(1), 1);
+        assert_eq!(Histogram::bucket_of(2), 2);
+        assert_eq!(Histogram::bucket_of(3), 2);
+        assert_eq!(Histogram::bucket_of(4), 3);
+        assert_eq!(Histogram::bucket_floor(0), 0);
+        assert_eq!(Histogram::bucket_floor(1), 1);
+        assert_eq!(Histogram::bucket_floor(4), 8);
+        assert_eq!(Histogram::bucket_of(u64::MAX), super::HIST_BUCKETS - 1);
+        let mut h = Histogram::new();
+        assert!(h.is_empty());
+        assert_eq!(h.dominant_floor(), 0);
+        h.record_n(5, 3);
+        h.record(100);
+        assert_eq!(h.total(), 4);
+        assert_eq!(h.dominant_bucket(), Some(Histogram::bucket_of(5)));
+        assert_eq!(h.dominant_floor(), 4);
+        h.clear();
+        assert!(h.is_empty());
+    }
+
+    #[test]
+    fn trip_hist_records_per_invocation_trips() {
+        let mut e = Engine::new(module_with_square_and_driver()).unwrap();
+        let mut mem = Memory::new();
+        let h = mem.from_i32(&[1, 2, 3, 4, 5]);
+        e.call("driver", &mut mem, &[Val::P(h), Val::I(5)]).unwrap();
+        let d = e.func_index("driver").unwrap();
+        assert_eq!(e.profile(d).counters.loop_trips, 5);
+        let hist = e.trip_hist(d);
+        assert_eq!(hist.total(), 1);
+        assert_eq!(hist.dominant_bucket(), Some(Histogram::bucket_of(5)));
+        // Leaf function has no loops: all observations in bucket 0.
+        let s = e.func_index("square").unwrap();
+        assert_eq!(e.trip_hist(s).dominant_bucket(), Some(0));
+        assert_eq!(e.trip_hist(s).total(), 5);
+    }
+
+    #[test]
+    fn take_profile_snapshots_and_resets_one_row() {
+        let mut e = Engine::new(module_with_square_and_driver()).unwrap();
+        let mut mem = Memory::new();
+        let h = mem.from_i32(&[1, 2, 3]);
+        e.call("driver", &mut mem, &[Val::P(h), Val::I(3)]).unwrap();
+        let d = e.func_index("driver").unwrap();
+        let s = e.func_index("square").unwrap();
+        let snap = e.take_profile(d);
+        assert_eq!(snap.counters.invocations, 1);
+        assert!(snap.counters.cycles > 0);
+        assert_eq!(e.profile(d).counters, FnCounters::default());
+        // Other rows untouched.
+        assert_eq!(e.profile(s).counters.invocations, 3);
     }
 }

@@ -184,6 +184,11 @@ pub struct FnCounters {
     pub cycles: u64,
     pub mem_accesses: u64,
     pub insts: u64,
+    /// Backward jumps taken (loop back-edges). Per completed invocation
+    /// this is the observed trip count of the function's loops — the
+    /// signal the adaptive respecialization controller buckets to choose
+    /// unroll factors (`offload::adapt`).
+    pub loop_trips: u64,
 }
 
 /// A request to run a callee made from inside the interpreter; the engine
@@ -350,11 +355,18 @@ impl Frame {
                 }
                 Bc::Syscall => { /* opaque host effect; cost accounted */ }
                 Bc::Jmp { to } => {
+                    if *to <= self.pc {
+                        self.counters.loop_trips += 1;
+                    }
                     self.pc = *to;
                     continue;
                 }
                 Bc::JmpIf { c, t, f: fb } => {
-                    self.pc = if slot!(*c).as_i32() != 0 { *t } else { *fb };
+                    let target = if slot!(*c).as_i32() != 0 { *t } else { *fb };
+                    if target <= self.pc {
+                        self.counters.loop_trips += 1;
+                    }
+                    self.pc = target;
                     continue;
                 }
                 Bc::Ret { v } => {
@@ -422,6 +434,7 @@ mod tests {
         assert_eq!(frame.counters.mem_accesses, 20); // 10 loads + 10 stores
         assert!(frame.counters.cycles > frame.counters.insts);
         assert_eq!(frame.counters.invocations, 1);
+        assert_eq!(frame.counters.loop_trips, 10, "one back-edge per iteration");
     }
 
     #[test]

@@ -5,5 +5,5 @@ pub mod bytecode;
 pub mod engine;
 pub mod interp;
 pub use bytecode::{compile_fn, Bc, CompileError, CompiledFn};
-pub use engine::{Engine, EngineError, FnProfile, Hook};
+pub use engine::{Engine, EngineError, FnProfile, Histogram, Hook};
 pub use interp::{ArrayBuf, FnCounters, Frame, Memory, Trap, Val};

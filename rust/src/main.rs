@@ -12,7 +12,8 @@
 use tlo::util::cli::Args;
 
 const USAGE: &str = "subcommands: table1 | table2 [--device NAME] | video [--frames N --riffa] \
-| serve [--tenants N --shards K --requests R --grid RxC --tagged --no-verify] | devices";
+| serve [--tenants N --shards K --requests R --grid RxC --tagged --no-adapt --no-verify] \
+| devices";
 
 fn main() {
     let args = Args::from_env(&[
@@ -185,6 +186,10 @@ fn serve(args: &Args) {
         shards,
         grid,
         seed: args.get_u64("seed", 0x5EED),
+        // Live adaptive respecialization is on by default on the serve
+        // path; --no-adapt pins every tenant to its spec'd unroll.
+        adapt: (!args.flag("no-adapt"))
+            .then(tlo::offload::adapt::AdaptParams::default),
         ..Default::default()
     };
     if args.flag("tagged") {
@@ -209,6 +214,14 @@ fn serve(args: &Args) {
     }
     let report = server.run(requests);
     println!("\n{report}");
+    for t in &server.tenants {
+        for r in &t.respecs {
+            println!(
+                "adapt: {} respecialized u{} -> u{} after {} requests",
+                t.spec.name, r.from_unroll, r.to_unroll, r.at_request
+            );
+        }
+    }
 
     if !args.flag("no-verify") {
         let mut ok = true;

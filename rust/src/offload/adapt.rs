@@ -1,0 +1,433 @@
+//! Adaptive respecialization controller (the paper's "live" loop made
+//! actually live).
+//!
+//! The paper motivates run-time offloading with workloads that "may fit
+//! particular datasets or usage scenarios, something which is rarely
+//! foreseeable at design or compile time" — yet a one-shot offload bakes
+//! in a static unroll factor forever. This module closes the loop: the
+//! monitor's per-function [`FnProfile`] rows grow per-call-site
+//! trip-count histograms ([`Engine::trip_hist`]) while the stub grows
+//! batch-size histograms (`RuntimeState::batch_hist`), and a tier policy
+//! walks each hot function through
+//!
+//! ```text
+//! Interpreter ──hot──▶ Generic ──profile──▶ Specialized
+//!      ▲                  │  ▲                  │
+//!      └───rollback───────┘  └────demotion──────┘
+//! ```
+//!
+//! * **Interpreter → Generic**: once the function is hot (cycles +
+//!   invocations over the promotion thresholds) and its dominant trip
+//!   count clears the batch floor, the generic artifact (unroll =
+//!   `generic_unroll`) is routed and patched in.
+//! * **Generic → Specialized**: every `decision_window` offloaded
+//!   invocations the observed mean batch size picks a target unroll
+//!   ([`target_unroll`]); [`OffloadManager::reconfigure`] re-extracts the
+//!   DFG at that factor (reusing `dfg/extract`'s unroll machinery),
+//!   routes it under the [`SpecSignature`] cache key — generic and
+//!   specialized artifacts coexist — and swaps the call-table stub in
+//!   place iff the analytic pipeline model prefers it at the observed
+//!   batch size.
+//! * **Demotion**: a batch-size shift that makes the specialized artifact
+//!   model worse swaps the generic artifact back (a cache hit, never a
+//!   re-route); the manager's existing rollback window still demotes any
+//!   offloaded tier to the interpreter when it loses to software.
+//!
+//! Every transition is traced ([`TierTransition`]) so tests and the CLI
+//! can assert "the trace shows a tier transition".
+
+use std::collections::HashMap;
+
+use crate::jit::engine::{Engine, Histogram};
+use crate::offload::{OffloadManager, Reconfig};
+
+/// Execution tier of one function.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Tier {
+    /// Software bytecode (profiled, not offloaded).
+    Interpreter,
+    /// Offloaded with the generic (no-trip-assumption) artifact.
+    Generic,
+    /// Offloaded with a profile-chosen unroll specialization.
+    Specialized,
+}
+
+impl std::fmt::Display for Tier {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Tier::Interpreter => write!(f, "interpreter"),
+            Tier::Generic => write!(f, "generic"),
+            Tier::Specialized => write!(f, "specialized"),
+        }
+    }
+}
+
+/// Controller tunables.
+#[derive(Clone, Debug)]
+pub struct AdaptParams {
+    /// Interpreter cycles before a function is considered hot.
+    pub hot_cycles: u64,
+    /// Invocations before a function is considered hot.
+    pub hot_invocations: u64,
+    /// Unroll factor of the generic tier.
+    pub generic_unroll: usize,
+    /// Specialization candidates (profile-chosen among these).
+    pub candidate_unrolls: Vec<usize>,
+    /// A candidate `u` is viable only when `batch / u >= min_lanes` —
+    /// lanes must still amortize the pipeline fill.
+    pub min_lanes: u64,
+    /// Dominant trip counts below this stay on the interpreter (transfer
+    /// overhead can never win on tiny batches).
+    pub min_batch: u64,
+    /// Offloaded invocations between tier decisions.
+    pub decision_window: u64,
+}
+
+impl Default for AdaptParams {
+    fn default() -> Self {
+        AdaptParams {
+            hot_cycles: 10_000,
+            hot_invocations: 2,
+            generic_unroll: 1,
+            candidate_unrolls: vec![2, 4, 8],
+            min_lanes: 4,
+            min_batch: 4,
+            decision_window: 4,
+        }
+    }
+}
+
+/// One traced tier transition.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TierTransition {
+    pub from: Tier,
+    pub to: Tier,
+    /// Unroll factor of the artifact live *after* the transition (1 …;
+    /// the generic factor when `to` is `Interpreter`-adjacent bookkeeping).
+    pub unroll: usize,
+    /// Total invocations (interpreted + offloaded) observed by the
+    /// controller when the transition fired.
+    pub at_invocations: u64,
+}
+
+/// Per-function controller state.
+#[derive(Clone, Debug)]
+pub struct FnAdapt {
+    pub tier: Tier,
+    /// Unroll of the live artifact (generic factor while on the
+    /// interpreter — the factor a promotion would install).
+    pub unroll: usize,
+    /// Offloaded batch sizes observed by the controller (lifetime).
+    pub batch_hist: Histogram,
+    pub transitions: Vec<TierTransition>,
+    /// Generic→Specialized swaps performed.
+    pub respecializations: u64,
+    /// Sticky analysis rejection (no point re-trying extraction).
+    pub reject: Option<String>,
+    total_invocations: u64,
+    // Interpreter-tier deltas against the engine's cumulative row.
+    last_seen_invocations: u64,
+    // Offloaded-tier deltas against the RuntimeState row.
+    last_state_invocations: u64,
+    last_state_elements: u64,
+    // Decision-window accumulators (reset at every decision).
+    window_count: u64,
+    window_elements: u64,
+}
+
+impl FnAdapt {
+    fn new(generic_unroll: usize) -> FnAdapt {
+        FnAdapt {
+            tier: Tier::Interpreter,
+            unroll: generic_unroll,
+            batch_hist: Histogram::new(),
+            transitions: Vec::new(),
+            respecializations: 0,
+            reject: None,
+            total_invocations: 0,
+            last_seen_invocations: 0,
+            last_state_invocations: 0,
+            last_state_elements: 0,
+            window_count: 0,
+            window_elements: 0,
+        }
+    }
+
+    fn transition(&mut self, to: Tier, unroll: usize) -> TierTransition {
+        let t = TierTransition {
+            from: self.tier,
+            to,
+            unroll,
+            at_invocations: self.total_invocations,
+        };
+        self.transitions.push(t);
+        self.tier = to;
+        self.unroll = unroll;
+        self.window_count = 0;
+        self.window_elements = 0;
+        self.last_state_invocations = 0;
+        self.last_state_elements = 0;
+        t
+    }
+}
+
+/// Profile-chosen unroll factor: the largest candidate whose lane count
+/// at the observed batch still amortizes the pipeline fill, else the
+/// generic tier's factor.
+pub fn target_unroll(params: &AdaptParams, observed_batch: u64) -> usize {
+    let mut best = params.generic_unroll;
+    let mut cands = params.candidate_unrolls.clone();
+    cands.sort_unstable();
+    for &u in &cands {
+        if u > params.generic_unroll && observed_batch / u as u64 >= params.min_lanes {
+            best = u;
+        }
+    }
+    best
+}
+
+pub struct AdaptController {
+    pub params: AdaptParams,
+    states: HashMap<u32, FnAdapt>,
+}
+
+impl AdaptController {
+    pub fn new(params: AdaptParams) -> AdaptController {
+        AdaptController { params, states: HashMap::new() }
+    }
+
+    pub fn state(&self, func: u32) -> Option<&FnAdapt> {
+        self.states.get(&func)
+    }
+
+    pub fn tier(&self, func: u32) -> Tier {
+        self.states.get(&func).map(|s| s.tier).unwrap_or(Tier::Interpreter)
+    }
+
+    pub fn unroll(&self, func: u32) -> usize {
+        self.states.get(&func).map(|s| s.unroll).unwrap_or(self.params.generic_unroll)
+    }
+
+    pub fn transitions(&self, func: u32) -> &[TierTransition] {
+        self.states.get(&func).map(|s| s.transitions.as_slice()).unwrap_or(&[])
+    }
+
+    pub fn respecializations(&self, func: u32) -> u64 {
+        self.states.get(&func).map(|s| s.respecializations).unwrap_or(0)
+    }
+
+    /// One monitor tick for `func`: fold new profile/stub observations
+    /// into the histograms, then run the tier policy. Returns the
+    /// transition if one fired.
+    pub fn observe(
+        &mut self,
+        mgr: &mut OffloadManager,
+        engine: &mut Engine,
+        func: u32,
+    ) -> Option<TierTransition> {
+        let p = self.params.clone();
+        let st = self
+            .states
+            .entry(func)
+            .or_insert_with(|| FnAdapt::new(p.generic_unroll));
+
+        if st.tier != Tier::Interpreter && !engine.is_patched(func) {
+            // The manager's rollback window (or a trap) demoted the
+            // function to software behind our back: track it.
+            let prof = engine.profile(func);
+            st.last_seen_invocations = prof.counters.invocations;
+            return Some(st.transition(Tier::Interpreter, p.generic_unroll));
+        }
+
+        match st.tier {
+            Tier::Interpreter => {
+                let prof = engine.profile(func);
+                let d = prof.counters.invocations.saturating_sub(st.last_seen_invocations);
+                st.last_seen_invocations = prof.counters.invocations;
+                st.total_invocations += d;
+                if st.reject.is_some() {
+                    return None;
+                }
+                if prof.counters.cycles < p.hot_cycles
+                    || prof.counters.invocations < p.hot_invocations
+                {
+                    return None;
+                }
+                // Size threshold: tiny trip counts never amortize the
+                // transfer, stay in software.
+                if engine.trip_hist(func).dominant_floor() < p.min_batch {
+                    return None;
+                }
+                match mgr.offload_with(
+                    engine,
+                    func,
+                    p.generic_unroll,
+                    crate::dfe::cache::SpecSignature::generic(p.generic_unroll),
+                    None,
+                ) {
+                    Ok(_) => Some(st.transition(Tier::Generic, p.generic_unroll)),
+                    Err(reason) => {
+                        st.reject = Some(reason.to_string());
+                        None
+                    }
+                }
+            }
+            Tier::Generic | Tier::Specialized => {
+                let rt = mgr.state(func)?;
+                // Exact per-invocation deltas from the stub's cumulative
+                // counters — a tick folding several invocations must not
+                // charge the last batch size to all of them.
+                let (inv, elements) = {
+                    let s = rt.borrow();
+                    (s.invocations, s.total_elements)
+                };
+                let d = inv.saturating_sub(st.last_state_invocations);
+                if d == 0 {
+                    return None;
+                }
+                let d_elems = elements.saturating_sub(st.last_state_elements);
+                st.last_state_invocations = inv;
+                st.last_state_elements = elements;
+                st.total_invocations += d;
+                st.batch_hist.record_n(d_elems / d, d);
+                st.window_count += d;
+                st.window_elements += d_elems;
+                if st.window_count < p.decision_window {
+                    return None;
+                }
+                let observed = st.window_elements / st.window_count.max(1);
+                st.window_count = 0;
+                st.window_elements = 0;
+                let target = target_unroll(&p, observed);
+                if target == st.unroll {
+                    return None;
+                }
+                // Demotion back to the generic tier re-uses the generic
+                // signature — a guaranteed cache hit, never a re-route.
+                let bucket = if target == p.generic_unroll {
+                    0
+                } else {
+                    Histogram::bucket_of(observed)
+                };
+                match mgr.reconfigure(engine, func, target, bucket, Some(observed)) {
+                    Ok(Reconfig::Swapped { .. }) => {
+                        let to = if target > p.generic_unroll {
+                            Tier::Specialized
+                        } else {
+                            Tier::Generic
+                        };
+                        if to == Tier::Specialized {
+                            st.respecializations += 1;
+                        }
+                        Some(st.transition(to, target))
+                    }
+                    // The model still prefers the live artifact (or the
+                    // candidate failed to extract/route): stay put.
+                    Ok(Reconfig::Kept { .. }) | Err(_) => None,
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::func::{FuncBuilder, Module};
+    use crate::ir::instr::Ty;
+    use crate::jit::interp::{Memory, Val};
+    use crate::offload::{OffloadManager, OffloadParams};
+
+    fn fig2_module() -> Module {
+        let mut m = Module::new();
+        let mut b = FuncBuilder::new(
+            "fig2",
+            &[("C", Ty::Ptr), ("A", Ty::Ptr), ("B", Ty::Ptr), ("n", Ty::I32)],
+        );
+        let (c, a, bb, n) = (b.param(0), b.param(1), b.param(2), b.param(3));
+        let zero = b.const_i32(0);
+        b.counted_loop(zero, n, |b, i| {
+            let av = b.load(Ty::I32, a, i);
+            let bv = b.load(Ty::I32, bb, i);
+            let c3 = b.const_i32(3);
+            let t = b.mul(bv, c3);
+            let s = b.add(av, t);
+            let c1 = b.const_i32(1);
+            let r = b.add(s, c1);
+            b.store(Ty::I32, c, i, r);
+        });
+        m.add(b.ret(None));
+        m
+    }
+
+    #[test]
+    fn target_unroll_is_profile_driven() {
+        let p = AdaptParams {
+            candidate_unrolls: vec![2, 4, 8],
+            min_lanes: 4,
+            generic_unroll: 1,
+            ..Default::default()
+        };
+        assert_eq!(target_unroll(&p, 0), 1);
+        assert_eq!(target_unroll(&p, 7), 1); // 7/2 = 3 lanes < 4
+        assert_eq!(target_unroll(&p, 8), 2);
+        assert_eq!(target_unroll(&p, 16), 4);
+        assert_eq!(target_unroll(&p, 1000), 8);
+    }
+
+    #[test]
+    fn tiny_trip_counts_stay_on_the_interpreter() {
+        let mut engine = crate::jit::engine::Engine::new(fig2_module()).unwrap();
+        let mut mem = Memory::new();
+        let (ha, hb, hc) = (mem.alloc_i32(4), mem.alloc_i32(4), mem.alloc_i32(4));
+        let args = [Val::P(hc), Val::P(ha), Val::P(hb), Val::I(2)];
+        let mut mgr =
+            OffloadManager::new(OffloadParams { min_dfg_nodes: 1, ..Default::default() });
+        let mut ctl = AdaptController::new(AdaptParams {
+            hot_cycles: 1,
+            hot_invocations: 1,
+            min_batch: 16,
+            ..Default::default()
+        });
+        let func = engine.func_index("fig2").unwrap();
+        for _ in 0..8 {
+            engine.call_idx(func, &mut mem, &args).unwrap();
+            assert!(ctl.observe(&mut mgr, &mut engine, func).is_none());
+        }
+        assert_eq!(ctl.tier(func), Tier::Interpreter);
+        assert!(!engine.is_patched(func), "size threshold must keep it in software");
+    }
+
+    #[test]
+    fn rejected_function_sticks_to_interpreter() {
+        // atax is multi-SCoP: the promotion attempt must fail once and
+        // never be retried.
+        let mut m = Module::new();
+        m.add(crate::workloads::polybench::atax());
+        let mut engine = crate::jit::engine::Engine::new(m).unwrap();
+        let mut mem = Memory::new();
+        let n = 6usize;
+        let ha = mem.from_i32(&vec![1; n * n]);
+        let hx = mem.from_i32(&vec![2; n]);
+        let hy = mem.alloc_i32(n);
+        let htmp = mem.alloc_i32(n);
+        let args =
+            [Val::P(ha), Val::P(hx), Val::P(hy), Val::P(htmp), Val::I(n as i32)];
+        let mut mgr =
+            OffloadManager::new(OffloadParams { min_dfg_nodes: 1, ..Default::default() });
+        let mut ctl = AdaptController::new(AdaptParams {
+            hot_cycles: 1,
+            hot_invocations: 1,
+            min_batch: 1,
+            ..Default::default()
+        });
+        let func = engine.func_index("atax").unwrap();
+        for _ in 0..3 {
+            engine.call_idx(func, &mut mem, &args).unwrap();
+            assert!(ctl.observe(&mut mgr, &mut engine, func).is_none());
+        }
+        assert_eq!(ctl.tier(func), Tier::Interpreter);
+        let reject = ctl.state(func).unwrap().reject.clone().unwrap();
+        assert!(reject.contains("SCoP"), "{reject}");
+    }
+}

@@ -7,6 +7,7 @@
 //! the execution time and we roll back to the initial software should the
 //! produced implementation perform worse than the original one").
 
+pub mod adapt;
 pub mod server;
 pub mod stub;
 
@@ -16,12 +17,12 @@ use std::rc::Rc;
 use std::time::Duration;
 
 use crate::analysis::scop::analyze_function;
-use crate::dfe::cache::{dfg_key, CachedConfig, ConfigCache};
+use crate::dfe::cache::{dfg_key, spec_key, CachedConfig, ConfigCache, SpecSignature};
 use crate::dfe::grid::Grid;
 use crate::dfe::resource::{device_by_name, Device};
 use crate::dfe::sim::CycleSim;
 use crate::dfg::extract::{extract, OffloadDfg};
-use crate::jit::engine::Engine;
+use crate::jit::engine::{Engine, FnProfile, Histogram};
 use crate::jit::interp::Val;
 use crate::par::{place_and_route, ParParams, ParStats};
 use crate::trace::{Phase, Tracer};
@@ -29,6 +30,21 @@ use crate::transport::{PcieParams, PcieSim};
 use crate::util::prng::Rng;
 
 use stub::{run_offloaded, DfeBackend, StubReport, TimeModel};
+
+/// Which sim-side numerics engine the stub runs when no PJRT runtime is
+/// attached. `Auto` is the production choice; the pinned variants exist
+/// for the differential conformance suite, which asserts bit-identity of
+/// every backend through the real offload stub.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum SimBackendChoice {
+    /// Compiled wave executor when the config lowered, image eval otherwise.
+    #[default]
+    Auto,
+    /// Cycle-accurate elastic overlay simulation (slowest, independent).
+    CycleSim,
+    /// Per-lane execution-image evaluation.
+    Image,
+}
 
 /// Manager tunables.
 #[derive(Clone, Debug)]
@@ -49,6 +65,8 @@ pub struct OffloadParams {
     /// Seconds per interpreter cycle (virtual host clock).
     pub sec_per_cycle: f64,
     pub cache_capacity: usize,
+    /// Sim-side numerics backend (conformance suite pins this).
+    pub sim_backend: SimBackendChoice,
 }
 
 impl Default for OffloadParams {
@@ -64,6 +82,7 @@ impl Default for OffloadParams {
             seed: 0xD0E,
             sec_per_cycle: 1e-9,
             cache_capacity: 32,
+            sim_backend: SimBackendChoice::Auto,
         }
     }
 }
@@ -99,13 +118,19 @@ pub struct OffloadRecord {
     pub inputs: usize,
     pub outputs: usize,
     pub calc: usize,
+    /// Extraction unroll factor of the installed artifact.
+    pub unroll: usize,
     pub par_stats: Option<ParStats>,
     pub cache_hit: bool,
     pub config_time: Duration,
     pub constants_time: Duration,
 }
 
-/// Live monitoring state shared with the stub hook.
+/// Live monitoring state shared with the stub hook. A respecialization
+/// swap installs a *fresh* state on purpose: the rollback window and
+/// per-invocation averages are per-tier, so a new artifact is judged on
+/// its own samples (the serve layer folds retired states into cumulative
+/// report totals; `baseline_per_inv` and `pre_patch` carry across swaps).
 #[derive(Debug, Default)]
 pub struct RuntimeState {
     pub invocations: u64,
@@ -114,6 +139,44 @@ pub struct RuntimeState {
     pub last_report: StubReport,
     pub failed: bool,
     pub rolled_back: bool,
+    /// Per-invocation batch sizes (innermost iterations served), the
+    /// offloaded-side counterpart of the engine's trip-count histogram.
+    pub batch_hist: Histogram,
+    /// Total innermost iterations served through the stub.
+    pub total_elements: u64,
+    /// Software-era profile snapshot taken when the call table was
+    /// patched (the engine row is reset at that moment so the monitor
+    /// only sees post-patch data).
+    pub pre_patch: FnProfile,
+}
+
+/// The artifact currently patched in for a function — respecialization
+/// bookkeeping: [`OffloadManager::reconfigure`] compares the live
+/// artifact against candidates with the analytic pipeline model.
+#[derive(Clone)]
+pub struct ActiveOffload {
+    pub unroll: usize,
+    pub sig: SpecSignature,
+    pub key: u64,
+    pub cached: CachedConfig,
+}
+
+/// Outcome of a respecialization attempt ([`OffloadManager::reconfigure`]).
+#[derive(Clone, Debug)]
+pub enum Reconfig {
+    /// The candidate artifact modeled better and was patched in place.
+    Swapped {
+        record: OffloadRecord,
+        /// 0 when nothing was live before (fresh install).
+        from_unroll: usize,
+    },
+    /// The live artifact still models better at the observed batch size.
+    Kept {
+        current_unroll: usize,
+        candidate_unroll: usize,
+        current: Duration,
+        candidate: Duration,
+    },
 }
 
 pub struct OffloadManager {
@@ -124,6 +187,7 @@ pub struct OffloadManager {
     pub device: Device,
     rng: Rng,
     states: HashMap<u32, Rc<RefCell<RuntimeState>>>,
+    active: HashMap<u32, ActiveOffload>,
 }
 
 impl OffloadManager {
@@ -137,12 +201,18 @@ impl OffloadManager {
             rng: Rng::new(params.seed),
             device,
             states: HashMap::new(),
+            active: HashMap::new(),
             params,
         }
     }
 
     pub fn state(&self, func: u32) -> Option<Rc<RefCell<RuntimeState>>> {
         self.states.get(&func).cloned()
+    }
+
+    /// The artifact currently patched in for `func`, if any.
+    pub fn active(&self, func: u32) -> Option<&ActiveOffload> {
+        self.active.get(&func)
     }
 
     /// Analysis phase only (used by the Table-I harness): SCoPs, DFG
@@ -168,12 +238,61 @@ impl OffloadManager {
         (offs, rejects, t0.elapsed())
     }
 
-    /// Full offload attempt on `func`. On success the engine's call table
-    /// is patched; numerics subsequently flow through the DFE backend.
+    /// Full offload attempt on `func` at the params' static unroll. On
+    /// success the engine's call table is patched; numerics subsequently
+    /// flow through the DFE backend. The adaptive controller
+    /// ([`adapt::AdaptController`]) uses [`Self::reconfigure`] instead.
     pub fn try_offload(
         &mut self,
         engine: &mut Engine,
         func: u32,
+        pjrt: Option<&mut crate::runtime::PjrtRuntime>,
+    ) -> Result<OffloadRecord, RejectReason> {
+        let unroll = self.params.unroll;
+        self.offload_with(engine, func, unroll, SpecSignature::generic(unroll), pjrt)
+    }
+
+    /// Cache-or-route `dfg` under `key`; returns the entry, whether it
+    /// hit, and the P&R stats on a miss.
+    fn route_cached(
+        &mut self,
+        dfg: &crate::dfg::graph::Dfg,
+        key: u64,
+    ) -> Result<(CachedConfig, bool, Option<ParStats>), RejectReason> {
+        if let Some(c) = self.cache.get(key) {
+            return Ok((c.clone(), true, None));
+        }
+        let tracer = self.tracer.clone();
+        let grid = self.params.grid;
+        let par = self.params.par;
+        let rng = &mut self.rng;
+        let result = tracer
+            .borrow_mut()
+            .span(Phase::PlaceRoute, || place_and_route(dfg, grid, &par, rng))
+            .map_err(|e| RejectReason::Unroutable(e.to_string()))?;
+        let stats = result.stats;
+        // CachedConfig::new lowers the wave executor once here; every
+        // later cache hit reuses the compiled artifact.
+        let c = CachedConfig::new(
+            result.config,
+            result.image,
+            format!("dfe_{}x{}", grid.rows, grid.cols),
+        );
+        self.cache.insert(key, c.clone());
+        Ok((c, false, Some(stats)))
+    }
+
+    /// The full pipeline at an explicit unroll factor and specialization
+    /// signature: analysis → cache/P&R (keyed by [`spec_key`]) → config
+    /// download → call-table patch. Patching over a live hook is the
+    /// in-place respecialization swap: callers never observe a window
+    /// where the function is unpatched.
+    pub(crate) fn offload_with(
+        &mut self,
+        engine: &mut Engine,
+        func: u32,
+        unroll: usize,
+        sig: SpecSignature,
         pjrt: Option<&mut crate::runtime::PjrtRuntime>,
     ) -> Result<OffloadRecord, RejectReason> {
         let tracer = self.tracer.clone();
@@ -181,9 +300,8 @@ impl OffloadManager {
 
         // ---- 1. analysis (Fig 6 phase 1) ----
         let (off, single) = tracer.borrow_mut().span(Phase::Analysis, {
-            let params_unroll = self.params.unroll;
             let f = &engine.module.funcs[func as usize];
-            move || extract_single_scop(f, params_unroll)
+            move || extract_single_scop(f, unroll)
         })?;
 
         let stats = off.dfg.stats();
@@ -192,33 +310,11 @@ impl OffloadManager {
             return Err(RejectReason::TooSmall { nodes, min: self.params.min_dfg_nodes });
         }
 
-        // ---- 2. place & route, via the configuration cache ----
-        let key = dfg_key(&off.dfg);
-        let mut par_stats = None;
-        let mut cache_hit = true;
-        let cached = if let Some(c) = self.cache.get(key) {
-            c.clone()
-        } else {
-            cache_hit = false;
-            let grid = self.params.grid;
-            let par = self.params.par;
-            let rng = &mut self.rng;
-            let dfg = &off.dfg;
-            let result = tracer
-                .borrow_mut()
-                .span(Phase::PlaceRoute, || place_and_route(dfg, grid, &par, rng))
-                .map_err(|e| RejectReason::Unroutable(e.to_string()))?;
-            par_stats = Some(result.stats);
-            // CachedConfig::new lowers the wave executor once here; every
-            // later cache hit reuses the compiled artifact.
-            let c = CachedConfig::new(
-                result.config,
-                result.image,
-                format!("dfe_{}x{}", grid.rows, grid.cols),
-            );
-            self.cache.insert(key, c.clone());
-            c
-        };
+        // ---- 2. place & route, via the configuration cache (keyed by
+        //         structure × specialization signature, so generic and
+        //         specialized artifacts coexist) ----
+        let key = spec_key(dfg_key(&off.dfg), sig);
+        let (cached, cache_hit, par_stats) = self.route_cached(&off.dfg, key)?;
 
         // ---- 3. configuration + constants download (modeled) ----
         let cfg_words = cached.config.config_words() as u64;
@@ -255,23 +351,52 @@ impl OffloadManager {
                     .map_err(|e| RejectReason::Unroutable(format!("artifact: {e}")))?;
                 DfeBackend::Pjrt(exe)
             }
-            // Sim side: the compiled wave executor when the config lowered
-            // (always, for routed configs), the image evaluator otherwise.
-            None => match &cached.fabric {
-                Some(f) => DfeBackend::Fabric(f.clone()),
-                None => DfeBackend::Sim,
+            None => match self.params.sim_backend {
+                SimBackendChoice::CycleSim => {
+                    DfeBackend::Cycle(Rc::new(cached.config.clone()))
+                }
+                SimBackendChoice::Image => DfeBackend::Sim,
+                // Sim side: the compiled wave executor when the config
+                // lowered (always, for routed configs), else image eval.
+                SimBackendChoice::Auto => match &cached.fabric {
+                    Some(f) => DfeBackend::Fabric(f.clone()),
+                    None => DfeBackend::Sim,
+                },
             },
         };
         let jit_time = engine.jit_times.get(func as usize).copied().unwrap_or_default();
         tracer.borrow_mut().simulated(Phase::Jit, jit_time.max(Duration::from_micros(50)));
 
         let profile = engine.profile(func);
-        let baseline_per_inv = Duration::from_secs_f64(
-            self.params.sec_per_cycle * profile.counters.cycles as f64
-                / profile.counters.invocations.max(1) as f64,
-        );
+        let prev = self
+            .states
+            .get(&func)
+            .map(|s| {
+                let b = s.borrow();
+                (b.baseline_per_inv, b.pre_patch)
+            });
+        let baseline_per_inv = if profile.counters.cycles > 0 {
+            Duration::from_secs_f64(
+                self.params.sec_per_cycle * profile.counters.cycles as f64
+                    / profile.counters.invocations.max(1) as f64,
+            )
+        } else {
+            // Re-patching over a live hook (respecialization): the
+            // post-patch row carries no interpreter cycles, so the
+            // software baseline established at the original patch stays.
+            prev.map(|p| p.0).unwrap_or_default()
+        };
+        // Patch-time snapshot/reset: the monitor must only see post-patch
+        // data — pre-offload interpreter samples would pollute the
+        // post-offload wall-time averages. On a respecialization the row
+        // is hook-era (zero cycles), so the original software-era
+        // snapshot is carried forward instead.
+        let snap = engine.take_profile(func);
+        let pre_patch =
+            if snap.counters.cycles > 0 { snap } else { prev.map(|p| p.1).unwrap_or(snap) };
         let state = Rc::new(RefCell::new(RuntimeState {
             baseline_per_inv,
+            pre_patch,
             ..Default::default()
         }));
         self.states.insert(func, state.clone());
@@ -281,6 +406,7 @@ impl OffloadManager {
         let tracer_h = tracer.clone();
         let off_h = off.clone();
         let single_h = single.clone();
+        let hook_unroll = off.unroll.max(1) as u64;
         engine.patch_hook(
             func,
             Box::new(move |mem, args| {
@@ -293,6 +419,10 @@ impl OffloadManager {
                         let mut st = state.borrow_mut();
                         st.invocations += 1;
                         st.virtual_offload += report.offload_time();
+                        let elements =
+                            report.elements * hook_unroll + report.remainder_elements;
+                        st.batch_hist.record(elements);
+                        st.total_elements += elements;
                         st.last_report = report;
                         drop(st);
                         let mut t = tracer_h.borrow_mut();
@@ -308,6 +438,7 @@ impl OffloadManager {
                 }
             }),
         );
+        self.active.insert(func, ActiveOffload { unroll, sig, key, cached });
 
         Ok(OffloadRecord {
             func,
@@ -316,11 +447,76 @@ impl OffloadManager {
             inputs: stats.inputs,
             outputs: stats.outputs,
             calc: stats.calc,
+            unroll,
             par_stats,
             cache_hit,
             config_time,
             constants_time,
         })
+    }
+
+    /// Live respecialization: re-extract at `unroll`, fetch or
+    /// place-&-route the artifact under the specialization signature
+    /// (unroll × trip bucket), and swap the call-table stub in place iff
+    /// the analytic pipeline model prefers the candidate at the observed
+    /// batch size (`None` = unconditional swap). Ties favor the smaller
+    /// unroll — the simpler artifact. Sim-side only: PJRT artifacts are
+    /// installed once by [`Self::try_offload`] and not respecialized.
+    pub fn reconfigure(
+        &mut self,
+        engine: &mut Engine,
+        func: u32,
+        unroll: usize,
+        trip_bucket: usize,
+        observed_batch: Option<u64>,
+    ) -> Result<Reconfig, RejectReason> {
+        let sig = SpecSignature::new(unroll, trip_bucket);
+        let current = self.active.get(&func).cloned().filter(|_| engine.is_patched(func));
+        let (cur, batch) = match (current, observed_batch) {
+            (Some(cur), Some(batch)) => (cur, batch),
+            (cur, _) => {
+                // Nothing live to compare against (or no profile yet):
+                // install unconditionally.
+                let from_unroll = cur.map(|c| c.unroll).unwrap_or(0);
+                let record = self.offload_with(engine, func, unroll, sig, None)?;
+                return Ok(Reconfig::Swapped { record, from_unroll });
+            }
+        };
+        if cur.unroll == unroll {
+            return Ok(Reconfig::Kept {
+                current_unroll: cur.unroll,
+                candidate_unroll: unroll,
+                current: Duration::ZERO,
+                candidate: Duration::ZERO,
+            });
+        }
+        // Route (or cache-hit) the candidate, then let the analytic
+        // pipeline model pick the better artifact at this batch size.
+        let (off, _single) = {
+            let f = &engine.module.funcs[func as usize];
+            extract_single_scop(f, unroll)?
+        };
+        let nodes = off.dfg.len();
+        if nodes < self.params.min_dfg_nodes {
+            return Err(RejectReason::TooSmall { nodes, min: self.params.min_dfg_nodes });
+        }
+        let key = spec_key(dfg_key(&off.dfg), sig);
+        let (cand, _, _) = self.route_cached(&off.dfg, key)?;
+        let est = self.device.estimate(self.params.grid.rows, self.params.grid.cols);
+        let fmax = est.fmax_mhz * 1e6;
+        let t_cur = batch_time(&cur.cached, cur.unroll, batch, fmax);
+        let t_cand = batch_time(&cand, unroll, batch, fmax);
+        let keep = if unroll < cur.unroll { t_cand > t_cur } else { t_cand >= t_cur };
+        if keep {
+            return Ok(Reconfig::Kept {
+                current_unroll: cur.unroll,
+                candidate_unroll: unroll,
+                current: t_cur,
+                candidate: t_cand,
+            });
+        }
+        let record = self.offload_with(engine, func, unroll, sig, None)?;
+        Ok(Reconfig::Swapped { record, from_unroll: cur.unroll })
     }
 
     /// Rollback pass ("roll back to the initial software should the
@@ -344,6 +540,9 @@ impl OffloadManager {
                 st.rolled_back = true;
                 rolled.push(func);
             }
+        }
+        for f in &rolled {
+            self.active.remove(f);
         }
         rolled
     }
@@ -393,6 +592,25 @@ pub(crate) fn pipeline_model(cached: &CachedConfig) -> (f64, f64) {
         Some(f) => (f.fill_latency as f64, f.initiation_interval),
         None => measure_pipeline(&cached.config, cached.image.n_inputs),
     }
+}
+
+/// Modeled DFE execution time for one offloaded batch of `batch`
+/// innermost iterations on `cached` at `unroll`: `lanes = batch / unroll`
+/// stream elements (remainder iterations are charged one lane each —
+/// they execute host-exact but still cost the caller), `fill +
+/// (lanes - 1) · II` cycles at `fmax_hz`. Transfer volume is identical
+/// across unroll factors (same total words), so it cancels out of the
+/// comparison — this is how `pipeline_model` picks the analytically
+/// better artifact per observed batch size.
+pub fn batch_time(cached: &CachedConfig, unroll: usize, batch: u64, fmax_hz: f64) -> Duration {
+    if batch == 0 {
+        return Duration::ZERO;
+    }
+    let (fill, ii) = pipeline_model(cached);
+    let u = unroll.max(1) as u64;
+    let lanes = batch / u + batch % u;
+    let cycles = fill + lanes.saturating_sub(1) as f64 * ii;
+    Duration::from_secs_f64(cycles / fmax_hz.max(1.0))
 }
 
 /// Measure pipeline fill latency and initiation interval on the cycle
@@ -482,6 +700,67 @@ mod tests {
         let st = mgr.state(func).unwrap();
         assert!(st.borrow().virtual_offload > Duration::ZERO);
         assert_eq!(st.borrow().last_report.remainder_elements as i32, (n - 3) % 4);
+    }
+
+    #[test]
+    fn profile_reset_at_patch_monitor_sees_only_post_patch_data() {
+        let mut engine = Engine::new(fig2_module()).unwrap();
+        let mut mem = Memory::new();
+        let n = 500;
+        let (ha, hb) = (mem.alloc_i32(n), mem.alloc_i32(n));
+        let hc = mem.alloc_i32(n);
+        run_fig2(&mut engine, &mut mem, hc, ha, hb, n as i32);
+        let func = engine.func_index("fig2").unwrap();
+        assert!(engine.profile(func).counters.cycles > 0, "warm-up must profile");
+
+        let mut mgr =
+            OffloadManager::new(OffloadParams { min_dfg_nodes: 1, ..Default::default() });
+        mgr.try_offload(&mut engine, func, None).unwrap();
+        // Patch time snapshot/reset: the row is zeroed, the software-era
+        // counters and the baseline survive in the runtime state.
+        assert_eq!(
+            engine.profile(func).counters,
+            crate::jit::interp::FnCounters::default()
+        );
+        let st = mgr.state(func).unwrap();
+        assert!(st.borrow().pre_patch.counters.cycles > 0);
+        assert!(st.borrow().baseline_per_inv > Duration::ZERO);
+
+        // Post-patch data is hook-only: invocations tick, cycles stay 0,
+        // so wall-time averages are not polluted by pre-offload samples.
+        run_fig2(&mut engine, &mut mem, hc, ha, hb, n as i32);
+        run_fig2(&mut engine, &mut mem, hc, ha, hb, n as i32);
+        let prof = engine.profile(func);
+        assert_eq!(prof.counters.invocations, 2);
+        assert_eq!(prof.counters.cycles, 0);
+        let mut mon = crate::profile::Monitor::new(Default::default());
+        assert!(mon.sample(&engine).is_empty(), "no interpreter cycles post-patch");
+        // The stub tracked the offloaded batch sizes.
+        assert_eq!(st.borrow().batch_hist.total(), 2);
+        assert_eq!(st.borrow().total_elements, 2 * n as u64);
+    }
+
+    #[test]
+    fn cycle_sim_backend_is_bit_identical() {
+        let mut engine = Engine::new(fig2_module()).unwrap();
+        let mut mem = Memory::new();
+        let n = 97;
+        let a: Vec<i32> = (0..n).map(|i| i * 3 - 40).collect();
+        let b: Vec<i32> = (0..n).map(|i| 9 - i).collect();
+        let (ha, hb) = (mem.from_i32(&a), mem.from_i32(&b));
+        let hc = mem.alloc_i32(n as usize);
+        let mut mgr = OffloadManager::new(OffloadParams {
+            min_dfg_nodes: 1,
+            unroll: 2,
+            sim_backend: SimBackendChoice::CycleSim,
+            ..Default::default()
+        });
+        let func = engine.func_index("fig2").unwrap();
+        mgr.try_offload(&mut engine, func, None).expect("offload");
+        run_fig2(&mut engine, &mut mem, hc, ha, hb, n);
+        for i in 0..n as usize {
+            assert_eq!(mem.i32s(hc)[i], a[i] + 3 * b[i] + 1, "element {i}");
+        }
     }
 
     #[test]

@@ -30,11 +30,13 @@ use std::fmt;
 use std::rc::Rc;
 use std::time::Duration;
 
-use crate::dfe::cache::{dfg_key, region_key, CacheStats, CachedConfig, ConfigCache};
+use crate::dfe::cache::{
+    dfg_key, region_key, spec_key, CacheStats, CachedConfig, ConfigCache, SpecSignature,
+};
 use crate::dfe::grid::{Grid, Region};
 use crate::dfe::resource::{device_by_name, Device};
 use crate::ir::func::Module;
-use crate::jit::engine::Engine;
+use crate::jit::engine::{Engine, Histogram};
 use crate::jit::interp::{Memory, Val};
 use crate::par::{place_and_route, ParParams};
 use crate::trace::{Phase, Tracer};
@@ -45,6 +47,7 @@ use crate::util::fmt_duration;
 use crate::util::prng::Rng;
 use crate::workloads::{polybench, video};
 
+use super::adapt::{target_unroll, AdaptParams};
 use super::stub::{run_offloaded, DfeBackend, TimeModel};
 use super::{OffloadManager, OffloadParams, RejectReason, RuntimeState};
 
@@ -81,6 +84,13 @@ pub struct ServeParams {
     /// Requests admitted per scheduling round; transfers for the same
     /// shard within a round are coalesced. 0 = one slot per tenant.
     pub batch_window: usize,
+    /// Per-tenant adaptive respecialization (`offload::adapt` policy):
+    /// after each scheduling round, every offloaded tenant's observed
+    /// batch sizes pick a target unroll and the shard-resident artifact
+    /// is respecialized through the shared cache when the pipeline model
+    /// prefers it — shards specialize independently under the
+    /// hotness-weighted scheduler. `None` keeps the static PR-2 behavior.
+    pub adapt: Option<AdaptParams>,
 }
 
 impl Default for ServeParams {
@@ -98,6 +108,7 @@ impl Default for ServeParams {
             seed: 0x5EED,
             reconfig_epsilon: Duration::from_micros(600),
             batch_window: 0,
+            adapt: None,
         }
     }
 }
@@ -130,12 +141,21 @@ pub struct TenantSpec {
 /// A tenant's accepted offload, as scheduled on the shards.
 #[derive(Clone, Debug)]
 pub struct TenantOffload {
-    /// Shared cache key ([`region_key`]) — doubles as the shard-resident
-    /// configuration identity.
+    /// Shared cache key ([`region_key`] over [`spec_key`]) — doubles as
+    /// the shard-resident configuration identity.
     pub key: u64,
     /// Whether admission reused another tenant's routed configuration.
     pub cache_hit: bool,
     pub config_words: u64,
+}
+
+/// One live respecialization on the serve path (tier-transition trace).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RespecEvent {
+    /// Requests the tenant had served when the swap fired.
+    pub at_request: u64,
+    pub from_unroll: usize,
+    pub to_unroll: usize,
 }
 
 /// One admitted tenant: its own engine + address space, plus the live
@@ -159,6 +179,25 @@ pub struct Tenant {
     /// Per-tenant (uncontended) transfer accounting — the same numbers the
     /// single-tenant manager would produce, used for rollback economics.
     pub pcie: Rc<RefCell<PcieSim>>,
+    /// Unroll factor of the live artifact (the spec's factor until the
+    /// adaptive pass respecializes).
+    pub active_unroll: usize,
+    /// The live artifact, kept for the pipeline-model comparison when a
+    /// respecialization candidate is routed.
+    pub cached: Option<CachedConfig>,
+    /// Respecialization trace (tier transitions on the serve path).
+    pub respecs: Vec<RespecEvent>,
+    /// Offloaded totals folded in from runtime states retired by earlier
+    /// respecializations (each swap starts a fresh per-tier state; the
+    /// report sums these with the live state so totals stay cumulative).
+    pub retired_invocations: u64,
+    pub retired_virtual: Duration,
+    /// Offloaded invocations/elements already folded into the decision
+    /// window (mirrors `adapt::FnAdapt`'s delta tracking — keep in sync).
+    adapt_seen: u64,
+    adapt_seen_elements: u64,
+    window_count: u64,
+    window_elements: u64,
 }
 
 /// One shard region's live state.
@@ -303,95 +342,103 @@ impl OffloadServer {
             offload: None,
             state: None,
             pcie: Rc::new(RefCell::new(PcieSim::new(self.params.pcie))),
+            active_unroll: 0,
+            cached: None,
+            respecs: Vec::new(),
+            retired_invocations: 0,
+            retired_virtual: Duration::ZERO,
+            adapt_seen: 0,
+            adapt_seen_elements: 0,
+            window_count: 0,
+            window_elements: 0,
         };
-        if let Err(reason) = self.offload_tenant(&mut tenant) {
+        let unroll = tenant.spec.unroll;
+        if let Err(reason) = offload_tenant_impl(
+            &mut self.cache,
+            &mut self.rng,
+            &self.device,
+            &self.params,
+            self.route_grid,
+            &mut tenant,
+            unroll,
+            0,
+            None,
+        ) {
             tenant.reject = Some(reason.to_string());
         }
         self.tenants.push(tenant);
         Ok(())
     }
 
-    /// The single-tenant pipeline (analysis → cache/P&R → patch), against
-    /// the shard route grid and the *shared* configuration cache.
-    fn offload_tenant(&mut self, t: &mut Tenant) -> std::result::Result<(), RejectReason> {
-        let extraction = {
-            let f = &t.engine.module.funcs[t.func as usize];
-            super::extract_single_scop(f, t.spec.unroll)
+    /// Post-round adaptive pass: fold each offloaded tenant's observed
+    /// batch sizes into its decision window and respecialize the
+    /// shard-resident artifact when the profile picks a different unroll
+    /// and the pipeline model agrees (`offload::adapt` policy, per
+    /// tenant, against the *shared* cache — so a second tenant reaching
+    /// the same specialization is a cache hit).
+    fn adapt_tenant(&mut self, ti: usize, ap: &AdaptParams) {
+        // Exact per-invocation deltas from the stub's cumulative counters
+        // (mirrors `adapt::AdaptController::observe` — keep in sync).
+        let (inv, elements) = {
+            let t = &self.tenants[ti];
+            if t.rolled_back || t.offload.is_none() || !t.engine.is_patched(t.func) {
+                return;
+            }
+            let Some(state) = &t.state else { return };
+            let s = state.borrow();
+            (s.invocations, s.total_elements)
         };
-        let (off, single) = extraction?;
-
-        let nodes = off.dfg.len();
-        if nodes < self.params.min_dfg_nodes {
-            return Err(RejectReason::TooSmall { nodes, min: self.params.min_dfg_nodes });
-        }
-
-        let key = region_key(dfg_key(&off.dfg), self.route_grid);
-        let mut cache_hit = true;
-        let cached = if let Some(c) = self.cache.get(key) {
-            c.clone()
+        let (observed, target) = {
+            let t = &mut self.tenants[ti];
+            let d = inv.saturating_sub(t.adapt_seen);
+            if d == 0 {
+                return;
+            }
+            let d_elems = elements.saturating_sub(t.adapt_seen_elements);
+            t.adapt_seen = inv;
+            t.adapt_seen_elements = elements;
+            t.window_count += d;
+            t.window_elements += d_elems;
+            if t.window_count < ap.decision_window {
+                return;
+            }
+            let observed = t.window_elements / t.window_count.max(1);
+            t.window_count = 0;
+            t.window_elements = 0;
+            // On the serve path the "generic" tier is the tenant's
+            // admission unroll; candidates only specialize beyond it.
+            let mut ap_t = ap.clone();
+            ap_t.generic_unroll = t.spec.unroll;
+            let target = target_unroll(&ap_t, observed);
+            if target == t.active_unroll {
+                return;
+            }
+            (observed, target)
+        };
+        let from = self.tenants[ti].active_unroll;
+        // Demotion back to the spec'd unroll re-uses the admission
+        // signature — a guaranteed cache hit, never a re-route.
+        let bucket = if target == self.tenants[ti].spec.unroll {
+            0
         } else {
-            cache_hit = false;
-            let result =
-                place_and_route(&off.dfg, self.route_grid, &self.params.par, &mut self.rng)
-                    .map_err(|e| RejectReason::Unroutable(e.to_string()))?;
-            // Lower the wave executor once; tenants hitting this entry
-            // (same kernel, same region shape) skip P&R *and* lowering.
-            let c = CachedConfig::new(
-                result.config,
-                result.image,
-                format!("dfe_{}x{}", self.route_grid.rows, self.route_grid.cols),
-            );
-            self.cache.insert(key, c.clone());
-            c
+            Histogram::bucket_of(observed)
         };
-
-        let est = self.device.estimate(self.route_grid.rows, self.route_grid.cols);
-        let (fill, ii) = super::pipeline_model(&cached);
-        let tm = TimeModel {
-            sec_per_cycle: self.params.sec_per_cycle,
-            fmax_hz: est.fmax_mhz * 1e6,
-            fill_latency: fill,
-            initiation_interval: ii,
-        };
-
-        let state = Rc::new(RefCell::new(RuntimeState {
-            baseline_per_inv: t.baseline_per_inv,
-            ..Default::default()
-        }));
-        let config_words = cached.config.config_words() as u64;
-        let image = cached.image.clone();
-        // Numerics run on the compiled wave executor shared through the
-        // cache; `Sim` (per-lane image eval) only if the lowering refused.
-        let backend = match &cached.fabric {
-            Some(f) => DfeBackend::Fabric(f.clone()),
-            None => DfeBackend::Sim,
-        };
-        let pcie = t.pcie.clone();
-        let st = state.clone();
-        t.engine.patch_hook(
-            t.func,
-            Box::new(move |mem, args| {
-                let mut link = pcie.borrow_mut();
-                match run_offloaded(
-                    &off, &single, &image, &backend, &tm, &mut link, mem, args,
-                ) {
-                    Ok(report) => {
-                        let mut s = st.borrow_mut();
-                        s.invocations += 1;
-                        s.virtual_offload += report.offload_time();
-                        s.last_report = report;
-                        Ok(None)
-                    }
-                    Err(trap) => {
-                        st.borrow_mut().failed = true;
-                        Err(trap)
-                    }
-                }
-            }),
+        let swapped = offload_tenant_impl(
+            &mut self.cache,
+            &mut self.rng,
+            &self.device,
+            &self.params,
+            self.route_grid,
+            &mut self.tenants[ti],
+            target,
+            bucket,
+            Some(observed),
         );
-        t.offload = Some(TenantOffload { key, cache_hit, config_words });
-        t.state = Some(state);
-        Ok(())
+        if let Ok(true) = swapped {
+            let t = &mut self.tenants[ti];
+            let at_request = t.served;
+            t.respecs.push(RespecEvent { at_request, from_unroll: from, to_unroll: target });
+        }
     }
 
     /// Serve `requests_per_tenant` requests per tenant to completion and
@@ -579,6 +626,13 @@ impl OffloadServer {
                     }
                 }
             }
+
+            // ---- per-tenant adaptive respecialization pass ----
+            if let Some(ap) = self.params.adapt.clone() {
+                for ti in 0..n_t {
+                    self.adapt_tenant(ti, &ap);
+                }
+            }
         }
         self.report()
     }
@@ -594,13 +648,18 @@ impl OffloadServer {
                 cache_hit: t.offload.as_ref().map(|o| o.cache_hit).unwrap_or(false),
                 rolled_back: t.rolled_back,
                 reject: t.reject.clone(),
+                unroll: t.active_unroll,
+                respecializations: t.respecs.len() as u64,
                 baseline_per_inv: t.baseline_per_inv,
-                virtual_offload: t
-                    .state
-                    .as_ref()
-                    .map(|s| s.borrow().virtual_offload)
-                    .unwrap_or_default(),
-                invocations: t.state.as_ref().map(|s| s.borrow().invocations).unwrap_or(0),
+                // Cumulative across respecializations: states retired by
+                // earlier swaps plus the live one.
+                virtual_offload: t.retired_virtual
+                    + t.state
+                        .as_ref()
+                        .map(|s| s.borrow().virtual_offload)
+                        .unwrap_or_default(),
+                invocations: t.retired_invocations
+                    + t.state.as_ref().map(|s| s.borrow().invocations).unwrap_or(0),
             })
             .collect();
         let shards = self
@@ -625,6 +684,150 @@ impl OffloadServer {
             cache_hit_rate: self.cache.hit_rate(),
         }
     }
+}
+
+/// The single-tenant pipeline (analysis → shared cache/P&R → patch) at an
+/// explicit unroll factor, against the shard route grid. Free function
+/// with split borrows so the adaptive pass can respecialize a tenant that
+/// already lives inside the server. When `observed` is given and an
+/// artifact is already live, the candidate is only swapped in if the
+/// analytic pipeline model prefers it at that batch size (ties favor the
+/// smaller unroll). Returns whether the call table was (re)patched.
+#[allow(clippy::too_many_arguments)]
+fn offload_tenant_impl(
+    cache: &mut ConfigCache,
+    rng: &mut Rng,
+    device: &Device,
+    params: &ServeParams,
+    route_grid: Grid,
+    t: &mut Tenant,
+    unroll: usize,
+    trip_bucket: usize,
+    observed: Option<u64>,
+) -> std::result::Result<bool, RejectReason> {
+    let extraction = {
+        let f = &t.engine.module.funcs[t.func as usize];
+        super::extract_single_scop(f, unroll)
+    };
+    let (off, single) = extraction?;
+
+    let nodes = off.dfg.len();
+    if nodes < params.min_dfg_nodes {
+        return Err(RejectReason::TooSmall { nodes, min: params.min_dfg_nodes });
+    }
+
+    let sig = SpecSignature::new(unroll, trip_bucket);
+    let key = region_key(spec_key(dfg_key(&off.dfg), sig), route_grid);
+    let mut cache_hit = true;
+    let cached = if let Some(c) = cache.get(key) {
+        c.clone()
+    } else {
+        cache_hit = false;
+        let result = place_and_route(&off.dfg, route_grid, &params.par, rng)
+            .map_err(|e| RejectReason::Unroutable(e.to_string()))?;
+        // Lower the wave executor once; tenants hitting this entry
+        // (same kernel, same region shape, same signature) skip P&R
+        // *and* the lowering.
+        let c = CachedConfig::new(
+            result.config,
+            result.image,
+            format!("dfe_{}x{}", route_grid.rows, route_grid.cols),
+        );
+        cache.insert(key, c.clone());
+        c
+    };
+
+    let est = device.estimate(route_grid.rows, route_grid.cols);
+    // Respecialization gate: the model must prefer the candidate at the
+    // observed batch size, else the live artifact stays.
+    if let (Some(batch), Some(cur)) = (observed, t.cached.as_ref()) {
+        if t.engine.is_patched(t.func) {
+            let fmax = est.fmax_mhz * 1e6;
+            let t_cur = super::batch_time(cur, t.active_unroll, batch, fmax);
+            let t_cand = super::batch_time(&cached, unroll, batch, fmax);
+            let keep =
+                if unroll < t.active_unroll { t_cand > t_cur } else { t_cand >= t_cur };
+            if keep {
+                return Ok(false);
+            }
+        }
+    }
+
+    let (fill, ii) = super::pipeline_model(&cached);
+    let tm = TimeModel {
+        sec_per_cycle: params.sec_per_cycle,
+        fmax_hz: est.fmax_mhz * 1e6,
+        fill_latency: fill,
+        initiation_interval: ii,
+    };
+
+    // Retire the outgoing state's totals (the report stays cumulative
+    // across respecializations) and keep the original software-era
+    // snapshot: a re-patch over a live hook only ever sees a hook-era
+    // (zero-cycle) row.
+    let mut prev_pre_patch = None;
+    if let Some(old) = &t.state {
+        let o = old.borrow();
+        t.retired_invocations += o.invocations;
+        t.retired_virtual += o.virtual_offload;
+        prev_pre_patch = Some(o.pre_patch);
+    }
+    // Patch-time snapshot/reset (the monitor only sees post-patch data);
+    // the software baseline was established at admission and survives
+    // every respecialization.
+    let snap = t.engine.take_profile(t.func);
+    let pre_patch =
+        if snap.counters.cycles > 0 { snap } else { prev_pre_patch.unwrap_or(snap) };
+    let state = Rc::new(RefCell::new(RuntimeState {
+        baseline_per_inv: t.baseline_per_inv,
+        pre_patch,
+        ..Default::default()
+    }));
+    let config_words = cached.config.config_words() as u64;
+    let image = cached.image.clone();
+    // Numerics run on the compiled wave executor shared through the
+    // cache; `Sim` (per-lane image eval) only if the lowering refused.
+    let backend = match &cached.fabric {
+        Some(f) => DfeBackend::Fabric(f.clone()),
+        None => DfeBackend::Sim,
+    };
+    let pcie = t.pcie.clone();
+    let st = state.clone();
+    let hook_unroll = off.unroll.max(1) as u64;
+    t.engine.patch_hook(
+        t.func,
+        Box::new(move |mem, args| {
+            let mut link = pcie.borrow_mut();
+            match run_offloaded(
+                &off, &single, &image, &backend, &tm, &mut link, mem, args,
+            ) {
+                Ok(report) => {
+                    let mut s = st.borrow_mut();
+                    s.invocations += 1;
+                    s.virtual_offload += report.offload_time();
+                    let elements =
+                        report.elements * hook_unroll + report.remainder_elements;
+                    s.batch_hist.record(elements);
+                    s.total_elements += elements;
+                    s.last_report = report;
+                    Ok(None)
+                }
+                Err(trap) => {
+                    st.borrow_mut().failed = true;
+                    Err(trap)
+                }
+            }
+        }),
+    );
+    t.offload = Some(TenantOffload { key, cache_hit, config_words });
+    t.state = Some(state);
+    t.cached = Some(cached);
+    t.active_unroll = unroll;
+    t.adapt_seen = 0;
+    t.adapt_seen_elements = 0;
+    t.window_count = 0;
+    t.window_elements = 0;
+    Ok(true)
 }
 
 /// Prefer the shard already holding `key`'s configuration; otherwise the
@@ -694,6 +897,10 @@ pub struct TenantReport {
     pub cache_hit: bool,
     pub rolled_back: bool,
     pub reject: Option<String>,
+    /// Unroll of the live artifact (0 when never offloaded).
+    pub unroll: usize,
+    /// Adaptive respecializations performed on the serve path.
+    pub respecializations: u64,
     pub baseline_per_inv: Duration,
     pub virtual_offload: Duration,
     pub invocations: u64,
@@ -745,9 +952,11 @@ impl fmt::Display for ServeReport {
                 Duration::ZERO
             };
             let status = if t.rolled_back {
-                "rolled-back"
+                "rolled-back".to_string()
+            } else if t.respecializations > 0 {
+                format!("ok (respec x{} -> u{})", t.respecializations, t.unroll)
             } else {
-                t.reject.as_deref().unwrap_or("ok")
+                t.reject.as_deref().unwrap_or("ok").to_string()
             };
             writeln!(
                 f,
@@ -1124,6 +1333,43 @@ mod tests {
         server.run(3);
         let want = run_single_tenant(&spec, 3).expect("single-tenant replay");
         assert_eq!(server.tenant_outputs(0), want);
+    }
+
+    #[test]
+    fn serve_adaptive_pass_respecializes_hot_tenant() {
+        // gemm at n=10 streams 1000 innermost iterations per request:
+        // the profile should pick the u=4 specialization, the swap must
+        // be traced, and numerics must stay bit-identical to the static
+        // single-tenant path.
+        let params = ServeParams {
+            shards: 1,
+            adapt: Some(AdaptParams {
+                decision_window: 2,
+                candidate_unrolls: vec![4],
+                min_lanes: 4,
+                ..Default::default()
+            }),
+            ..Default::default()
+        };
+        let spec = gemm_spec();
+        let mut server =
+            OffloadServer::new(params, vec![spec.clone()]).expect("server");
+        assert_eq!(server.tenants[0].active_unroll, 2, "admitted at the spec unroll");
+        let report = server.run(6);
+        let t = &report.tenants[0];
+        assert!(
+            t.respecializations >= 1,
+            "trace must show a tier transition: {t:?}"
+        );
+        assert_eq!(t.unroll, 4, "profile-chosen unroll installed");
+        assert_eq!(
+            server.tenants[0].respecs[0].from_unroll,
+            2,
+            "{:?}",
+            server.tenants[0].respecs
+        );
+        let want = run_single_tenant(&spec, 6).expect("single-tenant replay");
+        assert_eq!(server.tenant_outputs(0), want, "respecialization changed numerics");
     }
 
     #[test]

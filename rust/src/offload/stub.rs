@@ -24,7 +24,9 @@
 
 use std::time::Duration;
 
+use crate::dfe::config::GridConfig;
 use crate::dfe::image::ExecImage;
+use crate::dfe::sim::CycleSim;
 use crate::dfg::extract::{OffloadDfg, OutMode};
 use crate::jit::interp::{Memory, Trap, Val};
 use crate::runtime::DfeExecutable;
@@ -38,6 +40,11 @@ pub enum DfeBackend {
     /// path: same numerics as `Sim`, lowered once per configuration and
     /// shared via the config cache.
     Fabric(std::rc::Rc<crate::dfe::exec::CompiledFabric>),
+    /// The cycle-accurate elastic overlay simulator — the slowest but
+    /// fully independent numerics path, pinned by the differential
+    /// conformance suite so interpreter ≡ CycleSim ≡ wave executor is
+    /// checked end-to-end through the real offload stub.
+    Cycle(std::rc::Rc<GridConfig>),
     /// The AOT Pallas artifact through PJRT (the shipped datapath).
     Pjrt(std::rc::Rc<DfeExecutable>),
 }
@@ -47,6 +54,27 @@ impl DfeBackend {
         match self {
             DfeBackend::Sim => Ok(image.eval_batch(x, lanes)),
             DfeBackend::Fabric(fabric) => Ok(fabric.run_batch(x, lanes)),
+            DfeBackend::Cycle(cfg) => {
+                // Reshape the slot-major batch into per-stream vectors,
+                // stream them through the elastic network, and flatten
+                // back to the `[n_out, lanes]` ABI layout.
+                let n_in = x.len() / lanes.max(1);
+                let streams: Vec<Vec<i32>> = (0..n_in)
+                    .map(|j| x[j * lanes..(j + 1) * lanes].to_vec())
+                    .collect();
+                let r = CycleSim::new(cfg)
+                    .and_then(|mut s| s.run_stream(&streams, lanes))
+                    .map_err(|e| Trap::OutOfBounds {
+                        handle: u32::MAX,
+                        idx: -1,
+                        len: e.to_string().len(),
+                    })?;
+                let mut out = vec![0i32; r.outputs.len() * lanes];
+                for (j, s) in r.outputs.iter().enumerate() {
+                    out[j * lanes..j * lanes + s.len()].copy_from_slice(s);
+                }
+                Ok(out)
+            }
             DfeBackend::Pjrt(exe) => exe
                 .run_lanes(image, x, lanes)
                 .map_err(|e| Trap::OutOfBounds {

@@ -655,6 +655,268 @@ pub fn durbin() -> Function {
     bad_mux_kernel("durbin")
 }
 
+// ---------------- host reference oracles ----------------
+//
+// Plain-Rust renditions of the kernels above, statement order and
+// wrapping-i32 arithmetic matching the interpreter exactly. These are the
+// conformance suite's ground truth: interpreter ≡ offloaded (any DFE
+// backend) ≡ `*_reference`, bit for bit.
+
+/// gemm_reference: C[i][j] += A[i][k] * B[k][j] * alpha.
+pub fn gemm_reference(c: &mut [i32], a: &[i32], b: &[i32], alpha: i32, n: usize) {
+    for i in 0..n {
+        for j in 0..n {
+            for k in 0..n {
+                let t = a[i * n + k].wrapping_mul(b[k * n + j]).wrapping_mul(alpha);
+                c[i * n + j] = c[i * n + j].wrapping_add(t);
+            }
+        }
+    }
+}
+
+/// two_mm_reference: gemm, then T1[i][j] += C[i][k] * B[k][j] * alpha.
+pub fn two_mm_reference(
+    c: &mut [i32],
+    a: &[i32],
+    b: &[i32],
+    t1: &mut [i32],
+    alpha: i32,
+    n: usize,
+) {
+    gemm_reference(c, a, b, alpha, n);
+    let cc = c.to_vec();
+    gemm_reference(t1, &cc, b, alpha, n);
+}
+
+/// three_mm_reference: 2mm, then T2[i][j] += T1[i][k] * B[k][j] * alpha.
+pub fn three_mm_reference(
+    c: &mut [i32],
+    a: &[i32],
+    b: &[i32],
+    t1: &mut [i32],
+    t2: &mut [i32],
+    alpha: i32,
+    n: usize,
+) {
+    two_mm_reference(c, a, b, t1, alpha, n);
+    let tt = t1.to_vec();
+    gemm_reference(t2, &tt, b, alpha, n);
+}
+
+/// atax_reference: tmp[i] += A[i][j]*x[j]; then y[j] += A[i][j]*tmp[i].
+pub fn atax_reference(a: &[i32], x: &[i32], y: &mut [i32], tmp: &mut [i32], n: usize) {
+    for i in 0..n {
+        for j in 0..n {
+            tmp[i] = tmp[i].wrapping_add(a[i * n + j].wrapping_mul(x[j]));
+        }
+    }
+    for i in 0..n {
+        for j in 0..n {
+            y[j] = y[j].wrapping_add(a[i * n + j].wrapping_mul(tmp[i]));
+        }
+    }
+}
+
+/// bicg_reference: s[j] += r[i]*A[i][j]; then q[i] += A[i][j]*p[j].
+pub fn bicg_reference(
+    a: &[i32],
+    s: &mut [i32],
+    q: &mut [i32],
+    p: &[i32],
+    r: &[i32],
+    n: usize,
+) {
+    for i in 0..n {
+        for j in 0..n {
+            s[j] = s[j].wrapping_add(r[i].wrapping_mul(a[i * n + j]));
+        }
+    }
+    for i in 0..n {
+        for j in 0..n {
+            q[i] = q[i].wrapping_add(a[i * n + j].wrapping_mul(p[j]));
+        }
+    }
+}
+
+/// mvt_reference: x1[i] += A[i][j]*y1[j]; x2[i] += A[j][i]*y2[j].
+pub fn mvt_reference(
+    a: &[i32],
+    x1: &mut [i32],
+    x2: &mut [i32],
+    y1: &[i32],
+    y2: &[i32],
+    n: usize,
+) {
+    for i in 0..n {
+        for j in 0..n {
+            x1[i] = x1[i].wrapping_add(a[i * n + j].wrapping_mul(y1[j]));
+        }
+    }
+    for i in 0..n {
+        for j in 0..n {
+            x2[i] = x2[i].wrapping_add(a[j * n + i].wrapping_mul(y2[j]));
+        }
+    }
+}
+
+/// gemver_reference: A[i][j] += u1[i]*v1[j] + u2[i]*v2[j]; then
+/// x[i] += A[j][i]*y[j].
+#[allow(clippy::too_many_arguments)]
+pub fn gemver_reference(
+    a: &mut [i32],
+    u1: &[i32],
+    v1: &[i32],
+    u2: &[i32],
+    v2: &[i32],
+    x: &mut [i32],
+    y: &[i32],
+    n: usize,
+) {
+    for i in 0..n {
+        for j in 0..n {
+            let s = u1[i]
+                .wrapping_mul(v1[j])
+                .wrapping_add(u2[i].wrapping_mul(v2[j]));
+            a[i * n + j] = a[i * n + j].wrapping_add(s);
+        }
+    }
+    for i in 0..n {
+        for j in 0..n {
+            x[i] = x[i].wrapping_add(a[j * n + i].wrapping_mul(y[j]));
+        }
+    }
+}
+
+/// gesummv_reference: tmp[i] += A[i][j]*x[j]*alpha; y[i] += B[i][j]*x[j]*beta.
+#[allow(clippy::too_many_arguments)]
+pub fn gesummv_reference(
+    a: &[i32],
+    b: &[i32],
+    x: &[i32],
+    tmp: &mut [i32],
+    y: &mut [i32],
+    alpha: i32,
+    beta: i32,
+    n: usize,
+) {
+    for i in 0..n {
+        for j in 0..n {
+            tmp[i] = tmp[i]
+                .wrapping_add(a[i * n + j].wrapping_mul(x[j]).wrapping_mul(alpha));
+            y[i] = y[i]
+                .wrapping_add(b[i * n + j].wrapping_mul(x[j]).wrapping_mul(beta));
+        }
+    }
+}
+
+/// syrk_reference: C[i][j] += A[i][k]*A[j][k]*alpha.
+pub fn syrk_reference(c: &mut [i32], a: &[i32], alpha: i32, n: usize) {
+    for i in 0..n {
+        for j in 0..n {
+            for k in 0..n {
+                let t = a[i * n + k].wrapping_mul(a[j * n + k]).wrapping_mul(alpha);
+                c[i * n + j] = c[i * n + j].wrapping_add(t);
+            }
+        }
+    }
+}
+
+/// syr2k_reference: C[i][j] += (A[i][k]*B[j][k] + B[i][k]*A[j][k])*alpha.
+pub fn syr2k_reference(c: &mut [i32], a: &[i32], b: &[i32], alpha: i32, n: usize) {
+    for i in 0..n {
+        for j in 0..n {
+            for k in 0..n {
+                let s = a[i * n + k]
+                    .wrapping_mul(b[j * n + k])
+                    .wrapping_add(b[i * n + k].wrapping_mul(a[j * n + k]));
+                c[i * n + j] = c[i * n + j].wrapping_add(s.wrapping_mul(alpha));
+            }
+        }
+    }
+}
+
+/// symm_reference: C[i][j] += A[i][k]*B[k][j]*alpha (the simplified form
+/// authored above).
+pub fn symm_reference(c: &mut [i32], a: &[i32], b: &[i32], alpha: i32, n: usize) {
+    gemm_reference(c, a, b, alpha, n);
+}
+
+/// trmm_reference: Bout[i][j] += A[i][k]*B[k][j].
+pub fn trmm_reference(bout: &mut [i32], a: &[i32], b: &[i32], n: usize) {
+    for i in 0..n {
+        for j in 0..n {
+            for k in 0..n {
+                let t = a[i * n + k].wrapping_mul(b[k * n + j]);
+                bout[i * n + j] = bout[i * n + j].wrapping_add(t);
+            }
+        }
+    }
+}
+
+/// heat3d_reference: the two ping-pong passes (A→B then B→A) of the
+/// fixed-point second-difference stencil.
+pub fn heat3d_reference(a: &mut [i32], b: &mut [i32], n: usize) {
+    let nn = n * n;
+    let pass = |src: &[i32], dst: &mut [i32]| {
+        for i in 1..n - 1 {
+            for j in 1..n - 1 {
+                for k in 1..n - 1 {
+                    let at = |di: isize, dj: isize, dk: isize| {
+                        let ii = (i as isize + di) as usize;
+                        let jj = (j as isize + dj) as usize;
+                        let kk = (k as isize + dk) as usize;
+                        src[ii * nn + jj * n + kk]
+                    };
+                    let c0 = at(0, 0, 0);
+                    let mut r = c0;
+                    for (m, p) in [
+                        (at(-1, 0, 0), at(1, 0, 0)),
+                        (at(0, -1, 0), at(0, 1, 0)),
+                        (at(0, 0, -1), at(0, 0, 1)),
+                    ] {
+                        let d = m.wrapping_add(p).wrapping_sub(c0.wrapping_mul(2));
+                        r = r.wrapping_add(d >> 3);
+                    }
+                    dst[i * nn + j * n + k] = r;
+                }
+            }
+        }
+    };
+    let snap = a.to_vec();
+    pass(&snap, b);
+    let snap = b.to_vec();
+    pass(&snap, a);
+}
+
+/// division_kernel_reference: A[i][j] /= A[i][i], in loop order (the
+/// pivot changes mid-row when j passes i).
+pub fn division_kernel_reference(a: &mut [i32], n: usize) {
+    for i in 0..n {
+        for j in 0..n {
+            let piv = a[i * n + i];
+            a[i * n + j] = a[i * n + j].wrapping_div(piv);
+        }
+    }
+}
+
+/// nussinov_reference: T[i] = max(T[S[j]], T[i]) in loop order.
+pub fn nussinov_reference(t: &mut [i32], s: &[i32], n: usize) {
+    for i in 0..n {
+        for j in 0..n {
+            let v = t[s[j] as usize];
+            t[i] = v.max(t[i]);
+        }
+    }
+}
+
+/// floyd_warshall_reference: the down-counting diagonal doubling.
+pub fn floyd_warshall_reference(p: &mut [i32], n: usize) {
+    for k in (0..n).rev() {
+        let v = p[k * n + k];
+        p[k * n + k] = v.wrapping_add(v);
+    }
+}
+
 /// The full suite with the paper's Table-I rows.
 pub fn suite() -> Vec<Kernel> {
     vec![

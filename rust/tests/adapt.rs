@@ -1,0 +1,245 @@
+//! Adaptive-respecialization scenarios (ISSUE 3 satellite):
+//!   A1  a workload whose trip count shifts mid-run triggers *exactly
+//!       one* respecialization, and outputs are bit-identical before and
+//!       after the in-place stub swap;
+//!   A2  a workload where the specialized artifact models slower rolls
+//!       back to the generic tier within one decision window;
+//!   A3  profile rows are snapshot/reset at call-table patch time, so
+//!       the monitor only ever sees post-patch data (regression test for
+//!       the pre-offload-sample pollution bug).
+
+use tlo::ir::func::{FuncBuilder, Module};
+use tlo::ir::instr::Ty;
+use tlo::jit::engine::Engine;
+use tlo::jit::interp::{Memory, Val};
+use tlo::offload::adapt::{AdaptController, AdaptParams, Tier};
+use tlo::offload::{OffloadManager, OffloadParams};
+use tlo::profile::Monitor;
+
+/// Elementwise kernel: C[i] = A[i] + 3*B[i] + 1 (the Fig-2 shape).
+fn fig2_module() -> Module {
+    let mut m = Module::new();
+    let mut b = FuncBuilder::new(
+        "fig2",
+        &[("C", Ty::Ptr), ("A", Ty::Ptr), ("B", Ty::Ptr), ("n", Ty::I32)],
+    );
+    let (c, a, bb, n) = (b.param(0), b.param(1), b.param(2), b.param(3));
+    let zero = b.const_i32(0);
+    b.counted_loop(zero, n, |b, i| {
+        let av = b.load(Ty::I32, a, i);
+        let bv = b.load(Ty::I32, bb, i);
+        let c3 = b.const_i32(3);
+        let t = b.mul(bv, c3);
+        let s = b.add(av, t);
+        let c1 = b.const_i32(1);
+        let r = b.add(s, c1);
+        b.store(Ty::I32, c, i, r);
+    });
+    m.add(b.ret(None));
+    m
+}
+
+/// Reduction kernel: acc[0] += A[i] * B[i] — unrolling chains the partial
+/// adds inside the fabric, so the specialized artifact is strictly deeper
+/// than the generic one (the demotion test relies on that).
+fn dot_module() -> Module {
+    let mut m = Module::new();
+    let mut b = FuncBuilder::new(
+        "dot",
+        &[("acc", Ty::Ptr), ("A", Ty::Ptr), ("B", Ty::Ptr), ("n", Ty::I32)],
+    );
+    let (acc, a, bb, n) = (b.param(0), b.param(1), b.param(2), b.param(3));
+    let zero = b.const_i32(0);
+    b.counted_loop(zero, n, |b, i| {
+        let z = b.const_i32(0);
+        let cur = b.load(Ty::I32, acc, z);
+        let x = b.load(Ty::I32, a, i);
+        let y = b.load(Ty::I32, bb, i);
+        let p = b.mul(x, y);
+        let s = b.add(cur, p);
+        let z2 = b.const_i32(0);
+        b.store(Ty::I32, acc, z2, s);
+    });
+    m.add(b.ret(None));
+    m
+}
+
+#[test]
+fn a1_trip_count_shift_triggers_exactly_one_respecialization() {
+    let mut engine = Engine::new(fig2_module()).unwrap();
+    let mut mem = Memory::new();
+    let cap = 512usize;
+    let a: Vec<i32> = (0..cap as i32).map(|i| i * 7 - 300).collect();
+    let b: Vec<i32> = (0..cap as i32).map(|i| 11 - i).collect();
+    let (ha, hb) = (mem.from_i32(&a), mem.from_i32(&b));
+    let hc = mem.alloc_i32(cap);
+    let func = engine.func_index("fig2").unwrap();
+
+    let mut mgr =
+        OffloadManager::new(OffloadParams { min_dfg_nodes: 1, ..Default::default() });
+    let mut ctl = AdaptController::new(AdaptParams {
+        hot_cycles: 1,
+        hot_invocations: 1,
+        generic_unroll: 1,
+        candidate_unrolls: vec![4],
+        min_lanes: 4,
+        min_batch: 1,
+        decision_window: 2,
+    });
+
+    let mut run = |engine: &mut Engine, mem: &mut Memory, n: usize| {
+        mem.i32s_mut(hc).fill(0);
+        engine
+            .call_idx(func, mem, &[Val::P(hc), Val::P(ha), Val::P(hb), Val::I(n as i32)])
+            .unwrap();
+        for i in 0..n {
+            assert_eq!(mem.i32s(hc)[i], a[i] + 3 * b[i] + 1, "element {i} at n={n}");
+        }
+    };
+
+    // Phase 1: small batches (8/4 = 2 lanes < min_lanes) — promotes to
+    // the generic tier but never specializes.
+    for _ in 0..4 {
+        run(&mut engine, &mut mem, 8);
+        ctl.observe(&mut mgr, &mut engine, func);
+    }
+    assert_eq!(ctl.tier(func), Tier::Generic);
+    assert_eq!(ctl.respecializations(func), 0);
+    assert!(engine.is_patched(func));
+
+    // Phase 2: the trip count shifts up mid-run (509 is odd: the u=4
+    // artifact exercises the host remainder). Exactly one
+    // Generic→Specialized swap may fire, outputs identical before/after.
+    for _ in 0..6 {
+        run(&mut engine, &mut mem, 509);
+        ctl.observe(&mut mgr, &mut engine, func);
+    }
+    assert_eq!(ctl.tier(func), Tier::Specialized);
+    assert_eq!(ctl.unroll(func), 4);
+    assert_eq!(ctl.respecializations(func), 1, "{:?}", ctl.transitions(func));
+    let to_spec = ctl
+        .transitions(func)
+        .iter()
+        .filter(|t| t.to == Tier::Specialized)
+        .count();
+    assert_eq!(to_spec, 1, "exactly one respecialization: {:?}", ctl.transitions(func));
+    // The manager really swapped the artifact (specialization signature).
+    let active = mgr.active(func).expect("live artifact");
+    assert_eq!(active.unroll, 4);
+    assert!(active.sig.trip_bucket > 0, "specialized artifacts carry the trip bucket");
+
+    // Stability: more invocations at the same regime change nothing.
+    for _ in 0..4 {
+        run(&mut engine, &mut mem, 509);
+        ctl.observe(&mut mgr, &mut engine, func);
+    }
+    assert_eq!(ctl.respecializations(func), 1);
+}
+
+#[test]
+fn a2_slower_specialized_artifact_demotes_to_generic_within_one_window() {
+    let mut engine = Engine::new(dot_module()).unwrap();
+    let mut mem = Memory::new();
+    let cap = 64usize;
+    let a: Vec<i32> = (0..cap as i32).map(|i| i % 9 - 4).collect();
+    let b: Vec<i32> = (0..cap as i32).map(|i| i % 7 - 3).collect();
+    let (ha, hb) = (mem.from_i32(&a), mem.from_i32(&b));
+    let hacc = mem.alloc_i32(1);
+    let func = engine.func_index("dot").unwrap();
+
+    let mut mgr =
+        OffloadManager::new(OffloadParams { min_dfg_nodes: 1, ..Default::default() });
+    let mut ctl = AdaptController::new(AdaptParams {
+        hot_cycles: 1,
+        hot_invocations: 1,
+        generic_unroll: 1,
+        candidate_unrolls: vec![4],
+        min_lanes: 4,
+        min_batch: 1,
+        decision_window: 1,
+    });
+
+    let mut want_acc = 0i32;
+    let mut run = |engine: &mut Engine, mem: &mut Memory, want: &mut i32, n: usize| {
+        engine
+            .call_idx(func, mem, &[Val::P(hacc), Val::P(ha), Val::P(hb), Val::I(n as i32)])
+            .unwrap();
+        for i in 0..n {
+            *want = want.wrapping_add(a[i].wrapping_mul(b[i]));
+        }
+        assert_eq!(mem.i32s(hacc)[0], *want, "accumulator at n={n}");
+    };
+
+    // Specialize on big batches.
+    for _ in 0..3 {
+        run(&mut engine, &mut mem, &mut want_acc, 64);
+        ctl.observe(&mut mgr, &mut engine, func);
+    }
+    assert_eq!(ctl.tier(func), Tier::Specialized, "{:?}", ctl.transitions(func));
+    assert_eq!(ctl.unroll(func), 4);
+
+    // The workload collapses to tiny batches: at batch=2 the specialized
+    // pipeline's deeper fill models strictly slower than the generic
+    // artifact, so the controller must demote within one window.
+    run(&mut engine, &mut mem, &mut want_acc, 2);
+    ctl.observe(&mut mgr, &mut engine, func);
+    assert_eq!(
+        ctl.tier(func),
+        Tier::Generic,
+        "demotion within one window: {:?}",
+        ctl.transitions(func)
+    );
+    assert_eq!(ctl.unroll(func), 1);
+    let last = *ctl.transitions(func).last().unwrap();
+    assert_eq!((last.from, last.to), (Tier::Specialized, Tier::Generic));
+    // Demotion is a cache hit (the generic artifact was retained), and
+    // the function never left the offloaded path.
+    assert!(engine.is_patched(func));
+    // Numerics keep flowing correctly after the demotion swap.
+    for _ in 0..3 {
+        run(&mut engine, &mut mem, &mut want_acc, 2);
+        ctl.observe(&mut mgr, &mut engine, func);
+    }
+}
+
+#[test]
+fn a3_profile_snapshot_reset_at_patch_time() {
+    let mut engine = Engine::new(fig2_module()).unwrap();
+    let mut mem = Memory::new();
+    let n = 400usize;
+    let (ha, hb, hc) = (mem.alloc_i32(n), mem.alloc_i32(n), mem.alloc_i32(n));
+    let args = [Val::P(hc), Val::P(ha), Val::P(hb), Val::I(n as i32)];
+    let func = engine.func_index("fig2").unwrap();
+    for _ in 0..3 {
+        engine.call_idx(func, &mut mem, &args).unwrap();
+    }
+    let pre = engine.profile(func);
+    assert!(pre.counters.cycles > 0 && pre.counters.invocations == 3);
+
+    let mut mgr =
+        OffloadManager::new(OffloadParams { min_dfg_nodes: 1, ..Default::default() });
+    mgr.try_offload(&mut engine, func, None).unwrap();
+
+    // The row was snapshot into the runtime state and reset in place.
+    let st = mgr.state(func).unwrap();
+    assert_eq!(st.borrow().pre_patch.counters.invocations, 3);
+    assert!(st.borrow().pre_patch.counters.cycles > 0);
+    assert_eq!(engine.profile(func).counters.cycles, 0);
+    assert_eq!(engine.profile(func).counters.invocations, 0);
+    // The rollback baseline survives the reset.
+    assert!(st.borrow().baseline_per_inv > std::time::Duration::ZERO);
+
+    // Post-patch, the monitor sees hook invocations but zero interpreter
+    // cycles: post-offload averages are unpolluted by pre-offload samples.
+    for _ in 0..4 {
+        engine.call_idx(func, &mut mem, &args).unwrap();
+    }
+    let post = engine.profile(func);
+    assert_eq!(post.counters.invocations, 4);
+    assert_eq!(post.counters.cycles, 0);
+    let mut mon = Monitor::new(Default::default());
+    assert!(
+        mon.sample(&engine).is_empty(),
+        "monitor must not flag a hotspot from pre-patch residue"
+    );
+}

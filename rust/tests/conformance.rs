@@ -1,0 +1,801 @@
+//! Differential conformance suite: the lockdown for the whole offload
+//! surface (analysis → extraction → P&R → stub → backend numerics).
+//!
+//! For every PolyBench kernel and the §IV-C video convolution, across at
+//! least three dataset sizes each:
+//!
+//!   interpreter ≡ offloaded (CycleSim backend)
+//!               ≡ offloaded (compiled wave / Fabric backend)
+//!               ≡ the `*_reference` host oracle,     bit for bit.
+//!
+//! Kernels the paper rejects (multi-SCoP, divisions, fp data, no SCoP)
+//! must *refuse* the offload and still match the oracle in software —
+//! the refusal path is part of the conformance surface. Dedicated tests
+//! cover sizes below the offload threshold (must stay on the interpreter)
+//! and sizes that straddle the adaptive controller's tier boundaries.
+//!
+//! On failure the mismatch report is appended to
+//! `../conformance_diff.txt` (repo root) so CI can upload it as an
+//! artifact.
+
+use std::fmt::Write as _;
+
+use tlo::ir::func::Module;
+use tlo::jit::engine::Engine;
+use tlo::jit::interp::{Memory, Val};
+use tlo::offload::adapt::{AdaptController, AdaptParams, Tier};
+use tlo::offload::{OffloadManager, OffloadParams, RejectReason, SimBackendChoice};
+use tlo::workloads::polybench as pb;
+use tlo::workloads::video;
+
+/// Append the mismatch report to the repo-root diff artifact, then panic.
+fn fail_with_diff(section: &str, diff: String) -> ! {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../conformance_diff.txt");
+    use std::io::Write as _;
+    if let Ok(mut f) =
+        std::fs::OpenOptions::new().create(true).append(true).open(path)
+    {
+        let _ = writeln!(f, "== {section} ==\n{diff}");
+    }
+    panic!("conformance failure in {section} (see conformance_diff.txt):\n{diff}");
+}
+
+/// One kernel under differential test.
+struct Case {
+    name: &'static str,
+    module: fn() -> Module,
+    func: &'static str,
+    unroll: usize,
+    /// Offloadable through the single-SCoP stub contract?
+    offloadable: bool,
+    /// Allocate + fill buffers for size `n`; returns (args, out handles).
+    setup: fn(&mut Memory, usize) -> (Vec<Val>, Vec<u32>),
+    /// The host oracle, applied to a clone of the same initial memory.
+    reference: fn(&mut Memory, &[Val], usize),
+    sizes: &'static [usize],
+}
+
+/// Deterministic fill data (kernel-salted, sign-mixed, small enough that
+/// i32 products stay meaningful).
+fn data(len: usize, salt: i32) -> Vec<i32> {
+    (0..len).map(|i| ((i as i32).wrapping_mul(7).wrapping_add(salt)) % 13 - 6).collect()
+}
+
+fn outs(mem: &Memory, handles: &[u32]) -> Vec<Vec<i32>> {
+    handles.iter().map(|&h| mem.i32s(h).to_vec()).collect()
+}
+
+/// Run one mode: `None` = pure interpreter; `Some(backend)` = offload
+/// attempt through the real manager + stub with that sim backend pinned.
+/// Returns (outputs, offloaded?).
+fn run_mode(
+    case: &Case,
+    n: usize,
+    backend: Option<SimBackendChoice>,
+) -> (Vec<Vec<i32>>, bool) {
+    let mut engine = Engine::new((case.module)()).expect("module");
+    let mut mem = Memory::new();
+    let (args, handles) = (case.setup)(&mut mem, n);
+    let func = engine.func_index(case.func).expect("func");
+    let mut offloaded = false;
+    if let Some(sim_backend) = backend {
+        let mut mgr = OffloadManager::new(OffloadParams {
+            min_dfg_nodes: 1,
+            unroll: case.unroll,
+            sim_backend,
+            ..Default::default()
+        });
+        match mgr.try_offload(&mut engine, func, None) {
+            Ok(_) => offloaded = true,
+            Err(e) => {
+                assert!(
+                    !case.offloadable,
+                    "{}: offload unexpectedly refused: {e}",
+                    case.name
+                );
+            }
+        }
+    }
+    engine.call_idx(func, &mut mem, &args).expect("run");
+    (outs(&mem, &handles), offloaded)
+}
+
+/// The differential check for one kernel at all its sizes.
+fn conformance(case: &Case) {
+    for &n in case.sizes {
+        // Oracle on a clone of the exact same initial memory.
+        let want = {
+            let mut mem = Memory::new();
+            let (args, handles) = (case.setup)(&mut mem, n);
+            (case.reference)(&mut mem, &args, n);
+            outs(&mem, &handles)
+        };
+        let (interp, _) = run_mode(case, n, None);
+        let (cycle, off_c) = run_mode(case, n, Some(SimBackendChoice::CycleSim));
+        let (fabric, off_f) = run_mode(case, n, Some(SimBackendChoice::Auto));
+        if case.offloadable {
+            assert!(off_c && off_f, "{} n={n}: expected the offload to engage", case.name);
+        } else {
+            assert!(!off_c && !off_f, "{} n={n}: must stay in software", case.name);
+        }
+        let runs = [("interpreter", &interp), ("cyclesim", &cycle), ("fabric", &fabric)];
+        for (mode, got) in runs {
+            if *got != want {
+                let mut diff = String::new();
+                let _ = writeln!(diff, "kernel {} n={n} mode {mode}", case.name);
+                for (oi, (g, w)) in got.iter().zip(&want).enumerate() {
+                    for (ei, (gv, wv)) in g.iter().zip(w).enumerate() {
+                        if gv != wv {
+                            let _ = writeln!(
+                                diff,
+                                "  out[{oi}][{ei}]: got {gv}, want {wv}"
+                            );
+                        }
+                    }
+                    if g.len() != w.len() {
+                        let _ = writeln!(
+                            diff,
+                            "  out[{oi}]: length {} vs {}",
+                            g.len(),
+                            w.len()
+                        );
+                    }
+                }
+                fail_with_diff(case.name, diff);
+            }
+        }
+    }
+}
+
+// ---------------- setups + oracle adapters ----------------
+
+fn mat_args3(mem: &mut Memory, n: usize, salt: i32, alpha: i32) -> (Vec<Val>, Vec<u32>) {
+    // C, A, B, alpha, n — the gemm/syr2k/symm shape.
+    let ha = mem.from_i32(&data(n * n, salt));
+    let hb = mem.from_i32(&data(n * n, salt + 3));
+    let hc = mem.from_i32(&data(n * n, salt + 5));
+    (
+        vec![Val::P(hc), Val::P(ha), Val::P(hb), Val::I(alpha), Val::I(n as i32)],
+        vec![hc],
+    )
+}
+
+fn gemm_setup(mem: &mut Memory, n: usize) -> (Vec<Val>, Vec<u32>) {
+    mat_args3(mem, n, 1, 2)
+}
+fn gemm_ref(mem: &mut Memory, args: &[Val], n: usize) {
+    let a = mem.i32s(args[1].as_ptr()).to_vec();
+    let b = mem.i32s(args[2].as_ptr()).to_vec();
+    let alpha = args[3].as_i32();
+    pb::gemm_reference(mem.i32s_mut(args[0].as_ptr()), &a, &b, alpha, n);
+}
+
+fn two_mm_setup(mem: &mut Memory, n: usize) -> (Vec<Val>, Vec<u32>) {
+    let (mut args, mut outs) = mat_args3(mem, n, 11, 2);
+    let ht1 = mem.from_i32(&data(n * n, 17));
+    args.push(Val::P(ht1));
+    outs.push(ht1);
+    (args, outs)
+}
+fn two_mm_ref(mem: &mut Memory, args: &[Val], n: usize) {
+    let a = mem.i32s(args[1].as_ptr()).to_vec();
+    let b = mem.i32s(args[2].as_ptr()).to_vec();
+    let alpha = args[3].as_i32();
+    let mut c = mem.i32s(args[0].as_ptr()).to_vec();
+    let mut t1 = mem.i32s(args[5].as_ptr()).to_vec();
+    pb::two_mm_reference(&mut c, &a, &b, &mut t1, alpha, n);
+    mem.i32s_mut(args[0].as_ptr()).copy_from_slice(&c);
+    mem.i32s_mut(args[5].as_ptr()).copy_from_slice(&t1);
+}
+
+fn three_mm_setup(mem: &mut Memory, n: usize) -> (Vec<Val>, Vec<u32>) {
+    let (mut args, mut outs) = mat_args3(mem, n, 23, 2);
+    let ht1 = mem.from_i32(&data(n * n, 29));
+    let ht2 = mem.from_i32(&data(n * n, 31));
+    args.push(Val::P(ht1));
+    args.push(Val::P(ht2));
+    outs.push(ht1);
+    outs.push(ht2);
+    (args, outs)
+}
+fn three_mm_ref(mem: &mut Memory, args: &[Val], n: usize) {
+    let a = mem.i32s(args[1].as_ptr()).to_vec();
+    let b = mem.i32s(args[2].as_ptr()).to_vec();
+    let alpha = args[3].as_i32();
+    let mut c = mem.i32s(args[0].as_ptr()).to_vec();
+    let mut t1 = mem.i32s(args[5].as_ptr()).to_vec();
+    let mut t2 = mem.i32s(args[6].as_ptr()).to_vec();
+    pb::three_mm_reference(&mut c, &a, &b, &mut t1, &mut t2, alpha, n);
+    mem.i32s_mut(args[0].as_ptr()).copy_from_slice(&c);
+    mem.i32s_mut(args[5].as_ptr()).copy_from_slice(&t1);
+    mem.i32s_mut(args[6].as_ptr()).copy_from_slice(&t2);
+}
+
+fn atax_setup(mem: &mut Memory, n: usize) -> (Vec<Val>, Vec<u32>) {
+    let ha = mem.from_i32(&data(n * n, 2));
+    let hx = mem.from_i32(&data(n, 4));
+    let hy = mem.from_i32(&data(n, 6));
+    let htmp = mem.from_i32(&data(n, 8));
+    (
+        vec![Val::P(ha), Val::P(hx), Val::P(hy), Val::P(htmp), Val::I(n as i32)],
+        vec![hy, htmp],
+    )
+}
+fn atax_ref(mem: &mut Memory, args: &[Val], n: usize) {
+    let a = mem.i32s(args[0].as_ptr()).to_vec();
+    let x = mem.i32s(args[1].as_ptr()).to_vec();
+    let mut y = mem.i32s(args[2].as_ptr()).to_vec();
+    let mut tmp = mem.i32s(args[3].as_ptr()).to_vec();
+    pb::atax_reference(&a, &x, &mut y, &mut tmp, n);
+    mem.i32s_mut(args[2].as_ptr()).copy_from_slice(&y);
+    mem.i32s_mut(args[3].as_ptr()).copy_from_slice(&tmp);
+}
+
+fn bicg_setup(mem: &mut Memory, n: usize) -> (Vec<Val>, Vec<u32>) {
+    let ha = mem.from_i32(&data(n * n, 3));
+    let hs = mem.from_i32(&data(n, 5));
+    let hq = mem.from_i32(&data(n, 7));
+    let hp = mem.from_i32(&data(n, 9));
+    let hr = mem.from_i32(&data(n, 11));
+    (
+        vec![Val::P(ha), Val::P(hs), Val::P(hq), Val::P(hp), Val::P(hr), Val::I(n as i32)],
+        vec![hs, hq],
+    )
+}
+fn bicg_ref(mem: &mut Memory, args: &[Val], n: usize) {
+    let a = mem.i32s(args[0].as_ptr()).to_vec();
+    let mut s = mem.i32s(args[1].as_ptr()).to_vec();
+    let mut q = mem.i32s(args[2].as_ptr()).to_vec();
+    let p = mem.i32s(args[3].as_ptr()).to_vec();
+    let r = mem.i32s(args[4].as_ptr()).to_vec();
+    pb::bicg_reference(&a, &mut s, &mut q, &p, &r, n);
+    mem.i32s_mut(args[1].as_ptr()).copy_from_slice(&s);
+    mem.i32s_mut(args[2].as_ptr()).copy_from_slice(&q);
+}
+
+fn mvt_setup(mem: &mut Memory, n: usize) -> (Vec<Val>, Vec<u32>) {
+    let ha = mem.from_i32(&data(n * n, 13));
+    let hx1 = mem.from_i32(&data(n, 15));
+    let hx2 = mem.from_i32(&data(n, 17));
+    let hy1 = mem.from_i32(&data(n, 19));
+    let hy2 = mem.from_i32(&data(n, 21));
+    (
+        vec![Val::P(ha), Val::P(hx1), Val::P(hx2), Val::P(hy1), Val::P(hy2), Val::I(n as i32)],
+        vec![hx1, hx2],
+    )
+}
+fn mvt_ref(mem: &mut Memory, args: &[Val], n: usize) {
+    let a = mem.i32s(args[0].as_ptr()).to_vec();
+    let mut x1 = mem.i32s(args[1].as_ptr()).to_vec();
+    let mut x2 = mem.i32s(args[2].as_ptr()).to_vec();
+    let y1 = mem.i32s(args[3].as_ptr()).to_vec();
+    let y2 = mem.i32s(args[4].as_ptr()).to_vec();
+    pb::mvt_reference(&a, &mut x1, &mut x2, &y1, &y2, n);
+    mem.i32s_mut(args[1].as_ptr()).copy_from_slice(&x1);
+    mem.i32s_mut(args[2].as_ptr()).copy_from_slice(&x2);
+}
+
+fn gemver_setup(mem: &mut Memory, n: usize) -> (Vec<Val>, Vec<u32>) {
+    let ha = mem.from_i32(&data(n * n, 1));
+    let hu1 = mem.from_i32(&data(n, 2));
+    let hv1 = mem.from_i32(&data(n, 3));
+    let hu2 = mem.from_i32(&data(n, 4));
+    let hv2 = mem.from_i32(&data(n, 5));
+    let hx = mem.from_i32(&data(n, 6));
+    let hy = mem.from_i32(&data(n, 7));
+    (
+        vec![
+            Val::P(ha),
+            Val::P(hu1),
+            Val::P(hv1),
+            Val::P(hu2),
+            Val::P(hv2),
+            Val::P(hx),
+            Val::P(hy),
+            Val::I(n as i32),
+        ],
+        vec![ha, hx],
+    )
+}
+fn gemver_ref(mem: &mut Memory, args: &[Val], n: usize) {
+    let mut a = mem.i32s(args[0].as_ptr()).to_vec();
+    let u1 = mem.i32s(args[1].as_ptr()).to_vec();
+    let v1 = mem.i32s(args[2].as_ptr()).to_vec();
+    let u2 = mem.i32s(args[3].as_ptr()).to_vec();
+    let v2 = mem.i32s(args[4].as_ptr()).to_vec();
+    let mut x = mem.i32s(args[5].as_ptr()).to_vec();
+    let y = mem.i32s(args[6].as_ptr()).to_vec();
+    pb::gemver_reference(&mut a, &u1, &v1, &u2, &v2, &mut x, &y, n);
+    mem.i32s_mut(args[0].as_ptr()).copy_from_slice(&a);
+    mem.i32s_mut(args[5].as_ptr()).copy_from_slice(&x);
+}
+
+fn gesummv_setup(mem: &mut Memory, n: usize) -> (Vec<Val>, Vec<u32>) {
+    let ha = mem.from_i32(&data(n * n, 8));
+    let hb = mem.from_i32(&data(n * n, 10));
+    let hx = mem.from_i32(&data(n, 12));
+    let htmp = mem.from_i32(&data(n, 14));
+    let hy = mem.from_i32(&data(n, 16));
+    (
+        vec![
+            Val::P(ha),
+            Val::P(hb),
+            Val::P(hx),
+            Val::P(htmp),
+            Val::P(hy),
+            Val::I(3),
+            Val::I(2),
+            Val::I(n as i32),
+        ],
+        vec![htmp, hy],
+    )
+}
+fn gesummv_ref(mem: &mut Memory, args: &[Val], n: usize) {
+    let a = mem.i32s(args[0].as_ptr()).to_vec();
+    let b = mem.i32s(args[1].as_ptr()).to_vec();
+    let x = mem.i32s(args[2].as_ptr()).to_vec();
+    let mut tmp = mem.i32s(args[3].as_ptr()).to_vec();
+    let mut y = mem.i32s(args[4].as_ptr()).to_vec();
+    pb::gesummv_reference(&a, &b, &x, &mut tmp, &mut y, 3, 2, n);
+    mem.i32s_mut(args[3].as_ptr()).copy_from_slice(&tmp);
+    mem.i32s_mut(args[4].as_ptr()).copy_from_slice(&y);
+}
+
+fn syrk_setup(mem: &mut Memory, n: usize) -> (Vec<Val>, Vec<u32>) {
+    let ha = mem.from_i32(&data(n * n, 18));
+    let hc = mem.from_i32(&data(n * n, 20));
+    (vec![Val::P(hc), Val::P(ha), Val::I(3), Val::I(n as i32)], vec![hc])
+}
+fn syrk_ref(mem: &mut Memory, args: &[Val], n: usize) {
+    let a = mem.i32s(args[1].as_ptr()).to_vec();
+    pb::syrk_reference(mem.i32s_mut(args[0].as_ptr()), &a, 3, n);
+}
+
+fn syr2k_setup(mem: &mut Memory, n: usize) -> (Vec<Val>, Vec<u32>) {
+    mat_args3(mem, n, 22, 3)
+}
+fn syr2k_ref(mem: &mut Memory, args: &[Val], n: usize) {
+    let a = mem.i32s(args[1].as_ptr()).to_vec();
+    let b = mem.i32s(args[2].as_ptr()).to_vec();
+    pb::syr2k_reference(mem.i32s_mut(args[0].as_ptr()), &a, &b, 3, n);
+}
+
+fn symm_setup(mem: &mut Memory, n: usize) -> (Vec<Val>, Vec<u32>) {
+    mat_args3(mem, n, 24, 2)
+}
+fn symm_ref(mem: &mut Memory, args: &[Val], n: usize) {
+    let a = mem.i32s(args[1].as_ptr()).to_vec();
+    let b = mem.i32s(args[2].as_ptr()).to_vec();
+    pb::symm_reference(mem.i32s_mut(args[0].as_ptr()), &a, &b, 2, n);
+}
+
+fn trmm_setup(mem: &mut Memory, n: usize) -> (Vec<Val>, Vec<u32>) {
+    let ha = mem.from_i32(&data(n * n, 26));
+    let hb = mem.from_i32(&data(n * n, 28));
+    let hbo = mem.from_i32(&data(n * n, 30));
+    (vec![Val::P(hbo), Val::P(ha), Val::P(hb), Val::I(n as i32)], vec![hbo])
+}
+fn trmm_ref(mem: &mut Memory, args: &[Val], n: usize) {
+    let a = mem.i32s(args[1].as_ptr()).to_vec();
+    let b = mem.i32s(args[2].as_ptr()).to_vec();
+    pb::trmm_reference(mem.i32s_mut(args[0].as_ptr()), &a, &b, n);
+}
+
+fn heat3d_setup(mem: &mut Memory, n: usize) -> (Vec<Val>, Vec<u32>) {
+    let ha = mem.from_i32(&data(n * n * n, 32));
+    let hb = mem.from_i32(&data(n * n * n, 34));
+    (
+        vec![Val::P(ha), Val::P(hb), Val::I(n as i32), Val::I((n * n) as i32)],
+        vec![ha, hb],
+    )
+}
+fn heat3d_ref(mem: &mut Memory, args: &[Val], n: usize) {
+    let mut a = mem.i32s(args[0].as_ptr()).to_vec();
+    let mut b = mem.i32s(args[1].as_ptr()).to_vec();
+    pb::heat3d_reference(&mut a, &mut b, n);
+    mem.i32s_mut(args[0].as_ptr()).copy_from_slice(&a);
+    mem.i32s_mut(args[1].as_ptr()).copy_from_slice(&b);
+}
+
+fn conv_setup(mem: &mut Memory, n: usize) -> (Vec<Val>, Vec<u32>) {
+    // n indexes the frame geometry (w = 2n, h = n keeps it non-square).
+    let (w, h) = (2 * n, n);
+    let hout = mem.from_i32(&data(w * h, 36));
+    let hin = mem.from_i32(&data(w * h, 38));
+    let hcoef = mem.from_i32(&video::COEF);
+    (
+        vec![Val::P(hout), Val::P(hin), Val::P(hcoef), Val::I(w as i32), Val::I(h as i32)],
+        vec![hout],
+    )
+}
+fn conv_ref(mem: &mut Memory, args: &[Val], n: usize) {
+    let (w, h) = (2 * n, n);
+    let inp = mem.i32s(args[1].as_ptr()).to_vec();
+    let coef = mem.i32s(args[2].as_ptr()).to_vec();
+    let want = video::conv_reference(&inp, &coef, w, h);
+    // conv only writes the interior; the border keeps its initial fill.
+    let out = mem.i32s_mut(args[0].as_ptr());
+    for y in 1..h - 1 {
+        for x in 1..w - 1 {
+            out[y * w + x] = want[y * w + x];
+        }
+    }
+}
+
+fn module_of(f: fn() -> tlo::ir::func::Function) -> Module {
+    let mut m = Module::new();
+    m.add(f());
+    m
+}
+
+fn cases() -> Vec<Case> {
+    // Sizes are picked so the smallest exercises degenerate iteration
+    // spaces, the middle is odd (remainder path under unroll), and the
+    // largest straddles the controller's specialization boundary.
+    const MAT: &[usize] = &[2, 5, 9];
+    vec![
+        Case {
+            name: "gemm",
+            module: || module_of(pb::gemm),
+            func: "gemm",
+            unroll: 2,
+            offloadable: true,
+            setup: gemm_setup,
+            reference: gemm_ref,
+            sizes: MAT,
+        },
+        Case {
+            name: "2mm",
+            module: || module_of(pb::two_mm),
+            func: "2mm",
+            unroll: 2,
+            offloadable: false, // two chained nests: multi-SCoP
+            setup: two_mm_setup,
+            reference: two_mm_ref,
+            sizes: MAT,
+        },
+        Case {
+            name: "3mm",
+            module: || module_of(pb::three_mm),
+            func: "3mm",
+            unroll: 2,
+            offloadable: false,
+            setup: three_mm_setup,
+            reference: three_mm_ref,
+            sizes: MAT,
+        },
+        Case {
+            name: "atax",
+            module: || module_of(pb::atax),
+            func: "atax",
+            unroll: 2,
+            offloadable: false,
+            setup: atax_setup,
+            reference: atax_ref,
+            sizes: MAT,
+        },
+        Case {
+            name: "bicg",
+            module: || module_of(pb::bicg),
+            func: "bicg",
+            unroll: 2,
+            offloadable: false,
+            setup: bicg_setup,
+            reference: bicg_ref,
+            sizes: MAT,
+        },
+        Case {
+            name: "mvt",
+            module: || module_of(pb::mvt),
+            func: "mvt",
+            unroll: 2,
+            offloadable: false,
+            setup: mvt_setup,
+            reference: mvt_ref,
+            sizes: MAT,
+        },
+        Case {
+            name: "gemver",
+            module: || module_of(pb::gemver),
+            func: "gemver",
+            unroll: 2,
+            offloadable: false,
+            setup: gemver_setup,
+            reference: gemver_ref,
+            sizes: MAT,
+        },
+        Case {
+            name: "gesummv",
+            module: || module_of(pb::gesummv),
+            func: "gesummv",
+            unroll: 2,
+            offloadable: true,
+            setup: gesummv_setup,
+            reference: gesummv_ref,
+            sizes: MAT,
+        },
+        Case {
+            name: "syrk",
+            module: || module_of(pb::syrk),
+            func: "syrk",
+            unroll: 2,
+            offloadable: true,
+            setup: syrk_setup,
+            reference: syrk_ref,
+            sizes: MAT,
+        },
+        Case {
+            name: "syr2k",
+            module: || module_of(pb::syr2k),
+            func: "syr2k",
+            unroll: 2,
+            offloadable: true,
+            setup: syr2k_setup,
+            reference: syr2k_ref,
+            sizes: MAT,
+        },
+        Case {
+            name: "symm",
+            module: || module_of(pb::symm),
+            func: "symm",
+            unroll: 2,
+            offloadable: true,
+            setup: symm_setup,
+            reference: symm_ref,
+            sizes: MAT,
+        },
+        Case {
+            name: "trmm",
+            module: || module_of(pb::trmm),
+            func: "trmm",
+            unroll: 2,
+            offloadable: true,
+            setup: trmm_setup,
+            reference: trmm_ref,
+            sizes: MAT,
+        },
+        Case {
+            name: "heat-3d",
+            module: || module_of(pb::heat3d),
+            func: "heat-3d",
+            unroll: 2,
+            offloadable: false, // two ping-pong nests: multi-SCoP
+            setup: heat3d_setup,
+            reference: heat3d_ref,
+            sizes: &[3, 4, 6],
+        },
+        Case {
+            name: "conv",
+            module: video::video_module,
+            func: "conv",
+            unroll: 1,
+            offloadable: true,
+            setup: conv_setup,
+            reference: conv_ref,
+            sizes: &[3, 7, 12],
+        },
+    ]
+}
+
+// One #[test] per kernel keeps a conformance failure attributable at a
+// glance in the CI matrix.
+macro_rules! conformance_test {
+    ($test:ident, $kernel:expr) => {
+        #[test]
+        fn $test() {
+            let case = cases()
+                .into_iter()
+                .find(|c| c.name == $kernel)
+                .expect("case registered");
+            conformance(&case);
+        }
+    };
+}
+
+conformance_test!(conformance_gemm, "gemm");
+conformance_test!(conformance_2mm, "2mm");
+conformance_test!(conformance_3mm, "3mm");
+conformance_test!(conformance_atax, "atax");
+conformance_test!(conformance_bicg, "bicg");
+conformance_test!(conformance_mvt, "mvt");
+conformance_test!(conformance_gemver, "gemver");
+conformance_test!(conformance_gesummv, "gesummv");
+conformance_test!(conformance_syrk, "syrk");
+conformance_test!(conformance_syr2k, "syr2k");
+conformance_test!(conformance_symm, "symm");
+conformance_test!(conformance_trmm, "trmm");
+conformance_test!(conformance_heat3d, "heat-3d");
+conformance_test!(conformance_conv, "conv");
+
+#[test]
+fn conformance_rejected_kernels_match_reference_in_software() {
+    // Division-class kernels: refusal label + software ≡ oracle.
+    for (name, build) in [
+        ("adi", pb::adi as fn() -> tlo::ir::func::Function),
+        ("lu", pb::lu),
+        ("ludcmp", pb::ludcmp),
+        ("seidel", pb::seidel),
+        ("trisolv", pb::trisolv),
+    ] {
+        for n in [2usize, 4, 7] {
+            let mut engine = Engine::new(module_of(build)).unwrap();
+            let mut mem = Memory::new();
+            // Strictly positive data keeps every pivot nonzero.
+            let a: Vec<i32> = (0..n * n).map(|i| 1 + (i as i32 % 7)).collect();
+            let ha = mem.from_i32(&a);
+            let args = [Val::P(ha), Val::I(n as i32)];
+            let func = engine.func_index(name).unwrap();
+            let mut mgr = OffloadManager::new(OffloadParams {
+                min_dfg_nodes: 1,
+                ..Default::default()
+            });
+            let err = mgr.try_offload(&mut engine, func, None).unwrap_err();
+            assert!(
+                matches!(err, RejectReason::Illegal(ref s) if s.contains("div")),
+                "{name}: {err}"
+            );
+            engine.call_idx(func, &mut mem, &args).unwrap();
+            let mut want = a.clone();
+            pb::division_kernel_reference(&mut want, n);
+            if mem.i32s(ha) != &want[..] {
+                fail_with_diff(name, format!("n={n}: {:?} != {want:?}", mem.i32s(ha)));
+            }
+        }
+    }
+
+    // fp-data kernels: refusal label; the software path still runs.
+    for (name, build) in [
+        ("fdtd-2d", pb::fdtd_2d as fn() -> tlo::ir::func::Function),
+        ("jacobi-1D", pb::jacobi_1d),
+        ("jacobi-2D", pb::jacobi_2d),
+    ] {
+        let n = 6usize;
+        let mut engine = Engine::new(module_of(build)).unwrap();
+        let mut mem = Memory::new();
+        let ha = mem.alloc_f32(n);
+        let hb = mem.alloc_f32(n);
+        for i in 0..n {
+            mem.f32s_mut(ha)[i] = i as f32 * 0.5 - 1.0;
+        }
+        let args = [Val::P(ha), Val::P(hb), Val::I(n as i32)];
+        let func = engine.func_index(name).unwrap();
+        let mut mgr =
+            OffloadManager::new(OffloadParams { min_dfg_nodes: 1, ..Default::default() });
+        let err = mgr.try_offload(&mut engine, func, None).unwrap_err();
+        assert!(
+            matches!(err, RejectReason::Illegal(ref s) if s.contains("fp")),
+            "{name}: {err}"
+        );
+        engine.call_idx(func, &mut mem, &args).unwrap();
+    }
+
+    // No-SCoP kernels: refusal + software ≡ oracle.
+    for n in [2usize, 5, 9] {
+        let mut engine = Engine::new(module_of(pb::nussinov)).unwrap();
+        let mut mem = Memory::new();
+        let t: Vec<i32> = data(n, 40);
+        let s: Vec<i32> = (0..n).map(|j| ((j * 3) % n) as i32).collect();
+        let (ht, hs) = (mem.from_i32(&t), mem.from_i32(&s));
+        let args = [Val::P(ht), Val::P(hs), Val::I(n as i32)];
+        let func = engine.func_index("nussinov").unwrap();
+        let mut mgr =
+            OffloadManager::new(OffloadParams { min_dfg_nodes: 1, ..Default::default() });
+        assert!(mgr.try_offload(&mut engine, func, None).is_err());
+        engine.call_idx(func, &mut mem, &args).unwrap();
+        let mut want = t.clone();
+        pb::nussinov_reference(&mut want, &s, n);
+        assert_eq!(mem.i32s(ht), &want[..], "nussinov n={n}");
+
+        let mut engine = Engine::new(module_of(pb::floyd_warshall)).unwrap();
+        let mut mem = Memory::new();
+        let p0: Vec<i32> = data(n * n, 42);
+        let hp = mem.from_i32(&p0);
+        let func = engine.func_index("floyd-warshall").unwrap();
+        let mut mgr =
+            OffloadManager::new(OffloadParams { min_dfg_nodes: 1, ..Default::default() });
+        assert!(mgr.try_offload(&mut engine, func, None).is_err());
+        engine
+            .call_idx(func, &mut mem, &[Val::P(hp), Val::I(n as i32)])
+            .unwrap();
+        let mut want = p0.clone();
+        pb::floyd_warshall_reference(&mut want, n);
+        assert_eq!(mem.i32s(hp), &want[..], "floyd-warshall n={n}");
+    }
+
+    // MUX-invalidated kernels: refusal only (side-effecting arms).
+    for (name, build) in [
+        ("deriche", pb::deriche as fn() -> tlo::ir::func::Function),
+        ("durbin", pb::durbin),
+    ] {
+        let mut engine = Engine::new(module_of(build)).unwrap();
+        let mut mgr =
+            OffloadManager::new(OffloadParams { min_dfg_nodes: 1, ..Default::default() });
+        let func = engine.func_index(name).unwrap();
+        assert!(mgr.try_offload(&mut engine, func, None).is_err(), "{name}");
+    }
+}
+
+#[test]
+fn conformance_below_threshold_stays_on_interpreter() {
+    // The DFG-size floor is part of the conformance surface: a refused
+    // offload must leave the function in software, bit-identical to the
+    // oracle.
+    for n in [2usize, 5, 9] {
+        let mut engine = Engine::new(module_of(pb::gemm)).unwrap();
+        let mut mem = Memory::new();
+        let (args, handles) = gemm_setup(&mut mem, n);
+        let func = engine.func_index("gemm").unwrap();
+        let mut mgr = OffloadManager::new(OffloadParams {
+            min_dfg_nodes: 1000,
+            unroll: 2,
+            ..Default::default()
+        });
+        assert!(matches!(
+            mgr.try_offload(&mut engine, func, None),
+            Err(RejectReason::TooSmall { .. })
+        ));
+        assert!(!engine.is_patched(func));
+        let mut want_mem = mem.clone();
+        engine.call_idx(func, &mut mem, &args).unwrap();
+        gemm_ref(&mut want_mem, &args, n);
+        assert_eq!(outs(&mem, &handles), outs(&want_mem, &handles), "n={n}");
+    }
+}
+
+#[test]
+fn conformance_across_tier_boundaries() {
+    // Drive the adaptive controller over a size sweep that straddles its
+    // tier boundaries: below min_batch (stays on the interpreter), mid
+    // (generic tier), large (specializes). Every invocation must stay
+    // bit-identical to the accumulated oracle.
+    let mut engine = Engine::new(module_of(pb::gemm)).unwrap();
+    let mut mem = Memory::new();
+    let n_max = 8usize;
+    let (args, handles) = gemm_setup(&mut mem, n_max);
+    let func = engine.func_index("gemm").unwrap();
+    let mut want_mem = mem.clone();
+
+    let mut mgr =
+        OffloadManager::new(OffloadParams { min_dfg_nodes: 1, ..Default::default() });
+    let mut ctl = AdaptController::new(AdaptParams {
+        hot_cycles: 1,
+        hot_invocations: 1,
+        generic_unroll: 1,
+        candidate_unrolls: vec![4],
+        min_lanes: 4,
+        min_batch: 4,
+        decision_window: 2,
+    });
+
+    // n=1 → 3 total back-edges per call: dominant trip bucket stays below
+    // min_batch, so the controller must hold the interpreter tier.
+    let sweep: [(usize, usize); 3] = [(1, 3), (3, 4), (n_max, 6)];
+    for (n, reps) in sweep {
+        let mut a = args.clone();
+        a[4] = Val::I(n as i32);
+        for _ in 0..reps {
+            engine.call_idx(func, &mut mem, &a).unwrap();
+            ctl.observe(&mut mgr, &mut engine, func);
+            gemm_ref(&mut want_mem, &a, n);
+            if outs(&mem, &handles) != outs(&want_mem, &handles) {
+                fail_with_diff(
+                    "tier-boundary-sweep",
+                    format!("n={n} tier={:?} diverged from oracle", ctl.tier(func)),
+                );
+            }
+        }
+        match n {
+            1 => assert_eq!(ctl.tier(func), Tier::Interpreter, "below min_batch"),
+            3 => assert!(
+                matches!(ctl.tier(func), Tier::Generic | Tier::Specialized),
+                "mid size must offload"
+            ),
+            _ => assert_eq!(ctl.tier(func), Tier::Specialized, "large size specializes"),
+        }
+    }
+    assert!(
+        ctl.transitions(func).len() >= 2,
+        "trace must show the tier walk: {:?}",
+        ctl.transitions(func)
+    );
+}

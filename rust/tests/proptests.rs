@@ -7,7 +7,13 @@
 //!   P3  transport accounting: tagged wire bytes = 4x payload, time is
 //!       monotone in payload;
 //!   P4  extraction ≡ interpreter semantics on randomized affine kernels;
-//!   P5  P&R is Las-Vegas: if it returns, the config is structurally legal.
+//!   P5  P&R is Las-Vegas: if it returns, the config is structurally legal;
+//!   P6  P&R with a fixed seed is deterministic: identical config, stats
+//!       and placement on a second run over the same DFG;
+//!   P7  `dfg_key` never collides for structurally distinct random DFGs,
+//!       always agrees for relabeled rebuilds of the same structure, and
+//!       the specialization-signature component (`spec_key`) separates
+//!       artifacts without ever touching structural identity.
 
 use tlo::dfe::grid::Grid;
 use tlo::dfe::opcodes::{Op, ALL_OPS};
@@ -206,6 +212,113 @@ fn p4_extraction_matches_interpreter_on_random_affine_kernels() {
         mem.i32s_mut(hc).fill(0);
         engine.call("k", &mut mem, &args).unwrap();
         assert_eq!(mem.i32s(hc), &want[..], "case {case} ops {ops:?}");
+    }
+}
+
+#[test]
+fn p6_par_with_fixed_seed_is_deterministic() {
+    let mut rng = Rng::new(4242);
+    let mut checked = 0;
+    for case in 0..40u64 {
+        let n_in = 1 + rng.below(3);
+        let n_calc = 1 + rng.below(8);
+        let dfg = random_dfg(&mut rng, n_in, n_calc);
+        if dfg.stats().outputs == 0 || dfg.stats().calc == 0 {
+            continue;
+        }
+        let run = |seed: u64| {
+            let mut prng = Rng::new(seed);
+            place_and_route(&dfg, Grid::new(6, 6), &ParParams::default(), &mut prng).ok()
+        };
+        match (run(1234 + case), run(1234 + case)) {
+            (Some(x), Some(y)) => {
+                assert_eq!(x.config, y.config, "case {case}: configs differ");
+                assert_eq!(x.placement, y.placement, "case {case}: placements differ");
+                // Stats identical modulo wall time.
+                assert_eq!(
+                    (
+                        x.stats.placements,
+                        x.stats.route_calls,
+                        x.stats.pos_retries,
+                        x.stats.backtracks,
+                        x.stats.restarts
+                    ),
+                    (
+                        y.stats.placements,
+                        y.stats.route_calls,
+                        y.stats.pos_retries,
+                        y.stats.backtracks,
+                        y.stats.restarts
+                    ),
+                    "case {case}: search statistics differ"
+                );
+                checked += 1;
+            }
+            (None, None) => {} // identically unroutable is also deterministic
+            _ => panic!("case {case}: one run routed, the other did not"),
+        }
+    }
+    assert!(checked >= 15, "too few deterministic pairs checked ({checked})");
+}
+
+#[test]
+fn p7_dfg_key_and_spec_signature_properties() {
+    use tlo::dfe::cache::{dfg_key, spec_key, SpecSignature};
+    use tlo::dfg::graph::Node;
+
+    /// Rebuild a DFG node-by-node from its own description: a fresh
+    /// allocation with fresh (but order-preserving) NodeIds — the
+    /// relabeling the order-sensitive structural hash must be blind to.
+    fn rebuild(g: &Dfg) -> Dfg {
+        let mut out = Dfg::default();
+        for Node { kind, srcs } in &g.nodes {
+            out.nodes.push(Node { kind: kind.clone(), srcs: srcs.clone() });
+        }
+        out
+    }
+
+    let mut rng = Rng::new(0xD1D);
+    let mut seen: Vec<(u64, String)> = Vec::new();
+    for case in 0..120u64 {
+        let n_in = 1 + rng.below(4);
+        let n_calc = 1 + rng.below(10);
+        let dfg = random_dfg(&mut rng, n_in, n_calc);
+        let k = dfg_key(&dfg);
+        // Agreement under relabeling: clone and node-by-node rebuild.
+        assert_eq!(k, dfg_key(&dfg.clone()), "case {case}: clone changed the key");
+        assert_eq!(k, dfg_key(&rebuild(&dfg)), "case {case}: rebuild changed the key");
+        // No collisions across structurally distinct graphs; equal
+        // structure (random generators do repeat) must agree.
+        let shape = format!("{:?}", dfg.nodes);
+        for (k2, shape2) in &seen {
+            if shape == *shape2 {
+                assert_eq!(k, *k2, "case {case}: same structure, different key");
+            } else {
+                assert_ne!(k, *k2, "case {case}: distinct structures collide");
+            }
+        }
+        seen.push((k, shape));
+
+        // The specialization-signature component: stable per signature,
+        // distinct across signatures, never equal to the bare key.
+        let sigs = [
+            SpecSignature::generic(1),
+            SpecSignature::generic(4),
+            SpecSignature::new(4, 6),
+            SpecSignature::new(8, 6),
+            SpecSignature::new(8, 9),
+        ];
+        for (i, a) in sigs.iter().enumerate() {
+            assert_eq!(spec_key(k, *a), spec_key(k, *a));
+            assert_ne!(spec_key(k, *a), k, "case {case}: signature collapsed");
+            for b in &sigs[i + 1..] {
+                assert_ne!(
+                    spec_key(k, *a),
+                    spec_key(k, *b),
+                    "case {case}: signatures {a:?}/{b:?} collide"
+                );
+            }
+        }
     }
 }
 
