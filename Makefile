@@ -8,11 +8,15 @@
 #
 #   make bench       Run the harness=false benches in a fixed order and
 #                    write BENCH_dfe.json (wave executor vs CycleSim,
-#                    elements/sec + asserted >=5x speedup) and
-#                    BENCH_serve.json (shard-scaling throughput) at the
-#                    repo root, so the perf trajectory is tracked across
-#                    PRs. Set TLO_BENCH_QUICK=1 for the CI smoke run
-#                    (small n, same assertions).
+#                    elements/sec + asserted >=5x speedup),
+#                    BENCH_serve.json (shard scaling + the A7 sync-vs-
+#                    async transport ablation, asserted >=1.3x) and
+#                    BENCH_transport.json (the deterministic pipeline
+#                    model) at the repo root, so the perf trajectory is
+#                    tracked across PRs. The BENCH_*.json files are
+#                    committed — re-run `make bench` to refresh them. Set
+#                    TLO_BENCH_QUICK=1 for the CI smoke run (small n,
+#                    relaxed transport threshold, same assertions).
 
 PYTHON ?= python3
 
@@ -28,11 +32,12 @@ test:
 	cargo test -q
 	$(PYTHON) -m pytest python/tests -q
 
-# Fixed order: the two JSON-emitting trajectory benches first, then the
+# Fixed order: the three JSON-emitting trajectory benches first, then the
 # paper-table/figure regenerators.
 bench:
 	TLO_BENCH_JSON=$(CURDIR)/BENCH_dfe.json cargo bench --bench hotpath
 	TLO_BENCH_JSON=$(CURDIR)/BENCH_serve.json cargo bench --bench serve_bench
+	TLO_BENCH_JSON=$(CURDIR)/BENCH_transport.json cargo bench --bench transport_bench
 	cargo bench --bench pcie_transport
 	cargo bench --bench rollback_bench
 	cargo bench --bench par_bench
@@ -41,4 +46,4 @@ bench:
 	cargo bench --bench table2
 
 clean:
-	rm -rf target rust/target artifacts BENCH_dfe.json BENCH_serve.json
+	rm -rf target rust/target artifacts

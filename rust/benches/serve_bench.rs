@@ -1,6 +1,8 @@
 //! A4 — serve-layer throughput scaling: the PolyBench mix served by the
 //! multi-tenant offload server at 1, 2 and 4 shard regions of the same
-//! 12x12 overlay.
+//! 12x12 overlay — plus A7, the transport ablation: the same mix under
+//! the synchronous (blocking) link discipline vs the overlapped
+//! double-buffered pipeline.
 //!
 //! What scales: with one shard, four structurally distinct kernels thrash
 //! the single resident configuration (every round pays reconfiguration
@@ -10,14 +12,53 @@
 //! disabled (window = u64::MAX) so the bench isolates shard scaling from
 //! the offload-vs-software economics (rollback_bench covers those).
 //!
-//! Acceptance: aggregate throughput must scale > 1.5x from 1 shard to 4.
+//! What overlaps (A7): on the transfer-bound tagged link the synchronous
+//! server spends `upload + execute + download` per round with a full
+//! barrier between rounds; the async pipeline runs the two link
+//! directions concurrently and carries shard/link timelines across
+//! rounds, so the element throughput approaches the `max(transfer,
+//! compute)` bound. Outputs are bit-identical by construction
+//! (`tests/serve.rs` S6); this bench asserts the speedup.
 //!
-//! With `TLO_BENCH_JSON=<path>` (set by `make bench`), writes the scaling
-//! results as JSON so the perf trajectory is tracked across PRs.
+//! Acceptance: aggregate throughput must scale > 1.5x from 1 shard to 4,
+//! and the async transport must serve >= 1.3x the sync element
+//! throughput on the PolyBench mix (>= 1.05x in the quick smoke mode,
+//! where tiny request counts leave little to overlap).
+//!
+//! With `TLO_BENCH_JSON=<path>` (set by `make bench`), writes both
+//! sections as JSON so the perf trajectory is tracked across PRs.
 
 use tlo::dfe::grid::Grid;
-use tlo::offload::server::{polybench_mix, OffloadServer, ServeParams};
+use tlo::offload::server::{polybench_mix, OffloadServer, ServeParams, ServeReport};
+use tlo::transport::{PcieParams, TransportMode};
 use tlo::util::fmt_duration;
+
+fn run_mix(
+    shards: usize,
+    tenants: usize,
+    requests: u64,
+    transport: TransportMode,
+    pcie: PcieParams,
+) -> ServeReport {
+    // 16x12 keeps even the 4-way split at 4x12 = 48 cells per region,
+    // comfortable for every mix DFG's place & route.
+    let params = ServeParams {
+        shards,
+        grid: Grid::new(16, 12),
+        rollback_window: u64::MAX,
+        transport,
+        pcie,
+        ..Default::default()
+    };
+    let mut server = OffloadServer::new(params, polybench_mix(tenants)).expect("server setup");
+    let offloaded = server.tenants.iter().filter(|t| t.offload.is_some()).count();
+    assert!(
+        offloaded >= 3,
+        "{shards} shards: only {offloaded}/{tenants} tenants offloaded — the \
+         measurement would be meaningless"
+    );
+    server.run(requests)
+}
 
 fn main() {
     let quick = std::env::var("TLO_BENCH_QUICK").map(|v| v == "1").unwrap_or(false)
@@ -34,23 +75,13 @@ fn main() {
     let mut results: Vec<(usize, f64)> = Vec::new();
     let mut json_rows: Vec<String> = Vec::new();
     for shards in [1usize, 2, 4] {
-        // 16x12 keeps even the 4-way split at 4x12 = 48 cells per region,
-        // comfortable for every mix DFG's place & route.
-        let params = ServeParams {
+        let report = run_mix(
             shards,
-            grid: Grid::new(16, 12),
-            rollback_window: u64::MAX,
-            ..Default::default()
-        };
-        let mut server =
-            OffloadServer::new(params, polybench_mix(tenants)).expect("server setup");
-        let offloaded = server.tenants.iter().filter(|t| t.offload.is_some()).count();
-        assert!(
-            offloaded >= 3,
-            "{shards} shards: only {offloaded}/{tenants} tenants offloaded — scaling \
-             measurement would be meaningless"
+            tenants,
+            requests,
+            TransportMode::Sync,
+            PcieParams::riffa_like(),
         );
-        let report = server.run(requests);
         let reconfigs: u64 = report.shards.iter().map(|s| s.reconfigs).sum();
         let execs: u64 = report.shards.iter().map(|s| s.executed).sum();
         println!(
@@ -86,17 +117,67 @@ fn main() {
     );
     println!("PASS: multi-shard serving scales aggregate throughput {scaling:.2}x");
 
+    // ---- A7: sync vs async transport on the transfer-bound tagged link ----
+    println!(
+        "\n== A7: transport ablation (2 shards, tagged protocol, {tenants} tenants x {requests} requests) =="
+    );
+    let sync = run_mix(2, tenants, requests, TransportMode::Sync, PcieParams::default());
+    let pipe = run_mix(
+        2,
+        tenants,
+        requests,
+        TransportMode::async_default(),
+        PcieParams::default(),
+    );
+    assert_eq!(
+        sync.total_elements, pipe.total_elements,
+        "the ablation must serve identical work"
+    );
+    let sync_eps = sync.elements_per_sec();
+    let async_eps = pipe.elements_per_sec();
+    let speedup = async_eps / sync_eps;
+    println!(
+        "{:>10} {:>16} {:>12}",
+        "transport", "elements/s", "makespan"
+    );
+    println!("{:>10} {:>16.0} {:>12}", "sync", sync_eps, fmt_duration(sync.makespan));
+    println!("{:>10} {:>16.0} {:>12}", "async", async_eps, fmt_duration(pipe.makespan));
+    let threshold = if quick { 1.05 } else { 1.3 };
+    println!(
+        "\nasync vs sync element throughput: {speedup:.2}x (acceptance target: >= {threshold}x)"
+    );
+    assert!(
+        speedup >= threshold,
+        "async transport speedup {speedup:.2}x below the {threshold}x acceptance threshold"
+    );
+    println!("PASS: overlapped transport serves {speedup:.2}x the sync element throughput");
+
     if let Ok(path) = std::env::var("TLO_BENCH_JSON") {
         let doc = format!(
             "{{\n  \"bench\": \"serve\",\n  \"mode\": \"{}\",\n  \
              \"tenants\": {},\n  \"requests_per_tenant\": {},\n  \
              \"points\": [{}\n  ],\n  \"scaling_1_to_4\": {:.3},\n  \
-             \"threshold\": 1.5\n}}\n",
+             \"threshold\": 1.5,\n  \"transport\": {{\n    \
+             \"protocol\": \"tagged\",\n    \"shards\": 2,\n    \
+             \"elements\": {},\n    \
+             \"sync_elements_per_sec\": {:.1},\n    \
+             \"async_elements_per_sec\": {:.1},\n    \
+             \"sync_makespan_sec\": {:.6},\n    \
+             \"async_makespan_sec\": {:.6},\n    \
+             \"async_vs_sync_speedup\": {:.3},\n    \
+             \"threshold\": {}\n  }}\n}}\n",
             if quick { "quick" } else { "full" },
             tenants,
             requests,
             json_rows.join(","),
-            scaling
+            scaling,
+            sync.total_elements,
+            sync_eps,
+            async_eps,
+            sync.makespan.as_secs_f64(),
+            pipe.makespan.as_secs_f64(),
+            speedup,
+            threshold
         );
         std::fs::write(&path, doc).expect("write TLO_BENCH_JSON");
         println!("wrote {path}");

@@ -65,6 +65,24 @@ pub struct SimResult {
     pub initiation_interval: f64,
 }
 
+impl SimResult {
+    /// Per-chunk busy intervals `(start, end)` in cycles of the streamed
+    /// batch split into `chunks` back-to-back submissions, derived from
+    /// the *measured* fill and initiation interval — the elastic-model
+    /// counterpart of `dfe::exec::CompiledFabric::busy_intervals`, feeding
+    /// the same overlapped-transport scheduler for configurations that
+    /// did not lower.
+    pub fn busy_intervals(&self, chunks: usize) -> Vec<(f64, f64)> {
+        let lanes = self.outputs.iter().map(Vec::len).max().unwrap_or(0);
+        crate::dfe::exec::busy_intervals_model(
+            self.fill_latency as f64,
+            self.initiation_interval.max(1.0),
+            lanes,
+            chunks,
+        )
+    }
+}
+
 pub struct CycleSim<'a> {
     cfg: &'a GridConfig,
     producers: Vec<Producer>,

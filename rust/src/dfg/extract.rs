@@ -78,6 +78,11 @@ pub enum ExtractReject {
     NonAffineAccess,
     /// Loop-carried dependence that is not a recognizable reduction.
     LoopCarried,
+    /// A body block with no terminator: malformed IR that
+    /// `ir::verify_function` rejects upstream
+    /// ([`crate::ir::VerifyError::Unterminated`]); the extractor returns
+    /// a structured error instead of unwrapping into a panic.
+    MissingTerminator(BlockId),
     /// Shapes the extractor does not model.
     Unsupported(&'static str),
 }
@@ -89,6 +94,7 @@ impl ExtractReject {
             ExtractReject::FpData => "No, fp data",
             ExtractReject::NonAffineAccess => "no SCoP",
             ExtractReject::LoopCarried => "No, loop-carried",
+            ExtractReject::MissingTerminator(_) => "No, malformed IR",
             ExtractReject::Unsupported(_) => "No, unsupported",
         }
     }
@@ -369,7 +375,13 @@ impl<'a> Extractor<'a> {
             for inst in insts {
                 self.step(&mut env, inst, shift)?;
             }
-            match block.term.clone().unwrap() {
+            let Some(term) = block.term.clone() else {
+                // Terminator-less block: constructible through the IR
+                // builder (`new_block` without `terminate`) and screened
+                // by `ir::verify_function`; reject instead of panicking.
+                return Err(ExtractReject::MissingTerminator(cur));
+            };
+            match term {
                 Term::Br(h) if h == header => return Ok(()),
                 Term::Br(next) => cur = next,
                 Term::CondBr { c, t, f } => {
@@ -736,6 +748,44 @@ mod tests {
             .any(|nd| matches!(nd.kind, NodeKind::Calc(Op::Mux))));
         assert_eq!(off.dfg.eval(&[10, 2]).unwrap(), vec![17]);
         assert_eq!(off.dfg.eval(&[2, 10]).unwrap(), vec![-50]);
+    }
+
+    #[test]
+    fn unterminated_body_block_rejects_instead_of_panicking() {
+        use crate::ir::verify::{verify_function, VerifyError};
+        // Regression (ISSUE 4): a terminator-less block is constructible
+        // through the IR builder (`new_block` without `terminate`); the
+        // extractor used to `unwrap()` the terminator and panic. Build a
+        // well-formed loop, record its SCoP, then strip the body block's
+        // terminator.
+        let mut b = FuncBuilder::new("unterm", &[("A", Ty::Ptr), ("n", Ty::I32)]);
+        let (a, n) = (b.param(0), b.param(1));
+        let zero = b.const_i32(0);
+        b.counted_loop(zero, n, |b, i| {
+            b.store(Ty::I32, a, i, i);
+        });
+        let mut f = b.ret(None);
+        let scop = analyze_function(&f).scops[0].clone();
+        f.blocks[scop.body_entry.0 as usize].term = None;
+
+        // Upstream screen #1: the IR verifier rejects the function.
+        assert!(matches!(
+            verify_function(&f, None),
+            Err(VerifyError::Unterminated(blk)) if blk == scop.body_entry
+        ));
+        // Upstream screen #2: SCoP analysis refuses it too, so
+        // `try_offload` never hands malformed IR to the extractor.
+        assert!(analyze_function(&f).scops.is_empty());
+        // And the extractor itself returns a structured error — the
+        // pre-fix code panicked here on `block.term.clone().unwrap()`.
+        assert_eq!(
+            extract(&f, &scop, 1).err(),
+            Some(ExtractReject::MissingTerminator(scop.body_entry))
+        );
+        assert_eq!(
+            ExtractReject::MissingTerminator(scop.body_entry).label(),
+            "No, malformed IR"
+        );
     }
 
     #[test]

@@ -15,8 +15,11 @@
 //! * Serve layer ([`offload::server`]): the manager generalized to a
 //!   multi-tenant scheduler — N placed-and-routed shard regions on one
 //!   device ([`dfe::grid::Region`]), a cross-tenant LRU configuration
-//!   cache, and per-round transfer coalescing on the shared PCIe link
-//!   ([`transport::BatchQueue`]). `tlo serve --tenants N --shards K`.
+//!   cache, and per-round transfer coalescing on the shared PCIe link:
+//!   blocking ([`transport::BatchQueue`]) or double-buffered full-duplex
+//!   ([`transport::pipeline`], the default in `tlo serve`; `--transport
+//!   sync` keeps the paper's discipline). `tlo serve --tenants N
+//!   --shards K`.
 //! * L2/L1 (build-time python): the DFE datapath as a Pallas kernel,
 //!   AOT-lowered to HLO text and executed via PJRT ([`runtime`], behind
 //!   the `pjrt` cargo feature; the default build uses the rust DFE

@@ -12,12 +12,13 @@
 use tlo::util::cli::Args;
 
 const USAGE: &str = "subcommands: table1 | table2 [--device NAME] | video [--frames N --riffa] \
-| serve [--tenants N --shards K --requests R --grid RxC --tagged --no-adapt --no-verify] \
+| serve [--tenants N --shards K --requests R --grid RxC --transport sync|async|async:D \
+--tagged --no-adapt --no-verify] \
 | devices";
 
 fn main() {
     let args = Args::from_env(&[
-        "device", "frames", "n", "seed", "tenants", "shards", "requests", "grid",
+        "device", "frames", "n", "seed", "tenants", "shards", "requests", "grid", "transport",
     ]);
     match args.positional.first().map(String::as_str) {
         Some("table1") => table1(),
@@ -167,11 +168,24 @@ fn video(args: &Args) {
 fn serve(args: &Args) {
     use tlo::dfe::grid::Grid;
     use tlo::offload::server::{run_single_tenant, OffloadServer, ServeParams, serve_mix};
-    use tlo::transport::PcieParams;
+    use tlo::transport::{PcieParams, TransportMode};
 
     let tenants = args.get_usize("tenants", 4).max(1);
     let shards = args.get_usize("shards", 2).max(1);
     let requests = args.get_u64("requests", 8).max(1);
+    // The overlapped pipeline is the production default; `--transport
+    // sync` keeps the paper's blocking prototype for the A7 ablation and
+    // the bit-for-bit conformance diff.
+    let transport = match args.get("transport") {
+        None => TransportMode::async_default(),
+        Some(s) => match TransportMode::parse(s) {
+            Some(m) => m,
+            None => {
+                eprintln!("bad --transport '{s}' (expected sync | async | async:D)");
+                std::process::exit(2);
+            }
+        },
+    };
     let grid = match args.get("grid") {
         None => Grid::new(12, 12),
         Some(s) => match parse_grid(s) {
@@ -186,6 +200,7 @@ fn serve(args: &Args) {
         shards,
         grid,
         seed: args.get_u64("seed", 0x5EED),
+        transport,
         // Live adaptive respecialization is on by default on the serve
         // path; --no-adapt pins every tenant to its spec'd unroll.
         adapt: (!args.flag("no-adapt"))
@@ -197,10 +212,11 @@ fn serve(args: &Args) {
     }
     let specs = serve_mix(tenants);
     println!(
-        "serving {tenants} tenants on {shards} shard(s) of a {}x{} overlay ({} protocol)",
+        "serving {tenants} tenants on {shards} shard(s) of a {}x{} overlay ({} protocol, {} transport)",
         grid.rows,
         grid.cols,
-        if args.flag("tagged") { "tagged 128b/32b" } else { "packed/RIFFA-like" }
+        if args.flag("tagged") { "tagged 128b/32b" } else { "packed/RIFFA-like" },
+        transport
     );
     let mut server = match OffloadServer::new(params, specs.clone()) {
         Ok(s) => s,

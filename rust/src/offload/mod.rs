@@ -26,10 +26,10 @@ use crate::jit::engine::{Engine, FnProfile, Histogram};
 use crate::jit::interp::Val;
 use crate::par::{place_and_route, ParParams, ParStats};
 use crate::trace::{Phase, Tracer};
-use crate::transport::{PcieParams, PcieSim};
+use crate::transport::{chunk_plan, ChunkTimeline, PcieParams, PcieSim, TransportMode};
 use crate::util::prng::Rng;
 
-use stub::{run_offloaded, DfeBackend, StubReport, TimeModel};
+use stub::{run_offloaded_with, DfeBackend, StubReport, TimeModel};
 
 /// Which sim-side numerics engine the stub runs when no PJRT runtime is
 /// attached. `Auto` is the production choice; the pinned variants exist
@@ -67,6 +67,10 @@ pub struct OffloadParams {
     pub cache_capacity: usize,
     /// Sim-side numerics backend (conformance suite pins this).
     pub sim_backend: SimBackendChoice,
+    /// Transfer scheduling discipline: the paper's blocking prototype
+    /// (`Sync`) or the overlapped double-buffered pipeline
+    /// (`transport::pipeline`). Changes timing only, never numerics.
+    pub transport: TransportMode,
 }
 
 impl Default for OffloadParams {
@@ -83,6 +87,7 @@ impl Default for OffloadParams {
             sec_per_cycle: 1e-9,
             cache_capacity: 32,
             sim_backend: SimBackendChoice::Auto,
+            transport: TransportMode::Sync,
         }
     }
 }
@@ -407,12 +412,13 @@ impl OffloadManager {
         let off_h = off.clone();
         let single_h = single.clone();
         let hook_unroll = off.unroll.max(1) as u64;
+        let mode = self.params.transport;
         engine.patch_hook(
             func,
             Box::new(move |mem, args| {
                 let mut pcie = pcie.borrow_mut();
-                let r = run_offloaded(
-                    &off_h, &single_h, &image, &backend, &tm, &mut pcie, mem, args,
+                let r = run_offloaded_with(
+                    &off_h, &single_h, &image, &backend, &tm, &mut pcie, mode, mem, args,
                 );
                 match r {
                     Ok(report) => {
@@ -504,8 +510,9 @@ impl OffloadManager {
         let (cand, _, _) = self.route_cached(&off.dfg, key)?;
         let est = self.device.estimate(self.params.grid.rows, self.params.grid.cols);
         let fmax = est.fmax_mhz * 1e6;
-        let t_cur = batch_time(&cur.cached, cur.unroll, batch, fmax);
-        let t_cand = batch_time(&cand, unroll, batch, fmax);
+        let link = (self.params.pcie, self.params.transport);
+        let t_cur = invocation_time(&cur.cached, cur.unroll, batch, fmax, link);
+        let t_cand = invocation_time(&cand, unroll, batch, fmax, link);
         let keep = if unroll < cur.unroll { t_cand > t_cur } else { t_cand >= t_cur };
         if keep {
             return Ok(Reconfig::Kept {
@@ -611,6 +618,60 @@ pub fn batch_time(cached: &CachedConfig, unroll: usize, batch: u64, fmax_hz: f64
     let lanes = batch / u + batch % u;
     let cycles = fill + lanes.saturating_sub(1) as f64 * ii;
     Duration::from_secs_f64(cycles / fmax_hz.max(1.0))
+}
+
+/// Full modeled invocation time for one offloaded batch, transport
+/// discipline included — the promotion/respecialization comparator.
+///
+/// Synchronous transport: transfer volume is (near-)identical across
+/// unroll factors — same total words, framed the same way — so it cancels
+/// out of any tier comparison and [`batch_time`] (execution only) is the
+/// whole signal, exactly the pre-pipeline model.
+///
+/// Asynchronous transport: transfers overlap execution on the
+/// [`ChunkTimeline`] the stub itself schedules with, so the makespan is
+/// `≈ max(transfer, compute)` — once the link hides the fabric time, a
+/// deeper specialized pipeline stops paying for its fill and the model
+/// (correctly) stops preferring it. "Transfer hidden under compute
+/// changes which unroll tier wins" is not a side effect; it is the point.
+pub fn invocation_time(
+    cached: &CachedConfig,
+    unroll: usize,
+    batch: u64,
+    fmax_hz: f64,
+    link: (PcieParams, TransportMode),
+) -> Duration {
+    let (pcie, mode) = link;
+    if batch == 0 {
+        return Duration::ZERO;
+    }
+    if !mode.is_async() {
+        return batch_time(cached, unroll, batch, fmax_hz);
+    }
+    let (fill, ii) = pipeline_model(cached);
+    let fmax = fmax_hz.max(1.0);
+    let u = unroll.max(1) as u64;
+    let lanes = (batch / u) as usize;
+    let n_in = cached.image.n_inputs.max(1);
+    let n_out = cached.image.out_sel.len().max(1);
+    // Per-chunk fabric cost = busy-window deltas (only the first chunk
+    // pays the fill), exactly what the stub charges — the model and the
+    // runtime cannot drift.
+    let plan = chunk_plan(lanes, mode);
+    let windows = crate::dfe::exec::busy_windows(fill, ii, &plan);
+    let mut tl = ChunkTimeline::new(mode);
+    let mut exec_done = 0.0f64;
+    for (&(_, m), &(_, busy_end)) in plan.iter().zip(&windows) {
+        let up = pcie.transfer_secs((n_in * m * 4) as u64);
+        let exec = (busy_end - exec_done) / fmax;
+        exec_done = busy_end;
+        let down = pcie.transfer_secs((n_out * m * 4) as u64);
+        tl.step(up, exec, down);
+    }
+    // Remainder iterations execute host-exact but still cost the caller:
+    // charge them one initiation interval each, as `batch_time` does.
+    let rem_secs = (batch % u) as f64 * ii / fmax;
+    Duration::from_secs_f64(tl.wall + rem_secs)
 }
 
 /// Measure pipeline fill latency and initiation interval on the cycle
@@ -862,6 +923,75 @@ mod tests {
             "{err}"
         );
         assert!(!engine.is_patched(func));
+    }
+
+    #[test]
+    fn async_transport_is_bit_identical_and_overlaps() {
+        let n = 1000;
+        let a: Vec<i32> = (0..n).map(|i| i * 5 - 211).collect();
+        let b: Vec<i32> = (0..n).map(|i| 17 - i * 2).collect();
+        let run_mode = |mode: TransportMode| -> (Vec<i32>, Duration, Duration) {
+            let mut engine = Engine::new(fig2_module()).unwrap();
+            let mut mem = Memory::new();
+            let (ha, hb) = (mem.from_i32(&a), mem.from_i32(&b));
+            let hc = mem.alloc_i32(n as usize);
+            run_fig2(&mut engine, &mut mem, hc, ha, hb, n);
+            let mut mgr = OffloadManager::new(OffloadParams {
+                min_dfg_nodes: 1,
+                unroll: 4,
+                transport: mode,
+                ..Default::default()
+            });
+            let func = engine.func_index("fig2").unwrap();
+            mgr.try_offload(&mut engine, func, None).expect("offload");
+            run_fig2(&mut engine, &mut mem, hc, ha, hb, n - 3);
+            let st = mgr.state(func).unwrap();
+            let report = st.borrow().last_report;
+            (mem.i32s(hc).to_vec(), report.offload_time(), report.occupancy())
+        };
+        let (out_sync, wall_sync, occ_sync) = run_mode(TransportMode::Sync);
+        let (out_async, wall_async, occ_async) =
+            run_mode(TransportMode::async_default());
+        assert_eq!(out_sync, out_async, "transport mode must never change numerics");
+        // Sync: wall is the serial phase sum. Async: transfers overlap the
+        // fabric and each other, so the makespan is strictly below the
+        // occupancy sum (and below the sync wall).
+        assert_eq!(wall_sync, occ_sync);
+        assert!(
+            wall_async < occ_async,
+            "async wall {wall_async:?} !< occupancy {occ_async:?}"
+        );
+        assert!(wall_async < wall_sync, "{wall_async:?} !< {wall_sync:?}");
+    }
+
+    #[test]
+    fn invocation_time_models_sync_as_batch_time_and_async_as_overlap() {
+        let mut engine = Engine::new(fig2_module()).unwrap();
+        let mut mgr =
+            OffloadManager::new(OffloadParams { min_dfg_nodes: 1, ..Default::default() });
+        let func = engine.func_index("fig2").unwrap();
+        mgr.try_offload(&mut engine, func, None).unwrap();
+        let cached = mgr.active(func).unwrap().cached.clone();
+        let fmax = 150.0e6;
+        let pcie = PcieParams::default();
+        let batch = 4096;
+        assert_eq!(
+            invocation_time(&cached, 1, batch, fmax, (pcie, TransportMode::Sync)),
+            batch_time(&cached, 1, batch, fmax),
+            "sync comparator stays the transfer-cancelling execution model"
+        );
+        let sync_full = batch_time(&cached, 1, batch, fmax)
+            + Duration::from_secs_f64(
+                pcie.transfer_secs(cached.image.n_inputs as u64 * batch * 4)
+                    + pcie.transfer_secs(cached.image.out_sel.len() as u64 * batch * 4),
+            );
+        let pipelined =
+            invocation_time(&cached, 1, batch, fmax, (pcie, TransportMode::async_default()));
+        assert!(pipelined > Duration::ZERO);
+        assert!(
+            pipelined < sync_full,
+            "overlap must beat the serial sum: {pipelined:?} vs {sync_full:?}"
+        );
     }
 
     #[test]

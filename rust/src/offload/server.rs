@@ -40,7 +40,7 @@ use crate::jit::engine::{Engine, Histogram};
 use crate::jit::interp::{Memory, Val};
 use crate::par::{place_and_route, ParParams};
 use crate::trace::{Phase, Tracer};
-use crate::transport::{BatchQueue, PcieParams, PcieSim};
+use crate::transport::{AsyncLink, BatchQueue, PcieParams, PcieSim, TransportMode};
 use crate::util::err::{Error, Result};
 use crate::{anyhow, bail};
 use crate::util::fmt_duration;
@@ -48,7 +48,7 @@ use crate::util::prng::Rng;
 use crate::workloads::{polybench, video};
 
 use super::adapt::{target_unroll, AdaptParams};
-use super::stub::{run_offloaded, DfeBackend, TimeModel};
+use super::stub::{run_offloaded_with, DfeBackend, TimeModel};
 use super::{OffloadManager, OffloadParams, RejectReason, RuntimeState};
 
 /// Software warmup invocations per tenant before the offload decision
@@ -91,6 +91,14 @@ pub struct ServeParams {
     /// prefers it — shards specialize independently under the
     /// hotness-weighted scheduler. `None` keeps the static PR-2 behavior.
     pub adapt: Option<AdaptParams>,
+    /// Shared-link scheduling discipline. `Sync` is the paper's blocking
+    /// prototype: every round's uploads, executions and downloads complete
+    /// before the next round starts. `Async` removes the round barrier:
+    /// the link is full-duplex, each shard keeps `depth` staging buffers,
+    /// and round *r+1*'s uploads overlap round *r*'s executions and round
+    /// *r-1*'s downloads. Numerics are identical by construction
+    /// (`tests/serve.rs` S6 diffs the two bit-for-bit).
+    pub transport: TransportMode,
 }
 
 impl Default for ServeParams {
@@ -109,6 +117,7 @@ impl Default for ServeParams {
             reconfig_epsilon: Duration::from_micros(600),
             batch_window: 0,
             adapt: None,
+            transport: TransportMode::Sync,
         }
     }
 }
@@ -192,6 +201,7 @@ pub struct Tenant {
     /// report sums these with the live state so totals stay cumulative).
     pub retired_invocations: u64,
     pub retired_virtual: Duration,
+    pub retired_elements: u64,
     /// Offloaded invocations/elements already folded into the decision
     /// window (mirrors `adapt::FnAdapt`'s delta tracking — keep in sync).
     adapt_seen: u64,
@@ -207,8 +217,29 @@ pub struct ShardState {
     /// Configuration currently loaded (a [`region_key`]).
     pub resident: Option<u64>,
     pub busy_until: Duration,
+    /// The same instant in exact f64 seconds (the async scheduler's
+    /// working representation; `busy_until` is its rounded mirror).
+    pub busy_secs: f64,
     pub reconfigs: u64,
     pub executed: u64,
+}
+
+/// The serve layer's shared PCIe link, in either scheduling discipline.
+pub enum ServeLink {
+    /// Round-barriered half-duplex coalescing (the paper's discipline).
+    Sync(BatchQueue),
+    /// Full-duplex double-buffered pipeline (`transport::pipeline`).
+    Async(AsyncLink),
+}
+
+impl ServeLink {
+    /// The shared accounting core (totals for reports).
+    pub fn sim(&self) -> &PcieSim {
+        match self {
+            ServeLink::Sync(q) => &q.sim,
+            ServeLink::Async(l) => &l.sim,
+        }
+    }
 }
 
 pub struct OffloadServer {
@@ -221,7 +252,7 @@ pub struct OffloadServer {
     pub cache: ConfigCache,
     pub tenants: Vec<Tenant>,
     pub shards: Vec<ShardState>,
-    pub link: BatchQueue,
+    pub link: ServeLink,
     pub tracer: Rc<RefCell<Tracer>>,
     /// Virtual server clock (advanced per scheduling round).
     pub clock: Duration,
@@ -268,11 +299,17 @@ impl OffloadServer {
                 region,
                 resident: None,
                 busy_until: Duration::ZERO,
+                busy_secs: 0.0,
                 reconfigs: 0,
                 executed: 0,
             })
             .collect();
-        let link = BatchQueue::new(params.pcie, params.shards);
+        let link = match params.transport {
+            TransportMode::Sync => ServeLink::Sync(BatchQueue::new(params.pcie, params.shards)),
+            TransportMode::Async { depth } => {
+                ServeLink::Async(AsyncLink::new(params.pcie, params.shards, depth))
+            }
+        };
         let mut server = OffloadServer {
             device,
             regions: regions.clone(),
@@ -347,6 +384,7 @@ impl OffloadServer {
             respecs: Vec::new(),
             retired_invocations: 0,
             retired_virtual: Duration::ZERO,
+            retired_elements: 0,
             adapt_seen: 0,
             adapt_seen_elements: 0,
             window_count: 0,
@@ -444,10 +482,18 @@ impl OffloadServer {
     /// Serve `requests_per_tenant` requests per tenant to completion and
     /// return the aggregate report. Numerics execute immediately; link and
     /// shard occupancy advance the virtual clock round by round.
+    ///
+    /// Under the synchronous transport every round is a barrier: all
+    /// uploads, executions and downloads complete before the next round's
+    /// transfers start. Under the asynchronous transport only admission
+    /// stays round-based — the link timelines, shard busy intervals and
+    /// staging rings carry across rounds, so round *r+1*'s uploads overlap
+    /// round *r*'s fabric time and round *r-1*'s downloads.
     pub fn run(&mut self, requests_per_tenant: u64) -> ServeReport {
         let n_t = self.tenants.len();
         let window = if self.params.batch_window == 0 { n_t } else { self.params.batch_window };
         let epsilon = self.params.reconfig_epsilon;
+        let barrier = !self.params.transport.is_async();
         let mut remaining: Vec<u64> = vec![requests_per_tenant; n_t];
         let mut host_free = self.clock;
 
@@ -476,6 +522,7 @@ impl OffloadServer {
                 d2h: u64,
             }
             let mut pending: Vec<PendingExec> = Vec::new();
+            let mut up_payloads: Vec<Vec<u64>> = vec![Vec::new(); self.shards.len()];
             let mut recfg_extra = vec![Duration::ZERO; self.shards.len()];
             let mut round_load = vec![0u32; self.shards.len()];
             let mut sw_time = Duration::ZERO;
@@ -546,56 +593,127 @@ impl OffloadServer {
                         self.shards[shard].resident = Some(key);
                         self.shards[shard].reconfigs += 1;
                         recfg_extra[shard] += epsilon;
-                        self.link.enqueue(shard, cfg_bytes);
+                        up_payloads[shard].push(cfg_bytes);
                         self.tracer.borrow_mut().simulated(Phase::Configure, epsilon);
                     }
-                    self.link.enqueue(shard, report.h2d_bytes);
+                    up_payloads[shard].push(report.h2d_bytes);
                     pending.push(PendingExec {
                         shard,
                         exec: report.dfe_exec,
                         d2h: report.d2h_bytes,
                     });
                 } else {
-                    // Software request: the host is one serialized core.
+                    // Software request: the host is one serialized core
+                    // (it only waits on the round barrier when there is
+                    // one).
                     let t = &self.tenants[ti];
-                    host_free = host_free.max(round_start) + t.baseline_per_inv;
+                    if barrier {
+                        host_free = host_free.max(round_start);
+                    }
+                    host_free += t.baseline_per_inv;
                     sw_time += t.baseline_per_inv;
                 }
                 self.tenants[ti].served += 1;
             }
 
-            // ---- upstream: coalesced per-shard batches on the link ----
-            let up_done_list = self.link.flush(round_start);
-            let mut up_done = vec![round_start; self.shards.len()];
-            for (s, done) in up_done_list {
-                up_done[s] = done;
-            }
-
-            // ---- execute: serially per shard, overlapped across shards ----
+            // ---- transfers + execution on the shared link ----
             let mut queue_wait = Duration::ZERO;
-            for p in &pending {
-                let s = p.shard;
-                let mut start = up_done[s].max(self.shards[s].busy_until).max(round_start);
-                start += std::mem::take(&mut recfg_extra[s]);
-                queue_wait += start.saturating_sub(round_start);
-                self.shards[s].busy_until = start + p.exec;
-                self.shards[s].executed += 1;
-            }
+            let end = match &mut self.link {
+                ServeLink::Sync(link) => {
+                    // Upstream: coalesced per-shard batches, serialized on
+                    // the half-duplex link, all gated on the round start.
+                    for (s, ps) in up_payloads.iter().enumerate() {
+                        for &p in ps {
+                            link.enqueue(s, p);
+                        }
+                    }
+                    let up_done_list = link.flush(round_start);
+                    let mut up_done = vec![round_start; self.shards.len()];
+                    for (s, done) in up_done_list {
+                        up_done[s] = done;
+                    }
 
-            // ---- downstream: coalesced per shard after its last exec ----
-            for p in &pending {
-                self.link.enqueue(p.shard, p.d2h);
-            }
-            let ready: Vec<Duration> = self.shards.iter().map(|s| s.busy_until).collect();
-            let down_done = self.link.flush_after(&ready);
+                    // Execute: serially per shard, overlapped across shards.
+                    for p in &pending {
+                        let s = p.shard;
+                        let mut start =
+                            up_done[s].max(self.shards[s].busy_until).max(round_start);
+                        start += std::mem::take(&mut recfg_extra[s]);
+                        queue_wait += start.saturating_sub(round_start);
+                        self.shards[s].busy_until = start + p.exec;
+                        self.shards[s].busy_secs = self.shards[s].busy_until.as_secs_f64();
+                        self.shards[s].executed += 1;
+                    }
 
-            let mut end = round_start.max(host_free);
-            for s in &self.shards {
-                end = end.max(s.busy_until);
-            }
-            for (_, done) in down_done {
-                end = end.max(done);
-            }
+                    // Downstream: coalesced per shard after its last exec.
+                    for p in &pending {
+                        link.enqueue(p.shard, p.d2h);
+                    }
+                    let ready: Vec<Duration> =
+                        self.shards.iter().map(|s| s.busy_until).collect();
+                    let down_done = link.flush_after(&ready);
+
+                    let mut end = round_start.max(host_free);
+                    for s in &self.shards {
+                        end = end.max(s.busy_until);
+                    }
+                    for (_, done) in down_done {
+                        end = end.max(done);
+                    }
+                    end
+                }
+                ServeLink::Async(link) => {
+                    // Upstream: the same per-shard coalesced batches, but
+                    // gated only by the upload direction and the shard's
+                    // staging ring — never by the previous round's
+                    // executions or downloads.
+                    let mut up_done = vec![0f64; self.shards.len()];
+                    for (s, ps) in up_payloads.iter().enumerate() {
+                        if !ps.is_empty() {
+                            up_done[s] = link.upload(s, ps, 0.0).1;
+                        }
+                    }
+
+                    // Execute serially per shard on its own timeline.
+                    let mut round_exec = vec![false; self.shards.len()];
+                    for p in &pending {
+                        let s = p.shard;
+                        let mut start = up_done[s].max(self.shards[s].busy_secs);
+                        start += std::mem::take(&mut recfg_extra[s]).as_secs_f64();
+                        if !round_exec[s] {
+                            queue_wait +=
+                                Duration::from_secs_f64((start - up_done[s]).max(0.0));
+                            round_exec[s] = true;
+                        }
+                        self.shards[s].busy_secs = start + p.exec.as_secs_f64();
+                        self.shards[s].busy_until =
+                            Duration::from_secs_f64(self.shards[s].busy_secs);
+                        self.shards[s].executed += 1;
+                    }
+
+                    // Retire this round's staging buffers and schedule the
+                    // coalesced downloads on the opposite direction (they
+                    // overlap the next round's uploads).
+                    let mut down_payloads: Vec<Vec<u64>> =
+                        vec![Vec::new(); self.shards.len()];
+                    for p in &pending {
+                        down_payloads[p.shard].push(p.d2h);
+                    }
+                    let mut end_secs = host_free.as_secs_f64();
+                    for s in 0..self.shards.len() {
+                        if round_exec[s] {
+                            link.retire_exec(s, self.shards[s].busy_secs);
+                        }
+                        end_secs = end_secs.max(self.shards[s].busy_secs);
+                        if !down_payloads[s].is_empty() {
+                            let (_, dend) =
+                                link.download(s, &down_payloads[s], self.shards[s].busy_secs);
+                            end_secs = end_secs.max(dend);
+                        }
+                    }
+                    self.clock.max(Duration::from_secs_f64(end_secs))
+                }
+            };
             {
                 let mut tr = self.tracer.borrow_mut();
                 if sw_time > Duration::ZERO {
@@ -638,7 +756,7 @@ impl OffloadServer {
     }
 
     fn report(&self) -> ServeReport {
-        let tenants = self
+        let tenants: Vec<TenantReport> = self
             .tenants
             .iter()
             .map(|t| TenantReport {
@@ -660,6 +778,8 @@ impl OffloadServer {
                         .unwrap_or_default(),
                 invocations: t.retired_invocations
                     + t.state.as_ref().map(|s| s.borrow().invocations).unwrap_or(0),
+                elements: t.retired_elements
+                    + t.state.as_ref().map(|s| s.borrow().total_elements).unwrap_or(0),
             })
             .collect();
         let shards = self
@@ -672,16 +792,19 @@ impl OffloadServer {
                 busy: s.busy_until,
             })
             .collect();
+        let total_elements = tenants.iter().map(|t| t.elements).sum();
         ServeReport {
-            tenants,
             shards,
             makespan: self.clock,
             total_requests: self.tenants.iter().map(|t| t.served).sum(),
-            link_payload: self.link.sim.total_payload,
-            link_wire: self.link.sim.total_wire,
-            link_batches: self.link.sim.transfers,
+            total_elements,
+            transport: self.params.transport,
+            link_payload: self.link.sim().total_payload,
+            link_wire: self.link.sim().total_wire,
+            link_batches: self.link.sim().transfers,
             cache: self.cache.stats,
             cache_hit_rate: self.cache.hit_rate(),
+            tenants,
         }
     }
 }
@@ -739,12 +862,15 @@ fn offload_tenant_impl(
 
     let est = device.estimate(route_grid.rows, route_grid.cols);
     // Respecialization gate: the model must prefer the candidate at the
-    // observed batch size, else the live artifact stays.
+    // observed batch size, else the live artifact stays. The comparator
+    // is transport-aware: under the async pipeline, transfer hidden under
+    // compute can change which unroll tier wins.
     if let (Some(batch), Some(cur)) = (observed, t.cached.as_ref()) {
         if t.engine.is_patched(t.func) {
             let fmax = est.fmax_mhz * 1e6;
-            let t_cur = super::batch_time(cur, t.active_unroll, batch, fmax);
-            let t_cand = super::batch_time(&cached, unroll, batch, fmax);
+            let link = (params.pcie, params.transport);
+            let t_cur = super::invocation_time(cur, t.active_unroll, batch, fmax, link);
+            let t_cand = super::invocation_time(&cached, unroll, batch, fmax, link);
             let keep =
                 if unroll < t.active_unroll { t_cand > t_cur } else { t_cand >= t_cur };
             if keep {
@@ -770,6 +896,7 @@ fn offload_tenant_impl(
         let o = old.borrow();
         t.retired_invocations += o.invocations;
         t.retired_virtual += o.virtual_offload;
+        t.retired_elements += o.total_elements;
         prev_pre_patch = Some(o.pre_patch);
     }
     // Patch-time snapshot/reset (the monitor only sees post-patch data);
@@ -794,12 +921,13 @@ fn offload_tenant_impl(
     let pcie = t.pcie.clone();
     let st = state.clone();
     let hook_unroll = off.unroll.max(1) as u64;
+    let mode = params.transport;
     t.engine.patch_hook(
         t.func,
         Box::new(move |mem, args| {
             let mut link = pcie.borrow_mut();
-            match run_offloaded(
-                &off, &single, &image, &backend, &tm, &mut link, mem, args,
+            match run_offloaded_with(
+                &off, &single, &image, &backend, &tm, &mut link, mode, mem, args,
             ) {
                 Ok(report) => {
                     let mut s = st.borrow_mut();
@@ -904,6 +1032,9 @@ pub struct TenantReport {
     pub baseline_per_inv: Duration,
     pub virtual_offload: Duration,
     pub invocations: u64,
+    /// Innermost iterations served through the offload stub (cumulative
+    /// across respecializations; 0 for software-only tenants).
+    pub elements: u64,
 }
 
 #[derive(Clone, Copy, Debug)]
@@ -920,6 +1051,10 @@ pub struct ServeReport {
     pub shards: Vec<ShardReport>,
     pub makespan: Duration,
     pub total_requests: u64,
+    /// Innermost iterations served through the offload stubs — the
+    /// serve-path element count behind [`Self::elements_per_sec`].
+    pub total_elements: u64,
+    pub transport: TransportMode,
     pub link_payload: u64,
     pub link_wire: u64,
     pub link_batches: u64,
@@ -934,6 +1069,16 @@ impl ServeReport {
             0.0
         } else {
             self.total_requests as f64 / self.makespan.as_secs_f64()
+        }
+    }
+
+    /// Serve-path element throughput (offloaded innermost iterations per
+    /// virtual second) — the sync-vs-async ablation metric (A7).
+    pub fn elements_per_sec(&self) -> f64 {
+        if self.makespan.is_zero() {
+            0.0
+        } else {
+            self.total_elements as f64 / self.makespan.as_secs_f64()
         }
     }
 }
@@ -1003,10 +1148,12 @@ impl fmt::Display for ServeReport {
         )?;
         write!(
             f,
-            "makespan {} for {} requests -> {:.1} req/s aggregate",
+            "makespan {} for {} requests ({} transport) -> {:.1} req/s, {:.2e} el/s aggregate",
             fmt_duration(self.makespan),
             self.total_requests,
-            self.throughput_rps()
+            self.transport,
+            self.throughput_rps(),
+            self.elements_per_sec()
         )
     }
 }
@@ -1373,6 +1520,40 @@ mod tests {
     }
 
     #[test]
+    fn async_transport_serves_bit_identical_and_faster() {
+        // Same mix, same seeds, both transports: outputs must match
+        // bit-for-bit (the mode only re-times transfers) and the
+        // overlapped pipeline must shorten the makespan on the
+        // transfer-bound tagged link.
+        let run_mode = |transport: TransportMode| {
+            let params = ServeParams {
+                shards: 2,
+                transport,
+                pcie: PcieParams::default(), // tagged: transfer-bound
+                rollback_window: u64::MAX,
+                ..Default::default()
+            };
+            let mut server =
+                OffloadServer::new(params, polybench_mix(4)).expect("server");
+            let report = server.run(4);
+            let outs: Vec<Vec<Vec<i32>>> =
+                (0..server.n_tenants()).map(|i| server.tenant_outputs(i)).collect();
+            (outs, report)
+        };
+        let (outs_sync, rep_sync) = run_mode(TransportMode::Sync);
+        let (outs_async, rep_async) = run_mode(TransportMode::async_default());
+        assert_eq!(outs_sync, outs_async, "transport must never change numerics");
+        assert_eq!(rep_sync.total_elements, rep_async.total_elements);
+        assert!(rep_async.total_elements > 0, "mix must offload");
+        assert!(
+            rep_async.makespan < rep_sync.makespan,
+            "overlap must win on the tagged link: async {:?} vs sync {:?}",
+            rep_async.makespan,
+            rep_sync.makespan
+        );
+    }
+
+    #[test]
     fn pick_batch_weights_hot_tenants() {
         let order = [0usize, 1];
         let hotness = [3000.0, 1000.0];
@@ -1392,6 +1573,7 @@ mod tests {
             region,
             resident,
             busy_until: Duration::from_millis(busy_ms),
+            busy_secs: busy_ms as f64 * 1e-3,
             reconfigs: 0,
             executed: 0,
         };

@@ -115,7 +115,7 @@ impl Monitor {
                     })
             })
             .collect();
-        hot.sort_by(|a, b| b.cycle_share.partial_cmp(&a.cycle_share).unwrap());
+        rank_hotspots(&mut hot);
         hot
     }
 
@@ -123,6 +123,17 @@ impl Monitor {
     pub fn rate(&self, func: u32) -> f64 {
         self.last.get(func as usize).map(|s| s.rate).unwrap_or(0.0)
     }
+}
+
+/// Rank hotspots hottest-first. Uses `total_cmp`, never
+/// `partial_cmp(..).unwrap()`: a NaN `cycle_share` (a zero-total-cycle
+/// snapshot taken right after a `take_profile` patch-time reset divides
+/// 0/0) must sort last, not panic the monitor thread. NaN maps to -inf
+/// first — `total_cmp` alone would order a positive NaN *above* +inf,
+/// i.e. report a garbage row as the #1 hotspot.
+pub fn rank_hotspots(hot: &mut [Hotspot]) {
+    let key = |s: f64| if s.is_nan() { f64::NEG_INFINITY } else { s };
+    hot.sort_by(|a, b| key(b.cycle_share).total_cmp(&key(a.cycle_share)));
 }
 
 #[cfg(test)]
@@ -201,5 +212,47 @@ mod tests {
         let e = Engine::new(Module::new()).unwrap();
         let mut mon = Monitor::new(MonitorParams::default());
         assert!(mon.sample(&e).is_empty());
+    }
+
+    #[test]
+    fn zero_sample_snapshot_after_profile_reset_does_not_panic() {
+        // Regression (ISSUE 4): sampling an engine whose only activity was
+        // snapshot/reset away by `take_profile` (the patch-time reset)
+        // sees zero total cycles. That must yield "no hotspots", never a
+        // NaN cycle-share panic inside the ranking sort.
+        use crate::jit::interp::{Memory, Val};
+        let mut e = Engine::new(hot_and_cold_module()).unwrap();
+        let mut mem = Memory::new();
+        let h = mem.alloc_i32(256);
+        for _ in 0..3 {
+            e.call("hot", &mut mem, &[Val::P(h), Val::I(256)]).unwrap();
+        }
+        let hot = e.func_index("hot").unwrap();
+        let cold = e.func_index("cold").unwrap();
+        let snap = e.take_profile(hot);
+        assert!(snap.counters.cycles > 0, "snapshot carries the history");
+        e.take_profile(cold);
+        let mut mon = Monitor::new(MonitorParams::default());
+        assert!(mon.sample(&e).is_empty(), "zero-sample engine has no hotspots");
+    }
+
+    #[test]
+    fn rank_hotspots_with_nan_share_sorts_last_instead_of_panicking() {
+        // Regression (ISSUE 4): the pre-fix `partial_cmp(..).unwrap()`
+        // panics the moment one row carries a NaN cycle_share (0/0 from a
+        // zero-total-cycle snapshot). `total_cmp` must rank it last.
+        let row = |name: &str, share: f64| Hotspot {
+            func: 0,
+            name: name.into(),
+            cycle_share: share,
+            cycles: 1,
+            mem_accesses: 0,
+            invocations: 1,
+        };
+        let mut hot = vec![row("nan", f64::NAN), row("warm", 0.3), row("hot", 0.7)];
+        rank_hotspots(&mut hot);
+        assert_eq!(hot[0].name, "hot");
+        assert_eq!(hot[1].name, "warm");
+        assert!(hot[2].cycle_share.is_nan(), "NaN ranks last, never panics");
     }
 }

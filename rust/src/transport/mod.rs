@@ -17,6 +17,10 @@
 
 use std::time::Duration;
 
+pub mod pipeline;
+
+pub use pipeline::{chunk_plan, AsyncLink, ChunkTimeline, TransportMode};
+
 /// Wire protocol used for payload framing.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Protocol {
@@ -94,6 +98,26 @@ impl PcieParams {
             ..Default::default()
         }
     }
+
+    /// Stall-adjusted achievable link rate (bytes/s).
+    pub fn effective_link_rate(&self) -> f64 {
+        self.link_rate * (1.0 - self.arbitration_stall)
+    }
+
+    /// Modeled one-way transfer time for `payload_bytes`, in f64 seconds
+    /// end-to-end — the model-side primitive. `Duration` is only minted at
+    /// the accounting edge ([`PcieSim::transfer`]): integer-nanosecond
+    /// rounding on sub-microsecond chunk transfers would quantize tiny
+    /// batches to zero and make them look free to the promotion model.
+    pub fn transfer_secs(&self, payload_bytes: u64) -> f64 {
+        let wire = self.protocol.wire_bytes(payload_bytes);
+        let setup = if payload_bytes >= self.dma_threshold {
+            self.dma_setup
+        } else {
+            self.pio_setup
+        };
+        setup.as_secs_f64() + wire as f64 / self.effective_link_rate()
+    }
 }
 
 /// One accounted transfer.
@@ -102,6 +126,9 @@ pub struct Transfer {
     pub payload_bytes: u64,
     pub wire_bytes: u64,
     pub time: Duration,
+    /// The same quantity in f64 seconds, exact (model paths consume this;
+    /// `time` is the nanosecond-rounded rendition for reports).
+    pub secs: f64,
     pub used_dma: bool,
 }
 
@@ -112,6 +139,8 @@ pub struct PcieSim {
     pub total_payload: u64,
     pub total_wire: u64,
     pub total_time: Duration,
+    /// Exact occupancy in f64 seconds (sum of `Transfer::secs`).
+    pub total_secs: f64,
     pub transfers: u64,
 }
 
@@ -122,6 +151,7 @@ impl PcieSim {
             total_payload: 0,
             total_wire: 0,
             total_time: Duration::ZERO,
+            total_secs: 0.0,
             transfers: 0,
         }
     }
@@ -131,13 +161,16 @@ impl PcieSim {
         let wire = self.params.protocol.wire_bytes(payload_bytes);
         let used_dma = payload_bytes >= self.params.dma_threshold;
         let setup = if used_dma { self.params.dma_setup } else { self.params.pio_setup };
-        let rate = self.params.link_rate * (1.0 - self.params.arbitration_stall);
-        let time = setup + Duration::from_secs_f64(wire as f64 / rate);
+        let rate = self.params.effective_link_rate();
+        let wire_secs = wire as f64 / rate;
+        let time = setup + Duration::from_secs_f64(wire_secs);
+        let secs = setup.as_secs_f64() + wire_secs;
         self.total_payload += payload_bytes;
         self.total_wire += wire;
         self.total_time += time;
+        self.total_secs += secs;
         self.transfers += 1;
-        Transfer { payload_bytes, wire_bytes: wire, time, used_dma }
+        Transfer { payload_bytes, wire_bytes: wire, time, secs, used_dma }
     }
 
     /// Account a *coalesced* batch of transfers: each item still pays its
@@ -152,21 +185,31 @@ impl PcieSim {
         }
         let used_dma = payload >= self.params.dma_threshold;
         let setup = if used_dma { self.params.dma_setup } else { self.params.pio_setup };
-        let rate = self.params.link_rate * (1.0 - self.params.arbitration_stall);
-        let time = setup + Duration::from_secs_f64(wire as f64 / rate);
+        let rate = self.params.effective_link_rate();
+        let wire_secs = wire as f64 / rate;
+        let time = setup + Duration::from_secs_f64(wire_secs);
+        let secs = setup.as_secs_f64() + wire_secs;
         self.total_payload += payload;
         self.total_wire += wire;
         self.total_time += time;
+        self.total_secs += secs;
         self.transfers += 1;
-        BatchedTransfer { items: payloads.len(), payload_bytes: payload, wire_bytes: wire, time, used_dma }
+        BatchedTransfer {
+            items: payloads.len(),
+            payload_bytes: payload,
+            wire_bytes: wire,
+            time,
+            secs,
+            used_dma,
+        }
     }
 
     /// Effective payload throughput observed so far.
     pub fn effective_rate(&self) -> f64 {
-        if self.total_time.is_zero() {
+        if self.total_secs <= 0.0 {
             0.0
         } else {
-            self.total_payload as f64 / self.total_time.as_secs_f64()
+            self.total_payload as f64 / self.total_secs
         }
     }
 }
@@ -178,6 +221,8 @@ pub struct BatchedTransfer {
     pub payload_bytes: u64,
     pub wire_bytes: u64,
     pub time: Duration,
+    /// Exact occupancy in f64 seconds (see [`Transfer::secs`]).
+    pub secs: f64,
     pub used_dma: bool,
 }
 
@@ -380,6 +425,20 @@ mod tests {
         // Coalescing is visible in the accounting: 2 link occupancies for
         // 3 logical transfers.
         assert_eq!(q.sim.transfers, 2);
+    }
+
+    #[test]
+    fn transfer_secs_is_exact_and_matches_the_accounted_transfer() {
+        for params in [PcieParams::default(), PcieParams::riffa_like()] {
+            let mut sim = PcieSim::new(params);
+            for p in [1u64, 3, 5, 100, 4095, 4096, 5000, 1 << 20] {
+                let t = sim.transfer(p);
+                assert_eq!(t.secs, params.transfer_secs(p), "payload {p}");
+                // Sub-microsecond payloads must never model as free.
+                assert!(t.secs > 0.0, "payload {p} quantized to zero");
+            }
+            assert!((sim.total_secs - sim.total_time.as_secs_f64()).abs() < 1e-6);
+        }
     }
 
     #[test]

@@ -205,6 +205,60 @@ fn cyclic_config_falls_back_to_cyclesim() {
 }
 
 #[test]
+fn fuzz_chunked_submission_matches_one_shot_batches() {
+    // The async transport pipeline submits each offloaded batch as
+    // chunked `run_batch` calls (transport::chunk_plan). Chunking may
+    // only re-time the batch: reassembling random chunked submissions
+    // must be bit-identical to the one-shot batch on every routed config.
+    for (case, (config, _)) in routed_cases(31337, 25).iter().enumerate() {
+        let fabric = CompiledFabric::compile(config).expect("routed config lowers");
+        let n_in = fabric.n_inputs;
+        let mut t = Rng::new(case as u64 * 13 + 7);
+        let lanes = 50 + t.below(300);
+        let x: Vec<i32> = (0..n_in * lanes).map(|_| t.any_i32()).collect();
+        let want = fabric.run_batch(&x, lanes);
+        let n_out = want.len() / lanes;
+
+        // Random chunk boundaries (1..=5 chunks), plus the production
+        // plan from the transport pipeline.
+        let mut plans: Vec<Vec<(usize, usize)>> = Vec::new();
+        plans.push(tlo::transport::chunk_plan(
+            lanes,
+            tlo::transport::TransportMode::Async { depth: 1 + t.below(3) },
+        ));
+        let mut cuts = vec![0usize, lanes];
+        for _ in 0..t.below(4) {
+            cuts.push(t.below(lanes));
+        }
+        cuts.sort_unstable();
+        cuts.dedup();
+        plans.push(cuts.windows(2).map(|w| (w[0], w[1] - w[0])).collect());
+
+        for (pi, plan) in plans.iter().enumerate() {
+            let total: usize = plan.iter().map(|&(_, m)| m).sum();
+            assert_eq!(total, lanes, "case {case} plan {pi} must cover the batch");
+            let mut got = vec![0i32; n_out * lanes];
+            for &(start, m) in plan {
+                if m == 0 {
+                    continue;
+                }
+                let mut xc = vec![0i32; n_in * m];
+                for j in 0..n_in {
+                    xc[j * m..(j + 1) * m]
+                        .copy_from_slice(&x[j * lanes + start..j * lanes + start + m]);
+                }
+                let oc = fabric.run_batch(&xc, m);
+                for j in 0..n_out {
+                    got[j * lanes + start..j * lanes + start + m]
+                        .copy_from_slice(&oc[j * m..(j + 1) * m]);
+                }
+            }
+            assert_eq!(got, want, "case {case} plan {pi}: chunked submission diverges");
+        }
+    }
+}
+
+#[test]
 fn fuzz_short_streams_error_identically_in_both_engines() {
     for (case, (config, n_in)) in routed_cases(4242, 15).iter().enumerate() {
         let fabric = CompiledFabric::compile(config).expect("routed config lowers");

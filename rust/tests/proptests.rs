@@ -13,7 +13,12 @@
 //!   P7  `dfg_key` never collides for structurally distinct random DFGs,
 //!       always agrees for relabeled rebuilds of the same structure, and
 //!       the specialization-signature component (`spec_key`) separates
-//!       artifacts without ever touching structural identity.
+//!       artifacts without ever touching structural identity;
+//!   P8  f64-seconds transfer-time model: `transfer_secs` is monotone in
+//!       payload (`time(payload+1) >= time(payload)`), strictly positive
+//!       for any non-zero payload (no sub-microsecond quantization to
+//!       "free"), `wire_bytes` is monotone under both protocols, and
+//!       Packed costs no more wire than Tagged128 beyond one header.
 
 use tlo::dfe::grid::Grid;
 use tlo::dfe::opcodes::{Op, ALL_OPS};
@@ -137,6 +142,54 @@ fn p3_transport_accounting() {
             prev = (payload, t.time);
         }
         assert_eq!(sim.total_wire, sim.total_payload * 4);
+    }
+}
+
+#[test]
+fn p8_transfer_time_monotone_positive_and_packed_dominated_by_tagged() {
+    use tlo::transport::{PcieParams, PcieSim, Protocol};
+    for params in [PcieParams::default(), PcieParams::riffa_like()] {
+        let mut rng = Rng::new(8);
+        // Random payloads, plus the regimes where rounding once bit:
+        // single-word PIO transfers and the DMA-threshold crossing.
+        let mut sizes: Vec<u64> = (0..300)
+            .map(|_| 1 + rng.below(1 << 20) as u64)
+            .chain([1, 2, 3, 4, 5, 4095, 4096, 4097])
+            .collect();
+        sizes.sort_unstable();
+        let mut prev: Option<(u64, f64)> = None;
+        for &p in &sizes {
+            let secs = params.transfer_secs(p);
+            // No integer-Duration truncation: a tiny payload never models
+            // as a free transfer.
+            assert!(secs > 0.0, "payload {p} modeled free");
+            assert!(
+                secs >= params.pio_setup.as_secs_f64().min(params.dma_setup.as_secs_f64()),
+                "payload {p} under the setup floor"
+            );
+            if let Some((q, qsecs)) = prev {
+                assert!(
+                    secs >= qsecs,
+                    "monotonicity violated: time({p}) = {secs:.3e} < time({q}) = {qsecs:.3e}"
+                );
+            }
+            prev = Some((p, secs));
+            // Wire-byte monotonicity under both protocols.
+            for proto in [Protocol::Tagged128, Protocol::Packed] {
+                assert!(proto.wire_bytes(p + 1) >= proto.wire_bytes(p), "{proto:?} at {p}");
+            }
+            // Packed never costs more wire than Tagged128 beyond one
+            // block header's worth of payload.
+            if p >= 6 {
+                assert!(
+                    Protocol::Packed.wire_bytes(p) <= Protocol::Tagged128.wire_bytes(p),
+                    "packed regression at payload {p}"
+                );
+            }
+            // The accounted transfer agrees with the model exactly.
+            let mut sim = PcieSim::new(params);
+            assert_eq!(sim.transfer(p).secs, secs);
+        }
     }
 }
 

@@ -8,7 +8,12 @@
 //!   S3  the shared-key config cache hit-rate with multiple tenants is >=
 //!       the single-tenant baseline (and >= 50 % for a same-kernel mix);
 //!   S4  serve outputs are bit-identical to the single-tenant offload
-//!       path (the acceptance contract behind `tlo serve --verify`).
+//!       path (the acceptance contract behind `tlo serve --verify`);
+//!   S6  the asynchronous transport pipeline ≡ the synchronous transport
+//!       ≡ the interpreter, bit-for-bit, across ≥3 tenants with adaptive
+//!       respecialization on — the transport mode re-times transfers but
+//!       must never change numerics, and async must not be slower than
+//!       sync on the transfer-bound tagged link.
 
 use tlo::dfe::grid::Grid;
 use tlo::jit::engine::Engine;
@@ -178,6 +183,53 @@ fn s4_serve_outputs_bit_identical_to_single_tenant_offload_path() {
             spec.name
         );
     }
+}
+
+#[test]
+fn s6_async_transport_matches_sync_and_interpreter_with_adapt_on() {
+    use tlo::offload::adapt::AdaptParams;
+    use tlo::transport::TransportMode;
+
+    let requests = 6u64;
+    let specs = polybench_mix(4);
+    let run_mode = |transport: TransportMode| {
+        let params = ServeParams {
+            shards: 2,
+            transport,
+            adapt: Some(AdaptParams {
+                decision_window: 2,
+                ..Default::default()
+            }),
+            ..Default::default()
+        };
+        let mut server = OffloadServer::new(params, specs.clone()).expect("server");
+        let offloaded = server.tenants.iter().filter(|t| t.offload.is_some()).count();
+        assert!(offloaded >= 3, "only {offloaded}/4 tenants offloaded");
+        let report = server.run(requests);
+        let outs: Vec<Vec<Vec<i32>>> =
+            (0..server.n_tenants()).map(|i| server.tenant_outputs(i)).collect();
+        (outs, report)
+    };
+    let (outs_sync, rep_sync) = run_mode(TransportMode::Sync);
+    let (outs_async, rep_async) = run_mode(TransportMode::async_default());
+    let (outs_deep, _) = run_mode(TransportMode::Async { depth: 4 });
+
+    for (i, spec) in specs.iter().enumerate() {
+        let interp = interpreter_outputs(spec, requests);
+        assert_eq!(outs_sync[i], interp, "sync vs interpreter: tenant {}", spec.name);
+        assert_eq!(outs_async[i], interp, "async vs interpreter: tenant {}", spec.name);
+        assert_eq!(outs_deep[i], interp, "async:4 vs interpreter: tenant {}", spec.name);
+    }
+    // Same work either way; the pipeline may only re-time it.
+    assert_eq!(rep_sync.total_requests, rep_async.total_requests);
+    assert_eq!(rep_sync.total_elements, rep_async.total_elements);
+    assert!(rep_async.total_elements > 0, "the mix must offload elements");
+    assert!(
+        rep_async.makespan <= rep_sync.makespan,
+        "overlap must never lose: async {:?} vs sync {:?}",
+        rep_async.makespan,
+        rep_sync.makespan
+    );
 }
 
 #[test]
