@@ -10,13 +10,16 @@
 #                    write BENCH_dfe.json (wave executor vs CycleSim,
 #                    elements/sec + asserted >=5x speedup),
 #                    BENCH_serve.json (shard scaling + the A7 sync-vs-
-#                    async transport ablation, asserted >=1.3x) and
+#                    async transport ablation, asserted >=1.3x),
 #                    BENCH_transport.json (the deterministic pipeline
-#                    model) at the repo root, so the perf trajectory is
-#                    tracked across PRs. The BENCH_*.json files are
-#                    committed — re-run `make bench` to refresh them. Set
-#                    TLO_BENCH_QUICK=1 for the CI smoke run (small n,
-#                    relaxed transport threshold, same assertions).
+#                    model) and BENCH_par.json (the A8 portfolio-K race
+#                    vs single-seed P&R p50/p95 + warm-start win rate,
+#                    asserted >=2x p95 / >=80% wins in full mode) at the
+#                    repo root, so the perf trajectory is tracked across
+#                    PRs. The BENCH_*.json files are committed — re-run
+#                    `make bench` to refresh them. Set TLO_BENCH_QUICK=1
+#                    for the CI smoke run (small n, relaxed thresholds,
+#                    same assertions).
 
 PYTHON ?= python3
 
@@ -32,15 +35,15 @@ test:
 	cargo test -q
 	$(PYTHON) -m pytest python/tests -q
 
-# Fixed order: the three JSON-emitting trajectory benches first, then the
+# Fixed order: the four JSON-emitting trajectory benches first, then the
 # paper-table/figure regenerators.
 bench:
 	TLO_BENCH_JSON=$(CURDIR)/BENCH_dfe.json cargo bench --bench hotpath
 	TLO_BENCH_JSON=$(CURDIR)/BENCH_serve.json cargo bench --bench serve_bench
 	TLO_BENCH_JSON=$(CURDIR)/BENCH_transport.json cargo bench --bench transport_bench
+	TLO_BENCH_JSON=$(CURDIR)/BENCH_par.json cargo bench --bench par_bench
 	cargo bench --bench pcie_transport
 	cargo bench --bench rollback_bench
-	cargo bench --bench par_bench
 	cargo bench --bench fig6_phases
 	cargo bench --bench table1
 	cargo bench --bench table2

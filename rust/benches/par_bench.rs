@@ -1,35 +1,162 @@
-//! E8 + A2 — Las-Vegas place & route behaviour:
-//!   * runtime distribution over seeds for the §IV-C conv DFG (the paper
-//!     observes "a random time ... in this example 1.18 s");
-//!   * scaling over DFG size and grid size;
+//! E8 + A2 + A8 — Las-Vegas place & route behaviour and the compile
+//! service ablation:
+//!   * E8: runtime distribution over seeds for the §IV-C conv DFG (the
+//!     paper observes "a random time ... in this example 1.18 s");
 //!   * heat-3d's merged ~300-node DFG failing on 24x18 (Table I note);
-//!   * configuration-cache hit vs cold P&R (A2).
+//!   * A2: configuration-cache hit vs cold P&R;
+//!   * A8: racing seed-portfolio (K) vs single-seed latency
+//!     distributions (p50/p95) on the PolyBench mix, and warm-started
+//!     tier N→N+1 respecialization vs cold compile.
+//!
+//! With `TLO_BENCH_JSON=<path>` (set by `make bench`) the A8 numbers are
+//! written to `BENCH_par.json` — the only committed perf-trajectory
+//! record for the compile path.
+
+use std::time::Instant;
 
 use tlo::analysis::scop::analyze_function;
 use tlo::dfe::cache::{dfg_key, CachedConfig, ConfigCache};
 use tlo::dfe::grid::Grid;
 use tlo::dfg::extract::extract;
-use tlo::par::{place_and_route, ParParams};
+use tlo::dfg::graph::Dfg;
+use tlo::par::{
+    derive_seed, place_and_route, place_and_route_portfolio, place_and_route_seeded,
+    ParParams, ParSeed, PortfolioParams,
+};
 use tlo::util::bench::{black_box, print_header, run, BenchConfig};
+use tlo::util::json::escape;
 use tlo::util::prng::Rng;
 use tlo::util::{fmt_duration, mean_std, median};
+use tlo::workloads::polybench;
 use tlo::workloads::video::conv_func;
+
+const PORTFOLIO_K: usize = 4;
+
+fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() as f64 - 1.0) * p).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+fn dfg_of(f: &tlo::ir::func::Function, unroll: usize) -> Dfg {
+    let an = analyze_function(f);
+    extract(f, &an.scops[0], unroll).expect("extracts").dfg
+}
+
+/// One workload's single-seed vs portfolio-K latency distributions. An
+/// unroutable draw is charged its full failure time (that is what the
+/// caller pays before falling back) — the portfolio rescues such draws
+/// whenever any seed routes.
+struct DistRow {
+    name: String,
+    single_p50: f64,
+    single_p95: f64,
+    portfolio_p50: f64,
+    portfolio_p95: f64,
+}
+
+fn distribution(
+    name: &str,
+    dfg: &Dfg,
+    grid: Grid,
+    params: &ParParams,
+    samples: usize,
+) -> DistRow {
+    let mut single = Vec::with_capacity(samples);
+    for s in 0..samples as u64 {
+        let mut rng = Rng::new(derive_seed(0xE8, s as usize));
+        let t0 = Instant::now();
+        let _ = black_box(place_and_route(dfg, grid, params, &mut rng));
+        single.push(t0.elapsed().as_secs_f64());
+    }
+    let mut portfolio = Vec::with_capacity(samples);
+    for base in 0..samples as u64 {
+        let pf = PortfolioParams {
+            k: PORTFOLIO_K,
+            base_seed: 0xA8_0000 + base,
+            threads: PORTFOLIO_K,
+        };
+        let t0 = Instant::now();
+        let _ = black_box(place_and_route_portfolio(dfg, grid, params, &ParSeed::Cold, &pf));
+        portfolio.push(t0.elapsed().as_secs_f64());
+    }
+    single.sort_by(f64::total_cmp);
+    portfolio.sort_by(f64::total_cmp);
+    DistRow {
+        name: name.to_string(),
+        single_p50: percentile(&single, 0.5),
+        single_p95: percentile(&single, 0.95),
+        portfolio_p50: percentile(&portfolio, 0.5),
+        portfolio_p95: percentile(&portfolio, 0.95),
+    }
+}
+
+/// One warm-vs-cold tier transition: route tier N cold, then time tier
+/// N+1 cold vs warm-started from N's placement (same derived seed, so
+/// the only difference is the hint).
+struct WarmRow {
+    name: String,
+    cold_secs: f64,
+    warm_secs: f64,
+}
+
+fn warm_transition(
+    name: &str,
+    f: &tlo::ir::func::Function,
+    from_u: usize,
+    to_u: usize,
+    grid: Grid,
+    params: &ParParams,
+    seed: u64,
+) -> Option<WarmRow> {
+    let prior = {
+        let mut rng = Rng::new(derive_seed(seed, 0));
+        place_and_route(&dfg_of(f, from_u), grid, params, &mut rng).ok()?
+    };
+    let next = dfg_of(f, to_u);
+    let t0 = Instant::now();
+    let cold = {
+        let mut rng = Rng::new(derive_seed(seed, 1));
+        place_and_route_seeded(&next, grid, params, &mut rng, &ParSeed::Cold, None)
+    };
+    let cold_secs = t0.elapsed().as_secs_f64();
+    let t1 = Instant::now();
+    let warm = {
+        let mut rng = Rng::new(derive_seed(seed, 1));
+        place_and_route_seeded(
+            &next,
+            grid,
+            params,
+            &mut rng,
+            &ParSeed::Warm(prior.placement.clone()),
+            None,
+        )
+    };
+    let warm_secs = t1.elapsed().as_secs_f64();
+    if cold.is_err() || warm.is_err() {
+        return None;
+    }
+    Some(WarmRow { name: format!("{name} u{from_u}->u{to_u}"), cold_secs, warm_secs })
+}
 
 fn main() {
     let cfg = BenchConfig::from_env();
+    let quick = std::env::var("TLO_BENCH_QUICK").map(|v| v == "1").unwrap_or(false)
+        || std::env::args().any(|a| a == "--quick");
     let params = ParParams::default();
 
-    // --- runtime distribution for the conv DFG (17/1/16) ---
+    // --- E8: runtime distribution for the conv DFG (17/1/16) ---
     let f = conv_func();
-    let an = analyze_function(&f);
-    let off = extract(&f, &an.scops[0], 1).unwrap();
+    let off = dfg_of(&f, 1);
     println!("== E8: Las-Vegas P&R runtime distribution (conv 17/1/16 DFG) ==");
     for grid in [Grid::new(8, 8), Grid::new(12, 12), Grid::new(24, 18)] {
         let mut times = Vec::new();
         let mut restarts = 0u64;
         for seed in 0..20u64 {
             let mut rng = Rng::new(seed);
-            let r = place_and_route(&off.dfg, grid, &params, &mut rng).expect("routable");
+            let r = place_and_route(&off, grid, &params, &mut rng).expect("routable");
             times.push(r.stats.elapsed.as_secs_f64());
             restarts += r.stats.restarts;
         }
@@ -46,7 +173,7 @@ fn main() {
     }
 
     // --- heat-3d: the paper's P&R failure on the largest DFE ---
-    let h = tlo::workloads::polybench::heat3d();
+    let h = polybench::heat3d();
     let han = analyze_function(&h);
     let mut merged = extract(&h, &han.scops[0], 4).unwrap().dfg;
     // Merge the second nest to approximate the paper's combined DFG,
@@ -68,8 +195,8 @@ fn main() {
     }
     let calc = merged.stats().calc;
     let mut rng = Rng::new(1);
-    let quick = ParParams { max_restarts: 4, ..params };
-    let res = place_and_route(&merged, Grid::new(24, 18), &quick, &mut rng);
+    let quick_params = ParParams { max_restarts: 4, ..params };
+    let res = place_and_route(&merged, Grid::new(24, 18), &quick_params, &mut rng);
     println!(
         "\nheat-3d merged DFG ({calc} calc nodes) on 24x18: {} (paper: fails to map)",
         match res {
@@ -82,17 +209,177 @@ fn main() {
     print_header("A2 — configuration cache");
     run("par/cold (conv on 24x18)", cfg, || {
         let mut rng = Rng::new(7);
-        black_box(place_and_route(&off.dfg, Grid::new(24, 18), &params, &mut rng).unwrap());
+        black_box(place_and_route(&off, Grid::new(24, 18), &params, &mut rng).unwrap());
     });
     let mut cache = ConfigCache::new(8);
     let mut rng = Rng::new(7);
-    let r = place_and_route(&off.dfg, Grid::new(24, 18), &params, &mut rng).unwrap();
+    let r = place_and_route(&off, Grid::new(24, 18), &params, &mut rng).unwrap();
     cache.insert(
-        dfg_key(&off.dfg),
-        CachedConfig::new(r.config, r.image, "dfe_24x18".into()),
+        dfg_key(&off),
+        CachedConfig::with_provenance(
+            r.config,
+            r.image,
+            "dfe_24x18".into(),
+            7,
+            r.stats,
+            r.placement,
+        ),
     );
     run("par/cache-hit", cfg, || {
-        black_box(cache.get(dfg_key(&off.dfg)).is_some());
+        black_box(cache.get(dfg_key(&off)).is_some());
     });
     println!("cache stats: {:?}", cache.stats);
+
+    // --- A8a: racing seed portfolio vs single seed ---
+    // Tight fits restart often, so the single-seed distribution is
+    // heavy-tailed; racing K seeds takes (roughly) the min of K draws
+    // and collapses the tail. The PolyBench mix at serve-like unrolls
+    // plus conv, on the serve route-grid shapes.
+    let samples = if quick { 6 } else { 24 };
+    print_header(&format!(
+        "A8 — single-seed vs portfolio-K race (K={PORTFOLIO_K}, {samples} draws)"
+    ));
+    let gemm = polybench::gemm();
+    let trmm = polybench::trmm();
+    let syr2k = polybench::syr2k();
+    let mix: Vec<(String, Dfg, Grid)> = vec![
+        ("conv@8x8".into(), dfg_of(&f, 1), Grid::new(8, 8)),
+        ("conv@12x12".into(), dfg_of(&f, 1), Grid::new(12, 12)),
+        ("gemm-u8@8x8".into(), dfg_of(&gemm, 8), Grid::new(8, 8)),
+        ("trmm-u8@8x8".into(), dfg_of(&trmm, 8), Grid::new(8, 8)),
+        ("syr2k-u8@8x8".into(), dfg_of(&syr2k, 8), Grid::new(8, 8)),
+    ];
+    let mut rows = Vec::new();
+    println!(
+        "{:<16} {:>12} {:>12} {:>12} {:>12} {:>8}",
+        "workload", "1-seed p50", "1-seed p95", "race p50", "race p95", "p95 spd"
+    );
+    for (name, dfg, grid) in &mix {
+        let row = distribution(name, dfg, *grid, &params, samples);
+        println!(
+            "{:<16} {:>12} {:>12} {:>12} {:>12} {:>7.2}x",
+            row.name,
+            fmt_duration(std::time::Duration::from_secs_f64(row.single_p50)),
+            fmt_duration(std::time::Duration::from_secs_f64(row.single_p95)),
+            fmt_duration(std::time::Duration::from_secs_f64(row.portfolio_p50)),
+            fmt_duration(std::time::Duration::from_secs_f64(row.portfolio_p95)),
+            row.single_p95 / row.portfolio_p95.max(1e-12)
+        );
+        rows.push(row);
+    }
+    // Aggregate p95 speedup: geometric mean across the mix.
+    let p95_speedup = (rows
+        .iter()
+        .map(|r| (r.single_p95 / r.portfolio_p95.max(1e-12)).ln())
+        .sum::<f64>()
+        / rows.len() as f64)
+        .exp();
+    let p95_threshold = if quick { 0.8 } else { 2.0 };
+    println!(
+        "aggregate p95 speedup: {p95_speedup:.2}x (threshold {p95_threshold}x, {} mode)",
+        if quick { "smoke" } else { "full" }
+    );
+    assert!(
+        p95_speedup >= p95_threshold,
+        "portfolio race p95 speedup {p95_speedup:.2}x below {p95_threshold}x"
+    );
+
+    // --- A8b: warm-started respecialization vs cold compile ---
+    print_header("A8 — warm-started tier N->N+1 vs cold compile");
+    let grid = Grid::new(12, 12);
+    let tier_seeds: u64 = if quick { 2 } else { 4 };
+    let kernels: Vec<(&str, tlo::ir::func::Function)> = vec![
+        ("gemm", polybench::gemm()),
+        ("trmm", polybench::trmm()),
+        ("syr2k", polybench::syr2k()),
+        ("gesummv", polybench::gesummv()),
+    ];
+    let mut warm_rows: Vec<WarmRow> = Vec::new();
+    for (name, func) in &kernels {
+        for (from_u, to_u) in [(2usize, 4usize), (4, 8)] {
+            for s in 0..tier_seeds {
+                if let Some(row) =
+                    warm_transition(name, func, from_u, to_u, grid, &params, 0xA8B0 + s)
+                {
+                    warm_rows.push(row);
+                }
+            }
+        }
+    }
+    let wins = warm_rows.iter().filter(|r| r.warm_secs < r.cold_secs).count();
+    let win_rate = wins as f64 / warm_rows.len().max(1) as f64;
+    let mean_speedup = (warm_rows
+        .iter()
+        .map(|r| (r.cold_secs / r.warm_secs.max(1e-12)).ln())
+        .sum::<f64>()
+        / warm_rows.len().max(1) as f64)
+        .exp();
+    println!(
+        "{} transitions, warm wins {} ({:.0}%), mean speedup {:.2}x",
+        warm_rows.len(),
+        wins,
+        100.0 * win_rate,
+        mean_speedup
+    );
+    let warm_threshold = if quick { 0.4 } else { 0.8 };
+    assert!(
+        win_rate >= warm_threshold,
+        "warm-start win rate {win_rate:.2} below {warm_threshold}"
+    );
+
+    // ---- perf-trajectory JSON (written by `make bench`) ----
+    if let Ok(path) = std::env::var("TLO_BENCH_JSON") {
+        let mut workloads = String::new();
+        for (i, r) in rows.iter().enumerate() {
+            if i > 0 {
+                workloads.push(',');
+            }
+            workloads.push_str(&format!(
+                "\n    {{\"name\": \"{}\", \"single_p50_sec\": {:.6}, \"single_p95_sec\": {:.6}, \
+                 \"portfolio_p50_sec\": {:.6}, \"portfolio_p95_sec\": {:.6}, \
+                 \"p95_speedup\": {:.3}}}",
+                escape(&r.name),
+                r.single_p50,
+                r.single_p95,
+                r.portfolio_p50,
+                r.portfolio_p95,
+                r.single_p95 / r.portfolio_p95.max(1e-12)
+            ));
+        }
+        let mut transitions = String::new();
+        for (i, r) in warm_rows.iter().enumerate() {
+            if i > 0 {
+                transitions.push(',');
+            }
+            transitions.push_str(&format!(
+                "\n      {{\"name\": \"{}\", \"cold_sec\": {:.6}, \"warm_sec\": {:.6}, \
+                 \"speedup\": {:.3}}}",
+                escape(&r.name),
+                r.cold_secs,
+                r.warm_secs,
+                r.cold_secs / r.warm_secs.max(1e-12)
+            ));
+        }
+        let doc = format!(
+            "{{\n  \"bench\": \"par\",\n  \"mode\": \"{}\",\n  \"portfolio_k\": {},\n  \
+             \"samples\": {},\n  \"workloads\": [{}\n  ],\n  \
+             \"aggregate_p95_speedup\": {:.3},\n  \"warm_start\": {{\n    \
+             \"transitions\": {},\n    \"warm_wins\": {},\n    \"win_rate\": {:.3},\n    \
+             \"mean_speedup\": {:.3},\n    \"per_transition\": [{}\n    ]\n  }},\n  \
+             \"thresholds\": {{\"p95_speedup\": {}, \"warm_win_rate\": {}}}\n}}\n",
+            if quick { "quick" } else { "full" },
+            PORTFOLIO_K,
+            samples,
+            workloads,
+            p95_speedup,
+            warm_rows.len(),
+            wins,
+            win_rate,
+            mean_speedup,
+            p95_threshold,
+            warm_threshold
+        );
+        std::fs::write(&path, doc).expect("write TLO_BENCH_JSON");
+        println!("wrote {path}");
+    }
 }

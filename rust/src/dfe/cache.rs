@@ -13,8 +13,10 @@ use std::rc::Rc;
 
 use super::config::GridConfig;
 use super::exec::CompiledFabric;
+use super::grid::CellCoord;
 use super::image::ExecImage;
-use crate::dfg::graph::{Dfg, NodeKind};
+use crate::dfg::graph::{Dfg, NodeId, NodeKind};
+use crate::par::lasvegas::ParStats;
 
 /// Structural hash of a DFG (node kinds + edges, order-sensitive — DFGs
 /// extracted from the same IR are built deterministically).
@@ -91,6 +93,18 @@ pub struct CachedConfig {
     pub fabric: Option<Rc<CompiledFabric>>,
     /// Which artifact variant (grid size) it targets.
     pub variant: String,
+    /// P&R seed that produced the artifact (the portfolio winner's derived
+    /// seed; 0 for entries built without provenance). Replaying
+    /// `place_and_route_seeded` with this seed *and the same warm hint the
+    /// winning search used* reproduces the artifact; cold-compiled entries
+    /// reproduce from the seed alone.
+    pub seed: u64,
+    /// Stats of the winning search — the compile cost a cache hit avoids
+    /// (surfaced as `OffloadRecord::avoided` on hits).
+    pub par_stats: Option<ParStats>,
+    /// The winning placement: the warm seed for incremental placement
+    /// reuse when this artifact's function respecializes to another tier.
+    pub placement: Vec<(NodeId, CellCoord)>,
 }
 
 impl CachedConfig {
@@ -100,7 +114,32 @@ impl CachedConfig {
     /// config that already produced `image`).
     pub fn new(config: GridConfig, image: ExecImage, variant: String) -> CachedConfig {
         let fabric = CompiledFabric::compile(&config).ok().map(Rc::new);
-        CachedConfig { config, image, fabric, variant }
+        CachedConfig {
+            config,
+            image,
+            fabric,
+            variant,
+            seed: 0,
+            par_stats: None,
+            placement: Vec::new(),
+        }
+    }
+
+    /// [`Self::new`] plus compile provenance: the winning seed, its search
+    /// stats and its placement (warm-start hint for the next spec tier).
+    pub fn with_provenance(
+        config: GridConfig,
+        image: ExecImage,
+        variant: String,
+        seed: u64,
+        stats: ParStats,
+        placement: Vec<(NodeId, CellCoord)>,
+    ) -> CachedConfig {
+        let mut c = CachedConfig::new(config, image, variant);
+        c.seed = seed;
+        c.par_stats = Some(stats);
+        c.placement = placement;
+        c
     }
 }
 
@@ -131,6 +170,20 @@ impl ConfigCache {
 
     pub fn is_empty(&self) -> bool {
         self.map.is_empty()
+    }
+
+    /// Key presence without touching the LRU clock or the hit/miss stats
+    /// (the compile service peeks before deciding to submit a job; a peek
+    /// is not a lookup).
+    pub fn contains(&self, key: u64) -> bool {
+        self.map.contains_key(&key)
+    }
+
+    /// Value access without touching the LRU clock or the hit/miss stats
+    /// (the compile slot reads back an entry it just landed; the caller
+    /// already accounted its lookup).
+    pub fn peek(&self, key: u64) -> Option<&CachedConfig> {
+        self.map.get(&key).map(|(cfg, _)| cfg)
     }
 
     pub fn get(&mut self, key: u64) -> Option<&CachedConfig> {
@@ -259,5 +312,69 @@ mod tests {
         assert!(c.get(9).is_some());
         assert!(c.get(9).is_some());
         assert!((c.hit_rate() - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn hit_rate_with_zero_lookups_is_zero_not_nan() {
+        let mut c = ConfigCache::new(2);
+        assert_eq!(c.hit_rate(), 0.0);
+        // Inserts alone are not lookups and must not move the rate.
+        c.insert(1, dummy_entry());
+        assert_eq!(c.hit_rate(), 0.0);
+        assert_eq!(c.stats, CacheStats::default());
+    }
+
+    #[test]
+    fn insert_over_existing_key_at_capacity_evicts_nothing() {
+        let mut c = ConfigCache::new(2);
+        c.insert(1, dummy_entry());
+        c.insert(2, dummy_entry());
+        // Overwriting a resident key must refresh in place: same length,
+        // no eviction, both keys still resident.
+        let mut updated = dummy_entry();
+        updated.seed = 77;
+        c.insert(1, updated);
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.stats.evictions, 0);
+        assert_eq!(c.get(1).unwrap().seed, 77, "overwrite must replace the value");
+        assert!(c.get(2).is_some());
+        // The overwrite also counts as a use: inserting a third key now
+        // evicts 2 (older stamp), not 1.
+        c.insert(1, dummy_entry());
+        c.get(1);
+        c.insert(3, dummy_entry());
+        assert!(c.contains(1) && c.contains(3) && !c.contains(2), "LRU order broken");
+    }
+
+    #[test]
+    fn contains_does_not_perturb_stats_or_lru() {
+        let mut c = ConfigCache::new(2);
+        c.insert(1, dummy_entry());
+        assert!(c.contains(1));
+        assert!(!c.contains(9));
+        assert_eq!(c.stats, CacheStats::default(), "peeks are not lookups");
+    }
+
+    #[test]
+    fn provenance_survives_the_cache() {
+        use crate::par::lasvegas::ParStats;
+        let config = fig2_config();
+        let image = config.to_image().unwrap();
+        let stats = ParStats { placements: 5, route_calls: 9, ..Default::default() };
+        let placement = vec![(2usize, crate::dfe::grid::CellCoord::new(0, 1))];
+        let e = CachedConfig::with_provenance(
+            config,
+            image,
+            "dfe_4x4".into(),
+            0xABCD,
+            stats,
+            placement.clone(),
+        );
+        let mut c = ConfigCache::new(2);
+        c.insert(4, e);
+        let got = c.get(4).unwrap();
+        assert_eq!(got.seed, 0xABCD);
+        assert_eq!(got.par_stats.unwrap().route_calls, 9);
+        assert_eq!(got.placement, placement);
     }
 }

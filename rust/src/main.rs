@@ -13,12 +13,13 @@ use tlo::util::cli::Args;
 
 const USAGE: &str = "subcommands: table1 | table2 [--device NAME] | video [--frames N --riffa] \
 | serve [--tenants N --shards K --requests R --grid RxC --transport sync|async|async:D \
---tagged --no-adapt --no-verify] \
+--compile-threads N --par-portfolio K --tagged --no-adapt --no-verify] \
 | devices";
 
 fn main() {
     let args = Args::from_env(&[
         "device", "frames", "n", "seed", "tenants", "shards", "requests", "grid", "transport",
+        "compile-threads", "par-portfolio",
     ]);
     match args.positional.first().map(String::as_str) {
         Some("table1") => table1(),
@@ -196,6 +197,13 @@ fn serve(args: &Args) {
             }
         },
     };
+    // The non-blocking compile service is the production default:
+    // respecialization P&R races a 4-seed portfolio on 2 background
+    // threads and swaps in at round boundaries. `--compile-threads 0`
+    // restores the paper's synchronous (stalling) compiles;
+    // `--par-portfolio 1` restores single-seed search.
+    let compile_threads = args.get_usize("compile-threads", 2);
+    let portfolio = args.get_usize("par-portfolio", 4).max(1);
     let mut params = ServeParams {
         shards,
         grid,
@@ -205,6 +213,8 @@ fn serve(args: &Args) {
         // path; --no-adapt pins every tenant to its spec'd unroll.
         adapt: (!args.flag("no-adapt"))
             .then(tlo::offload::adapt::AdaptParams::default),
+        portfolio,
+        compile_threads,
         ..Default::default()
     };
     if args.flag("tagged") {
@@ -217,6 +227,14 @@ fn serve(args: &Args) {
         grid.cols,
         if args.flag("tagged") { "tagged 128b/32b" } else { "packed/RIFFA-like" },
         transport
+    );
+    println!(
+        "compile service: {} (portfolio K={portfolio})",
+        if compile_threads > 0 {
+            format!("{compile_threads} background thread(s), non-blocking respecialization")
+        } else {
+            "off — synchronous P&R on every miss".to_string()
+        }
     );
     let mut server = match OffloadServer::new(params, specs.clone()) {
         Ok(s) => s,

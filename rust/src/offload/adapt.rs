@@ -258,14 +258,16 @@ impl AdaptController {
                 if engine.trip_hist(func).dominant_floor() < p.min_batch {
                     return None;
                 }
-                match mgr.offload_with(
-                    engine,
-                    func,
-                    p.generic_unroll,
-                    crate::dfe::cache::SpecSignature::generic(p.generic_unroll),
-                    None,
-                ) {
-                    Ok(_) => Some(st.transition(Tier::Generic, p.generic_unroll)),
+                // Promotion goes through `reconfigure` (with nothing live
+                // it installs unconditionally) so the compile service can
+                // defer it: the function keeps interpreting until the
+                // generic artifact lands, then a later tick promotes via
+                // a cache hit — the interpreter→generic stall is gone too.
+                match mgr.reconfigure(engine, func, p.generic_unroll, 0, None) {
+                    Ok(Reconfig::Swapped { .. }) => {
+                        Some(st.transition(Tier::Generic, p.generic_unroll))
+                    }
+                    Ok(Reconfig::Deferred { .. }) | Ok(Reconfig::Kept { .. }) => None,
                     Err(reason) => {
                         st.reject = Some(reason.to_string());
                         None
@@ -322,8 +324,10 @@ impl AdaptController {
                         Some(st.transition(to, target))
                     }
                     // The model still prefers the live artifact (or the
-                    // candidate failed to extract/route): stay put.
-                    Ok(Reconfig::Kept { .. }) | Err(_) => None,
+                    // candidate failed to extract/route): stay put. A
+                    // deferred candidate also stays put — the current tier
+                    // keeps serving until the background compile lands.
+                    Ok(Reconfig::Kept { .. }) | Ok(Reconfig::Deferred { .. }) | Err(_) => None,
                 }
             }
         }

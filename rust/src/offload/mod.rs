@@ -12,9 +12,9 @@ pub mod server;
 pub mod stub;
 
 use std::cell::RefCell;
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::rc::Rc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use crate::analysis::scop::analyze_function;
 use crate::dfe::cache::{dfg_key, spec_key, CachedConfig, ConfigCache, SpecSignature};
@@ -22,14 +22,16 @@ use crate::dfe::grid::Grid;
 use crate::dfe::resource::{device_by_name, Device};
 use crate::dfe::sim::CycleSim;
 use crate::dfg::extract::{extract, OffloadDfg};
+use crate::dfg::graph::Dfg;
 use crate::jit::engine::{Engine, FnProfile, Histogram};
-use crate::jit::interp::Val;
-use crate::par::{place_and_route, ParParams, ParStats};
+use crate::par::{
+    place_and_route_portfolio, CompileJob, CompileService, ParParams, ParSeed, ParStats,
+    PortfolioParams,
+};
 use crate::trace::{Phase, Tracer};
 use crate::transport::{chunk_plan, ChunkTimeline, PcieParams, PcieSim, TransportMode};
-use crate::util::prng::Rng;
 
-use stub::{run_offloaded_with, DfeBackend, StubReport, TimeModel};
+use stub::{make_offload_hook, DfeBackend, StubReport, TimeModel};
 
 /// Which sim-side numerics engine the stub runs when no PJRT runtime is
 /// attached. `Auto` is the production choice; the pinned variants exist
@@ -71,6 +73,14 @@ pub struct OffloadParams {
     /// (`Sync`) or the overlapped double-buffered pipeline
     /// (`transport::pipeline`). Changes timing only, never numerics.
     pub transport: TransportMode,
+    /// P&R seeds raced per compile (K >= 1). The winner is deterministic
+    /// for a given `(cache key, K)` — see `par::service::derive_seed`.
+    pub portfolio: usize,
+    /// Compile-service worker threads. 0 = synchronous compiles (every
+    /// cache miss stalls the caller inside place & route, the paper's
+    /// behaviour); N > 0 = respecializations compile in the background
+    /// and swap in at the next tier decision, never stalling a caller.
+    pub compile_threads: usize,
 }
 
 impl Default for OffloadParams {
@@ -88,7 +98,181 @@ impl Default for OffloadParams {
             cache_capacity: 32,
             sim_backend: SimBackendChoice::Auto,
             transport: TransportMode::Sync,
+            portfolio: 1,
+            compile_threads: 0,
         }
+    }
+}
+
+/// Compile-side state shared by the single-tenant manager and the serve
+/// layer: the optional background [`CompileService`], in-flight and dead
+/// job keys, and the portfolio/grid shape every job compiles against.
+pub struct CompileSlot {
+    pub service: Option<CompileService>,
+    pending: HashSet<u64>,
+    /// Keys whose compile failed (unroutable): never resubmitted, the
+    /// error is replayed to callers instead of looping the service.
+    dead: HashMap<u64, String>,
+    pub portfolio: usize,
+    pub threads: usize,
+    grid: Grid,
+    par: ParParams,
+    /// XORed into every job's cache key to anchor seed derivation, so the
+    /// configured `params.seed` still picks the artifact family while the
+    /// winner stays a pure function of `(key, K, seed)` — independent of
+    /// the order compiles run in.
+    seed: u64,
+    variant: String,
+}
+
+impl CompileSlot {
+    pub fn new(
+        portfolio: usize,
+        threads: usize,
+        grid: Grid,
+        par: ParParams,
+        seed: u64,
+    ) -> CompileSlot {
+        CompileSlot {
+            service: (threads > 0).then(|| CompileService::new(threads)),
+            pending: HashSet::new(),
+            dead: HashMap::new(),
+            portfolio: portfolio.max(1),
+            threads,
+            grid,
+            par,
+            seed,
+            variant: format!("dfe_{}x{}", grid.rows, grid.cols),
+        }
+    }
+
+    /// Jobs submitted but not yet landed.
+    pub fn pending(&self) -> usize {
+        self.pending.len()
+    }
+
+    pub fn is_pending(&self, key: u64) -> bool {
+        self.pending.contains(&key)
+    }
+
+    fn entry(&self, o: crate::par::PortfolioOutcome) -> CachedConfig {
+        CachedConfig::with_provenance(
+            o.result.config,
+            o.result.image,
+            self.variant.clone(),
+            o.seed,
+            o.result.stats,
+            o.result.placement,
+        )
+    }
+
+    /// Compile `dfg` for `key` right now (blocking portfolio race), or —
+    /// when `defer` is set and a background service exists — submit a job
+    /// and return `Ok(None)`: the artifact lands via [`Self::pump`] and
+    /// the caller keeps executing its current tier meanwhile.
+    pub fn compile(
+        &mut self,
+        cache: &mut ConfigCache,
+        dfg: &Dfg,
+        key: u64,
+        warm: ParSeed,
+        defer: bool,
+    ) -> Result<Option<(CachedConfig, ParStats)>, RejectReason> {
+        if let Some(msg) = self.dead.get(&key) {
+            return Err(RejectReason::Unroutable(msg.clone()));
+        }
+        if defer && self.service.is_some() {
+            if self.pending.insert(key) {
+                let job = CompileJob {
+                    key,
+                    base_seed: key ^ self.seed,
+                    dfg: dfg.clone(),
+                    grid: self.grid,
+                    params: self.par,
+                    portfolio: self.portfolio,
+                    warm,
+                };
+                self.service.as_mut().unwrap().submit(job);
+            }
+            return Ok(None);
+        }
+        // A background job for this key may already be racing (submitted
+        // by a deferring caller): land finished jobs and wait for it
+        // instead of duplicating the whole portfolio race — the blocking
+        // caller gets the identical artifact the deferred path would.
+        if self.service.is_some() {
+            self.pump(cache);
+            while self.pending.contains(&key) {
+                let done =
+                    self.service.as_mut().unwrap().recv_timeout(Duration::from_secs(30));
+                match done {
+                    Some(d) => {
+                        self.land(cache, d);
+                    }
+                    None => break,
+                }
+            }
+            if let Some(msg) = self.dead.get(&key) {
+                return Err(RejectReason::Unroutable(msg.clone()));
+            }
+            if let Some(c) = cache.peek(key) {
+                let stats = c.par_stats.unwrap_or_default();
+                return Ok(Some((c.clone(), stats)));
+            }
+        }
+        let pf = PortfolioParams {
+            k: self.portfolio,
+            base_seed: key ^ self.seed,
+            threads: self.threads.max(1),
+        };
+        let outcome = place_and_route_portfolio(dfg, self.grid, &self.par, &warm, &pf)
+            .map_err(|e| RejectReason::Unroutable(e.to_string()))?;
+        let stats = outcome.result.stats;
+        let c = self.entry(outcome);
+        cache.insert(key, c.clone());
+        Ok(Some((c, stats)))
+    }
+
+    /// Fold one finished job into `cache` (or the dead list). Returns the
+    /// key if an artifact landed.
+    fn land(&mut self, cache: &mut ConfigCache, done: crate::par::CompileDone) -> Option<u64> {
+        self.pending.remove(&done.key);
+        match done.outcome {
+            Ok(o) => {
+                let entry = self.entry(o);
+                cache.insert(done.key, entry);
+                Some(done.key)
+            }
+            Err(e) => {
+                self.dead.insert(done.key, e.to_string());
+                None
+            }
+        }
+    }
+
+    /// Land every artifact the background service finished into `cache`.
+    /// Returns the landed keys (failed jobs go to the dead list instead).
+    pub fn pump(&mut self, cache: &mut ConfigCache) -> Vec<u64> {
+        let done: Vec<_> = match self.service.as_mut() {
+            Some(svc) => svc.poll(),
+            None => return Vec::new(),
+        };
+        done.into_iter().filter_map(|d| self.land(cache, d)).collect()
+    }
+
+    /// Block until every in-flight job has landed (test barrier / orderly
+    /// shutdown — the serving hot path only ever pumps). Gives up after
+    /// `timeout` without a completion rather than hanging.
+    pub fn drain(&mut self, cache: &mut ConfigCache, timeout: Duration) -> Vec<u64> {
+        let mut landed = self.pump(cache);
+        while !self.pending.is_empty() && self.service.is_some() {
+            let done = self.service.as_mut().unwrap().recv_timeout(timeout);
+            match done {
+                Some(d) => landed.extend(self.land(cache, d)),
+                None => break,
+            }
+        }
+        landed
     }
 }
 
@@ -127,6 +311,9 @@ pub struct OffloadRecord {
     pub unroll: usize,
     pub par_stats: Option<ParStats>,
     pub cache_hit: bool,
+    /// On a cache hit: the winning search's stats carried by the entry —
+    /// the compile cost this hit avoided paying.
+    pub avoided: Option<ParStats>,
     pub config_time: Duration,
     pub constants_time: Duration,
 }
@@ -182,6 +369,11 @@ pub enum Reconfig {
         current: Duration,
         candidate: Duration,
     },
+    /// The candidate's artifact is compiling in the background: the caller
+    /// keeps executing its current tier (software or the previous
+    /// specialization) and the swap happens at a later tier decision,
+    /// once the artifact has landed in the cache — never a P&R stall.
+    Deferred { key: u64, unroll: usize },
 }
 
 pub struct OffloadManager {
@@ -190,9 +382,18 @@ pub struct OffloadManager {
     pub pcie: Rc<RefCell<PcieSim>>,
     pub tracer: Rc<RefCell<Tracer>>,
     pub device: Device,
-    rng: Rng,
+    /// Portfolio/compile-service state (see [`CompileSlot`]).
+    pub compile: CompileSlot,
+    /// Wall time spent blocked inside place & route by respecializations
+    /// (`reconfigure` with no background service). 0 with the compile
+    /// service on — the non-blocking-promotion invariant.
+    pub compile_stall: Duration,
     states: HashMap<u32, Rc<RefCell<RuntimeState>>>,
     active: HashMap<u32, ActiveOffload>,
+    /// `(func, unroll, trip_bucket)` → cache key of an in-flight compile:
+    /// repeat tier decisions for the same target return `Deferred` without
+    /// re-running SCoP analysis + extraction every tick.
+    pending_specs: HashMap<(u32, usize, usize), u64>,
 }
 
 impl OffloadManager {
@@ -203,12 +404,33 @@ impl OffloadManager {
             pcie: Rc::new(RefCell::new(PcieSim::new(params.pcie))),
             tracer: Rc::new(RefCell::new(Tracer::new())),
             cache: ConfigCache::new(params.cache_capacity),
-            rng: Rng::new(params.seed),
+            compile: CompileSlot::new(
+                params.portfolio,
+                params.compile_threads,
+                params.grid,
+                params.par,
+                params.seed,
+            ),
+            compile_stall: Duration::ZERO,
             device,
             states: HashMap::new(),
             active: HashMap::new(),
+            pending_specs: HashMap::new(),
             params,
         }
+    }
+
+    /// Land any artifacts the background compile service finished; they
+    /// enter the configuration cache so the next tier decision swaps them
+    /// in without blocking. Returns the landed cache keys.
+    pub fn pump_compiles(&mut self) -> Vec<u64> {
+        self.compile.pump(&mut self.cache)
+    }
+
+    /// Block until every in-flight compile job has landed (test barrier /
+    /// orderly shutdown; the hot path only ever pumps).
+    pub fn drain_compiles(&mut self) -> Vec<u64> {
+        self.compile.drain(&mut self.cache, Duration::from_secs(30))
     }
 
     pub fn state(&self, func: u32) -> Option<Rc<RefCell<RuntimeState>>> {
@@ -258,32 +480,32 @@ impl OffloadManager {
     }
 
     /// Cache-or-route `dfg` under `key`; returns the entry, whether it
-    /// hit, and the P&R stats on a miss.
+    /// hit, and the P&R stats on a miss. A miss runs the blocking
+    /// portfolio race seeded by `key` (deterministic winner) and warmed by
+    /// `warm`; `CachedConfig::with_provenance` lowers the wave executor
+    /// once here, so every later cache hit reuses the compiled artifact.
     fn route_cached(
         &mut self,
-        dfg: &crate::dfg::graph::Dfg,
+        dfg: &Dfg,
         key: u64,
+        warm: ParSeed,
+        count_stall: bool,
     ) -> Result<(CachedConfig, bool, Option<ParStats>), RejectReason> {
         if let Some(c) = self.cache.get(key) {
             return Ok((c.clone(), true, None));
         }
         let tracer = self.tracer.clone();
-        let grid = self.params.grid;
-        let par = self.params.par;
-        let rng = &mut self.rng;
-        let result = tracer
+        let slot = &mut self.compile;
+        let cache = &mut self.cache;
+        let t0 = Instant::now();
+        let routed = tracer
             .borrow_mut()
-            .span(Phase::PlaceRoute, || place_and_route(dfg, grid, &par, rng))
-            .map_err(|e| RejectReason::Unroutable(e.to_string()))?;
-        let stats = result.stats;
-        // CachedConfig::new lowers the wave executor once here; every
-        // later cache hit reuses the compiled artifact.
-        let c = CachedConfig::new(
-            result.config,
-            result.image,
-            format!("dfe_{}x{}", grid.rows, grid.cols),
-        );
-        self.cache.insert(key, c.clone());
+            .span(Phase::PlaceRoute, || slot.compile(cache, dfg, key, warm, false))?;
+        if count_stall {
+            self.compile_stall += t0.elapsed();
+        }
+        let (c, stats) =
+            routed.expect("CompileSlot::compile(defer=false) always returns an artifact");
         Ok((c, false, Some(stats)))
     }
 
@@ -300,14 +522,30 @@ impl OffloadManager {
         sig: SpecSignature,
         pjrt: Option<&mut crate::runtime::PjrtRuntime>,
     ) -> Result<OffloadRecord, RejectReason> {
-        let tracer = self.tracer.clone();
-        let name = engine.func_name(func).to_string();
-
         // ---- 1. analysis (Fig 6 phase 1) ----
+        let tracer = self.tracer.clone();
         let (off, single) = tracer.borrow_mut().span(Phase::Analysis, {
             let f = &engine.module.funcs[func as usize];
             move || extract_single_scop(f, unroll)
         })?;
+        self.install_extracted(engine, func, unroll, sig, off, single, pjrt)
+    }
+
+    /// Phases 2–5 of the pipeline, starting from an already-extracted
+    /// DFG pair — [`Self::reconfigure`] extracts once to compute the
+    /// cache key and must not pay (or double-trace) the analysis twice.
+    fn install_extracted(
+        &mut self,
+        engine: &mut Engine,
+        func: u32,
+        unroll: usize,
+        sig: SpecSignature,
+        off: OffloadDfg,
+        single: OffloadDfg,
+        pjrt: Option<&mut crate::runtime::PjrtRuntime>,
+    ) -> Result<OffloadRecord, RejectReason> {
+        let tracer = self.tracer.clone();
+        let name = engine.func_name(func).to_string();
 
         let stats = off.dfg.stats();
         let nodes = off.dfg.len();
@@ -317,9 +555,18 @@ impl OffloadManager {
 
         // ---- 2. place & route, via the configuration cache (keyed by
         //         structure × specialization signature, so generic and
-        //         specialized artifacts coexist) ----
+        //         specialized artifacts coexist). A live artifact's
+        //         placement warm-starts the search: respecializing tier
+        //         N→N+1 re-places only the DFG delta ----
+        let warm = self
+            .active
+            .get(&func)
+            .filter(|a| !a.cached.placement.is_empty())
+            .map(|a| ParSeed::Warm(a.cached.placement.clone()))
+            .unwrap_or(ParSeed::Cold);
         let key = spec_key(dfg_key(&off.dfg), sig);
-        let (cached, cache_hit, par_stats) = self.route_cached(&off.dfg, key)?;
+        let (cached, cache_hit, par_stats) = self.route_cached(&off.dfg, key, warm, false)?;
+        let avoided = if cache_hit { cached.par_stats } else { None };
 
         // ---- 3. configuration + constants download (modeled) ----
         let cfg_words = cached.config.config_words() as u64;
@@ -406,44 +653,18 @@ impl OffloadManager {
         }));
         self.states.insert(func, state.clone());
 
-        let image = cached.image.clone();
-        let pcie = self.pcie.clone();
-        let tracer_h = tracer.clone();
-        let off_h = off.clone();
-        let single_h = single.clone();
-        let hook_unroll = off.unroll.max(1) as u64;
-        let mode = self.params.transport;
-        engine.patch_hook(
-            func,
-            Box::new(move |mem, args| {
-                let mut pcie = pcie.borrow_mut();
-                let r = run_offloaded_with(
-                    &off_h, &single_h, &image, &backend, &tm, &mut pcie, mode, mem, args,
-                );
-                match r {
-                    Ok(report) => {
-                        let mut st = state.borrow_mut();
-                        st.invocations += 1;
-                        st.virtual_offload += report.offload_time();
-                        let elements =
-                            report.elements * hook_unroll + report.remainder_elements;
-                        st.batch_hist.record(elements);
-                        st.total_elements += elements;
-                        st.last_report = report;
-                        drop(st);
-                        let mut t = tracer_h.borrow_mut();
-                        t.simulated(Phase::HostToDfe, report.host_to_dfe);
-                        t.simulated(Phase::DfeExec, report.dfe_exec);
-                        t.simulated(Phase::DfeToHost, report.dfe_to_host);
-                        Ok(None)
-                    }
-                    Err(trap) => {
-                        state.borrow_mut().failed = true;
-                        Err(trap)
-                    }
-                }
-            }),
+        let hook = make_offload_hook(
+            off,
+            single,
+            cached.image.clone(),
+            backend,
+            tm,
+            self.pcie.clone(),
+            self.params.transport,
+            state,
+            Some(tracer.clone()),
         );
+        engine.patch_hook(func, hook);
         self.active.insert(func, ActiveOffload { unroll, sig, key, cached });
 
         Ok(OffloadRecord {
@@ -456,6 +677,7 @@ impl OffloadManager {
             unroll,
             par_stats,
             cache_hit,
+            avoided,
             config_time,
             constants_time,
         })
@@ -466,8 +688,12 @@ impl OffloadManager {
     /// (unroll × trip bucket), and swap the call-table stub in place iff
     /// the analytic pipeline model prefers the candidate at the observed
     /// batch size (`None` = unconditional swap). Ties favor the smaller
-    /// unroll — the simpler artifact. Sim-side only: PJRT artifacts are
-    /// installed once by [`Self::try_offload`] and not respecialized.
+    /// unroll — the simpler artifact. With a background compile service
+    /// (`compile_threads > 0`), a cache miss submits a job and returns
+    /// [`Reconfig::Deferred`] instead of stalling; the caller's next tier
+    /// decision finds the landed artifact as a cache hit and swaps then.
+    /// Sim-side only: PJRT artifacts are installed once by
+    /// [`Self::try_offload`] and not respecialized.
     pub fn reconfigure(
         &mut self,
         engine: &mut Engine,
@@ -476,29 +702,34 @@ impl OffloadManager {
         trip_bucket: usize,
         observed_batch: Option<u64>,
     ) -> Result<Reconfig, RejectReason> {
+        // Land anything the background service finished first, so a
+        // previously deferred candidate becomes a cache hit right here.
+        self.pump_compiles();
         let sig = SpecSignature::new(unroll, trip_bucket);
         let current = self.active.get(&func).cloned().filter(|_| engine.is_patched(func));
-        let (cur, batch) = match (current, observed_batch) {
-            (Some(cur), Some(batch)) => (cur, batch),
-            (cur, _) => {
-                // Nothing live to compare against (or no profile yet):
-                // install unconditionally.
-                let from_unroll = cur.map(|c| c.unroll).unwrap_or(0);
-                let record = self.offload_with(engine, func, unroll, sig, None)?;
-                return Ok(Reconfig::Swapped { record, from_unroll });
+        if let (Some(cur), Some(_)) = (&current, observed_batch) {
+            if cur.unroll == unroll {
+                return Ok(Reconfig::Kept {
+                    current_unroll: cur.unroll,
+                    candidate_unroll: unroll,
+                    current: Duration::ZERO,
+                    candidate: Duration::ZERO,
+                });
             }
-        };
-        if cur.unroll == unroll {
-            return Ok(Reconfig::Kept {
-                current_unroll: cur.unroll,
-                candidate_unroll: unroll,
-                current: Duration::ZERO,
-                candidate: Duration::ZERO,
-            });
         }
-        // Route (or cache-hit) the candidate, then let the analytic
-        // pipeline model pick the better artifact at this batch size.
-        let (off, _single) = {
+        // This exact target already compiling in the background: stay
+        // deferred without re-running analysis + extraction every tick.
+        if let Some(&key) = self.pending_specs.get(&(func, unroll, trip_bucket)) {
+            if self.compile.is_pending(key) {
+                return Ok(Reconfig::Deferred { key, unroll });
+            }
+            self.pending_specs.remove(&(func, unroll, trip_bucket));
+        }
+        // Extract once: the cache key decides between a hit (proceed
+        // synchronously — no P&R happens) and a background submission,
+        // and the pair feeds the eventual install directly (no
+        // re-extraction).
+        let (off, single) = {
             let f = &engine.module.funcs[func as usize];
             extract_single_scop(f, unroll)?
         };
@@ -507,7 +738,36 @@ impl OffloadManager {
             return Err(RejectReason::TooSmall { nodes, min: self.params.min_dfg_nodes });
         }
         let key = spec_key(dfg_key(&off.dfg), sig);
-        let (cand, _, _) = self.route_cached(&off.dfg, key)?;
+        if self.compile.service.is_some() && !self.cache.contains(key) {
+            // Non-blocking promotion: submit (deduped; warm-started from
+            // the live artifact's placement) and keep the current tier —
+            // software or the previous specialization — until it lands.
+            let warm = current
+                .as_ref()
+                .filter(|c| !c.cached.placement.is_empty())
+                .map(|c| ParSeed::Warm(c.cached.placement.clone()))
+                .unwrap_or(ParSeed::Cold);
+            self.compile.compile(&mut self.cache, &off.dfg, key, warm, true)?;
+            self.pending_specs.insert((func, unroll, trip_bucket), key);
+            return Ok(Reconfig::Deferred { key, unroll });
+        }
+        let (cur, batch) = match (current, observed_batch) {
+            (Some(cur), Some(batch)) => (cur, batch),
+            (cur, _) => {
+                // Nothing live to compare against (or no profile yet):
+                // install unconditionally.
+                let from_unroll = cur.map(|c| c.unroll).unwrap_or(0);
+                let record =
+                    self.install_extracted(engine, func, unroll, sig, off, single, None)?;
+                return Ok(Reconfig::Swapped { record, from_unroll });
+            }
+        };
+        // Route (or cache-hit) the candidate, then let the analytic
+        // pipeline model pick the better artifact at this batch size.
+        let warm = (!cur.cached.placement.is_empty())
+            .then(|| ParSeed::Warm(cur.cached.placement.clone()))
+            .unwrap_or(ParSeed::Cold);
+        let (cand, _, _) = self.route_cached(&off.dfg, key, warm, true)?;
         let est = self.device.estimate(self.params.grid.rows, self.params.grid.cols);
         let fmax = est.fmax_mhz * 1e6;
         let link = (self.params.pcie, self.params.transport);
@@ -522,7 +782,7 @@ impl OffloadManager {
                 candidate: t_cand,
             });
         }
-        let record = self.offload_with(engine, func, unroll, sig, None)?;
+        let record = self.install_extracted(engine, func, unroll, sig, off, single, None)?;
         Ok(Reconfig::Swapped { record, from_unroll: cur.unroll })
     }
 
@@ -850,6 +1110,65 @@ mod tests {
         let r2 = mgr.try_offload(&mut engine, func, None).unwrap();
         assert!(r2.cache_hit);
         assert!(r2.par_stats.is_none(), "P&R skipped on hit");
+        // The entry carries the winning search's stats: a hit reports the
+        // compile cost it avoided paying.
+        let avoided = r2.avoided.expect("hit must report avoided compile cost");
+        let paid = r1.par_stats.unwrap();
+        assert_eq!(avoided.placements, paid.placements);
+        assert_eq!(avoided.route_calls, paid.route_calls);
+        assert!(r1.avoided.is_none(), "a miss avoided nothing");
+    }
+
+    #[test]
+    fn background_compile_defers_then_swaps_on_cache_hit() {
+        let mut engine = Engine::new(fig2_module()).unwrap();
+        let mut mem = Memory::new();
+        let n = 500;
+        let a: Vec<i32> = (0..n).map(|i| i * 3 - 100).collect();
+        let b: Vec<i32> = (0..n).map(|i| 50 - i).collect();
+        let (ha, hb) = (mem.from_i32(&a), mem.from_i32(&b));
+        let hc = mem.alloc_i32(n as usize);
+        run_fig2(&mut engine, &mut mem, hc, ha, hb, n);
+
+        let mut mgr = OffloadManager::new(OffloadParams {
+            min_dfg_nodes: 1,
+            compile_threads: 2,
+            portfolio: 4,
+            ..Default::default()
+        });
+        let func = engine.func_index("fig2").unwrap();
+        // First decision: nothing cached -> the job is submitted and the
+        // caller keeps its current tier (software), unpatched.
+        let r = mgr.reconfigure(&mut engine, func, 2, 0, None).unwrap();
+        assert!(matches!(r, Reconfig::Deferred { unroll: 2, .. }), "{r:?}");
+        assert!(!engine.is_patched(func), "caller must keep executing software");
+        // A repeat decision while the job is in flight stays deferred and
+        // must not resubmit (key dedup).
+        let r = mgr.reconfigure(&mut engine, func, 2, 0, None);
+        assert!(matches!(r, Ok(Reconfig::Deferred { .. })), "{r:?}");
+        // Test barrier: wait for the artifact to land in the cache...
+        let landed = mgr.drain_compiles();
+        assert_eq!(landed.len(), 1, "exactly one job for the deduped key");
+        // ...then the next decision swaps it in as a pure cache hit.
+        match mgr.reconfigure(&mut engine, func, 2, 0, None).unwrap() {
+            Reconfig::Swapped { record, from_unroll } => {
+                assert_eq!(from_unroll, 0);
+                assert!(record.cache_hit, "the swap must be a cache hit, not a route");
+                assert!(record.avoided.is_some());
+            }
+            other => panic!("expected a swap after landing, got {other:?}"),
+        }
+        assert!(engine.is_patched(func));
+        assert_eq!(
+            mgr.compile_stall,
+            Duration::ZERO,
+            "the caller never blocked inside place & route"
+        );
+        // Numerics are exact through the background-compiled artifact.
+        run_fig2(&mut engine, &mut mem, hc, ha, hb, n);
+        for i in 0..n as usize {
+            assert_eq!(mem.i32s(hc)[i], a[i] + 3 * b[i] + 1, "element {i}");
+        }
     }
 
     #[test]

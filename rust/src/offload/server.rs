@@ -15,7 +15,12 @@
 //!     batched shared-accelerator serving of Cong et al.;
 //!   * requests are admitted by a hotness-weighted round robin, with the
 //!     paper's per-tenant rollback: a tenant whose offloaded path loses to
-//!     its own software baseline is unpatched and served in software.
+//!     its own software baseline is unpatched and served in software;
+//!   * place & route runs through the compile service (`par::service` via
+//!     [`CompileSlot`]): misses race a seed portfolio, respecialization
+//!     misses compile in the background and swap in at a round boundary —
+//!     after admission no tenant ever blocks inside P&R
+//!     (`compile_stall_secs == 0`, `tests/serve.rs` S7).
 //!
 //! Timing discipline matches the rest of the crate: numerics are real
 //! (every request executes through the tenant's engine), performance is
@@ -28,7 +33,7 @@
 use std::cell::RefCell;
 use std::fmt;
 use std::rc::Rc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use crate::dfe::cache::{
     dfg_key, region_key, spec_key, CacheStats, CachedConfig, ConfigCache, SpecSignature,
@@ -38,18 +43,17 @@ use crate::dfe::resource::{device_by_name, Device};
 use crate::ir::func::Module;
 use crate::jit::engine::{Engine, Histogram};
 use crate::jit::interp::{Memory, Val};
-use crate::par::{place_and_route, ParParams};
+use crate::par::{ParParams, ParSeed};
 use crate::trace::{Phase, Tracer};
 use crate::transport::{AsyncLink, BatchQueue, PcieParams, PcieSim, TransportMode};
 use crate::util::err::{Error, Result};
 use crate::{anyhow, bail};
 use crate::util::fmt_duration;
-use crate::util::prng::Rng;
 use crate::workloads::{polybench, video};
 
 use super::adapt::{target_unroll, AdaptParams};
-use super::stub::{run_offloaded_with, DfeBackend, TimeModel};
-use super::{OffloadManager, OffloadParams, RejectReason, RuntimeState};
+use super::stub::{make_offload_hook, DfeBackend, TimeModel};
+use super::{CompileSlot, OffloadManager, OffloadParams, RejectReason, RuntimeState};
 
 /// Software warmup invocations per tenant before the offload decision
 /// (establishes the rollback baseline, like the paper's "after running the
@@ -99,6 +103,15 @@ pub struct ServeParams {
     /// *r-1*'s downloads. Numerics are identical by construction
     /// (`tests/serve.rs` S6 diffs the two bit-for-bit).
     pub transport: TransportMode,
+    /// P&R seeds raced per compile (K >= 1); the winner is deterministic
+    /// per `(cache key, K, seed)`.
+    pub portfolio: usize,
+    /// Compile-service worker threads. 0 = synchronous compiles: a
+    /// respecialization miss stalls the adapt pass inside place & route
+    /// (counted in `compile_stall_secs`). N > 0 = respecs compile in the
+    /// background and swap in at a later round boundary — no tenant ever
+    /// blocks on P&R after admission (`tests/serve.rs` S7).
+    pub compile_threads: usize,
 }
 
 impl Default for ServeParams {
@@ -118,6 +131,8 @@ impl Default for ServeParams {
             batch_window: 0,
             adapt: None,
             transport: TransportMode::Sync,
+            portfolio: 1,
+            compile_threads: 0,
         }
     }
 }
@@ -208,6 +223,15 @@ pub struct Tenant {
     adapt_seen_elements: u64,
     window_count: u64,
     window_elements: u64,
+    /// Wall time this tenant's serving path blocked inside place & route
+    /// after admission (respecialization misses compiled synchronously).
+    /// The S7 invariant: identically zero with the compile service on.
+    pub compile_stall: Duration,
+    /// Respec target whose compile is in flight: `(unroll, trip_bucket,
+    /// cache key)`. While pending, decision windows for the same target
+    /// return immediately — no re-extraction, no spurious cache-miss
+    /// accounting for a compile that is already running.
+    pending_spec: Option<(usize, usize, u64)>,
 }
 
 /// One shard region's live state.
@@ -256,7 +280,9 @@ pub struct OffloadServer {
     pub tracer: Rc<RefCell<Tracer>>,
     /// Virtual server clock (advanced per scheduling round).
     pub clock: Duration,
-    rng: Rng,
+    /// Portfolio/compile-service state shared by admission and the
+    /// adaptive pass (see [`CompileSlot`]).
+    pub compile: CompileSlot,
 }
 
 impl OffloadServer {
@@ -310,6 +336,13 @@ impl OffloadServer {
                 ServeLink::Async(AsyncLink::new(params.pcie, params.shards, depth))
             }
         };
+        let compile = CompileSlot::new(
+            params.portfolio,
+            params.compile_threads,
+            route_grid,
+            params.par,
+            params.seed,
+        );
         let mut server = OffloadServer {
             device,
             regions: regions.clone(),
@@ -320,7 +353,7 @@ impl OffloadServer {
             link,
             tracer: Rc::new(RefCell::new(Tracer::new())),
             clock: Duration::ZERO,
-            rng: Rng::new(params.seed),
+            compile,
             params,
         };
         for spec in specs {
@@ -389,11 +422,15 @@ impl OffloadServer {
             adapt_seen_elements: 0,
             window_count: 0,
             window_elements: 0,
+            compile_stall: Duration::ZERO,
+            pending_spec: None,
         };
         let unroll = tenant.spec.unroll;
+        // Admission compiles synchronously (warmup): the tenant is not
+        // serving yet, so this is the one P&R that may block.
         if let Err(reason) = offload_tenant_impl(
             &mut self.cache,
-            &mut self.rng,
+            &mut self.compile,
             &self.device,
             &self.params,
             self.route_grid,
@@ -401,11 +438,25 @@ impl OffloadServer {
             unroll,
             0,
             None,
+            false,
         ) {
             tenant.reject = Some(reason.to_string());
         }
         self.tenants.push(tenant);
         Ok(())
+    }
+
+    /// Land any artifacts the background compile service finished into
+    /// the shared cache (round-boundary barrier: the adaptive pass then
+    /// swaps them in as cache hits). Returns the landed keys.
+    pub fn pump_compiles(&mut self) -> Vec<u64> {
+        self.compile.pump(&mut self.cache)
+    }
+
+    /// Block until every in-flight compile job has landed (test barrier /
+    /// orderly shutdown; `run` only ever pumps).
+    pub fn drain_compiles(&mut self) -> Vec<u64> {
+        self.compile.drain(&mut self.cache, Duration::from_secs(30))
     }
 
     /// Post-round adaptive pass: fold each offloaded tenant's observed
@@ -463,7 +514,7 @@ impl OffloadServer {
         };
         let swapped = offload_tenant_impl(
             &mut self.cache,
-            &mut self.rng,
+            &mut self.compile,
             &self.device,
             &self.params,
             self.route_grid,
@@ -471,6 +522,7 @@ impl OffloadServer {
             target,
             bucket,
             Some(observed),
+            true,
         );
         if let Ok(true) = swapped {
             let t = &mut self.tenants[ti];
@@ -498,6 +550,10 @@ impl OffloadServer {
         let mut host_free = self.clock;
 
         while remaining.iter().any(|&r| r > 0) {
+            // Round boundary: land any background-compiled artifacts into
+            // the shared cache before scheduling, so this round's adaptive
+            // pass can swap them in as pure cache hits.
+            self.pump_compiles();
             let round_start = self.clock;
 
             // ---- admission: hotness-weighted round robin ----
@@ -780,6 +836,7 @@ impl OffloadServer {
                     + t.state.as_ref().map(|s| s.borrow().invocations).unwrap_or(0),
                 elements: t.retired_elements
                     + t.state.as_ref().map(|s| s.borrow().total_elements).unwrap_or(0),
+                compile_stall_secs: t.compile_stall.as_secs_f64(),
             })
             .collect();
         let shards = self
@@ -793,6 +850,7 @@ impl OffloadServer {
             })
             .collect();
         let total_elements = tenants.iter().map(|t| t.elements).sum();
+        let compile_stall_secs = tenants.iter().map(|t| t.compile_stall_secs).sum();
         ServeReport {
             shards,
             makespan: self.clock,
@@ -804,6 +862,8 @@ impl OffloadServer {
             link_batches: self.link.sim().transfers,
             cache: self.cache.stats,
             cache_hit_rate: self.cache.hit_rate(),
+            compile_stall_secs,
+            pending_compiles: self.compile.pending(),
             tenants,
         }
     }
@@ -815,11 +875,16 @@ impl OffloadServer {
 /// already lives inside the server. When `observed` is given and an
 /// artifact is already live, the candidate is only swapped in if the
 /// analytic pipeline model prefers it at that batch size (ties favor the
-/// smaller unroll). Returns whether the call table was (re)patched.
+/// smaller unroll). A respecialization miss (`respec`) either stalls here
+/// synchronously (counted in the tenant's `compile_stall`) or — with the
+/// compile service on — submits a warm-started background job and returns
+/// `Ok(false)`: the tenant keeps serving its current tier and a later
+/// window swaps the landed artifact in as a cache hit. Returns whether
+/// the call table was (re)patched.
 #[allow(clippy::too_many_arguments)]
 fn offload_tenant_impl(
     cache: &mut ConfigCache,
-    rng: &mut Rng,
+    compile: &mut CompileSlot,
     device: &Device,
     params: &ServeParams,
     route_grid: Grid,
@@ -827,7 +892,23 @@ fn offload_tenant_impl(
     unroll: usize,
     trip_bucket: usize,
     observed: Option<u64>,
+    respec: bool,
 ) -> std::result::Result<bool, RejectReason> {
+    // A compile for this exact target already in flight: skip the
+    // re-extraction and the cache lookup entirely — one background job,
+    // one recorded miss (stale entries for a finished or retargeted job
+    // are cleared and fall through).
+    if respec {
+        if let Some((u, b, key)) = t.pending_spec {
+            if compile.is_pending(key) {
+                if (u, b) == (unroll, trip_bucket) {
+                    return Ok(false);
+                }
+            } else {
+                t.pending_spec = None;
+            }
+        }
+    }
     let extraction = {
         let f = &t.engine.module.funcs[t.func as usize];
         super::extract_single_scop(f, unroll)
@@ -841,22 +922,42 @@ fn offload_tenant_impl(
 
     let sig = SpecSignature::new(unroll, trip_bucket);
     let key = region_key(spec_key(dfg_key(&off.dfg), sig), route_grid);
+    if respec && compile.is_pending(key) {
+        // Another tenant already has this key compiling: wait for it at a
+        // later window without charging a second miss.
+        t.pending_spec = Some((unroll, trip_bucket, key));
+        return Ok(false);
+    }
     let mut cache_hit = true;
     let cached = if let Some(c) = cache.get(key) {
         c.clone()
     } else {
         cache_hit = false;
-        let result = place_and_route(&off.dfg, route_grid, &params.par, rng)
-            .map_err(|e| RejectReason::Unroutable(e.to_string()))?;
-        // Lower the wave executor once; tenants hitting this entry
-        // (same kernel, same region shape, same signature) skip P&R
-        // *and* the lowering.
-        let c = CachedConfig::new(
-            result.config,
-            result.image,
-            format!("dfe_{}x{}", route_grid.rows, route_grid.cols),
-        );
-        cache.insert(key, c.clone());
+        // Warm hint: the live artifact's placement seeds the tier-N+1
+        // search, so only the DFG delta is re-placed/re-routed.
+        let warm = t
+            .cached
+            .as_ref()
+            .filter(|c| !c.placement.is_empty())
+            .map(|c| ParSeed::Warm(c.placement.clone()))
+            .unwrap_or(ParSeed::Cold);
+        if respec && compile.service.is_some() {
+            // Non-blocking promotion: submit (deduped by key across
+            // tenants) and keep executing the current tier.
+            compile.compile(cache, &off.dfg, key, warm, true)?;
+            t.pending_spec = Some((unroll, trip_bucket, key));
+            return Ok(false);
+        }
+        let t0 = Instant::now();
+        // Blocking portfolio race; the entry carries provenance (winning
+        // seed, stats, placement) and the lowered wave executor, so
+        // tenants hitting it skip P&R *and* the lowering.
+        let (c, _) = compile
+            .compile(cache, &off.dfg, key, warm, false)?
+            .expect("blocking compile returns an artifact");
+        if respec {
+            t.compile_stall += t0.elapsed();
+        }
         c
     };
 
@@ -911,42 +1012,24 @@ fn offload_tenant_impl(
         ..Default::default()
     }));
     let config_words = cached.config.config_words() as u64;
-    let image = cached.image.clone();
     // Numerics run on the compiled wave executor shared through the
     // cache; `Sim` (per-lane image eval) only if the lowering refused.
     let backend = match &cached.fabric {
         Some(f) => DfeBackend::Fabric(f.clone()),
         None => DfeBackend::Sim,
     };
-    let pcie = t.pcie.clone();
-    let st = state.clone();
-    let hook_unroll = off.unroll.max(1) as u64;
-    let mode = params.transport;
-    t.engine.patch_hook(
-        t.func,
-        Box::new(move |mem, args| {
-            let mut link = pcie.borrow_mut();
-            match run_offloaded_with(
-                &off, &single, &image, &backend, &tm, &mut link, mode, mem, args,
-            ) {
-                Ok(report) => {
-                    let mut s = st.borrow_mut();
-                    s.invocations += 1;
-                    s.virtual_offload += report.offload_time();
-                    let elements =
-                        report.elements * hook_unroll + report.remainder_elements;
-                    s.batch_hist.record(elements);
-                    s.total_elements += elements;
-                    s.last_report = report;
-                    Ok(None)
-                }
-                Err(trap) => {
-                    st.borrow_mut().failed = true;
-                    Err(trap)
-                }
-            }
-        }),
+    let hook = make_offload_hook(
+        off,
+        single,
+        cached.image.clone(),
+        backend,
+        tm,
+        t.pcie.clone(),
+        params.transport,
+        state.clone(),
+        None,
     );
+    t.engine.patch_hook(t.func, hook);
     t.offload = Some(TenantOffload { key, cache_hit, config_words });
     t.state = Some(state);
     t.cached = Some(cached);
@@ -955,6 +1038,7 @@ fn offload_tenant_impl(
     t.adapt_seen_elements = 0;
     t.window_count = 0;
     t.window_elements = 0;
+    t.pending_spec = None;
     Ok(true)
 }
 
@@ -1035,6 +1119,9 @@ pub struct TenantReport {
     /// Innermost iterations served through the offload stub (cumulative
     /// across respecializations; 0 for software-only tenants).
     pub elements: u64,
+    /// Wall seconds this tenant's serving path blocked inside place &
+    /// route after admission. 0 with the compile service on (S7).
+    pub compile_stall_secs: f64,
 }
 
 #[derive(Clone, Copy, Debug)]
@@ -1060,6 +1147,11 @@ pub struct ServeReport {
     pub link_batches: u64,
     pub cache: CacheStats,
     pub cache_hit_rate: f64,
+    /// Total wall seconds tenants blocked inside place & route after
+    /// admission (sum over tenants; 0 with the compile service on).
+    pub compile_stall_secs: f64,
+    /// Compile jobs still in flight when the report was taken.
+    pub pending_compiles: usize,
 }
 
 impl ServeReport {
@@ -1145,6 +1237,12 @@ impl fmt::Display for ServeReport {
             self.cache.misses,
             100.0 * self.cache_hit_rate,
             self.cache.evictions
+        )?;
+        writeln!(
+            f,
+            "compile: {} stall after warmup, {} job(s) still in flight",
+            fmt_duration(Duration::from_secs_f64(self.compile_stall_secs)),
+            self.pending_compiles
         )?;
         write!(
             f,

@@ -22,15 +22,21 @@
 //! timeline and the fps comparison (§IV-C) are reproducible regardless of
 //! the machine this simulator runs on.
 
+use std::cell::RefCell;
+use std::rc::Rc;
 use std::time::Duration;
 
 use crate::dfe::config::GridConfig;
 use crate::dfe::image::ExecImage;
 use crate::dfe::sim::CycleSim;
 use crate::dfg::extract::{OffloadDfg, OutMode};
+use crate::jit::engine::Hook;
 use crate::jit::interp::{Memory, Trap, Val};
 use crate::runtime::DfeExecutable;
+use crate::trace::{Phase, Tracer};
 use crate::transport::{chunk_plan, ChunkTimeline, PcieSim, TransportMode};
+
+use super::RuntimeState;
 
 /// Where the DFE numerics run.
 pub enum DfeBackend {
@@ -139,6 +145,56 @@ impl StubReport {
     pub fn occupancy(&self) -> Duration {
         self.host_to_dfe + self.dfe_to_host + self.dfe_exec
     }
+}
+
+/// Build the call-table hook shared by the single-tenant manager and the
+/// serve layer: run the offload stub, fold the per-invocation report into
+/// the shared [`RuntimeState`] (invocation counts, batch histogram,
+/// element totals), optionally mirror the phase times into a tracer, and
+/// flag failures so the rollback pass can demote the function. One
+/// definition, two installers — the respecialization swap barrier relies
+/// on both paths folding state identically.
+#[allow(clippy::too_many_arguments)]
+pub fn make_offload_hook(
+    off: OffloadDfg,
+    single: OffloadDfg,
+    image: ExecImage,
+    backend: DfeBackend,
+    tm: TimeModel,
+    pcie: Rc<RefCell<PcieSim>>,
+    mode: TransportMode,
+    state: Rc<RefCell<RuntimeState>>,
+    tracer: Option<Rc<RefCell<Tracer>>>,
+) -> Hook {
+    let hook_unroll = off.unroll.max(1) as u64;
+    Box::new(move |mem, args| {
+        let mut link = pcie.borrow_mut();
+        match run_offloaded_with(
+            &off, &single, &image, &backend, &tm, &mut link, mode, mem, args,
+        ) {
+            Ok(report) => {
+                let mut st = state.borrow_mut();
+                st.invocations += 1;
+                st.virtual_offload += report.offload_time();
+                let elements = report.elements * hook_unroll + report.remainder_elements;
+                st.batch_hist.record(elements);
+                st.total_elements += elements;
+                st.last_report = report;
+                drop(st);
+                if let Some(t) = &tracer {
+                    let mut t = t.borrow_mut();
+                    t.simulated(Phase::HostToDfe, report.host_to_dfe);
+                    t.simulated(Phase::DfeExec, report.dfe_exec);
+                    t.simulated(Phase::DfeToHost, report.dfe_to_host);
+                }
+                Ok(None)
+            }
+            Err(trap) => {
+                state.borrow_mut().failed = true;
+                Err(trap)
+            }
+        }
+    })
 }
 
 /// Resolve a `Reg`-indexed argument as i32 (affine parameter).

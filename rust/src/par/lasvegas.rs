@@ -21,6 +21,7 @@
 //! several seconds ... 1.18 s" for the 17-in/1-out/16-calc convolution DFG
 //! — bench `par_bench` reproduces that distribution shape.
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::{Duration, Instant};
 
 use crate::dfe::config::{FuSrc, GridConfig};
@@ -70,7 +71,101 @@ pub struct ParStats {
     pub pos_retries: u64,
     pub backtracks: u64,
     pub restarts: u64,
+    /// Cumulative wall time across every restart of this search.
     pub elapsed: Duration,
+    /// Wall time of the final attempt alone (the successful one, or the
+    /// last restart on failure). `elapsed` folds all prior restarts in;
+    /// per-attempt latency must not — the portfolio racer reports honest
+    /// per-seed numbers from this field.
+    pub attempt_elapsed: Duration,
+    /// Nodes successfully replayed from a [`ParSeed::Warm`] placement
+    /// before the stochastic search took over.
+    pub warm_placed: u64,
+}
+
+impl ParStats {
+    /// Deterministic progress metric of the search: position attempts plus
+    /// net-route calls. Wall-clock independent, monotone while the search
+    /// runs — the portfolio racer decides winners on it so the winning
+    /// artifact for a given `(base seed, K)` is reproducible regardless of
+    /// thread scheduling.
+    pub fn search_steps(&self) -> u64 {
+        self.placements + self.route_calls
+    }
+}
+
+/// How the stochastic search is seeded (incremental placement reuse).
+#[derive(Clone, Debug, Default)]
+pub enum ParSeed {
+    /// Start from scratch (the paper's behaviour).
+    #[default]
+    Cold,
+    /// Replay a prior artifact's placement first — respecializing unroll
+    /// tier N→N+1 re-places only the DFG delta. Pairs that no longer fit
+    /// (unknown node, occupied cell, failed route) are dropped one by one,
+    /// a placement off this grid poisons the whole seed, and restarts > 0
+    /// always run cold, so the Las-Vegas completeness property survives:
+    /// a bad warm seed costs one attempt, never an error.
+    Warm(Vec<(NodeId, CellCoord)>),
+}
+
+/// Shared state of one portfolio race: the best published
+/// `(search_steps, entrant)` pair, packed so a single atomic min decides
+/// the winner. An entrant aborts once its own deterministic step count can
+/// no longer beat the published best — cancellation cuts wall time while
+/// the winner stays a pure function of the seeds.
+#[derive(Debug)]
+pub struct RaceState {
+    /// Packed `(steps << ENTRANT_BITS) | entrant`; `u64::MAX` = no winner.
+    best: AtomicU64,
+}
+
+impl Default for RaceState {
+    fn default() -> Self {
+        RaceState::new()
+    }
+}
+
+const ENTRANT_BITS: u32 = 16;
+const STEPS_MAX: u64 = (1 << (64 - ENTRANT_BITS)) - 1;
+
+fn pack_race(steps: u64, entrant: usize) -> u64 {
+    (steps.min(STEPS_MAX) << ENTRANT_BITS) | (entrant as u64 & ((1 << ENTRANT_BITS) - 1))
+}
+
+impl RaceState {
+    pub fn new() -> RaceState {
+        RaceState { best: AtomicU64::new(u64::MAX) }
+    }
+
+    /// Publish a finished search. Returns the packed key.
+    pub fn publish(&self, steps: u64, entrant: usize) -> u64 {
+        let key = pack_race(steps, entrant);
+        self.best.fetch_min(key, Ordering::AcqRel);
+        key
+    }
+
+    /// Current best packed key (`u64::MAX` until someone succeeds).
+    pub fn best(&self) -> u64 {
+        self.best.load(Ordering::Acquire)
+    }
+}
+
+/// One entrant's handle on a [`RaceState`].
+#[derive(Clone, Copy)]
+pub struct RaceCtl<'a> {
+    pub state: &'a RaceState,
+    pub entrant: usize,
+}
+
+impl RaceCtl<'_> {
+    /// Whether this entrant can no longer win: its partial step count
+    /// already orders after the published best. Partial steps only grow,
+    /// so an aborted entrant provably loses to the final winner — which
+    /// is why aborting keeps the race outcome deterministic.
+    fn lost(&self, steps: u64) -> bool {
+        pack_race(steps, self.entrant) > self.state.best()
+    }
 }
 
 #[derive(Clone, Debug)]
@@ -90,6 +185,9 @@ pub enum ParError {
     BadDfg(DfgError),
     /// Gave up after the restart budget (paper: heat-3d on 24x18).
     Unroutable { restarts: usize },
+    /// Cancelled by the portfolio race: another seed already won with a
+    /// lower step count (never surfaced outside the racer).
+    Aborted,
 }
 
 impl std::fmt::Display for ParError {
@@ -102,6 +200,7 @@ impl std::fmt::Display for ParError {
             ParError::Unroutable { restarts } => {
                 write!(f, "place&route failed after {restarts} restarts")
             }
+            ParError::Aborted => write!(f, "place&route cancelled by a winning race entrant"),
         }
     }
 }
@@ -114,6 +213,20 @@ pub fn place_and_route(
     grid: Grid,
     params: &ParParams,
     rng: &mut Rng,
+) -> Result<ParResult, ParError> {
+    place_and_route_seeded(dfg, grid, params, rng, &ParSeed::Cold, None)
+}
+
+/// [`place_and_route`] with an explicit placement seed and optional race
+/// membership. Still deterministic for a given `(rng, seed)` pair; `race`
+/// only ever turns a would-be result into [`ParError::Aborted`].
+pub fn place_and_route_seeded(
+    dfg: &Dfg,
+    grid: Grid,
+    params: &ParParams,
+    rng: &mut Rng,
+    seed: &ParSeed,
+    race: Option<RaceCtl<'_>>,
 ) -> Result<ParResult, ParError> {
     dfg.validate().map_err(ParError::BadDfg)?;
     let t0 = Instant::now();
@@ -184,12 +297,34 @@ pub fn place_and_route(
     let mut stats = ParStats::default();
     let sigma = (grid.rows.max(grid.cols) as f64 * params.sigma_frac).max(0.8);
 
+    // A warm placement referencing cells off this grid is poisoned as a
+    // whole (an artifact routed for different geometry can't guide this
+    // search); an in-bounds one is replayed pair by pair on the first
+    // attempt only — restarts always run cold.
+    let warm: &[(NodeId, CellCoord)] = match seed {
+        ParSeed::Warm(p) if p.iter().all(|&(_, c)| grid.contains(c)) => p,
+        _ => &[],
+    };
+
+    let mut t_attempt = t0;
     'restart: for restart in 0..=params.max_restarts {
         stats.restarts = restart as u64;
+        t_attempt = Instant::now();
         let mut state = SearchState::new(dfg, grid);
         let mut node_failures = 0usize;
+        if restart == 0 && !warm.is_empty() {
+            stats.warm_placed =
+                replay_warm(&mut state, dfg, warm, &consumers, &feeds_output, &mut stats);
+        }
 
         while !state.unplaced.is_empty() {
+            if let Some(rc) = race {
+                if rc.lost(stats.search_steps()) {
+                    stats.elapsed = t0.elapsed();
+                    stats.attempt_elapsed = t_attempt.elapsed();
+                    return Err(ParError::Aborted);
+                }
+            }
             // --- node selection: weighted toward I/O-adjacent nodes ---
             let weights: Vec<f64> = state
                 .unplaced
@@ -251,6 +386,7 @@ pub fn place_and_route(
         match config.to_image() {
             Ok(image) => {
                 stats.elapsed = t0.elapsed();
+                stats.attempt_elapsed = t_attempt.elapsed();
                 return Ok(ParResult {
                     config,
                     image,
@@ -262,7 +398,43 @@ pub fn place_and_route(
         }
     }
     stats.elapsed = t0.elapsed();
+    stats.attempt_elapsed = t_attempt.elapsed();
     Err(ParError::Unroutable { restarts: params.max_restarts })
+}
+
+/// Replay a warm placement onto a fresh search state. Each pair is
+/// validated against the *current* DFG and grid: unknown or non-calc
+/// nodes, already-used cells and failed routes are simply skipped, so a
+/// stale hint degrades to fewer pre-placed nodes, never to an error.
+/// Returns how many nodes were placed from the hint.
+fn replay_warm(
+    state: &mut SearchState,
+    dfg: &Dfg,
+    warm: &[(NodeId, CellCoord)],
+    consumers: &[Vec<(NodeId, u8)>],
+    feeds_output: &[Vec<usize>],
+    stats: &mut ParStats,
+) -> u64 {
+    let mut placed = 0u64;
+    for &(node, cell) in warm {
+        if node >= dfg.len()
+            || !matches!(dfg.nodes[node].kind, NodeKind::Calc(_))
+            || !state.unplaced.contains(&node)
+            || state.cell_used[state.router.grid().index(cell)]
+        {
+            continue;
+        }
+        let snapshot = state.clone();
+        stats.placements += 1;
+        match try_place(state, dfg, node, cell, consumers, feeds_output, stats) {
+            Ok(()) => placed += 1,
+            Err(()) => {
+                stats.pos_retries += 1;
+                *state = snapshot;
+            }
+        }
+    }
+    placed
 }
 
 /// Mutable search state: router + placement bookkeeping. Cloned for
@@ -569,5 +741,74 @@ mod tests {
         let res = check_par(&fig2_dfg(), Grid::new(4, 4), 3);
         assert!(res.stats.placements >= 3);
         assert!(res.stats.route_calls >= 4);
+        assert_eq!(res.stats.search_steps(), res.stats.placements + res.stats.route_calls);
+        assert!(
+            res.stats.attempt_elapsed <= res.stats.elapsed,
+            "per-attempt time can never exceed the cumulative time"
+        );
+    }
+
+    #[test]
+    fn warm_seed_replays_prior_placement() {
+        let dfg = listing1_dfg();
+        let mut rng = Rng::new(9);
+        let cold =
+            place_and_route(&dfg, Grid::new(4, 4), &ParParams::default(), &mut rng).unwrap();
+        let mut rng2 = Rng::new(10);
+        let warm = place_and_route_seeded(
+            &dfg,
+            Grid::new(4, 4),
+            &ParParams::default(),
+            &mut rng2,
+            &ParSeed::Warm(cold.placement.clone()),
+            None,
+        )
+        .expect("warm-started search must still succeed");
+        assert!(warm.stats.warm_placed >= 1, "a same-grid hint must pre-place nodes");
+        let inputs: Vec<i32> = (0..dfg.max_input_index().unwrap() + 1)
+            .map(|i| i as i32 * 3 - 7)
+            .collect();
+        assert_eq!(warm.image.eval_scalar(&inputs), dfg.eval(&inputs).unwrap());
+    }
+
+    #[test]
+    fn poisoned_warm_seed_falls_back_to_cold() {
+        // Placement cells off this grid: the whole hint is discarded and
+        // the search runs cold instead of erroring.
+        let dfg = fig2_dfg();
+        let poisoned = ParSeed::Warm(vec![(2, CellCoord::new(10, 10))]);
+        let mut rng = Rng::new(3);
+        let res = place_and_route_seeded(
+            &dfg,
+            Grid::new(2, 2),
+            &ParParams::default(),
+            &mut rng,
+            &poisoned,
+            None,
+        )
+        .expect("poisoned seed must fall back, not error");
+        assert_eq!(res.stats.warm_placed, 0);
+        let mut rng2 = Rng::new(3);
+        let cold =
+            place_and_route(&dfg, Grid::new(2, 2), &ParParams::default(), &mut rng2).unwrap();
+        assert_eq!(res.config, cold.config, "poisoned warm run must equal the cold run");
+    }
+
+    #[test]
+    fn race_abort_when_best_already_published() {
+        let state = RaceState::new();
+        // Entrant 0 "won" instantly with 0 steps: entrant 1 must abort.
+        state.publish(0, 0);
+        let mut rng = Rng::new(5);
+        let err = place_and_route_seeded(
+            &fig2_dfg(),
+            Grid::new(4, 4),
+            &ParParams::default(),
+            &mut rng,
+            &ParSeed::Cold,
+            Some(RaceCtl { state: &state, entrant: 1 }),
+        )
+        .unwrap_err();
+        assert_eq!(err, ParError::Aborted);
     }
 }

@@ -1,6 +1,15 @@
 //! Las-Vegas place & route (paper §III-B): stochastic placement with
-//! Dijkstra net routing over the DFE fabric.
+//! Dijkstra net routing over the DFE fabric, plus the compile service
+//! (racing seed portfolios + background compilation + warm starts).
 pub mod lasvegas;
 pub mod route;
-pub use lasvegas::{place_and_route, ParError, ParParams, ParResult, ParStats};
+pub mod service;
+pub use lasvegas::{
+    place_and_route, place_and_route_seeded, ParError, ParParams, ParResult, ParSeed,
+    ParStats, RaceCtl, RaceState,
+};
 pub use route::{RouteError, RouteOutcome, RouteTarget, Router};
+pub use service::{
+    derive_seed, place_and_route_portfolio, CompileDone, CompileJob, CompileService,
+    LapOutcome, PortfolioOutcome, PortfolioParams, SeedLap,
+};

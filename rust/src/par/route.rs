@@ -176,9 +176,14 @@ impl Router {
         }
 
         let grid = self.cfg.grid;
-        let mut dist: HashMap<SState, u32> = HashMap::new();
-        let mut pred: HashMap<SState, PredEdge> = HashMap::new();
-        let mut heap = BinaryHeap::new();
+        // Pre-size for the worst case (~4 face states per cell): route()
+        // is the innermost operation of every P&R search, and with the
+        // portfolio racer running K of them concurrently, rehash churn
+        // here is pure wall-time loss.
+        let states = grid.n_cells() * 4 + 2;
+        let mut dist: HashMap<SState, u32> = HashMap::with_capacity(states);
+        let mut pred: HashMap<SState, PredEdge> = HashMap::with_capacity(states);
+        let mut heap = BinaryHeap::with_capacity(states);
         let mut tiebreak = 0u32;
 
         let mut push = |heap: &mut BinaryHeap<QItem>,

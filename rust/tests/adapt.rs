@@ -6,7 +6,13 @@
 //!       back to the generic tier within one decision window;
 //!   A3  profile rows are snapshot/reset at call-table patch time, so
 //!       the monitor only ever sees post-patch data (regression test for
-//!       the pre-offload-sample pollution bug).
+//!       the pre-offload-sample pollution bug);
+//!   A4  with the background compile service on, both the
+//!       interpreter→generic promotion and the generic→specialized
+//!       respecialization defer their P&R: the function keeps executing
+//!       its current tier, the swap fires at a later decision window as a
+//!       cache hit, numerics stay exact, and the manager records zero
+//!       compile stall.
 
 use tlo::ir::func::{FuncBuilder, Module};
 use tlo::ir::instr::Ty;
@@ -200,6 +206,90 @@ fn a2_slower_specialized_artifact_demotes_to_generic_within_one_window() {
         run(&mut engine, &mut mem, &mut want_acc, 2);
         ctl.observe(&mut mgr, &mut engine, func);
     }
+}
+
+#[test]
+fn a4_compile_service_defers_promotion_and_respec_without_stalls() {
+    let mut engine = Engine::new(fig2_module()).unwrap();
+    let mut mem = Memory::new();
+    let cap = 512usize;
+    let a: Vec<i32> = (0..cap as i32).map(|i| i * 5 - 99).collect();
+    let b: Vec<i32> = (0..cap as i32).map(|i| 23 - i).collect();
+    let (ha, hb) = (mem.from_i32(&a), mem.from_i32(&b));
+    let hc = mem.alloc_i32(cap);
+    let func = engine.func_index("fig2").unwrap();
+
+    let mut mgr = OffloadManager::new(OffloadParams {
+        min_dfg_nodes: 1,
+        compile_threads: 2,
+        portfolio: 2,
+        ..Default::default()
+    });
+    let mut ctl = AdaptController::new(AdaptParams {
+        hot_cycles: 1,
+        hot_invocations: 1,
+        generic_unroll: 1,
+        candidate_unrolls: vec![4],
+        min_lanes: 4,
+        min_batch: 1,
+        decision_window: 2,
+    });
+
+    let n = 509usize; // odd: the u=4 artifact exercises the host remainder
+    let mut run = |engine: &mut Engine, mem: &mut Memory| {
+        mem.i32s_mut(hc).fill(0);
+        engine
+            .call_idx(func, mem, &[Val::P(hc), Val::P(ha), Val::P(hb), Val::I(n as i32)])
+            .unwrap();
+        for i in 0..n {
+            assert_eq!(mem.i32s(hc)[i], a[i] + 3 * b[i] + 1, "element {i}");
+        }
+    };
+
+    // Tick 1: hot, but the generic artifact compiles in the background —
+    // the function must keep interpreting, unpatched, with no transition.
+    run(&mut engine, &mut mem);
+    assert!(ctl.observe(&mut mgr, &mut engine, func).is_none());
+    assert_eq!(ctl.tier(func), Tier::Interpreter);
+    assert!(!engine.is_patched(func), "promotion must not stall the interpreter");
+
+    // Barrier (test determinism): the artifact lands in the cache, and
+    // the next tick promotes via a pure cache hit.
+    mgr.drain_compiles();
+    run(&mut engine, &mut mem);
+    let t = ctl.observe(&mut mgr, &mut engine, func).expect("promotion after landing");
+    assert_eq!((t.from, t.to), (Tier::Interpreter, Tier::Generic));
+    assert!(engine.is_patched(func));
+
+    // Two offloaded ticks fill the decision window; the u=4 candidate is
+    // submitted in the background and the generic tier keeps serving.
+    for _ in 0..2 {
+        run(&mut engine, &mut mem);
+        assert!(ctl.observe(&mut mgr, &mut engine, func).is_none());
+    }
+    assert_eq!(ctl.tier(func), Tier::Generic, "respec must defer, not swap early");
+    assert!(engine.is_patched(func), "generic tier keeps serving meanwhile");
+
+    mgr.drain_compiles();
+    // The next full window swaps the landed u=4 artifact in.
+    let mut swapped = None;
+    for _ in 0..2 {
+        run(&mut engine, &mut mem);
+        swapped = swapped.or(ctl.observe(&mut mgr, &mut engine, func));
+    }
+    let t = swapped.expect("respecialization after landing");
+    assert_eq!((t.from, t.to), (Tier::Generic, Tier::Specialized));
+    assert_eq!(ctl.unroll(func), 4);
+    assert_eq!(ctl.respecializations(func), 1);
+
+    // The tentpole invariant, manager-side: nothing ever blocked in P&R.
+    assert_eq!(
+        mgr.compile_stall,
+        std::time::Duration::ZERO,
+        "deferred compiles must never stall the caller"
+    );
+    // Numerics through the specialized artifact remain exact.
+    run(&mut engine, &mut mem);
 }
 
 #[test]

@@ -799,3 +799,69 @@ fn conformance_across_tier_boundaries() {
         ctl.transitions(func)
     );
 }
+
+/// Warm-started tier-(N+1) artifacts ≡ cold-compiled ones, end to end
+/// through the real manager + stub. The warm path offloads at u=2 and
+/// live-respecializes to u=4 — `reconfigure` seeds the u=4 search with
+/// the live u=2 placement (incremental placement reuse); the cold path
+/// compiles u=4 directly. Both must match the host oracle bit for bit:
+/// a placement hint re-times the search, never the artifact's semantics.
+#[test]
+fn conformance_warm_started_respecialization_matches_cold_compile() {
+    use tlo::offload::Reconfig;
+
+    fn run_at(case: &Case, n: usize, unroll: usize, respec_from: Option<usize>) -> Vec<Vec<i32>> {
+        let mut engine = Engine::new((case.module)()).expect("module");
+        let mut mem = Memory::new();
+        let (args, handles) = (case.setup)(&mut mem, n);
+        let func = engine.func_index(case.func).expect("func");
+        let mut mgr = OffloadManager::new(OffloadParams {
+            min_dfg_nodes: 1,
+            unroll: respec_from.unwrap_or(unroll),
+            ..Default::default()
+        });
+        mgr.try_offload(&mut engine, func, None).expect("offload");
+        if respec_from.is_some() {
+            // Unconditional live respecialization: the live artifact's
+            // placement warm-starts the tier-(N+1) search.
+            let r = mgr.reconfigure(&mut engine, func, unroll, 3, None).expect("respec");
+            assert!(matches!(r, Reconfig::Swapped { .. }), "{}: {r:?}", case.name);
+            let active = mgr.active(func).expect("artifact live after swap");
+            assert_eq!(active.unroll, unroll);
+            assert!(
+                active.cached.par_stats.is_some(),
+                "{}: the respec artifact must carry its compile provenance",
+                case.name
+            );
+        }
+        engine.call_idx(func, &mut mem, &args).expect("run");
+        outs(&mem, &handles)
+    }
+
+    for case in cases() {
+        if !matches!(case.name, "gemm" | "syr2k" | "trmm") {
+            continue;
+        }
+        let n = *case.sizes.last().unwrap();
+        let want = {
+            let mut mem = Memory::new();
+            let (args, handles) = (case.setup)(&mut mem, n);
+            (case.reference)(&mut mem, &args, n);
+            outs(&mem, &handles)
+        };
+        let cold = run_at(&case, n, 4, None);
+        let warm = run_at(&case, n, 4, Some(2));
+        if warm != want || cold != want || warm != cold {
+            fail_with_diff(
+                case.name,
+                format!(
+                    "warm-vs-cold respec divergence at n={n}: warm==oracle {}, \
+                     cold==oracle {}, warm==cold {}",
+                    warm == want,
+                    cold == want,
+                    warm == cold
+                ),
+            );
+        }
+    }
+}

@@ -1,0 +1,229 @@
+//! Compile-service properties (tentpole lockdown for the racing
+//! seed-portfolio P&R and incremental placement reuse):
+//!
+//!   PS1  portfolio determinism: a fixed `(base seed, K)` yields a
+//!        bit-identical winning `GridConfig`/placement across runs and
+//!        across worker-thread counts (the race is decided on
+//!        deterministic step counts, not wall time);
+//!   PS2  warm-start soundness: a tier-N placement seeding the tier-N+1
+//!        search yields an artifact that evaluates bit-identically to the
+//!        cold-compiled one on random inputs;
+//!   PS3  a poisoned warm seed (incompatible grid / bogus node ids) falls
+//!        back to a cold search instead of erroring;
+//!   PS4  background service: jobs land with the same deterministic
+//!        winner a foreground race produces, and failed jobs surface as
+//!        errors rather than hanging.
+
+use tlo::analysis::scop::analyze_function;
+use tlo::dfe::grid::{CellCoord, Grid};
+use tlo::dfg::extract::extract;
+use tlo::par::{
+    derive_seed, place_and_route_portfolio, place_and_route_seeded, CompileJob,
+    CompileService, LapOutcome, ParParams, ParSeed, PortfolioParams,
+};
+use tlo::util::prng::Rng;
+use tlo::workloads::polybench;
+use tlo::workloads::video::conv_func;
+
+/// The §IV-C conv DFG (17 in / 1 out / 16 calc) at unroll `u`.
+fn conv_dfg(u: usize) -> tlo::dfg::graph::Dfg {
+    let f = conv_func();
+    let an = analyze_function(&f);
+    extract(&f, &an.scops[0], u).expect("conv extracts").dfg
+}
+
+fn gemm_dfg(u: usize) -> tlo::dfg::graph::Dfg {
+    let f = polybench::gemm();
+    let an = analyze_function(&f);
+    extract(&f, &an.scops[0], u).expect("gemm extracts").dfg
+}
+
+/// Differential eval: the routed image must agree with the DFG semantics
+/// on random inputs.
+fn assert_image_matches(dfg: &tlo::dfg::graph::Dfg, image: &tlo::dfe::image::ExecImage, seed: u64) {
+    let n_in = dfg.max_input_index().map(|m| m + 1).unwrap_or(0);
+    let mut rng = Rng::new(seed);
+    for trial in 0..16 {
+        let inputs: Vec<i32> =
+            (0..n_in).map(|_| rng.range_i64(-1000, 1000) as i32).collect();
+        let want = dfg.eval(&inputs).expect("dfg eval");
+        assert_eq!(image.eval_scalar(&inputs), want, "trial {trial}");
+    }
+}
+
+#[test]
+fn ps1_portfolio_winner_bit_identical_across_runs_and_thread_counts() {
+    let dfg = conv_dfg(1);
+    let grid = Grid::new(8, 8);
+    let params = ParParams::default();
+    for spec_key in [0xAAAAu64, 0x1234_5678, 9] {
+        let run = |threads: usize| {
+            place_and_route_portfolio(
+                &dfg,
+                grid,
+                &params,
+                &ParSeed::Cold,
+                &PortfolioParams { k: 4, base_seed: spec_key, threads },
+            )
+            .expect("conv routes on 8x8")
+        };
+        let a = run(4);
+        let b = run(4);
+        let c = run(1); // sequential: scheduling-independence witness
+        assert_eq!(a.entrant, b.entrant, "key {spec_key:#x}");
+        assert_eq!(a.result.config, b.result.config, "key {spec_key:#x}");
+        assert_eq!(a.result.placement, b.result.placement, "key {spec_key:#x}");
+        assert_eq!(a.entrant, c.entrant, "key {spec_key:#x}: threads changed the winner");
+        assert_eq!(a.result.config, c.result.config, "key {spec_key:#x}");
+        assert_eq!(a.seed, derive_seed(spec_key, a.entrant));
+        assert_image_matches(&dfg, &a.result.image, spec_key ^ 1);
+        // Every lap is accounted for, and the winner's lap is Routed.
+        assert_eq!(a.laps.len(), 4);
+        assert_eq!(a.laps[a.entrant].outcome, LapOutcome::Routed);
+        assert_eq!(a.laps[a.entrant].steps, a.result.stats.search_steps());
+    }
+}
+
+#[test]
+fn ps2_warm_started_tier_artifact_matches_cold_compiled() {
+    // Tier N (u=2) cold, then tier N+1 (u=4) warm-started from N's
+    // placement: the warm artifact must evaluate identically to a cold
+    // u=4 compile (placement is a hint; semantics come from the DFG).
+    let grid = Grid::new(12, 12);
+    let params = ParParams::default();
+    let tier2 = place_and_route_portfolio(
+        &gemm_dfg(2),
+        grid,
+        &params,
+        &ParSeed::Cold,
+        &PortfolioParams { k: 2, base_seed: 21, threads: 2 },
+    )
+    .expect("gemm u2 routes");
+    let dfg4 = gemm_dfg(4);
+    let warm = place_and_route_portfolio(
+        &dfg4,
+        grid,
+        &params,
+        &ParSeed::Warm(tier2.result.placement.clone()),
+        &PortfolioParams { k: 2, base_seed: 42, threads: 2 },
+    )
+    .expect("warm u4 routes");
+    let cold = place_and_route_portfolio(
+        &dfg4,
+        grid,
+        &params,
+        &ParSeed::Cold,
+        &PortfolioParams { k: 2, base_seed: 42, threads: 2 },
+    )
+    .expect("cold u4 routes");
+    assert_image_matches(&dfg4, &warm.result.image, 7);
+    assert_image_matches(&dfg4, &cold.result.image, 7);
+    // Same semantics regardless of how the search was seeded.
+    let n_in = dfg4.max_input_index().unwrap() + 1;
+    let mut rng = Rng::new(99);
+    for _ in 0..8 {
+        let inputs: Vec<i32> =
+            (0..n_in).map(|_| rng.range_i64(-500, 500) as i32).collect();
+        assert_eq!(
+            warm.result.image.eval_scalar(&inputs),
+            cold.result.image.eval_scalar(&inputs),
+            "warm and cold artifacts diverge semantically"
+        );
+    }
+}
+
+#[test]
+fn ps3_poisoned_warm_seeds_fall_back_to_cold() {
+    let dfg = conv_dfg(1);
+    let params = ParParams::default();
+    // (a) A placement carrying cells of a larger overlay (e.g. (11,11)
+    // from a 12x12 artifact) used on an 8x8 grid: off-grid cells poison
+    // the seed wholesale and the search runs cold.
+    let off_grid: Vec<(usize, CellCoord)> = vec![(0, CellCoord::new(11, 11))];
+    let poisoned = place_and_route_seeded(
+        &dfg,
+        Grid::new(8, 8),
+        &params,
+        &mut Rng::new(3),
+        &ParSeed::Warm(off_grid),
+        None,
+    )
+    .expect("poisoned seed must fall back to cold");
+    assert_eq!(poisoned.stats.warm_placed, 0);
+    assert_image_matches(&dfg, &poisoned.image, 17);
+    // (b) Bogus node ids (beyond the DFG) are skipped pair by pair.
+    let bogus = ParSeed::Warm(vec![(9999, CellCoord::new(0, 0)), (10_000, CellCoord::new(1, 1))]);
+    let res = place_and_route_seeded(
+        &dfg,
+        Grid::new(8, 8),
+        &params,
+        &mut Rng::new(4),
+        &bogus,
+        None,
+    )
+    .expect("bogus node ids must be skipped, not fatal");
+    assert_eq!(res.stats.warm_placed, 0);
+    assert_image_matches(&dfg, &res.image, 18);
+}
+
+#[test]
+fn ps4_service_jobs_land_with_the_foreground_winner() {
+    let dfg = conv_dfg(1);
+    let grid = Grid::new(8, 8);
+    let mut svc = CompileService::new(3);
+    let keys = [0x100u64, 0x200, 0x300, 0x400];
+    for &key in &keys {
+        svc.submit(CompileJob {
+            key,
+            base_seed: key,
+            dfg: dfg.clone(),
+            grid,
+            params: ParParams::default(),
+            portfolio: 3,
+            warm: ParSeed::Cold,
+        });
+    }
+    let mut done = Vec::new();
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(60);
+    while done.len() < keys.len() && std::time::Instant::now() < deadline {
+        if let Some(d) = svc.recv_timeout(std::time::Duration::from_millis(250)) {
+            done.push(d);
+        }
+    }
+    assert_eq!(done.len(), keys.len(), "every job must land");
+    for d in done {
+        let o = d.outcome.expect("conv routes");
+        let fg = place_and_route_portfolio(
+            &dfg,
+            grid,
+            &ParParams::default(),
+            &ParSeed::Cold,
+            &PortfolioParams { k: 3, base_seed: d.key, threads: 1 },
+        )
+        .unwrap();
+        assert_eq!(o.result.config, fg.result.config, "key {:#x}", d.key);
+        assert_eq!(o.entrant, fg.entrant, "key {:#x}", d.key);
+        assert_image_matches(&dfg, &o.result.image, d.key);
+    }
+}
+
+#[test]
+fn ps4b_unroutable_jobs_surface_errors_not_hangs() {
+    // 16 calc nodes can never fit a 2x2 grid: the job must come back as
+    // an error (TooLarge) instead of hanging or panicking the worker.
+    let dfg = conv_dfg(1);
+    let mut svc = CompileService::new(1);
+    svc.submit(CompileJob {
+        key: 1,
+        base_seed: 1,
+        dfg,
+        grid: Grid::new(2, 2),
+        params: ParParams::default(),
+        portfolio: 2,
+        warm: ParSeed::Cold,
+    });
+    let d = svc
+        .recv_timeout(std::time::Duration::from_secs(30))
+        .expect("failure must still complete the job");
+    assert!(d.outcome.is_err(), "2x2 cannot hold 16 calc nodes");
+}

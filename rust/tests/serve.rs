@@ -13,7 +13,11 @@
 //!       ≡ the interpreter, bit-for-bit, across ≥3 tenants with adaptive
 //!       respecialization on — the transport mode re-times transfers but
 //!       must never change numerics, and async must not be slower than
-//!       sync on the transfer-bound tagged link.
+//!       sync on the transfer-bound tagged link;
+//!   S7  with the compile service on, async + adapt serve output stays
+//!       bit-identical to the synchronous-compile path, the respec trace
+//!       still shows tier transitions, and no tenant ever blocks inside
+//!       place & route after admission (compile_stall_secs == 0).
 
 use tlo::dfe::grid::Grid;
 use tlo::jit::engine::Engine;
@@ -230,6 +234,81 @@ fn s6_async_transport_matches_sync_and_interpreter_with_adapt_on() {
         rep_async.makespan,
         rep_sync.makespan
     );
+}
+
+#[test]
+fn s7_compile_service_serves_without_par_stalls_and_stays_bit_identical() {
+    use tlo::offload::adapt::AdaptParams;
+
+    let requests = 6u64;
+    let specs = polybench_mix(4);
+    let adapt = Some(AdaptParams {
+        decision_window: 2,
+        candidate_unrolls: vec![4],
+        min_lanes: 4,
+        ..Default::default()
+    });
+
+    // Synchronous-compile reference: a respecialization miss stalls the
+    // serving path inside place & route (counted per tenant).
+    let mut sync_server = OffloadServer::new(
+        ServeParams { shards: 2, adapt: adapt.clone(), ..Default::default() },
+        specs.clone(),
+    )
+    .expect("sync-compile server");
+    let sync_report = sync_server.run(requests);
+
+    // Compile service on: 4-seed portfolio racing on 2 background
+    // threads; respecs submit jobs and keep serving the current tier.
+    let mut svc_server = OffloadServer::new(
+        ServeParams {
+            shards: 2,
+            adapt,
+            portfolio: 4,
+            compile_threads: 2,
+            ..Default::default()
+        },
+        specs.clone(),
+    )
+    .expect("compile-service server");
+    // Phase 1: decision windows fire and submit background jobs.
+    svc_server.run(requests / 2);
+    // Round-boundary barrier (test-only determinism; `run` itself pumps
+    // non-blockingly every round): let the in-flight artifacts land...
+    svc_server.drain_compiles();
+    // Phase 2: ...so the next decision windows swap them in as cache hits.
+    let svc_report = svc_server.run(requests - requests / 2);
+
+    // The tentpole invariant: no tenant invocation ever blocked on P&R.
+    for t in &svc_report.tenants {
+        assert_eq!(
+            t.compile_stall_secs, 0.0,
+            "tenant {} stalled inside place & route with the service on",
+            t.name
+        );
+    }
+    assert_eq!(svc_report.compile_stall_secs, 0.0);
+    assert_eq!(svc_report.pending_compiles, 0, "drained service must be empty");
+    // The respec trace still shows live tier transitions — compiles were
+    // hidden, not skipped.
+    let svc_respecs: u64 = svc_report.tenants.iter().map(|t| t.respecializations).sum();
+    assert!(svc_respecs >= 1, "the service must still deliver respecializations");
+    // Output is bit-identical to the synchronous-compile path and the
+    // interpreter — the service re-times compilation, never numerics.
+    for (i, spec) in specs.iter().enumerate() {
+        let interp = interpreter_outputs(spec, requests);
+        assert_eq!(sync_server.tenant_outputs(i), interp, "sync tenant {}", spec.name);
+        assert_eq!(svc_server.tenant_outputs(i), interp, "service tenant {}", spec.name);
+    }
+    // The invariant is not vacuous: the synchronous reference paid a real
+    // stall for the same respecializations.
+    let sync_respecs: u64 = sync_report.tenants.iter().map(|t| t.respecializations).sum();
+    if sync_respecs > 0 {
+        assert!(
+            sync_report.compile_stall_secs > 0.0,
+            "synchronous respecialization must stall inside P&R"
+        );
+    }
 }
 
 #[test]
