@@ -20,6 +20,13 @@
 //! compute)` bound. Outputs are bit-identical by construction
 //! (`tests/serve.rs` S6); this bench asserts the speedup.
 //!
+//! What tiles (A9): a tenant whose DFG exceeds its shard region — pinned
+//! to the interpreter before tiled execution plans — now serves as a
+//! multi-pass plan on a 6x6 overlay. The bench asserts it genuinely left
+//! the interpreter (report shows > 1 tiles) and that the co-tenant mix's
+//! throughput degrades boundedly (>= 0.15x the no-oversized baseline)
+//! rather than collapsing under the plan's per-tile reconfigurations.
+//!
 //! Acceptance: aggregate throughput must scale > 1.5x from 1 shard to 4,
 //! and the async transport must serve >= 1.3x the sync element
 //! throughput on the PolyBench mix (>= 1.05x in the quick smoke mode,
@@ -29,7 +36,9 @@
 //! sections as JSON so the perf trajectory is tracked across PRs.
 
 use tlo::dfe::grid::Grid;
-use tlo::offload::server::{polybench_mix, OffloadServer, ServeParams, ServeReport};
+use tlo::offload::server::{
+    gemm_spec, polybench_mix, OffloadServer, ServeParams, ServeReport, TenantSpec,
+};
 use tlo::transport::{PcieParams, TransportMode};
 use tlo::util::fmt_duration;
 
@@ -152,6 +161,73 @@ fn main() {
     );
     println!("PASS: overlapped transport serves {speedup:.2}x the sync element throughput");
 
+    // ---- A9: an oversized tenant on a tiled plan vs the co-tenant mix ----
+    // gemm at unroll 8 does not fit a 3x6 shard region of a 6x6 overlay;
+    // before tiled plans it was rejected (TooLarge) and pinned to the
+    // interpreter — contributing nothing to the fabric makespan. Now it
+    // serves as a multi-pass plan, so the co-tenants pay for sharing the
+    // link and rounds with its per-tile reconfigurations. The bench
+    // asserts the tenant really left the interpreter and that co-tenant
+    // throughput is bounded-degraded, not collapsed (the floor is lenient
+    // by design: multi-pass reconfiguration is genuinely expensive at
+    // these toy batch sizes, and rollback economics — disabled here —
+    // would otherwise arbitrate).
+    println!(
+        "\n== A9: oversized tenant served as a tiled plan (6x6 overlay, 2 shards, {requests} requests) =="
+    );
+    let small = Grid::new(6, 6);
+    let others = polybench_mix(3);
+    let run_small = |specs: Vec<TenantSpec>| {
+        let params = ServeParams {
+            shards: 2,
+            grid: small,
+            rollback_window: u64::MAX,
+            transport: TransportMode::async_default(),
+            pcie: PcieParams::default(),
+            ..Default::default()
+        };
+        let mut server = OffloadServer::new(params, specs).expect("server setup");
+        server.run(requests)
+    };
+    let baseline = run_small(others.clone());
+    let mut big = gemm_spec();
+    big.name = "gemm-big".into();
+    big.unroll = 8;
+    let mut specs = others.clone();
+    specs.push(big);
+    let with_big = run_small(specs);
+    let big_row = with_big
+        .tenants
+        .iter()
+        .find(|t| t.name == "gemm-big")
+        .expect("the oversized tenant is in the report");
+    assert!(
+        big_row.tiles > 1,
+        "gemm@u8 must leave the interpreter as a multi-tile plan, got {} tiles",
+        big_row.tiles
+    );
+    // Same co-tenant work either way; only the shared fabric got busier.
+    let cotenant_ratio =
+        baseline.makespan.as_secs_f64() / with_big.makespan.as_secs_f64().max(1e-12);
+    println!(
+        "  oversized tenant: {} tiles; co-tenant mix makespan {} -> {} \
+         (throughput ratio {cotenant_ratio:.2}x)",
+        big_row.tiles,
+        fmt_duration(baseline.makespan),
+        fmt_duration(with_big.makespan),
+    );
+    let floor = 0.15;
+    assert!(
+        cotenant_ratio >= floor,
+        "co-tenant throughput collapsed to {cotenant_ratio:.2}x (< {floor}x) when the \
+         oversized tenant joined"
+    );
+    println!(
+        "PASS: oversized tenant offloads as {} tiles; co-tenant throughput held at \
+         {cotenant_ratio:.2}x (floor {floor}x)",
+        big_row.tiles
+    );
+
     if let Ok(path) = std::env::var("TLO_BENCH_JSON") {
         let doc = format!(
             "{{\n  \"bench\": \"serve\",\n  \"mode\": \"{}\",\n  \
@@ -165,7 +241,14 @@ fn main() {
              \"sync_makespan_sec\": {:.6},\n    \
              \"async_makespan_sec\": {:.6},\n    \
              \"async_vs_sync_speedup\": {:.3},\n    \
-             \"threshold\": {}\n  }}\n}}\n",
+             \"threshold\": {}\n  }},\n  \"oversized\": {{\n    \
+             \"grid\": \"6x6\",\n    \"shards\": 2,\n    \
+             \"tenant\": \"gemm-big@u8\",\n    \
+             \"tiled_tiles_per_plan\": {},\n    \
+             \"baseline_makespan_sec\": {:.6},\n    \
+             \"with_oversized_makespan_sec\": {:.6},\n    \
+             \"cotenant_throughput_ratio\": {:.3},\n    \
+             \"floor\": {}\n  }}\n}}\n",
             if quick { "quick" } else { "full" },
             tenants,
             requests,
@@ -177,7 +260,12 @@ fn main() {
             sync.makespan.as_secs_f64(),
             pipe.makespan.as_secs_f64(),
             speedup,
-            threshold
+            threshold,
+            big_row.tiles,
+            baseline.makespan.as_secs_f64(),
+            with_big.makespan.as_secs_f64(),
+            cotenant_ratio,
+            floor
         );
         std::fs::write(&path, doc).expect("write TLO_BENCH_JSON");
         println!("wrote {path}");

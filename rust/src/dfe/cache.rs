@@ -15,6 +15,7 @@ use super::config::GridConfig;
 use super::exec::CompiledFabric;
 use super::grid::CellCoord;
 use super::image::ExecImage;
+use super::plan::ExecutionPlan;
 use crate::dfg::graph::{Dfg, NodeId, NodeKind};
 use crate::par::lasvegas::ParStats;
 
@@ -150,10 +151,25 @@ pub struct CacheStats {
     pub evictions: u64,
 }
 
-/// LRU cache of placed-and-routed configurations.
+/// LRU cache of placed-and-routed artifacts, in two keyed stores sharing
+/// one capacity, one LRU clock and one stats block:
+///
+/// * single-tile configurations ([`CachedConfig`], weight 1 — the PR-5
+///   semantics, bit-for-bit: a cache of only single-tile entries behaves
+///   exactly like the old single-store LRU);
+/// * tiled execution plans ([`ExecutionPlan`], weight = tile count — a
+///   6-tile plan occupies six capacity units, so it cannot squat in "one
+///   slot" and starve single-tile tenants).
+///
+/// Eviction is global-LRU by weight: an insert evicts least-recently
+/// used victims from *either* store until the incoming artifact fits.
+/// A plan wider than the whole capacity still lands (after evicting
+/// everything else) — refusing it would deadlock the oversized tenant —
+/// and is simply the first victim of the next insert.
 pub struct ConfigCache {
     capacity: usize,
     map: HashMap<u64, (CachedConfig, u64)>,
+    plans: HashMap<u64, (ExecutionPlan, u64)>,
     clock: u64,
     pub stats: CacheStats,
 }
@@ -161,15 +177,28 @@ pub struct ConfigCache {
 impl ConfigCache {
     pub fn new(capacity: usize) -> ConfigCache {
         assert!(capacity > 0);
-        ConfigCache { capacity, map: HashMap::new(), clock: 0, stats: CacheStats::default() }
+        ConfigCache {
+            capacity,
+            map: HashMap::new(),
+            plans: HashMap::new(),
+            clock: 0,
+            stats: CacheStats::default(),
+        }
     }
 
+    /// Resident artifacts (entries + plans), regardless of weight.
     pub fn len(&self) -> usize {
-        self.map.len()
+        self.map.len() + self.plans.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.map.is_empty()
+        self.map.is_empty() && self.plans.is_empty()
+    }
+
+    /// Occupied capacity units: one per single-tile entry, tile count per
+    /// plan. Bounded by `capacity` except for a lone over-wide plan.
+    pub fn total_weight(&self) -> usize {
+        self.map.len() + self.plans.values().map(|(p, _)| p.weight()).sum::<usize>()
     }
 
     /// Key presence without touching the LRU clock or the hit/miss stats
@@ -204,16 +233,90 @@ impl ConfigCache {
 
     pub fn insert(&mut self, key: u64, value: CachedConfig) {
         self.clock += 1;
-        if self.map.len() >= self.capacity && !self.map.contains_key(&key) {
-            // Evict the least recently used entry.
-            if let Some((&victim, _)) =
-                self.map.iter().min_by_key(|(_, (_, stamp))| *stamp)
-            {
-                self.map.remove(&victim);
-                self.stats.evictions += 1;
+        self.make_room(1, Residency::Entry(key));
+        self.map.insert(key, (value, self.clock));
+    }
+
+    /// Plan-store mirror of [`Self::contains`].
+    pub fn contains_plan(&self, key: u64) -> bool {
+        self.plans.contains_key(&key)
+    }
+
+    /// Plan-store mirror of [`Self::peek`].
+    pub fn peek_plan(&self, key: u64) -> Option<&ExecutionPlan> {
+        self.plans.get(&key).map(|(p, _)| p)
+    }
+
+    /// Plan-store mirror of [`Self::get`]: bumps the shared clock and the
+    /// shared hit/miss stats.
+    pub fn get_plan(&mut self, key: u64) -> Option<&ExecutionPlan> {
+        self.clock += 1;
+        let clock = self.clock;
+        match self.plans.get_mut(&key) {
+            Some((p, stamp)) => {
+                *stamp = clock;
+                self.stats.hits += 1;
+                Some(&*p)
+            }
+            None => {
+                self.stats.misses += 1;
+                None
             }
         }
-        self.map.insert(key, (value, self.clock));
+    }
+
+    /// Insert an assembled plan at its tile-count weight.
+    pub fn insert_plan(&mut self, key: u64, plan: ExecutionPlan) {
+        self.clock += 1;
+        self.make_room(plan.weight(), Residency::Plan(key));
+        self.plans.insert(key, (plan, self.clock));
+    }
+
+    /// Evict global-LRU victims (from either store) until `weight` more
+    /// units fit. The key being overwritten contributes neither resident
+    /// weight nor a victim candidate. Stops — possibly overweight — when
+    /// nothing else is left to evict.
+    fn make_room(&mut self, weight: usize, incoming: Residency) {
+        loop {
+            let replaced = match incoming {
+                Residency::Entry(k) => self.map.get(&k).map(|_| 1).unwrap_or(0),
+                Residency::Plan(k) => {
+                    self.plans.get(&k).map(|(p, _)| p.weight()).unwrap_or(0)
+                }
+            };
+            if self.total_weight() - replaced + weight <= self.capacity {
+                return;
+            }
+            let entry_victim = self
+                .map
+                .iter()
+                .filter(|(&k, _)| incoming != Residency::Entry(k))
+                .min_by_key(|(_, (_, stamp))| *stamp)
+                .map(|(&k, (_, stamp))| (*stamp, k));
+            let plan_victim = self
+                .plans
+                .iter()
+                .filter(|(&k, _)| incoming != Residency::Plan(k))
+                .min_by_key(|(_, (_, stamp))| *stamp)
+                .map(|(&k, (_, stamp))| (*stamp, k));
+            match (entry_victim, plan_victim) {
+                (Some((es, ek)), Some((ps, pk))) => {
+                    if es <= ps {
+                        self.map.remove(&ek);
+                    } else {
+                        self.plans.remove(&pk);
+                    }
+                }
+                (Some((_, ek)), None) => {
+                    self.map.remove(&ek);
+                }
+                (None, Some((_, pk))) => {
+                    self.plans.remove(&pk);
+                }
+                (None, None) => return,
+            }
+            self.stats.evictions += 1;
+        }
     }
 
     pub fn hit_rate(&self) -> f64 {
@@ -224,6 +327,13 @@ impl ConfigCache {
             self.stats.hits as f64 / total as f64
         }
     }
+}
+
+/// Which store (and key) an insert is about to occupy.
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum Residency {
+    Entry(u64),
+    Plan(u64),
 }
 
 #[cfg(test)]
@@ -353,6 +463,108 @@ mod tests {
         assert!(c.contains(1));
         assert!(!c.contains(9));
         assert_eq!(c.stats, CacheStats::default(), "peeks are not lookups");
+    }
+
+    fn dummy_plan(tiles: usize) -> ExecutionPlan {
+        let mut p = ExecutionPlan::single(dummy_entry(), 0);
+        while p.tiles.len() < tiles {
+            let mut t = p.tiles[0].clone();
+            t.key = p.tiles.len() as u64;
+            p.tiles.push(t);
+        }
+        p
+    }
+
+    #[test]
+    fn plan_weight_counts_per_tile_in_eviction() {
+        // Regression (ISSUE 6): a 3-tile plan must occupy three capacity
+        // units, not one slot — inserting it into a full cache of
+        // singles evicts as many LRU singles as its weight demands.
+        let mut c = ConfigCache::new(4);
+        for k in 1..=4 {
+            c.insert(k, dummy_entry());
+        }
+        assert_eq!(c.total_weight(), 4);
+        c.get(1); // 1 is now the most recent single
+        c.insert_plan(100, dummy_plan(3));
+        assert_eq!(c.stats.evictions, 3, "weight 3 forces three LRU evictions");
+        assert_eq!(c.total_weight(), 4);
+        assert!(c.contains(1), "the recently used single survives");
+        assert!(!c.contains(2) && !c.contains(3) && !c.contains(4));
+        assert!(c.contains_plan(100));
+    }
+
+    #[test]
+    fn plans_are_lru_victims_for_single_inserts() {
+        let mut c = ConfigCache::new(3);
+        c.insert_plan(100, dummy_plan(2));
+        c.insert(1, dummy_entry());
+        assert_eq!(c.total_weight(), 3);
+        // The plan is the LRU resident: one more single evicts it whole,
+        // freeing both of its units at once.
+        c.insert(2, dummy_entry());
+        assert!(!c.contains_plan(100));
+        assert_eq!(c.stats.evictions, 1);
+        assert_eq!(c.total_weight(), 2);
+        assert!(c.contains(1) && c.contains(2));
+    }
+
+    #[test]
+    fn plan_lookups_share_clock_and_stats() {
+        let mut c = ConfigCache::new(5);
+        assert!(c.get_plan(100).is_none());
+        c.insert_plan(100, dummy_plan(2));
+        assert!(c.get_plan(100).is_some());
+        c.insert(1, dummy_entry());
+        assert!(c.get(1).is_some());
+        assert_eq!(c.stats.hits, 2);
+        assert_eq!(c.stats.misses, 1);
+        assert!((c.hit_rate() - 2.0 / 3.0).abs() < 1e-12);
+        // A plan hit refreshes its stamp on the shared clock: the single
+        // becomes the LRU victim when space runs out.
+        c.get_plan(100);
+        c.insert_plan(200, dummy_plan(3));
+        assert!(c.contains_plan(100), "recently hit plan survives");
+        assert!(!c.contains(1), "stale single evicted first");
+    }
+
+    #[test]
+    fn contains_plan_and_peek_plan_are_silent() {
+        let mut c = ConfigCache::new(2);
+        c.insert_plan(100, dummy_plan(2));
+        assert!(c.contains_plan(100));
+        assert!(c.peek_plan(100).is_some());
+        assert!(c.peek_plan(9).is_none());
+        assert!(!c.contains_plan(9));
+        assert_eq!(c.stats, CacheStats::default(), "peeks are not lookups");
+    }
+
+    #[test]
+    fn over_wide_plan_lands_after_evicting_everything() {
+        let mut c = ConfigCache::new(2);
+        c.insert(1, dummy_entry());
+        c.insert(2, dummy_entry());
+        c.insert_plan(100, dummy_plan(5));
+        assert!(c.contains_plan(100), "refusing would deadlock the oversized tenant");
+        assert_eq!(c.stats.evictions, 2);
+        assert_eq!(c.total_weight(), 5, "temporarily overweight");
+        // ... and it is the first victim of the next insert.
+        c.insert(3, dummy_entry());
+        assert!(!c.contains_plan(100));
+        assert_eq!(c.total_weight(), 1);
+    }
+
+    #[test]
+    fn plan_overwrite_at_capacity_evicts_nothing() {
+        let mut c = ConfigCache::new(4);
+        c.insert_plan(100, dummy_plan(3));
+        c.insert(1, dummy_entry());
+        // Re-landing the same plan key (same weight) must refresh in
+        // place, exactly like the single-store overwrite semantics.
+        c.insert_plan(100, dummy_plan(3));
+        assert_eq!(c.stats.evictions, 0);
+        assert_eq!(c.total_weight(), 4);
+        assert!(c.contains(1) && c.contains_plan(100));
     }
 
     #[test]

@@ -10,6 +10,7 @@ pub mod exec;
 pub mod grid;
 pub mod image;
 pub mod opcodes;
+pub mod plan;
 pub mod resource;
 pub mod sim;
 
@@ -18,3 +19,4 @@ pub use exec::{execute, CompileError, CompiledFabric};
 pub use grid::{CellCoord, Dir, Grid, Port};
 pub use image::{ExecImage, ImageBuilder, ImageCell, ImageError};
 pub use opcodes::Op;
+pub use plan::{tile_key, ExecutionPlan, PlanTile};

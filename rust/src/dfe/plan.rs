@@ -1,0 +1,132 @@
+//! Plan-level artifacts: the cached unit of offload generalized from
+//! "one DFG → one [`CachedConfig`]" to "one DFG → an [`ExecutionPlan`]
+//! of one or more feed-forward tiles" (ROADMAP item 1).
+//!
+//! A plan is what actually loads onto a shard: tiles execute as a
+//! multi-pass schedule over the same grid, spilled intermediates
+//! round-tripping through host staging between passes
+//! ([`crate::transport::PlanTimeline`] models the overlap). The
+//! single-tile plan is the degenerate case and is *never* constructed on
+//! the legacy path — DFGs that fit the grid keep the exact PR-5
+//! `CachedConfig` flow so existing artifacts stay byte-identical.
+//!
+//! Caching is two-level, both stores inside the one [`super::cache::ConfigCache`]:
+//! the assembled plan is cached under the same spec/region key the
+//! single-tile artifact would use (weighted by tile count for LRU
+//! accounting), and each tile is *also* cached individually under
+//! [`tile_key`] so tiles warm-start independently — a respecialized plan
+//! reuses every tile whose cut DFG is unchanged, and the compile service
+//! races each tile's seed portfolio as its own job.
+
+use std::hash::{Hash, Hasher};
+
+use super::cache::CachedConfig;
+use crate::dfg::partition::{TileSink, TileSource};
+
+/// One routed tile of an execution plan: the cached artifact plus the
+/// typed mapping of its dense local streams onto external streams and
+/// spill slots.
+#[derive(Clone, Debug)]
+pub struct PlanTile {
+    pub cached: CachedConfig,
+    /// `sources[jj]` feeds the tile's local input stream `jj`.
+    pub sources: Vec<TileSource>,
+    /// `sinks[jj]` receives the tile's local output stream `jj`.
+    pub sinks: Vec<TileSink>,
+    /// The tile's own cache key ([`tile_key`]) — its warm-start identity
+    /// in the per-tile store and in the compile service.
+    pub key: u64,
+}
+
+/// A DFG's executable artifact: one or more feed-forward tiles executed
+/// in order as a multi-pass schedule over the shard grid.
+#[derive(Clone, Debug)]
+pub struct ExecutionPlan {
+    pub tiles: Vec<PlanTile>,
+    /// Host spill buffer slots (each written once by its producer tile,
+    /// read only by later tiles).
+    pub n_spills: usize,
+}
+
+impl ExecutionPlan {
+    /// The degenerate plan-of-one: an existing single-tile artifact
+    /// viewed as a plan (identity stream mapping, no spills). Used by
+    /// tests and the plan comparator; the install path keeps the legacy
+    /// single-tile flow.
+    pub fn single(cached: CachedConfig, key: u64) -> ExecutionPlan {
+        let sources = (0..cached.image.n_inputs).map(TileSource::External).collect();
+        let sinks = (0..cached.image.out_sel.len()).map(TileSink::External).collect();
+        ExecutionPlan { tiles: vec![PlanTile { cached, sources, sinks, key }], n_spills: 0 }
+    }
+
+    pub fn n_tiles(&self) -> usize {
+        self.tiles.len()
+    }
+
+    pub fn is_single(&self) -> bool {
+        self.tiles.len() == 1
+    }
+
+    /// Configuration words summed over all tiles (every pass reloads the
+    /// grid, so the full plan download pays all of them).
+    pub fn config_words(&self) -> u64 {
+        self.tiles.iter().map(|t| t.cached.config.config_words() as u64).sum()
+    }
+
+    /// Cache weight: capacity units the plan occupies in the shared LRU
+    /// (one per tile — a 6-tile plan must not squat in a single slot).
+    pub fn weight(&self) -> usize {
+        self.tiles.len().max(1)
+    }
+}
+
+/// Per-tile cache key: the plan's key combined with the tile's position
+/// and its cut DFG's structural hash. Tiles of the same plan never
+/// collide; identical cut DFGs at the same position of the same plan key
+/// (e.g. across serve tenants running the same oversized kernel) share
+/// an entry and warm-start independently of the other tiles.
+pub fn tile_key(plan_key: u64, idx: usize, tile_dfg: u64) -> u64 {
+    let mut h = std::collections::hash_map::DefaultHasher::new();
+    plan_key.hash(&mut h);
+    (idx as u64).hash(&mut h);
+    tile_dfg.hash(&mut h);
+    h.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dfe::config::fig2_config;
+
+    fn dummy_cached() -> CachedConfig {
+        let config = fig2_config();
+        let image = config.to_image().unwrap();
+        CachedConfig::new(config, image, "dfe_4x4".into())
+    }
+
+    #[test]
+    fn single_plan_is_the_identity_mapping() {
+        let c = dummy_cached();
+        let n_in = c.image.n_inputs;
+        let n_out = c.image.out_sel.len();
+        let p = ExecutionPlan::single(c, 42);
+        assert!(p.is_single());
+        assert_eq!(p.n_spills, 0);
+        assert_eq!(p.weight(), 1);
+        assert_eq!(p.tiles[0].key, 42);
+        assert_eq!(
+            p.tiles[0].sources,
+            (0..n_in).map(TileSource::External).collect::<Vec<_>>()
+        );
+        assert_eq!(p.tiles[0].sinks, (0..n_out).map(TileSink::External).collect::<Vec<_>>());
+        assert_eq!(p.config_words(), p.tiles[0].cached.config.config_words() as u64);
+    }
+
+    #[test]
+    fn tile_keys_are_deterministic_and_positional() {
+        assert_eq!(tile_key(7, 0, 99), tile_key(7, 0, 99));
+        assert_ne!(tile_key(7, 0, 99), tile_key(7, 1, 99), "position separates tiles");
+        assert_ne!(tile_key(7, 0, 99), tile_key(8, 0, 99), "plan identity separates");
+        assert_ne!(tile_key(7, 0, 99), tile_key(7, 0, 98), "cut DFG separates");
+    }
+}

@@ -1,5 +1,9 @@
 //! DFG extraction and manipulation (paper §III, Figs 2 & 4).
 pub mod extract;
 pub mod graph;
+pub mod partition;
 pub use extract::{extract, ExtractReject, OffloadDfg, OutMode, StreamIn, StreamOut};
 pub use graph::{Dfg, DfgError, DfgStats, Node, NodeId, NodeKind};
+pub use partition::{
+    needs_tiling, partition, PartitionError, TileBudget, TileDfg, TileSink, TileSource, TiledDfg,
+};

@@ -1,0 +1,477 @@
+//! Topological DFG partitioning: cut a DFG that is too big for the shard
+//! grid into an ordered sequence of *feed-forward tiles*, each small
+//! enough to place & route on its own, executed as a multi-pass schedule
+//! over the same fabric (ROADMAP item 1; the automatic-tiling pattern of
+//! the overlay literature applied to execution plans instead of
+//! bitstreams).
+//!
+//! Invariants (the tiled conformance suite and `exec_fuzz` enforce them):
+//!
+//! * **Feed-forward**: tiles are consecutive chunks of the deterministic
+//!   topological calc order, so every edge crosses tile boundaries
+//!   forwards only — tile `t` never reads a value produced by tile
+//!   `t' > t`. Cut edges become typed inter-tile *spill* streams
+//!   ([`TileSource::Spill`]/[`TileSink::Spill`]) that round-trip through
+//!   host staging between passes.
+//! * **Budgeted**: each tile's calc count stays under a utilization
+//!   headroom of the cell budget (a tile at 100% grid utilization would
+//!   starve the Las-Vegas router of placement freedom) and its distinct
+//!   input streams stay under an IO headroom of the grid perimeter.
+//! * **Deterministic**: the same DFG under the same budget always yields
+//!   the same tiling — tile boundaries, spill slot numbers, and per-tile
+//!   local index assignments are all derived from the topological order,
+//!   never from hash-map iteration. Plan cache keys depend on this.
+//! * **Value-preserving**: constants are replicated into every tile that
+//!   uses them; external input streams keep their original indices;
+//!   [`TiledDfg::eval`] is bit-identical to [`Dfg::eval`] on the uncut
+//!   graph.
+
+use std::collections::HashMap;
+
+use crate::dfe::grid::Grid;
+use crate::dfg::graph::{Dfg, DfgError, NodeId, NodeKind};
+
+/// Per-tile resource budget, derived from the routing grid.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct TileBudget {
+    /// Hard cell capacity (one calc node per cell).
+    pub cells: usize,
+    /// Grid perimeter IO ports (bounds distinct streams per tile).
+    pub io: usize,
+}
+
+impl TileBudget {
+    pub fn for_grid(grid: Grid) -> TileBudget {
+        TileBudget { cells: grid.n_cells(), io: 2 * (grid.rows + grid.cols) }
+    }
+
+    /// Calc nodes per tile the partitioner actually targets: a third of
+    /// the cell budget, so every tile routes in the same utilization
+    /// regime the single-tile paths already exercise.
+    pub fn eff_cells(&self) -> usize {
+        (self.cells / 3).max(1)
+    }
+
+    /// Distinct input streams per tile the partitioner allows: two
+    /// thirds of the perimeter (the router still needs output ports).
+    pub fn eff_io(&self) -> usize {
+        (self.io * 2 / 3).max(2)
+    }
+}
+
+/// Where a tile's local input stream `jj` reads from.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum TileSource {
+    /// The original DFG's external input stream `j`.
+    External(usize),
+    /// Spill slot `k`: an intermediate produced by an earlier tile.
+    Spill(usize),
+}
+
+/// Where a tile's local output stream `jj` writes to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum TileSink {
+    /// The original DFG's external output stream `j`.
+    External(usize),
+    /// Spill slot `k`, consumed by a later tile.
+    Spill(usize),
+}
+
+/// One tile: a self-contained routable DFG plus the typed mapping of its
+/// dense local input/output indices onto external streams and spill
+/// slots.
+#[derive(Clone, Debug)]
+pub struct TileDfg {
+    pub dfg: Dfg,
+    /// `sources[jj]` feeds the tile's local `Input(jj)`.
+    pub sources: Vec<TileSource>,
+    /// `sinks[jj]` receives the tile's local `Output(jj)`.
+    pub sinks: Vec<TileSink>,
+}
+
+/// The partitioned DFG: tiles in execution order plus the spill-buffer
+/// count (slots are written exactly once, by their producer tile, and
+/// read only by later tiles).
+#[derive(Clone, Debug)]
+pub struct TiledDfg {
+    pub tiles: Vec<TileDfg>,
+    pub n_spills: usize,
+}
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum PartitionError {
+    Dfg(DfgError),
+    /// A single node's own distinct fan-in exceeds the per-tile input
+    /// budget: no consecutive cut can ever make it fit.
+    Infeasible { node: NodeId, needed: usize, io: usize },
+}
+
+impl std::fmt::Display for PartitionError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PartitionError::Dfg(e) => write!(f, "{e}"),
+            PartitionError::Infeasible { node, needed, io } => write!(
+                f,
+                "node {node} needs {needed} input streams but the tile budget allows {io}"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for PartitionError {}
+
+/// Whether `dfg` exceeds the single-tile capacity (the exact condition
+/// P&R would reject with `TooLarge`). Anything at or under capacity must
+/// keep the bit-identical single-tile path.
+pub fn needs_tiling(dfg: &Dfg, budget: TileBudget) -> bool {
+    dfg.stats().calc > budget.cells
+}
+
+/// Intern an original-node source into a tile under construction,
+/// returning its local node id. Constants replicate per tile; external
+/// inputs and spilled intermediates become dense local input streams.
+fn intern_src(
+    dfg: &Dfg,
+    spill_of: &HashMap<NodeId, usize>,
+    g: &mut Dfg,
+    local: &mut HashMap<NodeId, NodeId>,
+    consts: &mut HashMap<i32, NodeId>,
+    sources: &mut Vec<TileSource>,
+    s: NodeId,
+) -> NodeId {
+    if let Some(&l) = local.get(&s) {
+        return l;
+    }
+    let l = match dfg.nodes[s].kind {
+        NodeKind::Const(v) => {
+            if let Some(&l) = consts.get(&v) {
+                l
+            } else {
+                let l = g.constant(v);
+                consts.insert(v, l);
+                l
+            }
+        }
+        NodeKind::Input(j) => {
+            let jj = sources.len();
+            sources.push(TileSource::External(j));
+            g.input(jj)
+        }
+        NodeKind::Calc(_) => {
+            // A calc source outside this tile is, by the feed-forward
+            // invariant, in an earlier tile and therefore spilled.
+            let slot = spill_of[&s];
+            let jj = sources.len();
+            sources.push(TileSource::Spill(slot));
+            g.input(jj)
+        }
+        NodeKind::Output(_) => unreachable!("outputs are never sources"),
+    };
+    local.insert(s, l);
+    l
+}
+
+/// Distinct non-constant sources of `id` (the input streams it alone
+/// would demand).
+fn distinct_srcs(dfg: &Dfg, id: NodeId) -> Vec<NodeId> {
+    let mut out = Vec::new();
+    for &s in &dfg.nodes[id].srcs {
+        if !matches!(dfg.nodes[s].kind, NodeKind::Const(_)) && !out.contains(&s) {
+            out.push(s);
+        }
+    }
+    out
+}
+
+/// Cut `dfg` into feed-forward tiles under `budget`.
+///
+/// Tiles are consecutive, balanced chunks of the deterministic
+/// topological calc order: the minimal tile count at the utilization
+/// headroom, then sizes evened out so the last tile is not a straggler.
+/// A secondary IO guard cuts early when a tile's distinct input streams
+/// (externals + spills + cross-tile intermediates) would exceed the
+/// perimeter headroom. Output nodes ride with their producer tile
+/// (pass-through outputs of inputs/constants land in tile 0).
+pub fn partition(dfg: &Dfg, budget: TileBudget) -> Result<TiledDfg, PartitionError> {
+    let calcs = dfg.calc_order().map_err(PartitionError::Dfg)?;
+    let total = calcs.len();
+    let eff = budget.eff_cells();
+    let io_lim = budget.eff_io();
+    for &id in &calcs {
+        let need = distinct_srcs(dfg, id).len();
+        if need > io_lim {
+            return Err(PartitionError::Infeasible { node: id, needed: need, io: io_lim });
+        }
+    }
+    let k = ((total + eff - 1) / eff).max(1);
+    let target = ((total + k - 1) / k).max(1);
+
+    // ---- assign calcs to consecutive tiles ----
+    let mut tile_of = vec![usize::MAX; dfg.nodes.len()];
+    let mut cur = 0usize;
+    let mut cur_len = 0usize;
+    // Distinct out-of-tile sources of the current tile (membership only —
+    // never iterated, so determinism is unaffected).
+    let mut cur_srcs: std::collections::HashSet<NodeId> = std::collections::HashSet::new();
+    for &id in &calcs {
+        let mut fresh: Vec<NodeId> = distinct_srcs(dfg, id)
+            .into_iter()
+            .filter(|s| tile_of[*s] != cur && !cur_srcs.contains(s))
+            .collect();
+        if cur_len > 0 && (cur_len >= target || cur_srcs.len() + fresh.len() > io_lim) {
+            cur += 1;
+            cur_len = 0;
+            cur_srcs.clear();
+            fresh = distinct_srcs(dfg, id);
+        }
+        tile_of[id] = cur;
+        cur_len += 1;
+        cur_srcs.extend(fresh);
+    }
+    let n_tiles = if total == 0 { 1 } else { cur + 1 };
+
+    // Outputs ride with their producer (pass-throughs land in tile 0).
+    for (id, node) in dfg.nodes.iter().enumerate() {
+        if matches!(node.kind, NodeKind::Output(_)) {
+            let s = node.srcs[0];
+            tile_of[id] =
+                if matches!(dfg.nodes[s].kind, NodeKind::Calc(_)) { tile_of[s] } else { 0 };
+        }
+    }
+
+    // ---- spill slots, in producer topological order ----
+    let mut spill_of: HashMap<NodeId, usize> = HashMap::new();
+    let mut n_spills = 0usize;
+    for &id in &calcs {
+        let t = tile_of[id];
+        let consumed_later = dfg
+            .nodes
+            .iter()
+            .enumerate()
+            .any(|(c, n)| n.srcs.contains(&id) && tile_of[c] != usize::MAX && tile_of[c] > t);
+        if consumed_later {
+            spill_of.insert(id, n_spills);
+            n_spills += 1;
+        }
+    }
+
+    // ---- materialize per-tile DFGs ----
+    let mut tiles = Vec::with_capacity(n_tiles);
+    for t in 0..n_tiles {
+        let mut g = Dfg::new();
+        let mut local: HashMap<NodeId, NodeId> = HashMap::new();
+        let mut consts: HashMap<i32, NodeId> = HashMap::new();
+        let mut sources: Vec<TileSource> = Vec::new();
+        let mut sinks: Vec<TileSink> = Vec::new();
+        for &id in &calcs {
+            if tile_of[id] != t {
+                continue;
+            }
+            let srcs: Vec<NodeId> = dfg.nodes[id]
+                .srcs
+                .clone()
+                .into_iter()
+                .map(|s| {
+                    intern_src(dfg, &spill_of, &mut g, &mut local, &mut consts, &mut sources, s)
+                })
+                .collect();
+            let l = g.add(dfg.nodes[id].kind.clone(), srcs);
+            local.insert(id, l);
+        }
+        // Spill outputs first, slot-ascending; then external outputs in
+        // original output-index order. Both orders are deterministic.
+        let mut spilled: Vec<(usize, NodeId)> = calcs
+            .iter()
+            .filter(|&&id| tile_of[id] == t)
+            .filter_map(|&id| spill_of.get(&id).map(|&slot| (slot, id)))
+            .collect();
+        spilled.sort_unstable();
+        for (slot, id) in spilled {
+            let jj = sinks.len();
+            g.output(jj, local[&id]);
+            sinks.push(TileSink::Spill(slot));
+        }
+        let mut exts: Vec<(usize, NodeId)> = dfg
+            .nodes
+            .iter()
+            .enumerate()
+            .filter(|&(oid, n)| matches!(n.kind, NodeKind::Output(_)) && tile_of[oid] == t)
+            .map(|(_, n)| {
+                let NodeKind::Output(j) = n.kind else { unreachable!() };
+                (j, n.srcs[0])
+            })
+            .collect();
+        exts.sort_unstable();
+        for (j, src) in exts {
+            let l = intern_src(dfg, &spill_of, &mut g, &mut local, &mut consts, &mut sources, src);
+            let jj = sinks.len();
+            g.output(jj, l);
+            sinks.push(TileSink::External(j));
+        }
+        debug_assert!(g.validate().is_ok());
+        tiles.push(TileDfg { dfg: g, sources, sinks });
+    }
+    Ok(TiledDfg { tiles, n_spills })
+}
+
+impl TiledDfg {
+    pub fn n_tiles(&self) -> usize {
+        self.tiles.len()
+    }
+
+    /// Reference evaluation of one stream element through the multi-pass
+    /// schedule. Must be bit-identical to `Dfg::eval` on the uncut graph
+    /// (the partition tests and `exec_fuzz` enforce it).
+    pub fn eval(&self, inputs: &[i32]) -> Result<Vec<i32>, DfgError> {
+        let mut spills = vec![0i32; self.n_spills];
+        let mut ext: Vec<(usize, i32)> = Vec::new();
+        let mut n_out = 0usize;
+        for tile in &self.tiles {
+            let local_in: Vec<i32> = tile
+                .sources
+                .iter()
+                .map(|s| match *s {
+                    TileSource::External(j) => inputs.get(j).copied().unwrap_or(0),
+                    TileSource::Spill(k) => spills[k],
+                })
+                .collect();
+            let out = tile.dfg.eval(&local_in)?;
+            for (jj, sink) in tile.sinks.iter().enumerate() {
+                match *sink {
+                    TileSink::Spill(k) => spills[k] = out[jj],
+                    TileSink::External(j) => {
+                        n_out = n_out.max(j + 1);
+                        ext.push((j, out[jj]));
+                    }
+                }
+            }
+        }
+        let mut res = vec![0i32; n_out];
+        for (j, v) in ext {
+            res[j] = v;
+        }
+        Ok(res)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dfe::opcodes::Op;
+    use crate::dfg::graph::{fig2_dfg, listing1_dfg};
+
+    /// A wider synthetic graph: a reduction tree over 8 products with a
+    /// MUX at the root (17 calcs, 17 inputs).
+    fn big_dfg() -> Dfg {
+        let mut g = Dfg::new();
+        let mut lvl: Vec<NodeId> = (0..8)
+            .map(|i| {
+                let a = g.input(2 * i);
+                let b = g.input(2 * i + 1);
+                g.calc(Op::Mul, a, b)
+            })
+            .collect();
+        while lvl.len() > 1 {
+            lvl = lvl.chunks(2).map(|p| g.calc(Op::Add, p[0], p[1])).collect();
+        }
+        let sel = g.input(16);
+        let c7 = g.constant(7);
+        let alt = g.calc(Op::Sub, lvl[0], c7);
+        let r = g.mux(lvl[0], alt, sel);
+        g.output(0, r);
+        g.output(1, alt);
+        g
+    }
+
+    fn check_equiv(dfg: &Dfg, budget: TileBudget, inputs: &[i32]) {
+        let tiled = partition(dfg, budget).expect("partition");
+        for t in &tiled.tiles {
+            t.dfg.validate().expect("tile validates");
+            assert!(t.dfg.stats().calc <= budget.cells, "tile busts cell budget");
+            assert!(t.sources.len() <= budget.eff_io(), "tile busts io budget");
+        }
+        assert_eq!(tiled.eval(inputs).unwrap(), dfg.eval(inputs).unwrap());
+    }
+
+    #[test]
+    fn fig2_tiles_one_calc_per_tile() {
+        let g = fig2_dfg();
+        let b = TileBudget { cells: 1, io: 8 };
+        let tiled = partition(&g, b).unwrap();
+        assert_eq!(tiled.n_tiles(), 3, "3 calcs at 1 per tile");
+        assert_eq!(tiled.n_spills, 2, "mul and first add spill");
+        assert_eq!(tiled.eval(&[10, 5]).unwrap(), vec![26]);
+    }
+
+    #[test]
+    fn listing1_mux_survives_tiling() {
+        let g = listing1_dfg();
+        let b = TileBudget { cells: 6, io: 10 };
+        check_equiv(&g, b, &[10, 2]);
+        check_equiv(&g, b, &[2, 10]);
+        assert!(partition(&g, b).unwrap().n_tiles() > 1);
+    }
+
+    #[test]
+    fn under_capacity_stays_single_tile() {
+        let g = fig2_dfg();
+        let b = TileBudget::for_grid(Grid::new(4, 4));
+        assert!(!needs_tiling(&g, b));
+        let tiled = partition(&g, b).unwrap();
+        assert_eq!(tiled.n_tiles(), 1);
+        assert_eq!(tiled.n_spills, 0);
+        // Local input order follows first use in the topological calc
+        // order (the mul consumes B before the add consumes A).
+        assert_eq!(tiled.tiles[0].sources, vec![TileSource::External(1), TileSource::External(0)]);
+        assert_eq!(tiled.tiles[0].sinks, vec![TileSink::External(0)]);
+        assert_eq!(tiled.eval(&[10, 5]).unwrap(), vec![26]);
+    }
+
+    #[test]
+    fn big_graph_equivalent_under_many_budgets() {
+        let g = big_dfg();
+        for cells in [2usize, 3, 5, 8, 30] {
+            let b = TileBudget { cells, io: 12 };
+            check_equiv(&g, b, &[1, 2, 3, 4, 5, 6, 7, 8, 1, 1, 2, 2, 3, 3, 4, 4, 0]);
+            check_equiv(&g, b, &[9, -3, 0, 7, -1, 4, 2, 2, 5, 5, 6, 1, 0, 0, 8, -8, 1]);
+        }
+    }
+
+    #[test]
+    fn tiling_is_deterministic() {
+        let g = big_dfg();
+        let b = TileBudget { cells: 4, io: 10 };
+        let a = partition(&g, b).unwrap();
+        let c = partition(&g, b).unwrap();
+        assert_eq!(format!("{a:?}"), format!("{c:?}"), "same DFG + budget, same tiling");
+    }
+
+    #[test]
+    fn spill_slots_are_producer_ordered() {
+        let g = big_dfg();
+        let b = TileBudget { cells: 4, io: 10 };
+        let tiled = partition(&g, b).unwrap();
+        let mut next = 0usize;
+        for t in &tiled.tiles {
+            for s in &t.sinks {
+                if let TileSink::Spill(k) = s {
+                    assert_eq!(*k, next, "slots assigned in producer order");
+                    next += 1;
+                }
+            }
+        }
+        assert_eq!(next, tiled.n_spills);
+    }
+
+    #[test]
+    fn infeasible_fanin_reports_structured_error() {
+        let mut g = Dfg::new();
+        let a = g.input(0);
+        let b = g.input(1);
+        let s = g.input(2);
+        let m = g.mux(a, b, s);
+        g.output(0, m);
+        let err = partition(&g, TileBudget { cells: 1, io: 3 }).unwrap_err();
+        assert!(matches!(err, PartitionError::Infeasible { needed: 3, io: 2, .. }), "{err:?}");
+    }
+}

@@ -35,6 +35,13 @@
 //!
 //! Every transition is traced ([`TierTransition`]) so tests and the CLI
 //! can assert "the trace shows a tier transition".
+//!
+//! Tiers compose with tiled execution plans transparently: a tier whose
+//! re-extracted DFG exceeds the grid budget routes per tile through the
+//! same cache/service machinery (`tile_key` entries warm-start
+//! independently), and the swap decision compares the *whole* plan's
+//! `plan_invocation_time` against the incumbent — a multi-pass artifact
+//! is never flattered by timing its first tile alone.
 
 use std::collections::HashMap;
 

@@ -19,19 +19,28 @@ use std::time::{Duration, Instant};
 use crate::analysis::scop::analyze_function;
 use crate::dfe::cache::{dfg_key, spec_key, CachedConfig, ConfigCache, SpecSignature};
 use crate::dfe::grid::Grid;
+use crate::dfe::plan::{tile_key, ExecutionPlan, PlanTile};
 use crate::dfe::resource::{device_by_name, Device};
 use crate::dfe::sim::CycleSim;
 use crate::dfg::extract::{extract, OffloadDfg};
 use crate::dfg::graph::Dfg;
+use crate::dfg::partition::{needs_tiling, partition, PartitionError, TileBudget, TiledDfg};
 use crate::jit::engine::{Engine, FnProfile, Histogram};
 use crate::par::{
-    place_and_route_portfolio, CompileJob, CompileService, ParParams, ParSeed, ParStats,
-    PortfolioParams,
+    place_and_route_portfolio, CompileJob, CompileService, ParError, ParParams, ParSeed,
+    ParStats, PortfolioParams,
 };
 use crate::trace::{Phase, Tracer};
-use crate::transport::{chunk_plan, ChunkTimeline, PcieParams, PcieSim, TransportMode};
+use crate::transport::{
+    chunk_plan, ChunkTimeline, PcieParams, PcieSim, PlanTimeline, TransportMode,
+};
 
-use stub::{make_offload_hook, DfeBackend, StubReport, TimeModel};
+use stub::{make_offload_hook, make_plan_hook, DfeBackend, StubReport, TimeModel};
+
+/// Configuration-switch FSM epsilon charged per grid (re)load — at
+/// install, and per pass of a multi-tile plan (the serve layer's
+/// `reconfig_epsilon` parameter defaults to the same value).
+pub(crate) const RECONFIG_EPSILON: Duration = Duration::from_micros(600);
 
 /// Which sim-side numerics engine the stub runs when no PJRT runtime is
 /// attached. `Auto` is the production choice; the pinned variants exist
@@ -226,7 +235,7 @@ impl CompileSlot {
             threads: self.threads.max(1),
         };
         let outcome = place_and_route_portfolio(dfg, self.grid, &self.par, &warm, &pf)
-            .map_err(|e| RejectReason::Unroutable(e.to_string()))?;
+            .map_err(|e| reject_of(&e))?;
         let stats = outcome.result.stats;
         let c = self.entry(outcome);
         cache.insert(key, c.clone());
@@ -282,6 +291,11 @@ pub enum RejectReason {
     NoScop(String),
     Illegal(String),
     TooSmall { nodes: usize, min: usize },
+    /// The DFG exceeds the fabric capacity *and* cannot be tiled: a
+    /// structured resource verdict raised before place & route ever runs
+    /// (the admission layer distinguishes "would never fit" from a
+    /// routing search that merely failed).
+    TooLarge { needed: usize, budget: usize },
     Unroutable(String),
 }
 
@@ -293,8 +307,23 @@ impl std::fmt::Display for RejectReason {
             RejectReason::TooSmall { nodes, min } => {
                 write!(f, "DFG too small ({nodes} < {min} nodes)")
             }
+            RejectReason::TooLarge { needed, budget } => {
+                write!(f, "DFG too large ({needed} needed, budget {budget})")
+            }
             RejectReason::Unroutable(s) => write!(f, "unroutable: {s}"),
         }
+    }
+}
+
+/// Map a P&R failure to the structured reject: capacity verdicts keep
+/// their numbers ([`RejectReason::TooLarge`]), search failures stay
+/// stringly ([`RejectReason::Unroutable`]).
+fn reject_of(e: &ParError) -> RejectReason {
+    match e {
+        ParError::TooLarge { calc, cells } => {
+            RejectReason::TooLarge { needed: *calc, budget: *cells }
+        }
+        other => RejectReason::Unroutable(other.to_string()),
     }
 }
 
@@ -309,6 +338,9 @@ pub struct OffloadRecord {
     pub calc: usize,
     /// Extraction unroll factor of the installed artifact.
     pub unroll: usize,
+    /// Tiles in the installed execution plan (1 = the classic single-tile
+    /// artifact; > 1 = the DFG exceeded the grid and was partitioned).
+    pub tiles: usize,
     pub par_stats: Option<ParStats>,
     pub cache_hit: bool,
     /// On a cache hit: the winning search's stats carried by the entry —
@@ -350,7 +382,13 @@ pub struct ActiveOffload {
     pub unroll: usize,
     pub sig: SpecSignature,
     pub key: u64,
+    /// Representative artifact — the whole config for a single-tile
+    /// offload, tile 0 for a plan (its placement warm-starts the next
+    /// respecialization either way).
     pub cached: CachedConfig,
+    /// The full plan when the live artifact is multi-tile; `None` keeps
+    /// the bit-identical single-tile bookkeeping.
+    pub plan: Option<ExecutionPlan>,
 }
 
 /// Outcome of a respecialization attempt ([`OffloadManager::reconfigure`]).
@@ -553,6 +591,15 @@ impl OffloadManager {
             return Err(RejectReason::TooSmall { nodes, min: self.params.min_dfg_nodes });
         }
 
+        // ---- 1b. capacity check: a DFG bigger than the grid is cut into
+        //          a multi-tile execution plan instead of being rejected;
+        //          anything at or under capacity keeps the bit-identical
+        //          single-tile path below ----
+        let budget = TileBudget::for_grid(self.params.grid);
+        if needs_tiling(&off.dfg, budget) {
+            return self.install_tiled(engine, func, unroll, sig, off, single, pjrt, budget);
+        }
+
         // ---- 2. place & route, via the configuration cache (keyed by
         //         structure × specialization signature, so generic and
         //         specialized artifacts coexist). A live artifact's
@@ -619,39 +666,7 @@ impl OffloadManager {
         let jit_time = engine.jit_times.get(func as usize).copied().unwrap_or_default();
         tracer.borrow_mut().simulated(Phase::Jit, jit_time.max(Duration::from_micros(50)));
 
-        let profile = engine.profile(func);
-        let prev = self
-            .states
-            .get(&func)
-            .map(|s| {
-                let b = s.borrow();
-                (b.baseline_per_inv, b.pre_patch)
-            });
-        let baseline_per_inv = if profile.counters.cycles > 0 {
-            Duration::from_secs_f64(
-                self.params.sec_per_cycle * profile.counters.cycles as f64
-                    / profile.counters.invocations.max(1) as f64,
-            )
-        } else {
-            // Re-patching over a live hook (respecialization): the
-            // post-patch row carries no interpreter cycles, so the
-            // software baseline established at the original patch stays.
-            prev.map(|p| p.0).unwrap_or_default()
-        };
-        // Patch-time snapshot/reset: the monitor must only see post-patch
-        // data — pre-offload interpreter samples would pollute the
-        // post-offload wall-time averages. On a respecialization the row
-        // is hook-era (zero cycles), so the original software-era
-        // snapshot is carried forward instead.
-        let snap = engine.take_profile(func);
-        let pre_patch =
-            if snap.counters.cycles > 0 { snap } else { prev.map(|p| p.1).unwrap_or(snap) };
-        let state = Rc::new(RefCell::new(RuntimeState {
-            baseline_per_inv,
-            pre_patch,
-            ..Default::default()
-        }));
-        self.states.insert(func, state.clone());
+        let state = self.fresh_state(engine, func);
 
         let hook = make_offload_hook(
             off,
@@ -665,7 +680,7 @@ impl OffloadManager {
             Some(tracer.clone()),
         );
         engine.patch_hook(func, hook);
-        self.active.insert(func, ActiveOffload { unroll, sig, key, cached });
+        self.active.insert(func, ActiveOffload { unroll, sig, key, cached, plan: None });
 
         Ok(OffloadRecord {
             func,
@@ -675,6 +690,213 @@ impl OffloadManager {
             outputs: stats.outputs,
             calc: stats.calc,
             unroll,
+            tiles: 1,
+            par_stats,
+            cache_hit,
+            avoided,
+            config_time,
+            constants_time,
+        })
+    }
+
+    /// Patch-time monitoring state, shared by both installers.
+    ///
+    /// Snapshot/reset discipline: the monitor must only see post-patch
+    /// data — pre-offload interpreter samples would pollute the
+    /// post-offload wall-time averages. On a respecialization the profile
+    /// row is hook-era (zero cycles), so the software baseline and the
+    /// software-era snapshot established at the original patch carry
+    /// forward instead.
+    fn fresh_state(&mut self, engine: &mut Engine, func: u32) -> Rc<RefCell<RuntimeState>> {
+        let profile = engine.profile(func);
+        let prev = self.states.get(&func).map(|s| {
+            let b = s.borrow();
+            (b.baseline_per_inv, b.pre_patch)
+        });
+        let baseline_per_inv = if profile.counters.cycles > 0 {
+            Duration::from_secs_f64(
+                self.params.sec_per_cycle * profile.counters.cycles as f64
+                    / profile.counters.invocations.max(1) as f64,
+            )
+        } else {
+            prev.map(|p| p.0).unwrap_or_default()
+        };
+        let snap = engine.take_profile(func);
+        let pre_patch =
+            if snap.counters.cycles > 0 { snap } else { prev.map(|p| p.1).unwrap_or(snap) };
+        let state = Rc::new(RefCell::new(RuntimeState {
+            baseline_per_inv,
+            pre_patch,
+            ..Default::default()
+        }));
+        self.states.insert(func, state.clone());
+        state
+    }
+
+    /// Fetch-or-build the [`ExecutionPlan`] for `tiled` under `plan_key`:
+    /// a plan-store hit returns the assembled artifact whole; a miss
+    /// routes each tile through the per-tile store ([`tile_key`] — tiles
+    /// warm-start independently, and a respecialized plan reuses every
+    /// tile whose cut DFG is unchanged), chaining each tile's winning
+    /// placement as the next tile's warm seed, then caches the assembly
+    /// at its tile-count weight.
+    fn plan_cached(
+        &mut self,
+        tiled: &TiledDfg,
+        plan_key: u64,
+        count_stall: bool,
+    ) -> Result<(ExecutionPlan, bool, Option<ParStats>), RejectReason> {
+        if let Some(p) = self.cache.get_plan(plan_key) {
+            return Ok((p.clone(), true, None));
+        }
+        let mut tiles = Vec::with_capacity(tiled.tiles.len());
+        let mut par_stats: Option<ParStats> = None;
+        let mut warm = ParSeed::Cold;
+        for (idx, t) in tiled.tiles.iter().enumerate() {
+            let tk = tile_key(plan_key, idx, dfg_key(&t.dfg));
+            let (cached, _, stats) = self.route_cached(&t.dfg, tk, warm, count_stall)?;
+            if idx == 0 {
+                // Tile 0's search stats stand in for the whole plan in
+                // records (the dominant tile under balanced cuts).
+                par_stats = stats.or(cached.par_stats);
+            }
+            warm = if cached.placement.is_empty() {
+                ParSeed::Cold
+            } else {
+                ParSeed::Warm(cached.placement.clone())
+            };
+            tiles.push(PlanTile {
+                cached,
+                sources: t.sources.clone(),
+                sinks: t.sinks.clone(),
+                key: tk,
+            });
+        }
+        let plan = ExecutionPlan { tiles, n_spills: tiled.n_spills };
+        self.cache.insert_plan(plan_key, plan.clone());
+        Ok((plan, false, par_stats))
+    }
+
+    /// The multi-tile install: partition → per-tile cache/P&R → plan
+    /// assembly → config/constants download (summed over tiles) → plan
+    /// hook patch. Mirrors the single-tile phases; numerics flow through
+    /// [`stub::run_plan_with`].
+    #[allow(clippy::too_many_arguments)]
+    fn install_tiled(
+        &mut self,
+        engine: &mut Engine,
+        func: u32,
+        unroll: usize,
+        sig: SpecSignature,
+        off: OffloadDfg,
+        single: OffloadDfg,
+        pjrt: Option<&mut crate::runtime::PjrtRuntime>,
+        budget: TileBudget,
+    ) -> Result<OffloadRecord, RejectReason> {
+        // The PJRT AOT artifact is one fixed-capacity datapath; it cannot
+        // be time-multiplexed per pass, so oversized DFGs stay rejected
+        // on that backend.
+        if pjrt.is_some() {
+            return Err(RejectReason::Unroutable(
+                "multi-tile plans are sim-side only (PJRT artifact has fixed capacity)".into(),
+            ));
+        }
+        let tracer = self.tracer.clone();
+        let name = engine.func_name(func).to_string();
+        let stats = off.dfg.stats();
+        let nodes = off.dfg.len();
+        let tiled = partition(&off.dfg, budget).map_err(|e| match e {
+            PartitionError::Infeasible { needed, io, .. } => {
+                RejectReason::TooLarge { needed, budget: io }
+            }
+            PartitionError::Dfg(d) => RejectReason::Illegal(d.to_string()),
+        })?;
+        let key = spec_key(dfg_key(&off.dfg), sig);
+        let (plan, cache_hit, par_stats) = self.plan_cached(&tiled, key, false)?;
+        let avoided = if cache_hit { plan.tiles[0].cached.par_stats } else { None };
+
+        // Config + constants download, summed over tiles (every pass
+        // reloads the grid; run-time passes re-pay the config transfer,
+        // this install-time accounting mirrors the single path's).
+        let config_time = {
+            let mut pcie = self.pcie.borrow_mut();
+            pcie.transfer(plan.config_words() * 4).time + RECONFIG_EPSILON
+        };
+        tracer.borrow_mut().simulated(Phase::Configure, config_time);
+        let const_words: u64 =
+            plan.tiles.iter().map(|t| t.cached.image.consts.len().max(1) as u64).sum();
+        let constants_time = {
+            let mut pcie = self.pcie.borrow_mut();
+            pcie.transfer(const_words * 4).time
+        };
+        tracer.borrow_mut().simulated(Phase::Constants, constants_time);
+
+        // Per-tile timing models and backends (each tile is its own
+        // routed configuration with its own fill/II).
+        let est = self.device.estimate(self.params.grid.rows, self.params.grid.cols);
+        let tms: Vec<TimeModel> = plan
+            .tiles
+            .iter()
+            .map(|t| {
+                let (fill, ii) = pipeline_model(&t.cached);
+                TimeModel {
+                    sec_per_cycle: self.params.sec_per_cycle,
+                    fmax_hz: est.fmax_mhz * 1e6,
+                    fill_latency: fill,
+                    initiation_interval: ii,
+                }
+            })
+            .collect();
+        let backends: Vec<DfeBackend> = plan
+            .tiles
+            .iter()
+            .map(|t| match self.params.sim_backend {
+                SimBackendChoice::CycleSim => DfeBackend::Cycle(Rc::new(t.cached.config.clone())),
+                SimBackendChoice::Image => DfeBackend::Sim,
+                SimBackendChoice::Auto => match &t.cached.fabric {
+                    Some(f) => DfeBackend::Fabric(f.clone()),
+                    None => DfeBackend::Sim,
+                },
+            })
+            .collect();
+        let jit_time = engine.jit_times.get(func as usize).copied().unwrap_or_default();
+        tracer.borrow_mut().simulated(Phase::Jit, jit_time.max(Duration::from_micros(50)));
+
+        let state = self.fresh_state(engine, func);
+        let n_tiles = plan.n_tiles();
+        let hook = make_plan_hook(
+            off,
+            single,
+            Rc::new(plan.clone()),
+            Rc::new(backends),
+            Rc::new(tms),
+            RECONFIG_EPSILON,
+            self.pcie.clone(),
+            self.params.transport,
+            state,
+            Some(tracer.clone()),
+        );
+        engine.patch_hook(func, hook);
+        self.active.insert(
+            func,
+            ActiveOffload {
+                unroll,
+                sig,
+                key,
+                cached: plan.tiles[0].cached.clone(),
+                plan: Some(plan),
+            },
+        );
+
+        Ok(OffloadRecord {
+            func,
+            name,
+            dfg_nodes: nodes,
+            inputs: stats.inputs,
+            outputs: stats.outputs,
+            calc: stats.calc,
+            unroll,
+            tiles: n_tiles,
             par_stats,
             cache_hit,
             avoided,
@@ -738,18 +960,59 @@ impl OffloadManager {
             return Err(RejectReason::TooSmall { nodes, min: self.params.min_dfg_nodes });
         }
         let key = spec_key(dfg_key(&off.dfg), sig);
-        if self.compile.service.is_some() && !self.cache.contains(key) {
+        // A candidate above grid capacity respecializes as a multi-tile
+        // plan — partition it up front so the deferred path can race each
+        // tile as its own background job.
+        let budget = TileBudget::for_grid(self.params.grid);
+        let tiled = if needs_tiling(&off.dfg, budget) {
+            Some(partition(&off.dfg, budget).map_err(|e| match e {
+                PartitionError::Infeasible { needed, io, .. } => {
+                    RejectReason::TooLarge { needed, budget: io }
+                }
+                PartitionError::Dfg(d) => RejectReason::Illegal(d.to_string()),
+            })?)
+        } else {
+            None
+        };
+        if self.compile.service.is_some() {
             // Non-blocking promotion: submit (deduped; warm-started from
             // the live artifact's placement) and keep the current tier —
             // software or the previous specialization — until it lands.
-            let warm = current
+            let warm_placement = current
                 .as_ref()
                 .filter(|c| !c.cached.placement.is_empty())
-                .map(|c| ParSeed::Warm(c.cached.placement.clone()))
-                .unwrap_or(ParSeed::Cold);
-            self.compile.compile(&mut self.cache, &off.dfg, key, warm, true)?;
-            self.pending_specs.insert((func, unroll, trip_bucket), key);
-            return Ok(Reconfig::Deferred { key, unroll });
+                .map(|c| c.cached.placement.clone());
+            match &tiled {
+                None if !self.cache.contains(key) => {
+                    let warm = warm_placement.map(ParSeed::Warm).unwrap_or(ParSeed::Cold);
+                    self.compile.compile(&mut self.cache, &off.dfg, key, warm, true)?;
+                    self.pending_specs.insert((func, unroll, trip_bucket), key);
+                    return Ok(Reconfig::Deferred { key, unroll });
+                }
+                Some(td) if !self.cache.contains_plan(key) => {
+                    // Each missing tile compiles as its own job; once
+                    // every tile has landed, the fall-through assembles
+                    // the plan from pure per-tile cache hits — no stall.
+                    let mut outstanding = None;
+                    for (idx, t) in td.tiles.iter().enumerate() {
+                        let tk = tile_key(key, idx, dfg_key(&t.dfg));
+                        if self.cache.contains(tk) {
+                            continue;
+                        }
+                        let warm = warm_placement
+                            .clone()
+                            .map(ParSeed::Warm)
+                            .unwrap_or(ParSeed::Cold);
+                        self.compile.compile(&mut self.cache, &t.dfg, tk, warm, true)?;
+                        outstanding = Some(tk);
+                    }
+                    if let Some(tk) = outstanding {
+                        self.pending_specs.insert((func, unroll, trip_bucket), tk);
+                        return Ok(Reconfig::Deferred { key, unroll });
+                    }
+                }
+                _ => {}
+            }
         }
         let (cur, batch) = match (current, observed_batch) {
             (Some(cur), Some(batch)) => (cur, batch),
@@ -764,15 +1027,26 @@ impl OffloadManager {
         };
         // Route (or cache-hit) the candidate, then let the analytic
         // pipeline model pick the better artifact at this batch size.
-        let warm = (!cur.cached.placement.is_empty())
-            .then(|| ParSeed::Warm(cur.cached.placement.clone()))
-            .unwrap_or(ParSeed::Cold);
-        let (cand, _, _) = self.route_cached(&off.dfg, key, warm, true)?;
         let est = self.device.estimate(self.params.grid.rows, self.params.grid.cols);
         let fmax = est.fmax_mhz * 1e6;
         let link = (self.params.pcie, self.params.transport);
-        let t_cur = invocation_time(&cur.cached, cur.unroll, batch, fmax, link);
-        let t_cand = invocation_time(&cand, unroll, batch, fmax, link);
+        let t_cand = match &tiled {
+            Some(td) => {
+                let (cand_plan, _, _) = self.plan_cached(td, key, true)?;
+                plan_invocation_time(&cand_plan, unroll, batch, fmax, link)
+            }
+            None => {
+                let warm = (!cur.cached.placement.is_empty())
+                    .then(|| ParSeed::Warm(cur.cached.placement.clone()))
+                    .unwrap_or(ParSeed::Cold);
+                let (cand, _, _) = self.route_cached(&off.dfg, key, warm, true)?;
+                invocation_time(&cand, unroll, batch, fmax, link)
+            }
+        };
+        let t_cur = match &cur.plan {
+            Some(p) => plan_invocation_time(p, cur.unroll, batch, fmax, link),
+            None => invocation_time(&cur.cached, cur.unroll, batch, fmax, link),
+        };
         let keep = if unroll < cur.unroll { t_cand > t_cur } else { t_cand >= t_cur };
         if keep {
             return Ok(Reconfig::Kept {
@@ -932,6 +1206,80 @@ pub fn invocation_time(
     // charge them one initiation interval each, as `batch_time` does.
     let rem_secs = (batch % u) as f64 * ii / fmax;
     Duration::from_secs_f64(tl.wall + rem_secs)
+}
+
+/// [`invocation_time`] generalized to execution plans — the comparator
+/// the respecialization gate uses when either side is multi-tile.
+///
+/// The single-tile plan delegates to [`invocation_time`] exactly (the
+/// degenerate case models identically to the legacy path). A multi-tile
+/// plan models every pass: per-pass grid reload (config transfer + the
+/// switch epsilon, folded into the first chunk's exec — the same fold
+/// [`stub::run_plan_with`] charges, so model and runtime cannot drift)
+/// and, under the asynchronous transport, [`PlanTimeline`] gating of
+/// pass *t*'s chunk-*c* upload on pass *t−1*'s chunk-*c* download (the
+/// spill round-trip). The synchronous arm is the conservative serial
+/// sum *including* transfers: unlike the single-tile case they do not
+/// cancel across tiers, because tile count and spill volume differ.
+pub fn plan_invocation_time(
+    plan: &ExecutionPlan,
+    unroll: usize,
+    batch: u64,
+    fmax_hz: f64,
+    link: (PcieParams, TransportMode),
+) -> Duration {
+    if plan.is_single() {
+        return invocation_time(&plan.tiles[0].cached, unroll, batch, fmax_hz, link);
+    }
+    let (pcie, mode) = link;
+    if batch == 0 {
+        return Duration::ZERO;
+    }
+    let fmax = fmax_hz.max(1.0);
+    let u = unroll.max(1) as u64;
+    let lanes = (batch / u) as usize;
+    let eps = RECONFIG_EPSILON.as_secs_f64();
+    let ii_last = pipeline_model(&plan.tiles.last().unwrap().cached).1;
+    let rem_secs = (batch % u) as f64 * ii_last / fmax;
+    if lanes == 0 {
+        return Duration::from_secs_f64(rem_secs);
+    }
+    if !mode.is_async() {
+        let mut total = 0.0f64;
+        for t in &plan.tiles {
+            let (fill, ii) = pipeline_model(&t.cached);
+            let n_in = t.sources.len().max(1);
+            let n_out = t.sinks.len().max(1);
+            total += pcie.transfer_secs(t.cached.config.config_words() as u64 * 4) + eps;
+            total += pcie.transfer_secs((n_in * lanes * 4) as u64);
+            total += (fill + (lanes as f64 - 1.0) * ii) / fmax;
+            total += pcie.transfer_secs((n_out * lanes * 4) as u64);
+        }
+        return Duration::from_secs_f64(total + rem_secs);
+    }
+    let chunks = chunk_plan(lanes, mode);
+    let mut tl = PlanTimeline::new(mode);
+    for (t_idx, t) in plan.tiles.iter().enumerate() {
+        if t_idx > 0 {
+            tl.next_pass();
+        }
+        let (fill, ii) = pipeline_model(&t.cached);
+        let n_in = t.sources.len().max(1);
+        let n_out = t.sinks.len().max(1);
+        let windows = crate::dfe::exec::busy_windows(fill, ii, &chunks);
+        let mut reconfig =
+            pcie.transfer_secs(t.cached.config.config_words() as u64 * 4) + eps;
+        let mut exec_done = 0.0f64;
+        for (&(_, m), &(_, busy_end)) in chunks.iter().zip(&windows) {
+            let up = pcie.transfer_secs((n_in * m * 4) as u64);
+            let exec = (busy_end - exec_done) / fmax + reconfig;
+            reconfig = 0.0;
+            exec_done = busy_end;
+            let down = pcie.transfer_secs((n_out * m * 4) as u64);
+            tl.step(up, exec, down);
+        }
+    }
+    Duration::from_secs_f64(tl.wall() + rem_secs)
 }
 
 /// Measure pipeline fill latency and initiation interval on the cycle
@@ -1224,6 +1572,118 @@ mod tests {
         let rolled = mgr.check_rollback(&mut engine);
         assert!(rolled.is_empty(), "offload should win at this scale");
         assert!(engine.is_patched(func));
+    }
+
+    #[test]
+    fn par_capacity_verdict_is_structured_too_large() {
+        // The pre-search capacity check must surface with its numbers,
+        // distinct from a stringly routing failure.
+        let mut cache = ConfigCache::new(4);
+        let mut slot =
+            CompileSlot::new(1, 0, Grid::new(1, 1), ParParams::default(), 0xD0E);
+        let dfg = crate::dfg::graph::fig2_dfg(); // 3 calc nodes, 1 cell
+        let err = slot.compile(&mut cache, &dfg, 7, ParSeed::Cold, false).unwrap_err();
+        assert_eq!(err, RejectReason::TooLarge { needed: 3, budget: 1 });
+        assert!(!matches!(err, RejectReason::Unroutable(_)));
+        assert!(err.to_string().contains("too large"), "{err}");
+    }
+
+    #[test]
+    fn oversized_dfg_offloads_as_multi_tile_plan_bit_identical() {
+        // 4x4 grid = 16 cells; unroll 8 extracts 24 calc nodes — above
+        // capacity, so the manager must install a multi-tile plan where
+        // PR 5 rejected. Numerics stay exact, remainder included.
+        let mut engine = Engine::new(fig2_module()).unwrap();
+        let mut mem = Memory::new();
+        let n = 1000;
+        let a: Vec<i32> = (0..n).map(|i| i * 7 - 300).collect();
+        let b: Vec<i32> = (0..n).map(|i| -i + 11).collect();
+        let (ha, hb) = (mem.from_i32(&a), mem.from_i32(&b));
+        let hc = mem.alloc_i32(n as usize);
+        run_fig2(&mut engine, &mut mem, hc, ha, hb, n);
+
+        let mut mgr = OffloadManager::new(OffloadParams {
+            min_dfg_nodes: 1,
+            unroll: 8,
+            grid: Grid::new(4, 4),
+            ..Default::default()
+        });
+        let func = engine.func_index("fig2").unwrap();
+        let rec = mgr.try_offload(&mut engine, func, None).expect("tiled offload");
+        assert!(rec.tiles > 1, "24 calcs on 16 cells must tile, got {}", rec.tiles);
+        assert!(engine.is_patched(func));
+        let active = mgr.active(func).unwrap();
+        let plan = active.plan.clone().expect("active offload carries its plan");
+        assert_eq!(plan.n_tiles(), rec.tiles);
+        assert!(plan.n_spills > 0 || plan.n_tiles() == 1);
+        assert!(mgr.cache.contains_plan(active.key), "plan cached under the spec key");
+
+        // n - 3 exercises the host-exact remainder through the plan hook.
+        run_fig2(&mut engine, &mut mem, hc, ha, hb, n - 3);
+        for i in 0..(n - 3) as usize {
+            assert_eq!(mem.i32s(hc)[i], a[i] + 3 * b[i] + 1, "element {i} mismatch");
+        }
+        let st = mgr.state(func).unwrap();
+        assert!(st.borrow().virtual_offload > Duration::ZERO);
+
+        // The plan comparator: overlapped multi-pass makespan never loses
+        // to the serial sum (acceptance: makespan(async) <= makespan(sync)).
+        let fmax = 150.0e6;
+        let pcie = PcieParams::default();
+        for batch in [64u64, 1024, 4096] {
+            let ts = plan_invocation_time(&plan, 8, batch, fmax, (pcie, TransportMode::Sync));
+            let ta = plan_invocation_time(
+                &plan,
+                8,
+                batch,
+                fmax,
+                (pcie, TransportMode::async_default()),
+            );
+            assert!(ta <= ts, "batch {batch}: async {ta:?} > sync {ts:?}");
+        }
+        // Degenerate plan-of-one delegates to the single-tile comparator
+        // exactly.
+        let single_plan = ExecutionPlan::single(plan.tiles[0].cached.clone(), 1);
+        let link = (pcie, TransportMode::async_default());
+        assert_eq!(
+            plan_invocation_time(&single_plan, 2, 512, fmax, link),
+            invocation_time(&plan.tiles[0].cached, 2, 512, fmax, link),
+        );
+    }
+
+    #[test]
+    fn tiled_offload_is_bit_identical_to_single_tile_offload() {
+        // Same kernel, same inputs: once offloaded whole on a big grid,
+        // once as a forced multi-tile plan on a small grid. Outputs must
+        // match bit-for-bit (and both match software).
+        let n = 257;
+        let a: Vec<i32> = (0..n).map(|i| i * 13 - 999).collect();
+        let b: Vec<i32> = (0..n).map(|i| 7 * i - 400).collect();
+        let run_grid = |grid: Grid| -> (Vec<i32>, usize) {
+            let mut engine = Engine::new(fig2_module()).unwrap();
+            let mut mem = Memory::new();
+            let (ha, hb) = (mem.from_i32(&a), mem.from_i32(&b));
+            let hc = mem.alloc_i32(n as usize);
+            run_fig2(&mut engine, &mut mem, hc, ha, hb, n as i32);
+            let mut mgr = OffloadManager::new(OffloadParams {
+                min_dfg_nodes: 1,
+                unroll: 8,
+                grid,
+                ..Default::default()
+            });
+            let func = engine.func_index("fig2").unwrap();
+            let rec = mgr.try_offload(&mut engine, func, None).expect("offload");
+            run_fig2(&mut engine, &mut mem, hc, ha, hb, n as i32);
+            (mem.i32s(hc).to_vec(), rec.tiles)
+        };
+        let (big, tiles_big) = run_grid(Grid::new(8, 8));
+        let (small, tiles_small) = run_grid(Grid::new(4, 4));
+        assert_eq!(tiles_big, 1, "24 calcs fit 64 cells whole");
+        assert!(tiles_small > 1, "24 calcs on 16 cells must tile");
+        assert_eq!(big, small, "tiling must never change numerics");
+        for i in 0..n as usize {
+            assert_eq!(big[i], a[i] + 3 * b[i] + 1, "element {i}");
+        }
     }
 
     #[test]

@@ -39,6 +39,9 @@ use crate::dfe::cache::{
     dfg_key, region_key, spec_key, CacheStats, CachedConfig, ConfigCache, SpecSignature,
 };
 use crate::dfe::grid::{Grid, Region};
+use crate::dfe::plan::{tile_key, ExecutionPlan, PlanTile};
+use crate::dfg::extract::OffloadDfg;
+use crate::dfg::partition::{needs_tiling, partition, PartitionError, TileBudget};
 use crate::dfe::resource::{device_by_name, Device};
 use crate::ir::func::Module;
 use crate::jit::engine::{Engine, Histogram};
@@ -52,7 +55,7 @@ use crate::util::fmt_duration;
 use crate::workloads::{polybench, video};
 
 use super::adapt::{target_unroll, AdaptParams};
-use super::stub::{make_offload_hook, DfeBackend, TimeModel};
+use super::stub::{make_offload_hook, make_plan_hook, DfeBackend, TimeModel};
 use super::{CompileSlot, OffloadManager, OffloadParams, RejectReason, RuntimeState};
 
 /// Software warmup invocations per tenant before the offload decision
@@ -207,8 +210,14 @@ pub struct Tenant {
     /// adaptive pass respecializes).
     pub active_unroll: usize,
     /// The live artifact, kept for the pipeline-model comparison when a
-    /// respecialization candidate is routed.
+    /// respecialization candidate is routed. For a tiled tenant this is
+    /// tile 0 (the representative artifact — its placement warm-starts
+    /// respecialization searches); the full plan lives in `plan`.
     pub cached: Option<CachedConfig>,
+    /// The live multi-tile plan, when the tenant's DFG exceeds the shard
+    /// budget. `None` on the single-tile path — single-tile artifacts
+    /// never travel as plans, so the legacy flow stays byte-identical.
+    pub plan: Option<ExecutionPlan>,
     /// Respecialization trace (tier transitions on the serve path).
     pub respecs: Vec<RespecEvent>,
     /// Offloaded totals folded in from runtime states retired by earlier
@@ -414,6 +423,7 @@ impl OffloadServer {
             pcie: Rc::new(RefCell::new(PcieSim::new(self.params.pcie))),
             active_unroll: 0,
             cached: None,
+            plan: None,
             respecs: Vec::new(),
             retired_invocations: 0,
             retired_virtual: Duration::ZERO,
@@ -823,6 +833,11 @@ impl OffloadServer {
                 rolled_back: t.rolled_back,
                 reject: t.reject.clone(),
                 unroll: t.active_unroll,
+                tiles: if t.offload.is_some() {
+                    t.plan.as_ref().map(|p| p.n_tiles()).unwrap_or(1)
+                } else {
+                    0
+                },
                 respecializations: t.respecs.len() as u64,
                 baseline_per_inv: t.baseline_per_inv,
                 // Cumulative across respecializations: states retired by
@@ -922,6 +937,16 @@ fn offload_tenant_impl(
 
     let sig = SpecSignature::new(unroll, trip_bucket);
     let key = region_key(spec_key(dfg_key(&off.dfg), sig), route_grid);
+    // Oversized for the shard budget: virtualize the grid with a tiled
+    // execution plan instead of rejecting. DFGs that fit keep the exact
+    // single-tile flow below.
+    let budget = TileBudget::for_grid(route_grid);
+    if needs_tiling(&off.dfg, budget) {
+        return offload_tenant_tiled(
+            cache, compile, device, params, route_grid, t, unroll, trip_bucket, observed,
+            respec, off, single, key, budget,
+        );
+    }
     if respec && compile.is_pending(key) {
         // Another tenant already has this key compiling: wait for it at a
         // later window without charging a second miss.
@@ -970,7 +995,12 @@ fn offload_tenant_impl(
         if t.engine.is_patched(t.func) {
             let fmax = est.fmax_mhz * 1e6;
             let link = (params.pcie, params.transport);
-            let t_cur = super::invocation_time(cur, t.active_unroll, batch, fmax, link);
+            // A tiled incumbent is timed as its full multi-pass plan —
+            // tile 0 alone would flatter it.
+            let t_cur = match &t.plan {
+                Some(p) => super::plan_invocation_time(p, t.active_unroll, batch, fmax, link),
+                None => super::invocation_time(cur, t.active_unroll, batch, fmax, link),
+            };
             let t_cand = super::invocation_time(&cached, unroll, batch, fmax, link);
             let keep =
                 if unroll < t.active_unroll { t_cand > t_cur } else { t_cand >= t_cur };
@@ -1033,6 +1063,197 @@ fn offload_tenant_impl(
     t.offload = Some(TenantOffload { key, cache_hit, config_words });
     t.state = Some(state);
     t.cached = Some(cached);
+    t.plan = None;
+    t.active_unroll = unroll;
+    t.adapt_seen = 0;
+    t.adapt_seen_elements = 0;
+    t.window_count = 0;
+    t.window_elements = 0;
+    t.pending_spec = None;
+    Ok(true)
+}
+
+/// The tiled arm of [`offload_tenant_impl`]: the extracted DFG exceeds
+/// the shard budget, so it is partitioned into a feed-forward
+/// [`ExecutionPlan`] and served as a multi-pass schedule over the shard
+/// grid. Tiles compile (and warm-start) independently through the same
+/// shared cache and compile service — a deferred respecialization
+/// submits one background job per missing tile and a later window
+/// assembles the plan from pure cache hits. Tenants whose DFG fits the
+/// shard never reach here.
+#[allow(clippy::too_many_arguments)]
+fn offload_tenant_tiled(
+    cache: &mut ConfigCache,
+    compile: &mut CompileSlot,
+    device: &Device,
+    params: &ServeParams,
+    route_grid: Grid,
+    t: &mut Tenant,
+    unroll: usize,
+    trip_bucket: usize,
+    observed: Option<u64>,
+    respec: bool,
+    off: OffloadDfg,
+    single: OffloadDfg,
+    key: u64,
+    budget: TileBudget,
+) -> std::result::Result<bool, RejectReason> {
+    let mut cache_hit = true;
+    let plan = if let Some(p) = cache.get_plan(key) {
+        p.clone()
+    } else {
+        cache_hit = false;
+        let tiled = partition(&off.dfg, budget).map_err(|e| match e {
+            PartitionError::Infeasible { needed, io, .. } => {
+                RejectReason::TooLarge { needed, budget: io }
+            }
+            PartitionError::Dfg(d) => RejectReason::Illegal(d.to_string()),
+        })?;
+        // Warm hint: the live artifact's placement seeds every tile's
+        // search. Tiles are independent jobs, so they all share the same
+        // seed rather than chaining placements that have not landed yet.
+        let warm_placement = t
+            .cached
+            .as_ref()
+            .filter(|c| !c.placement.is_empty())
+            .map(|c| c.placement.clone());
+        if respec && compile.service.is_some() {
+            // Non-blocking promotion: one background job per missing
+            // tile (deduped by tile key across tenants); the first
+            // outstanding tile key stands in as the pending-spec marker.
+            let mut rep = None;
+            for (idx, tile) in tiled.tiles.iter().enumerate() {
+                let tk = tile_key(key, idx, dfg_key(&tile.dfg));
+                if cache.contains(tk) {
+                    continue;
+                }
+                if !compile.is_pending(tk) {
+                    let warm = warm_placement
+                        .clone()
+                        .map(ParSeed::Warm)
+                        .unwrap_or(ParSeed::Cold);
+                    compile.compile(cache, &tile.dfg, tk, warm, true)?;
+                }
+                if rep.is_none() {
+                    rep = Some(tk);
+                }
+            }
+            if let Some(tk) = rep {
+                t.pending_spec = Some((unroll, trip_bucket, tk));
+                return Ok(false);
+            }
+            // Every tile already landed: assemble below as pure hits.
+        }
+        let t0 = Instant::now();
+        let mut tiles = Vec::with_capacity(tiled.tiles.len());
+        for (idx, tile) in tiled.tiles.iter().enumerate() {
+            let tk = tile_key(key, idx, dfg_key(&tile.dfg));
+            let cached = if let Some(c) = cache.get(tk) {
+                c.clone()
+            } else {
+                let warm = warm_placement
+                    .clone()
+                    .map(ParSeed::Warm)
+                    .unwrap_or(ParSeed::Cold);
+                let (c, _) = compile
+                    .compile(cache, &tile.dfg, tk, warm, false)?
+                    .expect("blocking compile returns an artifact");
+                c
+            };
+            tiles.push(PlanTile {
+                cached,
+                sources: tile.sources.clone(),
+                sinks: tile.sinks.clone(),
+                key: tk,
+            });
+        }
+        if respec {
+            t.compile_stall += t0.elapsed();
+        }
+        let plan = ExecutionPlan { tiles, n_spills: tiled.n_spills };
+        cache.insert_plan(key, plan.clone());
+        plan
+    };
+
+    let est = device.estimate(route_grid.rows, route_grid.cols);
+    // Respecialization gate, plan-aware on both sides: the incumbent is
+    // timed as whatever actually serves (plan or single artifact), the
+    // candidate as its full multi-pass plan.
+    if let (Some(batch), Some(cur)) = (observed, t.cached.as_ref()) {
+        if t.engine.is_patched(t.func) {
+            let fmax = est.fmax_mhz * 1e6;
+            let link = (params.pcie, params.transport);
+            let t_cur = match &t.plan {
+                Some(p) => super::plan_invocation_time(p, t.active_unroll, batch, fmax, link),
+                None => super::invocation_time(cur, t.active_unroll, batch, fmax, link),
+            };
+            let t_cand = super::plan_invocation_time(&plan, unroll, batch, fmax, link);
+            let keep =
+                if unroll < t.active_unroll { t_cand > t_cur } else { t_cand >= t_cur };
+            if keep {
+                return Ok(false);
+            }
+        }
+    }
+
+    // Per-tile time models and backends: each pass runs its own routed
+    // artifact's fill/II on the same shard clock.
+    let fmax_hz = est.fmax_mhz * 1e6;
+    let mut tms = Vec::with_capacity(plan.tiles.len());
+    let mut backends = Vec::with_capacity(plan.tiles.len());
+    for tile in &plan.tiles {
+        let (fill, ii) = super::pipeline_model(&tile.cached);
+        tms.push(TimeModel {
+            sec_per_cycle: params.sec_per_cycle,
+            fmax_hz,
+            fill_latency: fill,
+            initiation_interval: ii,
+        });
+        backends.push(match &tile.cached.fabric {
+            Some(f) => DfeBackend::Fabric(f.clone()),
+            None => DfeBackend::Sim,
+        });
+    }
+
+    // Retire the outgoing state's totals and carry the software-era
+    // snapshot — same discipline as the single-tile arm.
+    let mut prev_pre_patch = None;
+    if let Some(old) = &t.state {
+        let o = old.borrow();
+        t.retired_invocations += o.invocations;
+        t.retired_virtual += o.virtual_offload;
+        t.retired_elements += o.total_elements;
+        prev_pre_patch = Some(o.pre_patch);
+    }
+    let snap = t.engine.take_profile(t.func);
+    let pre_patch =
+        if snap.counters.cycles > 0 { snap } else { prev_pre_patch.unwrap_or(snap) };
+    let state = Rc::new(RefCell::new(RuntimeState {
+        baseline_per_inv: t.baseline_per_inv,
+        pre_patch,
+        ..Default::default()
+    }));
+    // The resident-switch reconfiguration charges the full plan reload:
+    // every pass rewrites the grid, so the configuration stream is the
+    // sum over tiles.
+    let config_words = plan.config_words();
+    let hook = make_plan_hook(
+        off,
+        single,
+        Rc::new(plan.clone()),
+        Rc::new(backends),
+        Rc::new(tms),
+        params.reconfig_epsilon,
+        t.pcie.clone(),
+        params.transport,
+        state.clone(),
+        None,
+    );
+    t.engine.patch_hook(t.func, hook);
+    t.offload = Some(TenantOffload { key, cache_hit, config_words });
+    t.state = Some(state);
+    t.cached = Some(plan.tiles[0].cached.clone());
+    t.plan = Some(plan);
     t.active_unroll = unroll;
     t.adapt_seen = 0;
     t.adapt_seen_elements = 0;
@@ -1111,6 +1332,10 @@ pub struct TenantReport {
     pub reject: Option<String>,
     /// Unroll of the live artifact (0 when never offloaded).
     pub unroll: usize,
+    /// Tiles in the live execution plan: 1 for a single-tile artifact,
+    /// >1 when the tenant's DFG exceeds the shard budget and serves as a
+    /// multi-pass plan, 0 when never offloaded.
+    pub tiles: usize,
     /// Adaptive respecializations performed on the serve path.
     pub respecializations: u64,
     pub baseline_per_inv: Duration,
@@ -1194,6 +1419,11 @@ impl fmt::Display for ServeReport {
                 format!("ok (respec x{} -> u{})", t.respecializations, t.unroll)
             } else {
                 t.reject.as_deref().unwrap_or("ok").to_string()
+            };
+            let status = if t.tiles > 1 {
+                format!("{status} [{} tiles]", t.tiles)
+            } else {
+                status
             };
             writeln!(
                 f,

@@ -28,13 +28,15 @@ use std::time::Duration;
 
 use crate::dfe::config::GridConfig;
 use crate::dfe::image::ExecImage;
+use crate::dfe::plan::ExecutionPlan;
 use crate::dfe::sim::CycleSim;
 use crate::dfg::extract::{OffloadDfg, OutMode};
+use crate::dfg::partition::{TileSink, TileSource};
 use crate::jit::engine::Hook;
 use crate::jit::interp::{Memory, Trap, Val};
 use crate::runtime::DfeExecutable;
 use crate::trace::{Phase, Tracer};
-use crate::transport::{chunk_plan, ChunkTimeline, PcieSim, TransportMode};
+use crate::transport::{chunk_plan, ChunkTimeline, PcieSim, PlanTimeline, TransportMode};
 
 use super::RuntimeState;
 
@@ -171,6 +173,64 @@ pub fn make_offload_hook(
         let mut link = pcie.borrow_mut();
         match run_offloaded_with(
             &off, &single, &image, &backend, &tm, &mut link, mode, mem, args,
+        ) {
+            Ok(report) => {
+                let mut st = state.borrow_mut();
+                st.invocations += 1;
+                st.virtual_offload += report.offload_time();
+                let elements = report.elements * hook_unroll + report.remainder_elements;
+                st.batch_hist.record(elements);
+                st.total_elements += elements;
+                st.last_report = report;
+                drop(st);
+                if let Some(t) = &tracer {
+                    let mut t = t.borrow_mut();
+                    t.simulated(Phase::HostToDfe, report.host_to_dfe);
+                    t.simulated(Phase::DfeExec, report.dfe_exec);
+                    t.simulated(Phase::DfeToHost, report.dfe_to_host);
+                }
+                Ok(None)
+            }
+            Err(trap) => {
+                state.borrow_mut().failed = true;
+                Err(trap)
+            }
+        }
+    })
+}
+
+/// [`make_offload_hook`]'s multi-tile sibling: run the SCoP as an
+/// [`ExecutionPlan`] of feed-forward tiles ([`run_plan_with`]) and fold
+/// the report into [`RuntimeState`] with the exact same accounting, so
+/// the rollback comparator and the adapt controller treat tiled and
+/// single-tile offloads uniformly.
+#[allow(clippy::too_many_arguments)]
+pub fn make_plan_hook(
+    off: OffloadDfg,
+    single: OffloadDfg,
+    plan: Rc<ExecutionPlan>,
+    backends: Rc<Vec<DfeBackend>>,
+    tms: Rc<Vec<TimeModel>>,
+    reconfig_epsilon: Duration,
+    pcie: Rc<RefCell<PcieSim>>,
+    mode: TransportMode,
+    state: Rc<RefCell<RuntimeState>>,
+    tracer: Option<Rc<RefCell<Tracer>>>,
+) -> Hook {
+    let hook_unroll = off.unroll.max(1) as u64;
+    Box::new(move |mem, args| {
+        let mut link = pcie.borrow_mut();
+        match run_plan_with(
+            &plan,
+            &off,
+            &single,
+            &backends,
+            &tms,
+            reconfig_epsilon,
+            &mut link,
+            mode,
+            mem,
+            args,
         ) {
             Ok(report) => {
                 let mut st = state.borrow_mut();
@@ -410,6 +470,207 @@ pub fn run_offloaded_with(
     // Remainder (< unroll innermost iterations): exact host evaluation of
     // the single-iteration DFG (cheap, keeps semantics exact without a
     // second fabric configuration).
+    if !remainder.is_empty() {
+        run_remainder(single, &remainder, mem, args)?;
+    }
+    Ok(report)
+}
+
+/// Gather/scatter + execute one invocation of a multi-tile
+/// [`ExecutionPlan`]: the tiled sibling of [`run_offloaded_with`].
+///
+/// Tiles execute in order as passes over the same grid. Each pass:
+///   * reloads the grid with the tile's configuration (the bitstream
+///     rides the upload link; the switch epsilon occupies the fabric,
+///     folded into the first chunk's exec so later passes' uploads can
+///     hide under it);
+///   * stages the tile's dense local input batch from external streams
+///     and host spill slots, streams it through the tile's backend in
+///     the same chunked schedule the single path uses;
+///   * lands each local output on its sink — a host spill slot (read by
+///     a later tile) or an external output row.
+///
+/// Timing rides a [`PlanTimeline`]: pass *t*'s chunk-*c* upload is
+/// additionally gated on pass *t−1*'s chunk-*c* download (the spill
+/// round-trips through host staging), so under the asynchronous
+/// transport tile *t+1*'s upload overlaps tile *t*'s execute without
+/// ever outrunning its own spilled operands. The synchronous mode is
+/// the serial Duration sum, exactly like the single-tile stub. Numerics
+/// are chunk-invariant and pass-exact: the plan computes bit-identical
+/// values to the un-tiled DFG (`dfg::partition` invariant, pinned by
+/// `tests/conformance.rs` and `tests/exec_fuzz.rs`).
+#[allow(clippy::too_many_arguments)]
+pub fn run_plan_with(
+    plan: &ExecutionPlan,
+    off: &OffloadDfg,
+    single: &OffloadDfg,
+    backends: &[DfeBackend],
+    tms: &[TimeModel],
+    reconfig_epsilon: Duration,
+    pcie: &mut PcieSim,
+    mode: TransportMode,
+    mem: &mut Memory,
+    args: &[Val],
+) -> Result<StubReport, Trap> {
+    assert_eq!(backends.len(), plan.tiles.len());
+    assert_eq!(tms.len(), plan.tiles.len());
+    let (groups, remainder) = iteration_groups(off, args);
+    let n = groups.len();
+    let n_in = off.inputs.len();
+    let n_out = off.outputs.len();
+    let params = |r| param_i32(args, r);
+    let mut report = StubReport {
+        elements: n as u64,
+        remainder_elements: remainder.len() as u64,
+        ..Default::default()
+    };
+
+    if n > 0 {
+        // Gather external inputs once: slot-major [n_in, n], identical to
+        // the single-tile path.
+        let mut x = vec![0i32; n_in * n];
+        for (lane, ivs) in groups.iter().enumerate() {
+            for (j, s) in off.inputs.iter().enumerate() {
+                let v = match s.base {
+                    Some(base) => {
+                        let h = args[base.0 as usize].as_ptr();
+                        let idx = s.affine.eval(ivs, &params);
+                        let arr = mem.i32s(h);
+                        *arr.get(idx as usize).ok_or(Trap::OutOfBounds {
+                            handle: h,
+                            idx: idx as i32,
+                            len: arr.len(),
+                        })?
+                    }
+                    None => s.affine.eval(ivs, &params) as i32,
+                };
+                x[j * n + lane] = v;
+            }
+        }
+
+        let mut spills: Vec<Vec<i32>> = vec![Vec::new(); plan.n_spills];
+        let mut out = vec![0i32; n_out * n];
+        let chunks = chunk_plan(n, mode);
+        let mut tl = PlanTimeline::new(mode);
+        let eps = reconfig_epsilon.as_secs_f64();
+
+        for (t, tile) in plan.tiles.iter().enumerate() {
+            if t > 0 {
+                tl.next_pass();
+            }
+            let tm = &tms[t];
+            let backend = &backends[t];
+            let image = &tile.cached.image;
+            let t_in = tile.sources.len();
+            let t_out = tile.sinks.len();
+
+            // Stage the tile's local input batch [t_in, n].
+            let mut xt = vec![0i32; t_in * n];
+            for (jj, src) in tile.sources.iter().enumerate() {
+                let row: &[i32] = match src {
+                    TileSource::External(j) => &x[j * n..(j + 1) * n],
+                    TileSource::Spill(s) => &spills[*s],
+                };
+                xt[jj * n..(jj + 1) * n].copy_from_slice(row);
+            }
+
+            // Per-pass reconfiguration: the tile's bitstream on the
+            // upload link plus the configuration-switch epsilon on the
+            // fabric.
+            let cfg_bytes = tile.cached.config.config_words() as u64 * 4;
+            let cfg = pcie.transfer(cfg_bytes);
+            report.h2d_bytes += cfg_bytes;
+            report.host_to_dfe += cfg.time;
+            report.dfe_exec += reconfig_epsilon;
+            let mut reconfig = cfg.secs + eps;
+
+            let windows =
+                crate::dfe::exec::busy_windows(tm.fill_latency, tm.initiation_interval, &chunks);
+            let mut ot: Vec<i32> = Vec::new();
+            let mut exec_done = 0.0f64;
+            for (&(start, m), &(_, busy_end)) in chunks.iter().zip(&windows) {
+                let up = pcie.transfer((t_in * m * 4) as u64);
+                if m == n {
+                    ot = backend.run(image, &xt, n)?;
+                } else {
+                    let mut xc = vec![0i32; t_in * m];
+                    for j in 0..t_in {
+                        xc[j * m..(j + 1) * m]
+                            .copy_from_slice(&xt[j * n + start..j * n + start + m]);
+                    }
+                    let oc = backend.run(image, &xc, m)?;
+                    if ot.is_empty() {
+                        ot = vec![0i32; t_out * n];
+                    }
+                    for j in 0..t_out {
+                        ot[j * n + start..j * n + start + m]
+                            .copy_from_slice(&oc[j * m..(j + 1) * m]);
+                    }
+                }
+                let exec_secs = (busy_end - exec_done) / tm.fmax_hz;
+                exec_done = busy_end;
+                let down = pcie.transfer((t_out * m * 4) as u64);
+                // The reconfiguration gates (and is hidden by) only the
+                // first chunk of the pass on the timeline.
+                tl.step(up.secs, exec_secs + reconfig, down.secs);
+                reconfig = 0.0;
+                report.h2d_bytes += (t_in * m * 4) as u64;
+                report.d2h_bytes += (t_out * m * 4) as u64;
+                report.host_to_dfe += up.time;
+                report.dfe_exec += Duration::from_secs_f64(exec_secs);
+                report.dfe_to_host += down.time;
+            }
+
+            // Land local outputs on their sinks.
+            for (jj, sink) in tile.sinks.iter().enumerate() {
+                let row = &ot[jj * n..(jj + 1) * n];
+                match sink {
+                    TileSink::Spill(s) => spills[*s] = row.to_vec(),
+                    TileSink::External(j) => {
+                        out[j * n..(j + 1) * n].copy_from_slice(row)
+                    }
+                }
+            }
+        }
+        report.wall = match mode {
+            // Serial sum in Duration arithmetic, like the single path.
+            TransportMode::Sync => report.host_to_dfe + report.dfe_exec + report.dfe_to_host,
+            TransportMode::Async { .. } => Duration::from_secs_f64(tl.wall()),
+        };
+
+        // Scatter external outputs (identical to the single-tile path).
+        for (j, o) in off.outputs.iter().enumerate() {
+            let h = args[o.base.0 as usize].as_ptr();
+            match o.mode {
+                OutMode::Assign => {
+                    for (lane, ivs) in groups.iter().enumerate() {
+                        let idx = o.affine.eval(ivs, &params);
+                        let arr = mem.i32s_mut(h);
+                        let len = arr.len();
+                        *arr.get_mut(idx as usize).ok_or(Trap::OutOfBounds {
+                            handle: h,
+                            idx: idx as i32,
+                            len,
+                        })? = out[j * n + lane];
+                    }
+                }
+                OutMode::Accumulate => {
+                    for (lane, ivs) in groups.iter().enumerate() {
+                        let idx = o.affine.eval(ivs, &params);
+                        let arr = mem.i32s_mut(h);
+                        let len = arr.len();
+                        let slot = arr.get_mut(idx as usize).ok_or(Trap::OutOfBounds {
+                            handle: h,
+                            idx: idx as i32,
+                            len,
+                        })?;
+                        *slot = slot.wrapping_add(out[j * n + lane]);
+                    }
+                }
+            }
+        }
+    }
+
     if !remainder.is_empty() {
         run_remainder(single, &remainder, mem, args)?;
     }

@@ -19,7 +19,7 @@ use std::time::Duration;
 
 pub mod pipeline;
 
-pub use pipeline::{chunk_plan, AsyncLink, ChunkTimeline, TransportMode};
+pub use pipeline::{chunk_plan, AsyncLink, ChunkTimeline, PlanTimeline, TransportMode};
 
 /// Wire protocol used for payload framing.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]

@@ -156,13 +156,23 @@ impl ChunkTimeline {
     /// Schedule one chunk: returns its `(upload_end, exec_end,
     /// download_end)` in virtual seconds.
     pub fn step(&mut self, up: f64, exec: f64, down: f64) -> (f64, f64, f64) {
+        self.step_ready(up, exec, down, 0.0)
+    }
+
+    /// [`Self::step`] with an external readiness gate: the chunk's upload
+    /// may not start before `ready` (multi-pass tiled plans: a spilled
+    /// intermediate must round-trip through host staging before the next
+    /// tile's pass re-uploads it). `ready = 0.0` is exactly `step`.
+    pub fn step_ready(&mut self, up: f64, exec: f64, down: f64, ready: f64) -> (f64, f64, f64) {
         self.up_busy += up;
         self.exec_busy += exec;
         self.down_busy += down;
         match self.mode {
             TransportMode::Sync => {
-                // One half-duplex occupancy: strictly serial.
-                let u = self.wall + up;
+                // One half-duplex occupancy: strictly serial (the wall
+                // already covers every earlier download, so the gate only
+                // binds when an external event outruns the timeline).
+                let u = self.wall.max(ready) + up;
                 let e = u + exec;
                 let d = e + down;
                 self.up_free = u;
@@ -180,7 +190,7 @@ impl ChunkTimeline {
                 } else {
                     0.0
                 };
-                let up_start = self.up_free.max(stage_ready);
+                let up_start = self.up_free.max(stage_ready).max(ready);
                 let up_end = up_start + up;
                 self.up_free = up_end;
                 let exec_start = up_end.max(self.exec_free);
@@ -194,6 +204,57 @@ impl ChunkTimeline {
                 (up_end, exec_end, down_end)
             }
         }
+    }
+}
+
+/// Multi-pass schedule for a tiled execution plan: one [`ChunkTimeline`]
+/// carried across tile passes, plus the per-chunk spill round-trip gate.
+/// Pass *t*'s chunk *c* re-uploads intermediates that pass *t-1*'s chunk
+/// *c* spilled, so its upload may not start before that chunk's download
+/// completed — but it *may* (async mode) overlap pass *t-1*'s later
+/// chunks still executing or downloading. In sync mode the shared
+/// timeline serializes everything, so the plan degenerates to the strict
+/// upload→execute→download sum — exactly the single-tile discipline
+/// repeated per tile.
+#[derive(Clone, Debug)]
+pub struct PlanTimeline {
+    tl: ChunkTimeline,
+    /// Download-end per chunk index of the previous pass.
+    prev: Vec<f64>,
+    /// Download-ends accumulating for the current pass.
+    cur: Vec<f64>,
+    /// Chunk index within the current pass.
+    chunk: usize,
+}
+
+impl PlanTimeline {
+    pub fn new(mode: TransportMode) -> PlanTimeline {
+        PlanTimeline { tl: ChunkTimeline::new(mode), prev: Vec::new(), cur: Vec::new(), chunk: 0 }
+    }
+
+    /// Advance to the next tile pass: the chunks scheduled so far become
+    /// the spill gates for the chunks of the pass about to start.
+    pub fn next_pass(&mut self) {
+        self.prev = std::mem::take(&mut self.cur);
+        self.chunk = 0;
+    }
+
+    /// Schedule the current pass's next chunk (same return as
+    /// [`ChunkTimeline::step`]).
+    pub fn step(&mut self, up: f64, exec: f64, down: f64) -> (f64, f64, f64) {
+        let ready = self.prev.get(self.chunk).copied().unwrap_or(0.0);
+        self.chunk += 1;
+        let r = self.tl.step_ready(up, exec, down, ready);
+        self.cur.push(r.2);
+        r
+    }
+
+    pub fn wall(&self) -> f64 {
+        self.tl.wall
+    }
+
+    pub fn timeline(&self) -> &ChunkTimeline {
+        &self.tl
     }
 }
 
@@ -354,6 +415,64 @@ mod tests {
         assert!(single.wall > double.wall);
         // Both are still far better than sync (306).
         assert!(single.wall < 306.0);
+    }
+
+    #[test]
+    fn step_ready_zero_gate_is_exactly_step() {
+        for mode in [TransportMode::Sync, TransportMode::Async { depth: 2 }] {
+            let mut a = ChunkTimeline::new(mode);
+            let mut b = ChunkTimeline::new(mode);
+            for (u, e, d) in [(10.0, 2.0, 5.0), (1.0, 9.0, 3.0), (4.0, 4.0, 4.0)] {
+                assert_eq!(a.step(u, e, d), b.step_ready(u, e, d, 0.0));
+            }
+            assert_eq!(a.wall, b.wall);
+        }
+    }
+
+    #[test]
+    fn plan_timeline_gates_reupload_on_spill_roundtrip() {
+        // Download-bound chunks (up 1, exec 1, down 10): pass 1's chunk 0
+        // re-uploads pass 0 chunk 0's spill, so it must wait for that
+        // download (ends at 12) even though the upload direction and the
+        // staging ring are free at t = 2.
+        let mut plan = PlanTimeline::new(TransportMode::Async { depth: 2 });
+        let (_, _, d0) = plan.step(1.0, 1.0, 10.0);
+        assert_eq!(d0, 12.0);
+        let (_, _, d1) = plan.step(1.0, 1.0, 10.0);
+        assert_eq!(d1, 22.0);
+        plan.next_pass();
+        let (u, e, d) = plan.step(1.0, 1.0, 10.0);
+        assert_eq!(u, 13.0, "upload gated on the spill download at 12");
+        assert_eq!(e, 14.0);
+        assert_eq!(d, 32.0, "download direction still serializes");
+        // Ungated, the same chunk's upload would have ended at 3.
+        let mut free = ChunkTimeline::new(TransportMode::Async { depth: 2 });
+        free.step(1.0, 1.0, 10.0);
+        free.step(1.0, 1.0, 10.0);
+        assert_eq!(free.step(1.0, 1.0, 10.0).0, 3.0);
+    }
+
+    #[test]
+    fn multi_pass_async_never_loses_to_sync() {
+        // Two passes of three chunks in both disciplines: the async plan
+        // overlaps pass 1's uploads with pass 0's tail, sync repeats the
+        // strict serial sum per tile.
+        let run = |mode| {
+            let mut plan = PlanTimeline::new(mode);
+            for _ in 0..3 {
+                plan.step(10.0, 2.0, 5.0);
+            }
+            plan.next_pass();
+            for _ in 0..3 {
+                plan.step(10.0, 2.0, 5.0);
+            }
+            plan.wall()
+        };
+        let sync = run(TransportMode::Sync);
+        let pipe = run(TransportMode::async_default());
+        assert_eq!(sync, 102.0, "6 chunks x 17s strictly serial");
+        assert!(pipe < sync, "multi-pass overlap must win: {pipe} vs {sync}");
+        assert!(pipe >= 60.0, "the upload direction alone is 60s of work");
     }
 
     #[test]

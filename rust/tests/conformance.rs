@@ -865,3 +865,79 @@ fn conformance_warm_started_respecialization_matches_cold_compile() {
         }
     }
 }
+
+/// Tiled-plan conformance (the multi-tile lockdown): kernels whose DFGs
+/// exceed the grid capacity — previously hard rejections — must offload
+/// as multi-tile execution plans and stay bit-identical to the
+/// interpreter and the host oracle at every dataset size, on both sim
+/// backends. 2mm would be the natural fifth oversized kernel but is
+/// multi-SCoP (it never reaches P&R at any size — see `cases()`), so
+/// gesummv stands in for it.
+#[test]
+fn conformance_oversized_kernels_execute_as_multi_tile_plans() {
+    use tlo::dfe::grid::Grid;
+
+    fn run_tiled(
+        case: &Case,
+        n: usize,
+        unroll: usize,
+        grid: Grid,
+        sim_backend: SimBackendChoice,
+    ) -> (Vec<Vec<i32>>, usize) {
+        let mut engine = Engine::new((case.module)()).expect("module");
+        let mut mem = Memory::new();
+        let (args, handles) = (case.setup)(&mut mem, n);
+        let func = engine.func_index(case.func).expect("func");
+        let mut mgr = OffloadManager::new(OffloadParams {
+            min_dfg_nodes: 1,
+            unroll,
+            grid,
+            sim_backend,
+            ..Default::default()
+        });
+        let rec = mgr
+            .try_offload(&mut engine, func, None)
+            .unwrap_or_else(|e| panic!("{} u{unroll}: tiled offload refused: {e}", case.name));
+        assert!(engine.is_patched(func), "{}: stub must be live", case.name);
+        engine.call_idx(func, &mut mem, &args).expect("run");
+        (outs(&mem, &handles), rec.tiles)
+    }
+
+    // Each kernel at an unroll factor whose DFG exceeds the 3x3 grid
+    // (9 cells), so the single-tile path would reject it outright.
+    let oversized: &[(&str, usize)] =
+        &[("gemm", 8), ("trmm", 8), ("syr2k", 4), ("gesummv", 8), ("conv", 1)];
+    let grid = Grid::new(3, 3);
+    for &(name, unroll) in oversized {
+        let case = cases().into_iter().find(|c| c.name == name).expect("case registered");
+        for &n in case.sizes {
+            let want = {
+                let mut mem = Memory::new();
+                let (args, handles) = (case.setup)(&mut mem, n);
+                (case.reference)(&mut mem, &args, n);
+                outs(&mem, &handles)
+            };
+            let (interp, _) = run_mode(&case, n, None);
+            let (fabric, tiles_f) = run_tiled(&case, n, unroll, grid, SimBackendChoice::Auto);
+            let (cycle, tiles_c) =
+                run_tiled(&case, n, unroll, grid, SimBackendChoice::CycleSim);
+            assert!(
+                tiles_f > 1,
+                "{name} u{unroll}: expected a multi-tile plan, got {tiles_f} tile(s)"
+            );
+            assert_eq!(tiles_f, tiles_c, "{name}: backend choice must not change the cut");
+            let runs =
+                [("interpreter", &interp), ("tiled-fabric", &fabric), ("tiled-cyclesim", &cycle)];
+            for (mode, got) in runs {
+                if *got != want {
+                    fail_with_diff(
+                        name,
+                        format!(
+                            "oversized {name} u{unroll} n={n} mode {mode} diverges from the oracle"
+                        ),
+                    );
+                }
+            }
+        }
+    }
+}

@@ -259,6 +259,91 @@ fn fuzz_chunked_submission_matches_one_shot_batches() {
 }
 
 #[test]
+fn fuzz_tiled_plans_match_the_untiled_wave_executor() {
+    // Random cut points: partition random DFGs under random cell budgets,
+    // route every tile independently, and drive the multi-pass schedule
+    // (host-staged spills between passes, exactly like the plan stub)
+    // against the un-tiled wave executor on the whole graph. Tiling may
+    // only re-time the work — outputs must be bit-identical.
+    use tlo::dfg::partition::{partition, TileBudget, TileSink, TileSource};
+
+    let mut rng = Rng::new(0x711E);
+    let mut exercised = 0usize;
+    for case in 0..60u64 {
+        let n_in = 2 + rng.below(3);
+        let n_calc = 4 + rng.below(10);
+        let dfg = random_dfg(&mut rng, n_in, n_calc);
+        let st = dfg.stats();
+        if st.outputs == 0 || st.calc < 2 {
+            continue;
+        }
+        // Un-tiled oracle: the whole graph routed on one big grid.
+        let mut prng = Rng::new(0xBEEF + case);
+        let Ok(whole) = place_and_route(&dfg, Grid::new(6, 6), &ParParams::default(), &mut prng)
+        else {
+            continue;
+        };
+        let oracle = CompiledFabric::compile(&whole.config).expect("routed config lowers");
+
+        // Random cut budget that forces more than one tile (eff_cells is
+        // cells/3 floored at 1, so any budget below 3*calc can cut).
+        let cells = 1 + rng.below((3 * st.calc).saturating_sub(2));
+        let budget = TileBudget { cells, io: 24 };
+        let Ok(tiled) = partition(&dfg, budget) else {
+            continue; // infeasible fan-in under a tiny io budget is legal
+        };
+        if tiled.n_tiles() < 2 {
+            continue;
+        }
+        let mut fabrics = Vec::new();
+        for (i, t) in tiled.tiles.iter().enumerate() {
+            let mut prng = Rng::new(0xF00D + case * 131 + i as u64);
+            let Ok(r) = place_and_route(&t.dfg, Grid::new(6, 6), &ParParams::default(), &mut prng)
+            else {
+                break;
+            };
+            fabrics.push(CompiledFabric::compile(&r.config).expect("tile lowers"));
+        }
+        if fabrics.len() != tiled.n_tiles() {
+            continue;
+        }
+        exercised += 1;
+
+        let n = 37 + rng.below(64);
+        let streams = random_streams(case * 31 + 5, n_in, n);
+        let want = oracle.run_stream(&streams, n).expect("untiled run").outputs;
+
+        // Multi-pass schedule: every spill slot is a full host-staged
+        // stream; external sinks land rows at their output index.
+        let mut spills: Vec<Vec<i32>> = vec![vec![0; n]; tiled.n_spills];
+        let mut got: Vec<Vec<i32>> = vec![Vec::new(); want.len()];
+        for (tile, fabric) in tiled.tiles.iter().zip(&fabrics) {
+            let local: Vec<Vec<i32>> = tile
+                .sources
+                .iter()
+                .map(|s| match *s {
+                    TileSource::External(j) => streams[j].clone(),
+                    TileSource::Spill(k) => spills[k].clone(),
+                })
+                .collect();
+            let out = fabric.run_stream(&local, n).expect("tile run").outputs;
+            for (jj, sink) in tile.sinks.iter().enumerate() {
+                match *sink {
+                    TileSink::Spill(k) => spills[k] = out[jj].clone(),
+                    TileSink::External(j) => got[j] = out[jj].clone(),
+                }
+            }
+        }
+        assert_eq!(
+            got, want,
+            "case {case}: {}-tile plan (cells {cells}) diverges from the un-tiled executor",
+            tiled.n_tiles()
+        );
+    }
+    assert!(exercised >= 8, "only {exercised} tiled cases exercised — fuzz too weak");
+}
+
+#[test]
 fn fuzz_short_streams_error_identically_in_both_engines() {
     for (case, (config, n_in)) in routed_cases(4242, 15).iter().enumerate() {
         let fabric = CompiledFabric::compile(config).expect("routed config lowers");

@@ -18,7 +18,11 @@
 //!       payload (`time(payload+1) >= time(payload)`), strictly positive
 //!       for any non-zero payload (no sub-microsecond quantization to
 //!       "free"), `wire_bytes` is monotone under both protocols, and
-//!       Packed costs no more wire than Tagged128 beyond one header.
+//!       Packed costs no more wire than Tagged128 beyond one header;
+//!   P9  DFG partitioning is deterministic (identical tile boundaries,
+//!       spill slots and per-tile structural keys on repeated cuts),
+//!       `tile_key` is positional and separates distinct specialization
+//!       signatures, and the cut preserves evaluation semantics.
 
 use tlo::dfe::grid::Grid;
 use tlo::dfe::opcodes::{Op, ALL_OPS};
@@ -399,4 +403,58 @@ fn p5_routed_configs_are_structurally_legal() {
             }
         }
     }
+}
+
+#[test]
+fn p9_partitioning_is_deterministic_and_plan_keys_separate() {
+    // The plan cache depends on this: the same DFG under the same budget
+    // must always cut identically (tile boundaries, spill slots, local
+    // index maps), per-tile keys must be deterministic and positional,
+    // and distinct specialization signatures must never share tile keys.
+    use tlo::dfe::cache::{dfg_key, spec_key, SpecSignature};
+    use tlo::dfe::tile_key;
+    use tlo::dfg::partition::{partition, TileBudget};
+
+    let mut rng = Rng::new(0x917);
+    let mut exercised = 0usize;
+    for case in 0..80u64 {
+        let n_in = 1 + rng.below(4);
+        let n_calc = 2 + rng.below(12);
+        let dfg = random_dfg(&mut rng, n_in, n_calc);
+        let st = dfg.stats();
+        if st.outputs == 0 || st.calc < 2 {
+            continue;
+        }
+        let budget = TileBudget { cells: 1 + rng.below(3 * st.calc), io: 24 };
+        match (partition(&dfg, budget), partition(&dfg, budget)) {
+            (Err(ea), Err(eb)) => assert_eq!(ea, eb, "case {case}: errors must agree"),
+            (Ok(a), Ok(b)) => {
+                exercised += 1;
+                assert_eq!(a.n_tiles(), b.n_tiles(), "case {case}: cut count drifted");
+                assert_eq!(a.n_spills, b.n_spills, "case {case}: spill count drifted");
+                let plan_key = spec_key(dfg_key(&dfg), SpecSignature::new(4, 1));
+                let other_key = spec_key(dfg_key(&dfg), SpecSignature::new(8, 1));
+                for (idx, (ta, tb)) in a.tiles.iter().zip(&b.tiles).enumerate() {
+                    assert_eq!(ta.sources, tb.sources, "case {case} tile {idx}: sources");
+                    assert_eq!(ta.sinks, tb.sinks, "case {case} tile {idx}: sinks");
+                    let (ka, kb) = (dfg_key(&ta.dfg), dfg_key(&tb.dfg));
+                    assert_eq!(ka, kb, "case {case} tile {idx}: cut DFGs must hash alike");
+                    assert_eq!(tile_key(plan_key, idx, ka), tile_key(plan_key, idx, kb));
+                    assert_ne!(
+                        tile_key(plan_key, idx, ka),
+                        tile_key(other_key, idx, ka),
+                        "case {case} tile {idx}: tiles of distinct specializations collide"
+                    );
+                }
+                // Determinism is not vacuous: the cut preserves semantics.
+                let mut t = Rng::new(case * 17 + 3);
+                let inputs: Vec<i32> = (0..n_in).map(|_| t.any_i32() % 10_000).collect();
+                let via_a = a.eval(&inputs).unwrap();
+                assert_eq!(via_a, b.eval(&inputs).unwrap(), "case {case}: evals diverge");
+                assert_eq!(via_a, dfg.eval(&inputs).unwrap(), "case {case}: cut broke values");
+            }
+            _ => panic!("case {case}: partition flip-flopped between Ok and Err"),
+        }
+    }
+    assert!(exercised >= 30, "only {exercised} partitions exercised — property too weak");
 }

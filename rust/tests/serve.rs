@@ -17,7 +17,12 @@
 //!   S7  with the compile service on, async + adapt serve output stays
 //!       bit-identical to the synchronous-compile path, the respec trace
 //!       still shows tier transitions, and no tenant ever blocks inside
-//!       place & route after admission (compile_stall_secs == 0).
+//!       place & route after admission (compile_stall_secs == 0);
+//!   S8  a tenant whose DFG exceeds its shard region offloads anyway as a
+//!       multi-tile execution plan: outputs stay bit-identical to the
+//!       interpreter under both transport modes, single-tile co-tenants
+//!       are unaffected, and the async multi-pass pipeline never loses to
+//!       the synchronous one on makespan.
 
 use tlo::dfe::grid::Grid;
 use tlo::jit::engine::Engine;
@@ -332,4 +337,60 @@ fn s5_tagged_protocol_interleavings_also_match() {
             spec.name
         );
     }
+}
+
+#[test]
+fn s8_oversized_tenant_serves_as_a_multi_tile_plan_without_hurting_others() {
+    use tlo::transport::TransportMode;
+
+    let requests = 4u64;
+    // gemm at unroll 8 carries more calc nodes than a 3x6 shard region
+    // (6x6 grid, 2 shards) has cells; before tiled plans it was rejected
+    // with TooLarge and pinned to the interpreter.
+    let mut big = gemm_spec();
+    big.name = "gemm-big".into();
+    big.unroll = 8;
+    let specs = vec![big, trmm_spec(), gesummv_spec()];
+    let run_mode = |transport: TransportMode| {
+        let params = ServeParams {
+            shards: 2,
+            grid: Grid::new(6, 6),
+            transport,
+            // A multi-pass plan pays per-tile reconfiguration on every
+            // invocation, which at these toy problem sizes dwarfs the
+            // interpreter baseline — park the economics rollback so the
+            // correctness surface stays offloaded for the whole run.
+            rollback_window: 1_000_000,
+            ..Default::default()
+        };
+        let mut server = OffloadServer::new(params, specs.clone()).expect("server");
+        let plan_tiles = server.tenants[0]
+            .plan
+            .as_ref()
+            .map(|p| p.n_tiles())
+            .expect("the oversized tenant must admit as a tiled plan");
+        assert!(plan_tiles > 1, "gemm@u8 must not fit a 3x6 region in one tile");
+        assert!(server.tenants[1].offload.is_some(), "trmm must still offload");
+        assert!(server.tenants[1].plan.is_none(), "trmm stays single-tile");
+        let report = server.run(requests);
+        assert_eq!(report.tenants[0].tiles, plan_tiles, "report must surface the cut");
+        assert_eq!(report.tenants[1].tiles, 1, "co-tenant report stays single-tile");
+        let outs: Vec<Vec<Vec<i32>>> =
+            (0..server.n_tenants()).map(|i| server.tenant_outputs(i)).collect();
+        (outs, report)
+    };
+    let (outs_sync, rep_sync) = run_mode(TransportMode::Sync);
+    let (outs_async, rep_async) = run_mode(TransportMode::async_default());
+    for (i, spec) in specs.iter().enumerate() {
+        let interp = interpreter_outputs(spec, requests);
+        assert_eq!(outs_sync[i], interp, "sync vs interpreter: tenant {}", spec.name);
+        assert_eq!(outs_async[i], interp, "async vs interpreter: tenant {}", spec.name);
+    }
+    assert_eq!(rep_sync.total_requests, rep_async.total_requests);
+    assert!(
+        rep_async.makespan <= rep_sync.makespan,
+        "multi-pass overlap must never lose: async {:?} vs sync {:?}",
+        rep_async.makespan,
+        rep_sync.makespan
+    );
 }
