@@ -21,9 +21,16 @@
 #                    for the CI smoke run (small n, relaxed thresholds,
 #                    same assertions).
 
+#   make chaos       Drive the fleet layer under a lossy fault profile:
+#                    `tlo serve --fleet` on a mixed drop/dup/reorder/
+#                    jitter/crash schedule (replayable from the fixed
+#                    --fault-seed), then the tests/fleet.rs chaos suite
+#                    and the P10 reliability property. Zero panics and
+#                    oracle-verified outputs are the acceptance bar.
+
 PYTHON ?= python3
 
-.PHONY: artifacts build test bench clean
+.PHONY: artifacts build test bench chaos clean
 
 artifacts:
 	cd python && $(PYTHON) -m compile.aot --out-dir ../artifacts
@@ -47,6 +54,12 @@ bench:
 	cargo bench --bench fig6_phases
 	cargo bench --bench table1
 	cargo bench --bench table2
+
+chaos:
+	cargo run --release -- serve --tenants 4 --shards 2 --requests 6 --fleet 4 --fault-profile drop=0.2,dup=0.2,reorder=0.2,jitter=0.3,crash=0.05 --fault-seed 51966
+	cargo run --release -- serve --tenants 4 --shards 2 --requests 6 --fleet 2 --fault-profile drop=1.0 --fault-seed 7
+	cargo test -q --test fleet
+	cargo test -q --test proptests p10_
 
 clean:
 	rm -rf target rust/target artifacts

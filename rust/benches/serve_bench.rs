@@ -27,6 +27,13 @@
 //! throughput degrades boundedly (>= 0.15x the no-oversized baseline)
 //! rather than collapsing under the plan's per-tile reconfigurations.
 //!
+//! What degrades (A10): the same mix served by a 4-node network fleet
+//! under three fault regimes — healthy links, 5% datagram loss, and one
+//! node crashed for the whole run. Loss costs retries and virtual time;
+//! a dead node costs placements (its breaker opens and the scheduler
+//! routes around it); neither costs elements — all three regimes serve
+//! identical work, and faults only move the makespan.
+//!
 //! Acceptance: aggregate throughput must scale > 1.5x from 1 shard to 4,
 //! and the async transport must serve >= 1.3x the sync element
 //! throughput on the PolyBench mix (>= 1.05x in the quick smoke mode,
@@ -36,10 +43,11 @@
 //! sections as JSON so the perf trajectory is tracked across PRs.
 
 use tlo::dfe::grid::Grid;
+use tlo::offload::fleet::{FleetParams, FleetReport, FleetServer};
 use tlo::offload::server::{
     gemm_spec, polybench_mix, OffloadServer, ServeParams, ServeReport, TenantSpec,
 };
-use tlo::transport::{PcieParams, TransportMode};
+use tlo::transport::{FaultProfile, NetParams, PcieParams, TransportMode};
 use tlo::util::fmt_duration;
 
 fn run_mix(
@@ -228,6 +236,96 @@ fn main() {
         big_row.tiles
     );
 
+    // ---- A10: fleet fault ablation (healthy vs 5% loss vs a dead node) ----
+    // Same mix, same seeds, three fault regimes on a 4-node fleet. Loss
+    // and crashes are allowed to cost retries, placements and virtual
+    // time — never elements: all three regimes must serve identical work.
+    println!(
+        "\n== A10: fleet fault ablation (4 nodes, {tenants} tenants x {requests} requests) =="
+    );
+    let run_fault = |fault: FaultProfile, node_faults: Vec<FaultProfile>| -> FleetReport {
+        let serve = ServeParams {
+            shards: 2,
+            rollback_window: u64::MAX,
+            ..Default::default()
+        };
+        let fleet = FleetParams {
+            nodes: 4,
+            net: NetParams { fault, ..NetParams::lan_like() },
+            node_faults,
+            fault_seed: 0xAB1E,
+            ..Default::default()
+        };
+        let mut server =
+            FleetServer::new(serve, fleet, polybench_mix(tenants)).expect("fleet setup");
+        server.run(requests)
+    };
+    let fleet_healthy = run_fault(FaultProfile::healthy(), Vec::new());
+    let fleet_lossy =
+        run_fault(FaultProfile { drop: 0.05, ..FaultProfile::healthy() }, Vec::new());
+    let one_dead = vec![
+        FaultProfile { crash: 1.0, ..FaultProfile::healthy() },
+        FaultProfile::healthy(),
+        FaultProfile::healthy(),
+        FaultProfile::healthy(),
+    ];
+    let fleet_crash = run_fault(FaultProfile::healthy(), one_dead);
+    println!(
+        "{:>10} {:>12} {:>9} {:>10} {:>12} {:>10}",
+        "regime", "makespan", "retries", "degraded", "node0 srv", "deferred"
+    );
+    for (label, rep) in [
+        ("healthy", &fleet_healthy),
+        ("drop=5%", &fleet_lossy),
+        ("1 dead", &fleet_crash),
+    ] {
+        println!(
+            "{:>10} {:>12} {:>9} {:>10} {:>12} {:>10}",
+            label,
+            fmt_duration(rep.serve.makespan),
+            rep.counters.retries,
+            rep.counters.fallback_local,
+            rep.nodes[0].served,
+            rep.counters.deferred
+        );
+        assert_eq!(
+            rep.counters.applied_results + rep.counters.fallback_local,
+            rep.counters.remote_requests,
+            "{label}: every remote request must apply once or degrade once"
+        );
+    }
+    assert_eq!(
+        fleet_healthy.serve.total_elements, fleet_lossy.serve.total_elements,
+        "loss may never cost elements"
+    );
+    assert_eq!(
+        fleet_healthy.serve.total_elements, fleet_crash.serve.total_elements,
+        "a dead node may never cost elements"
+    );
+    assert_eq!(fleet_healthy.counters.retries, 0, "healthy fleet must not retry");
+    assert!(
+        fleet_lossy.serve.makespan >= fleet_healthy.serve.makespan,
+        "loss can only add virtual time"
+    );
+    assert_eq!(
+        fleet_crash.nodes[0].served, 0,
+        "a node that is always down must serve nothing"
+    );
+    assert!(
+        fleet_crash.nodes[0].breaker_opens >= 1,
+        "the dead node's breaker must trip"
+    );
+    let crash_rest: u64 = fleet_crash.nodes[1..].iter().map(|n| n.served).sum();
+    assert!(
+        crash_rest > 0,
+        "the surviving nodes must absorb the dead node's load"
+    );
+    println!(
+        "PASS: identical elements across regimes; dead node served 0 \
+         (breaker opened {}x), survivors served {crash_rest}",
+        fleet_crash.nodes[0].breaker_opens
+    );
+
     if let Ok(path) = std::env::var("TLO_BENCH_JSON") {
         let doc = format!(
             "{{\n  \"bench\": \"serve\",\n  \"mode\": \"{}\",\n  \
@@ -248,7 +346,16 @@ fn main() {
              \"baseline_makespan_sec\": {:.6},\n    \
              \"with_oversized_makespan_sec\": {:.6},\n    \
              \"cotenant_throughput_ratio\": {:.3},\n    \
-             \"floor\": {}\n  }}\n}}\n",
+             \"floor\": {}\n  }},\n  \"fleet\": {{\n    \
+             \"nodes\": 4,\n    \
+             \"fleet_healthy_makespan_sec\": {:.6},\n    \
+             \"fleet_lossy_makespan_sec\": {:.6},\n    \
+             \"fleet_crash_makespan_sec\": {:.6},\n    \
+             \"fleet_lossy_retries\": {},\n    \
+             \"fleet_lossy_fallback_local\": {},\n    \
+             \"fleet_crash_dead_node_served\": {},\n    \
+             \"fleet_crash_breaker_opens\": {},\n    \
+             \"fleet_crash_survivor_served\": {}\n  }}\n}}\n",
             if quick { "quick" } else { "full" },
             tenants,
             requests,
@@ -265,7 +372,15 @@ fn main() {
             baseline.makespan.as_secs_f64(),
             with_big.makespan.as_secs_f64(),
             cotenant_ratio,
-            floor
+            floor,
+            fleet_healthy.serve.makespan.as_secs_f64(),
+            fleet_lossy.serve.makespan.as_secs_f64(),
+            fleet_crash.serve.makespan.as_secs_f64(),
+            fleet_lossy.counters.retries,
+            fleet_lossy.counters.fallback_local,
+            fleet_crash.nodes[0].served,
+            fleet_crash.nodes[0].breaker_opens,
+            crash_rest
         );
         std::fs::write(&path, doc).expect("write TLO_BENCH_JSON");
         println!("wrote {path}");

@@ -13,13 +13,14 @@ use tlo::util::cli::Args;
 
 const USAGE: &str = "subcommands: table1 | table2 [--device NAME] | video [--frames N --riffa] \
 | serve [--tenants N --shards K --requests R --grid RxC --transport sync|async|async:D \
---compile-threads N --par-portfolio K --tagged --no-adapt --no-verify] \
+--compile-threads N --par-portfolio K --tagged --no-adapt --no-verify \
+--fleet N --fault-profile drop=P,dup=P,reorder=P,jitter=F,crash=P --fault-seed S] \
 | devices";
 
 fn main() {
     let args = Args::from_env(&[
         "device", "frames", "n", "seed", "tenants", "shards", "requests", "grid", "transport",
-        "compile-threads", "par-portfolio",
+        "compile-threads", "par-portfolio", "fleet", "fault-profile", "fault-seed",
     ]);
     match args.positional.first().map(String::as_str) {
         Some("table1") => table1(),
@@ -236,6 +237,13 @@ fn serve(args: &Args) {
             "off — synchronous P&R on every miss".to_string()
         }
     );
+    // --fleet N: serve across N remote DFE nodes over the lossy datagram
+    // transport instead of the local PCIe-attached shards.
+    let fleet_nodes = args.get_usize("fleet", 0);
+    if fleet_nodes > 0 {
+        serve_fleet(args, params, specs, fleet_nodes, requests);
+        return;
+    }
     let mut server = match OffloadServer::new(params, specs.clone()) {
         Ok(s) => s,
         Err(e) => {
@@ -277,6 +285,84 @@ fn serve(args: &Args) {
         }
         println!(
             "\nverified: all {} tenant outputs bit-identical to the single-tenant offload path",
+            specs.len()
+        );
+    }
+}
+
+/// Fleet mode: tenants scheduled across N remote DFE nodes over seeded
+/// lossy datagram links (`offload::fleet`). Output stays bit-identical to
+/// the single-tenant path under any fault schedule — faults cost retries
+/// and fallbacks, never numerics — and is verified unless --no-verify.
+fn serve_fleet(
+    args: &Args,
+    params: tlo::offload::server::ServeParams,
+    specs: Vec<tlo::offload::server::TenantSpec>,
+    nodes: usize,
+    requests: u64,
+) {
+    use tlo::offload::fleet::{FleetParams, FleetServer};
+    use tlo::offload::server::run_single_tenant;
+    use tlo::transport::{FaultProfile, NetParams};
+
+    let fault = match args.get("fault-profile") {
+        None => FaultProfile::healthy(),
+        Some(s) => match FaultProfile::parse(s) {
+            Some(f) => f,
+            None => {
+                eprintln!(
+                    "bad --fault-profile '{s}' (expected \
+                     drop=P,dup=P,reorder=P,jitter=F,crash=P, values in [0,1])"
+                );
+                std::process::exit(2);
+            }
+        },
+    };
+    let fleet_params = FleetParams {
+        nodes,
+        net: NetParams { fault, ..NetParams::lan_like() },
+        fault_seed: args.get_u64("fault-seed", 0xF1EE7),
+        ..Default::default()
+    };
+    println!(
+        "fleet: {nodes} remote node(s), fault profile drop={} dup={} reorder={} jitter={} \
+         crash={}, fault seed {:#x}",
+        fault.drop, fault.dup, fault.reorder, fault.jitter, fault.crash, fleet_params.fault_seed
+    );
+    let mut fleet = match FleetServer::new(params, fleet_params, specs.clone()) {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("fleet setup failed: {e:#}");
+            std::process::exit(1);
+        }
+    };
+    let report = fleet.run(requests);
+    println!("\n{report}");
+
+    if !args.flag("no-verify") {
+        let mut ok = true;
+        for (i, spec) in specs.iter().enumerate() {
+            let want = match run_single_tenant(spec, requests) {
+                Ok(w) => w,
+                Err(e) => {
+                    eprintln!("verify {}: single-tenant replay failed: {e:#}", spec.name);
+                    std::process::exit(1);
+                }
+            };
+            if fleet.tenant_outputs(i) != want {
+                eprintln!(
+                    "verify {}: outputs DIVERGE under the fault schedule",
+                    spec.name
+                );
+                ok = false;
+            }
+        }
+        if !ok {
+            std::process::exit(1);
+        }
+        println!(
+            "\nverified: all {} tenant outputs bit-identical to the single-tenant path \
+             under the fault schedule",
             specs.len()
         );
     }

@@ -1,0 +1,856 @@
+//! Fault-tolerant fleet serving: the multi-tenant server scaled past one
+//! host onto N remote DFE nodes reached over lossy datagram links
+//! (ROADMAP item 2; the degradation philosophy of Cong et al.'s
+//! best-effort framing).
+//!
+//! Failure is a first-class input. Every node carries a seeded
+//! [`NetLink`] fault schedule (drop / duplicate / reorder / jitter /
+//! crash windows — `transport::net`), and the scheduler wraps it in the
+//! standard reliability ladder:
+//!
+//!   * **idempotent invocation keys** — a result datagram applies at most
+//!     once, so duplicated or reordered deliveries never double-apply;
+//!   * **capped exponential backoff with jitter** on retransmit
+//!     ([`backoff_delay`]);
+//!   * **a circuit breaker** per node (closed → open → half-open probe →
+//!     closed, [`Breaker`]): drops open it after a consecutive-failure
+//!     threshold, a crash-window refusal opens it immediately;
+//!   * **admission backpressure** — remote-eligible requests defer a
+//!     round instead of piling onto a saturated healthy fleet;
+//!   * **graceful degradation** — a request that exhausts its retry
+//!     budget (or finds no usable node) falls back to the *local* shard
+//!     fabric, and tenants with no fabric path at all serve on the
+//!     interpreter.
+//!
+//! The crate's timing discipline makes degradation total-order-safe by
+//! construction: numerics always execute locally through the tenant's
+//! patched engine (the network only decides *where the virtual time is
+//! spent*), so serve output is bit-identical to the no-fault run under
+//! any fault schedule — faults cost latency and retry/fallback counters,
+//! never correctness (`tests/fleet.rs` enforces this against the
+//! single-tenant oracle).
+
+use std::collections::HashSet;
+use std::fmt;
+use std::time::Duration;
+
+use crate::transport::{
+    expected_sends, Attempt, FaultProfile, NetLink, NetParams, NetStats, NodeTimeline,
+};
+use crate::util::err::{Error, Result};
+use crate::util::prng::Rng;
+
+use super::server::{
+    pick_batch, pick_shard, OffloadServer, ServeError, ServeParams, ServeReport, TenantSpec,
+    WARMUP_REQUESTS,
+};
+
+/// Fleet topology + reliability tunables.
+#[derive(Clone, Debug)]
+pub struct FleetParams {
+    /// Remote DFE nodes.
+    pub nodes: usize,
+    /// Shared link model; `net.fault` is the default per-node profile.
+    pub net: NetParams,
+    /// Per-node fault overrides (index-matched; missing entries use
+    /// `net.fault`) — e.g. one dead node in an otherwise healthy fleet.
+    pub node_faults: Vec<FaultProfile>,
+    /// Seeds every node's fault schedule and the backoff jitter stream;
+    /// one seed replays an entire chaos run bit-for-bit.
+    pub fault_seed: u64,
+    /// Retransmit attempts after the first send.
+    pub max_retries: u32,
+    /// First backoff envelope in seconds (doubles per attempt).
+    pub backoff_base: f64,
+    /// Backoff envelope ceiling in seconds.
+    pub backoff_cap: f64,
+    /// Consecutive failures that open a node's circuit breaker.
+    pub breaker_threshold: u32,
+    /// Seconds an open breaker waits before admitting a half-open probe.
+    pub breaker_cooldown: f64,
+    /// Exchanges a node accepts per scheduling round before the admission
+    /// controller defers further remote work (backpressure).
+    pub node_depth: usize,
+}
+
+impl Default for FleetParams {
+    fn default() -> Self {
+        FleetParams {
+            nodes: 2,
+            net: NetParams::lan_like(),
+            node_faults: Vec::new(),
+            fault_seed: 0xF1EE7,
+            max_retries: 4,
+            backoff_base: 0.5e-3,
+            backoff_cap: 8e-3,
+            breaker_threshold: 3,
+            breaker_cooldown: 20e-3,
+            node_depth: 4,
+        }
+    }
+}
+
+/// Per-node circuit breaker state.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Breaker {
+    /// Healthy: exchanges flow.
+    Closed,
+    /// Tripped: no exchanges until `until`, then a half-open probe.
+    Open { until: f64 },
+    /// Probing: one exchange decides — success closes, failure reopens.
+    HalfOpen,
+}
+
+impl fmt::Display for Breaker {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Breaker::Closed => write!(f, "closed"),
+            Breaker::Open { .. } => write!(f, "open"),
+            Breaker::HalfOpen => write!(f, "half-open"),
+        }
+    }
+}
+
+/// Deterministic backoff envelope for retransmit `attempt` (0-based):
+/// `base * 2^attempt`, capped at `cap`.
+pub fn backoff_envelope(base: f64, cap: f64, attempt: u32) -> f64 {
+    (base * 2f64.powi(attempt.min(62) as i32)).min(cap)
+}
+
+/// Jittered backoff delay: uniform in `[envelope/2, envelope]` (decorrelates
+/// retransmit storms across tenants without ever exceeding the envelope).
+pub fn backoff_delay(base: f64, cap: f64, attempt: u32, rng: &mut Rng) -> f64 {
+    let env = backoff_envelope(base, cap, attempt);
+    env * (0.5 + 0.5 * rng.f64())
+}
+
+/// Idempotency key for one invocation of one tenant: stable across
+/// retransmits (a retry reuses the key, so a late or duplicated result
+/// for the same invocation can never apply twice). SplitMix64-style
+/// finalizer over (tenant, seq).
+pub fn invocation_key(tenant: usize, seq: u64) -> u64 {
+    let mut x = (tenant as u64 + 1)
+        .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        .wrapping_add(seq.wrapping_mul(0xBF58_476D_1CE4_E5B9));
+    x ^= x >> 30;
+    x = x.wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x ^= x >> 27;
+    x = x.wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
+}
+
+/// One remote DFE node: its fault-scheduled link, occupancy timeline and
+/// health tracking.
+#[derive(Clone, Debug)]
+pub struct FleetNode {
+    pub link: NetLink,
+    pub timeline: NodeTimeline,
+    pub breaker: Breaker,
+    pub consecutive_failures: u32,
+    /// Exchanges admitted this round (reset at every round boundary —
+    /// the backpressure budget).
+    pub inflight: usize,
+    /// Configuration resident on the node's fabric (a cache key).
+    pub resident: Option<u64>,
+    pub served: u64,
+    pub reconfigs: u64,
+    pub breaker_opens: u64,
+    pub breaker_closes: u64,
+}
+
+impl FleetNode {
+    pub fn new(net: NetParams, node: usize, seed: u64) -> FleetNode {
+        FleetNode {
+            link: NetLink::new(net, node, seed),
+            timeline: NodeTimeline::new(),
+            breaker: Breaker::Closed,
+            consecutive_failures: 0,
+            inflight: 0,
+            resident: None,
+            served: 0,
+            reconfigs: 0,
+            breaker_opens: 0,
+            breaker_closes: 0,
+        }
+    }
+
+    /// Promote an expired open window to half-open (one probe allowed).
+    pub fn probe(&mut self, now: f64) {
+        if let Breaker::Open { until } = self.breaker {
+            if now >= until {
+                self.breaker = Breaker::HalfOpen;
+            }
+        }
+    }
+
+    /// One failed exchange: a half-open probe reopens immediately, a
+    /// closed breaker opens at `threshold` consecutive failures.
+    pub fn record_failure(&mut self, now: f64, threshold: u32, cooldown: f64) {
+        self.consecutive_failures += 1;
+        match self.breaker {
+            Breaker::HalfOpen => {
+                self.breaker = Breaker::Open { until: now + cooldown };
+                self.breaker_opens += 1;
+            }
+            Breaker::Closed if self.consecutive_failures >= threshold => {
+                self.breaker = Breaker::Open { until: now + cooldown };
+                self.breaker_opens += 1;
+            }
+            _ => {}
+        }
+    }
+
+    /// A crash-window refusal: the node is observably down for a long
+    /// window, so the breaker opens immediately — the consecutive-failure
+    /// threshold is for flaky links (drops), not dead nodes.
+    pub fn record_crash(&mut self, now: f64, cooldown: f64) {
+        self.consecutive_failures += 1;
+        if !matches!(self.breaker, Breaker::Open { .. }) {
+            self.breaker = Breaker::Open { until: now + cooldown };
+            self.breaker_opens += 1;
+        }
+    }
+
+    /// One delivered exchange: resets the failure streak; a successful
+    /// half-open probe closes the breaker.
+    pub fn record_success(&mut self) {
+        self.consecutive_failures = 0;
+        if self.breaker == Breaker::HalfOpen {
+            self.breaker = Breaker::Closed;
+            self.breaker_closes += 1;
+        }
+    }
+
+    /// Observed per-exchange loss rate (drops + crash refusals), falling
+    /// back to the configured drop probability before any evidence — the
+    /// transport-aware placement penalty's input.
+    pub fn drop_estimate(&self) -> f64 {
+        let s = &self.link.stats;
+        if s.exchanges == 0 {
+            return self.link.params.fault.drop;
+        }
+        (s.dropped + s.crash_windows) as f64 / s.exchanges as f64
+    }
+}
+
+/// Fleet-level counters (sums of the per-tenant counters plus the
+/// idempotency ledger — `tests/fleet.rs` asserts their invariants).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FleetCounters {
+    /// Remote-eligible requests dispatched to the fleet.
+    pub remote_requests: u64,
+    /// Results applied through the idempotency ledger (exactly one per
+    /// delivered remote request).
+    pub applied_results: u64,
+    /// Duplicate result datagrams absorbed by the ledger.
+    pub dup_suppressed: u64,
+    /// Reordered result datagrams absorbed (keyed application makes
+    /// ordering irrelevant).
+    pub reordered_absorbed: u64,
+    /// Retransmit attempts across all tenants.
+    pub retries: u64,
+    /// Requests deferred a round by backpressure.
+    pub deferred: u64,
+    /// Requests degraded to the local shard fabric.
+    pub fallback_local: u64,
+    /// Requests served on the interpreter (no fabric path).
+    pub fallback_software: u64,
+}
+
+/// The fleet scheduler: wraps the single-host [`OffloadServer`] (which
+/// keeps owning tenants, shards, cache and compile service) and replaces
+/// its link scheduling with per-node datagram exchanges plus the
+/// reliability ladder.
+pub struct FleetServer {
+    pub server: OffloadServer,
+    pub params: FleetParams,
+    pub nodes: Vec<FleetNode>,
+    pub counters: FleetCounters,
+    /// Backoff-jitter stream (distinct from every node's fault stream).
+    rng: Rng,
+    /// The idempotency ledger: invocation keys whose result has applied.
+    applied: HashSet<u64>,
+    /// Virtual fleet clock in f64 seconds.
+    clock: f64,
+}
+
+impl FleetServer {
+    pub fn new(
+        serve: ServeParams,
+        mut fleet: FleetParams,
+        specs: Vec<TenantSpec>,
+    ) -> Result<FleetServer> {
+        if fleet.nodes == 0 {
+            return Err(Error::msg(ServeError::NoNodes));
+        }
+        // A zero depth would deadlock the backpressure controller.
+        fleet.node_depth = fleet.node_depth.max(1);
+        let server = OffloadServer::new(serve, specs)?;
+        let nodes = (0..fleet.nodes)
+            .map(|i| {
+                let fault = fleet.node_faults.get(i).copied().unwrap_or(fleet.net.fault);
+                FleetNode::new(NetParams { fault, ..fleet.net }, i, fleet.fault_seed)
+            })
+            .collect();
+        let rng = Rng::new(fleet.fault_seed ^ 0xB0FF_0FF5_EED5_EED1);
+        Ok(FleetServer {
+            server,
+            params: fleet,
+            nodes,
+            counters: FleetCounters::default(),
+            rng,
+            applied: HashSet::new(),
+            clock: 0.0,
+        })
+    }
+
+    pub fn n_tenants(&self) -> usize {
+        self.server.n_tenants()
+    }
+
+    /// A tenant's observable output arrays (for verification).
+    pub fn tenant_outputs(&self, i: usize) -> Vec<Vec<i32>> {
+        self.server.tenant_outputs(i)
+    }
+
+    /// Serve `requests_per_tenant` per tenant across the fleet. Same
+    /// numerics block as [`OffloadServer::run`] (execute → trap rollback →
+    /// decide placement); the virtual-time block dispatches offloaded
+    /// requests to remote nodes with retries, breakers and degradation
+    /// instead of onto the local shared link.
+    pub fn run(&mut self, requests_per_tenant: u64) -> FleetReport {
+        let n_t = self.server.tenants.len();
+        let window = if self.server.params.batch_window == 0 {
+            n_t
+        } else {
+            self.server.params.batch_window
+        };
+        let mut remaining: Vec<u64> = vec![requests_per_tenant; n_t];
+        let mut host_free = self.clock;
+
+        while remaining.iter().any(|&r| r > 0) {
+            self.server.pump_compiles();
+            let round_start = self.clock;
+            for n in self.nodes.iter_mut() {
+                n.inflight = 0;
+            }
+
+            // ---- admission: hotness-weighted round robin ----
+            let mut order: Vec<usize> = (0..n_t).filter(|&i| remaining[i] > 0).collect();
+            order.sort_by(|&a, &b| {
+                self.server.tenants[b]
+                    .hotness
+                    .partial_cmp(&self.server.tenants[a].hotness)
+                    .unwrap_or(std::cmp::Ordering::Equal)
+                    .then(a.cmp(&b))
+            });
+            let hotness: Vec<f64> = self.server.tenants.iter().map(|t| t.hotness).collect();
+            let mut batch = pick_batch(&order, &hotness, &remaining, window);
+            batch.sort_by_key(|&ti| {
+                self.server.tenants[ti].offload.as_ref().map(|o| o.key).unwrap_or(0)
+            });
+
+            let mut round_load = vec![0u32; self.server.shards.len()];
+            let mut round_end = round_start;
+
+            for &ti in &batch {
+                // Backpressure: defer a remote-eligible request when every
+                // healthy node's round budget is spent. Budgets reset each
+                // round and depth >= 1, so the round's first eligible
+                // request always proceeds — progress is guaranteed.
+                let eligible = {
+                    let t = &self.server.tenants[ti];
+                    !t.rolled_back && t.offload.is_some() && t.engine.is_patched(t.func)
+                };
+                if eligible {
+                    let healthy = |n: &FleetNode| {
+                        !matches!(n.breaker, Breaker::Open { until } if round_start < until)
+                            && !n.link.is_down(round_start)
+                    };
+                    let any_healthy = self.nodes.iter().any(healthy);
+                    let any_capacity = self
+                        .nodes
+                        .iter()
+                        .any(|n| healthy(n) && n.inflight < self.params.node_depth);
+                    if any_healthy && !any_capacity {
+                        self.counters.deferred += 1;
+                        continue; // remaining[ti] untouched: next round.
+                    }
+                }
+                remaining[ti] -= 1;
+                let seq = WARMUP_REQUESTS + self.server.tenants[ti].served;
+
+                // ---- numerics now; virtual time modeled below ----
+                {
+                    let tenant = &mut self.server.tenants[ti];
+                    if let Some(refresh) = tenant.spec.refresh {
+                        refresh(&mut tenant.mem, &tenant.args, seq);
+                    }
+                }
+                let snapshot: Option<Vec<(u32, Vec<i32>)>> = {
+                    let t = &self.server.tenants[ti];
+                    (!t.rolled_back && t.offload.is_some() && t.engine.is_patched(t.func))
+                        .then(|| {
+                            t.out_handles
+                                .iter()
+                                .map(|&h| (h, t.mem.i32s(h).to_vec()))
+                                .collect()
+                        })
+                };
+                let call_ok = {
+                    let tenant = &mut self.server.tenants[ti];
+                    tenant
+                        .engine
+                        .call_idx(tenant.func, &mut tenant.mem, &tenant.args)
+                        .is_ok()
+                };
+                if !call_ok {
+                    // Trap in the offloaded path: restore, roll back to
+                    // software and replay — the same failure rollback as
+                    // the single-host server.
+                    let tenant = &mut self.server.tenants[ti];
+                    tenant.engine.unpatch(tenant.func);
+                    tenant.rolled_back = true;
+                    if let Some(snap) = snapshot {
+                        for (h, data) in snap {
+                            tenant.mem.i32s_mut(h).copy_from_slice(&data);
+                        }
+                    }
+                    if let Err(e) =
+                        tenant.engine.call_idx(tenant.func, &mut tenant.mem, &tenant.args)
+                    {
+                        tenant.reject = Some(format!("software replay failed: {e}"));
+                    }
+                }
+
+                // ---- virtual time: remote, degraded-local, or software ----
+                let offloaded = {
+                    let t = &self.server.tenants[ti];
+                    !t.rolled_back && t.offload.is_some() && t.engine.is_patched(t.func)
+                };
+                if offloaded {
+                    let (key, cfg_bytes, h2d, d2h, exec) = {
+                        let t = &self.server.tenants[ti];
+                        let o = t.offload.as_ref().unwrap();
+                        let r = t.state.as_ref().unwrap().borrow().last_report;
+                        (
+                            o.key,
+                            o.config_words * 4,
+                            r.h2d_bytes,
+                            r.d2h_bytes,
+                            r.dfe_exec.as_secs_f64(),
+                        )
+                    };
+                    self.counters.remote_requests += 1;
+                    let inv_key = invocation_key(ti, seq);
+                    match self
+                        .serve_remote(ti, inv_key, key, cfg_bytes, h2d, d2h, exec, round_start)
+                    {
+                        Some(done) => {
+                            self.server.tenants[ti].remote_served += 1;
+                            round_end = round_end.max(done);
+                        }
+                        None => {
+                            // Degradation rung 1: the local shard fabric.
+                            let done = self.fallback_local(
+                                key, cfg_bytes, h2d, d2h, exec, round_start, &mut round_load,
+                            );
+                            self.counters.fallback_local += 1;
+                            self.server.tenants[ti].fallback_local += 1;
+                            round_end = round_end.max(done);
+                        }
+                    }
+                } else {
+                    // Degradation rung 2: the interpreter (one serialized
+                    // host core).
+                    let t = &mut self.server.tenants[ti];
+                    host_free = host_free.max(round_start) + t.baseline_per_inv.as_secs_f64();
+                    t.fallback_software += 1;
+                    self.counters.fallback_software += 1;
+                    round_end = round_end.max(host_free);
+                }
+                self.server.tenants[ti].served += 1;
+            }
+
+            self.clock = round_end.max(round_start);
+            self.server.clock = Duration::from_secs_f64(self.clock);
+
+            // ---- per-tenant rollback pass over this round ----
+            for &ti in &batch {
+                let t = &mut self.server.tenants[ti];
+                if t.rolled_back {
+                    continue;
+                }
+                let Some(state) = t.state.clone() else { continue };
+                let st = state.borrow();
+                let decided =
+                    st.failed || st.invocations >= self.server.params.rollback_window;
+                if decided && st.invocations > 0 {
+                    let per_inv = st.virtual_offload / st.invocations as u32;
+                    if st.failed || per_inv > t.baseline_per_inv {
+                        drop(st);
+                        t.engine.unpatch(t.func);
+                        t.rolled_back = true;
+                    }
+                }
+            }
+
+            // ---- per-tenant adaptive respecialization pass ----
+            if let Some(ap) = self.server.params.adapt.clone() {
+                for ti in 0..n_t {
+                    self.server.adapt_tenant(ti, &ap);
+                }
+            }
+        }
+        self.report()
+    }
+
+    /// Dispatch one remote exchange with retries. Returns the completion
+    /// time on success; `None` when the retry budget is exhausted or no
+    /// node is usable (the caller degrades to the local fabric).
+    #[allow(clippy::too_many_arguments)]
+    fn serve_remote(
+        &mut self,
+        ti: usize,
+        inv_key: u64,
+        cfg_key: u64,
+        cfg_bytes: u64,
+        h2d: u64,
+        d2h: u64,
+        exec: f64,
+        round_start: f64,
+    ) -> Option<f64> {
+        let mut now = round_start;
+        for attempt in 0..=self.params.max_retries {
+            let node = self.pick_node(cfg_key, now)?;
+            let (up_payload, exec_total, reconfig) = {
+                let n = &self.nodes[node];
+                if n.resident == Some(cfg_key) {
+                    (h2d, exec, false)
+                } else {
+                    let eps = self.server.params.reconfig_epsilon.as_secs_f64();
+                    (cfg_bytes + h2d, exec + eps, true)
+                }
+            };
+            match self.nodes[node].link.exchange(up_payload, d2h, exec_total, now) {
+                Attempt::Delivered { up, down, dup, reordered } => {
+                    let n = &mut self.nodes[node];
+                    if reconfig {
+                        n.resident = Some(cfg_key);
+                        n.reconfigs += 1;
+                    }
+                    let (_, done) = n.timeline.exchange(up, exec_total, down, now);
+                    n.inflight += 1;
+                    n.served += 1;
+                    n.record_success();
+                    // Idempotent application: the first result for this
+                    // invocation key applies, every later copy — a
+                    // duplicate datagram or a reordered straggler — is a
+                    // ledger no-op.
+                    if self.applied.insert(inv_key) {
+                        self.counters.applied_results += 1;
+                    } else {
+                        self.counters.dup_suppressed += 1;
+                    }
+                    if dup && !self.applied.insert(inv_key) {
+                        self.counters.dup_suppressed += 1;
+                    }
+                    if reordered {
+                        self.counters.reordered_absorbed += 1;
+                    }
+                    return Some(done);
+                }
+                Attempt::Lost { wait } => {
+                    now += wait;
+                    self.nodes[node].record_failure(
+                        now,
+                        self.params.breaker_threshold,
+                        self.params.breaker_cooldown,
+                    );
+                }
+                Attempt::Down { until: _ } => {
+                    // The caller only learns from its own timer, not the
+                    // crash window's true span. A crash opens the breaker
+                    // immediately (no threshold): the node is down for a
+                    // whole window, not flaking on one datagram.
+                    now += self.params.net.timeout;
+                    self.nodes[node].record_crash(now, self.params.breaker_cooldown);
+                }
+            }
+            if attempt < self.params.max_retries {
+                self.counters.retries += 1;
+                self.server.tenants[ti].retries += 1;
+                now += backoff_delay(
+                    self.params.backoff_base,
+                    self.params.backoff_cap,
+                    attempt,
+                    &mut self.rng,
+                );
+            }
+        }
+        None
+    }
+
+    /// Pick the node for `cfg_key` at `now`: configuration affinity first
+    /// among usable nodes, otherwise the transport-aware score — earliest
+    /// availability plus the expected retransmit cost of the node's
+    /// observed loss rate — so flaky nodes lose placements to healthy
+    /// ones.
+    fn pick_node(&mut self, cfg_key: u64, now: f64) -> Option<usize> {
+        for n in self.nodes.iter_mut() {
+            n.probe(now);
+        }
+        let depth = self.params.node_depth;
+        let usable = |n: &FleetNode| {
+            !matches!(n.breaker, Breaker::Open { .. })
+                && !n.link.is_down(now)
+                && n.inflight < depth
+        };
+        if let Some(i) =
+            self.nodes.iter().position(|n| usable(n) && n.resident == Some(cfg_key))
+        {
+            return Some(i);
+        }
+        let mut best: Option<(usize, f64)> = None;
+        for (i, n) in self.nodes.iter().enumerate() {
+            if !usable(n) {
+                continue;
+            }
+            let penalty = (expected_sends(n.drop_estimate(), self.params.max_retries) - 1.0)
+                * n.link.params.timeout;
+            let score = n.timeline.available(now) + penalty;
+            if best.map(|(_, s)| score < s).unwrap_or(true) {
+                best = Some((i, score));
+            }
+        }
+        best.map(|(i, _)| i)
+    }
+
+    /// Degradation rung 1: run the exchange on the local shard fabric
+    /// with the single-host sync accounting (PCIe up → exec → PCIe down,
+    /// serialized per shard). Returns the completion time.
+    #[allow(clippy::too_many_arguments)]
+    fn fallback_local(
+        &mut self,
+        key: u64,
+        cfg_bytes: u64,
+        h2d: u64,
+        d2h: u64,
+        exec: f64,
+        now: f64,
+        round_load: &mut [u32],
+    ) -> f64 {
+        let shard = pick_shard(&self.server.shards, round_load, key);
+        round_load[shard] += 1;
+        let pcie = self.server.params.pcie;
+        let eps = self.server.params.reconfig_epsilon.as_secs_f64();
+        let mut cost = pcie.transfer_secs(h2d) + exec + pcie.transfer_secs(d2h);
+        let s = &mut self.server.shards[shard];
+        if s.resident != Some(key) {
+            s.resident = Some(key);
+            s.reconfigs += 1;
+            cost += eps + pcie.transfer_secs(cfg_bytes);
+        }
+        let start = s.busy_secs.max(now);
+        s.busy_secs = start + cost;
+        s.busy_until = Duration::from_secs_f64(s.busy_secs);
+        s.executed += 1;
+        s.busy_secs
+    }
+
+    /// Assemble the fleet report (the wrapped serve report plus per-node
+    /// health/traffic and the reliability counters).
+    pub fn report(&self) -> FleetReport {
+        FleetReport {
+            serve: self.server.report(),
+            nodes: self
+                .nodes
+                .iter()
+                .enumerate()
+                .map(|(i, n)| NodeReport {
+                    node: i,
+                    served: n.served,
+                    reconfigs: n.reconfigs,
+                    breaker_opens: n.breaker_opens,
+                    breaker_closes: n.breaker_closes,
+                    breaker: n.breaker,
+                    net: n.link.stats,
+                })
+                .collect(),
+            counters: self.counters,
+        }
+    }
+}
+
+/// One node's slice of the fleet report.
+#[derive(Clone, Copy, Debug)]
+pub struct NodeReport {
+    pub node: usize,
+    pub served: u64,
+    pub reconfigs: u64,
+    pub breaker_opens: u64,
+    pub breaker_closes: u64,
+    pub breaker: Breaker,
+    pub net: NetStats,
+}
+
+/// The aggregate fleet report: the wrapped [`ServeReport`] plus per-node
+/// health and the reliability-ladder counters.
+#[derive(Clone, Debug)]
+pub struct FleetReport {
+    pub serve: ServeReport,
+    pub nodes: Vec<NodeReport>,
+    pub counters: FleetCounters,
+}
+
+impl fmt::Display for FleetReport {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "{}", self.serve)?;
+        for n in &self.nodes {
+            writeln!(
+                f,
+                "node {} [{}]: {} served, {} reconfigs, breaker {}x open/{}x closed, \
+                 net {}ex/{}del/{}drop/{}dup/{}reord/{}crash",
+                n.node,
+                n.breaker,
+                n.served,
+                n.reconfigs,
+                n.breaker_opens,
+                n.breaker_closes,
+                n.net.exchanges,
+                n.net.delivered,
+                n.net.dropped,
+                n.net.duplicated,
+                n.net.reordered,
+                n.net.crash_windows,
+            )?;
+        }
+        let c = &self.counters;
+        write!(
+            f,
+            "fleet: {} remote ({} applied, {} dup suppressed, {} reordered absorbed), \
+             {} retries, {} deferred, {} fell back local, {} software",
+            c.remote_requests,
+            c.applied_results,
+            c.dup_suppressed,
+            c.reordered_absorbed,
+            c.retries,
+            c.deferred,
+            c.fallback_local,
+            c.fallback_software,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn node() -> FleetNode {
+        FleetNode::new(NetParams::lan_like(), 0, 1)
+    }
+
+    #[test]
+    fn breaker_opens_probes_and_recovers() {
+        let mut n = node();
+        // Two failures stay closed at threshold 3.
+        n.record_failure(0.0, 3, 1.0);
+        n.record_failure(0.0, 3, 1.0);
+        assert_eq!(n.breaker, Breaker::Closed);
+        // Third consecutive failure trips it.
+        n.record_failure(0.0, 3, 1.0);
+        assert_eq!(n.breaker, Breaker::Open { until: 1.0 });
+        assert_eq!(n.breaker_opens, 1);
+        // Cooldown not elapsed: stays open. Elapsed: half-open probe.
+        n.probe(0.5);
+        assert!(matches!(n.breaker, Breaker::Open { .. }));
+        n.probe(1.0);
+        assert_eq!(n.breaker, Breaker::HalfOpen);
+        // A failed probe reopens immediately (no threshold wait).
+        n.record_failure(1.0, 3, 1.0);
+        assert_eq!(n.breaker, Breaker::Open { until: 2.0 });
+        assert_eq!(n.breaker_opens, 2);
+        // A successful probe closes and resets the streak.
+        n.probe(2.0);
+        n.record_success();
+        assert_eq!(n.breaker, Breaker::Closed);
+        assert_eq!(n.breaker_closes, 1);
+        assert_eq!(n.consecutive_failures, 0);
+    }
+
+    #[test]
+    fn crash_refusal_opens_the_breaker_immediately() {
+        let mut n = node();
+        // No threshold wait: one crash-window refusal trips it.
+        n.record_crash(5.0, 1.0);
+        assert_eq!(n.breaker, Breaker::Open { until: 6.0 });
+        assert_eq!(n.breaker_opens, 1);
+        // A second refusal while already open does not double-count.
+        n.record_crash(5.5, 1.0);
+        assert_eq!(n.breaker_opens, 1);
+        // The usual recovery path still applies.
+        n.probe(6.0);
+        assert_eq!(n.breaker, Breaker::HalfOpen);
+        n.record_success();
+        assert_eq!(n.breaker, Breaker::Closed);
+    }
+
+    #[test]
+    fn backoff_envelope_doubles_then_caps() {
+        let (base, cap) = (1e-3, 6e-3);
+        assert_eq!(backoff_envelope(base, cap, 0), 1e-3);
+        assert_eq!(backoff_envelope(base, cap, 1), 2e-3);
+        assert_eq!(backoff_envelope(base, cap, 2), 4e-3);
+        assert_eq!(backoff_envelope(base, cap, 3), 6e-3, "capped");
+        assert_eq!(backoff_envelope(base, cap, 60), 6e-3, "stays capped");
+        let mut rng = Rng::new(9);
+        for attempt in 0..8 {
+            let d = backoff_delay(base, cap, attempt, &mut rng);
+            let env = backoff_envelope(base, cap, attempt);
+            assert!(d > 0.0 && d <= env, "jitter must stay inside the envelope");
+            assert!(d >= env / 2.0, "jitter floor is half the envelope");
+        }
+    }
+
+    #[test]
+    fn invocation_keys_are_distinct_per_tenant_and_seq() {
+        let mut seen = std::collections::HashSet::new();
+        for tenant in 0..16 {
+            for seq in 0..256 {
+                assert!(
+                    seen.insert(invocation_key(tenant, seq)),
+                    "collision at ({tenant}, {seq})"
+                );
+                // Retransmits reuse the key: stability is the whole point.
+                assert_eq!(invocation_key(tenant, seq), invocation_key(tenant, seq));
+            }
+        }
+    }
+
+    #[test]
+    fn fleet_rejects_zero_nodes_structurally() {
+        let err = FleetServer::new(
+            ServeParams::default(),
+            FleetParams { nodes: 0, ..Default::default() },
+            vec![super::super::server::gemm_spec()],
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("at least one node"), "{err}");
+    }
+
+    #[test]
+    fn drop_estimate_prior_then_observed() {
+        let fault = FaultProfile { drop: 0.25, ..FaultProfile::healthy() };
+        let mut n = FleetNode::new(
+            NetParams { fault, ..NetParams::lan_like() },
+            0,
+            3,
+        );
+        assert_eq!(n.drop_estimate(), 0.25, "configured prior before evidence");
+        for _ in 0..200 {
+            n.link.exchange(64, 64, 0.0, 0.0);
+        }
+        let est = n.drop_estimate();
+        assert!((0.1..0.45).contains(&est), "observed rate near 0.25, got {est}");
+    }
+}

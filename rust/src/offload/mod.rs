@@ -8,6 +8,7 @@
 //! produced implementation perform worse than the original one").
 
 pub mod adapt;
+pub mod fleet;
 pub mod server;
 pub mod stub;
 

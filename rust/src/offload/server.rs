@@ -63,6 +63,42 @@ use super::{CompileSlot, OffloadManager, OffloadParams, RejectReason, RuntimeSta
 /// application for a few seconds").
 pub const WARMUP_REQUESTS: u64 = 2;
 
+/// Structured serve-layer construction errors. These were panics/bails in
+/// the pre-fleet server; a fleet supervisor has to be able to reject a bad
+/// topology (zero shards, a partition the grid cannot host) without dying,
+/// so they are a real enum the caller can match on.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ServeError {
+    /// No tenant specs were provided.
+    NoTenants,
+    /// `shards == 0`.
+    NoShards,
+    /// Fleet construction with zero remote nodes.
+    NoNodes,
+    /// The grid partition produced no regions.
+    EmptyPartition { shards: usize },
+    /// More shards requested than the grid has cells to host.
+    InfeasiblePartition { shards: usize, rows: usize, cols: usize },
+}
+
+impl fmt::Display for ServeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ServeError::NoTenants => write!(f, "serve needs at least one tenant"),
+            ServeError::NoShards => write!(f, "serve needs at least one shard"),
+            ServeError::NoNodes => write!(f, "fleet needs at least one node"),
+            ServeError::EmptyPartition { shards } => {
+                write!(f, "grid partition into {shards} shard(s) produced no regions")
+            }
+            ServeError::InfeasiblePartition { shards, rows, cols } => {
+                write!(f, "cannot partition a {rows}x{cols} grid into {shards} shards")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
 /// Server tunables.
 #[derive(Clone, Debug)]
 pub struct ServeParams {
@@ -236,6 +272,20 @@ pub struct Tenant {
     /// after admission (respecialization misses compiled synchronously).
     /// The S7 invariant: identically zero with the compile service on.
     pub compile_stall: Duration,
+    /// Requests that completed on a remote fleet node (fleet mode only;
+    /// 0 on the single-host path).
+    pub remote_served: u64,
+    /// Network retry attempts spent on this tenant's remote exchanges.
+    pub retries: u64,
+    /// Requests that exhausted the remote retry budget (or found no
+    /// healthy node) and fell back to the local shard fabric.
+    pub fallback_local: u64,
+    /// Requests served by the interpreter in fleet mode because no fabric
+    /// path applied (rollback, rejection, software tenant).
+    pub fallback_software: u64,
+    /// Respecialization compiles that failed structurally — the tenant
+    /// was demoted or kept its live tier instead of the server panicking.
+    pub compile_failures: u64,
     /// Respec target whose compile is in flight: `(unroll, trip_bucket,
     /// cache key)`. While pending, decision windows for the same target
     /// return immediately — no re-extraction, no spurious cache-miss
@@ -297,10 +347,10 @@ pub struct OffloadServer {
 impl OffloadServer {
     pub fn new(params: ServeParams, specs: Vec<TenantSpec>) -> Result<OffloadServer> {
         if specs.is_empty() {
-            bail!("serve needs at least one tenant");
+            return Err(Error::msg(ServeError::NoTenants));
         }
         if params.shards == 0 {
-            bail!("serve needs at least one shard");
+            return Err(Error::msg(ServeError::NoShards));
         }
         let device = device_by_name(&params.device)
             .ok_or_else(|| anyhow!("unknown device '{}'", params.device))?;
@@ -315,6 +365,13 @@ impl OffloadServer {
                 device.tool.route_ceiling_pct()
             );
         }
+        if params.shards > params.grid.rows * params.grid.cols {
+            return Err(Error::msg(ServeError::InfeasiblePartition {
+                shards: params.shards,
+                rows: params.grid.rows,
+                cols: params.grid.cols,
+            }));
+        }
         let regions = params.grid.partition(params.shards).map_err(Error::msg)?;
         // Per-region budget validation: every shard must itself be a
         // routable overlay on this device.
@@ -324,10 +381,19 @@ impl OffloadServer {
                 bail!("shard region {r} unroutable on {}", device.name);
             }
         }
-        let route_grid = Grid::new(
-            regions.iter().map(|r| r.grid.rows).min().unwrap(),
-            regions.iter().map(|r| r.grid.cols).min().unwrap(),
-        );
+        // Common routing grid: the smallest region shape. An empty
+        // partition is a structured error, never an unwrap panic.
+        let route_grid = match (
+            regions.iter().map(|r| r.grid.rows).min(),
+            regions.iter().map(|r| r.grid.cols).min(),
+        ) {
+            (Some(rows), Some(cols)) => Grid::new(rows, cols),
+            _ => {
+                return Err(Error::msg(ServeError::EmptyPartition {
+                    shards: params.shards,
+                }))
+            }
+        };
         let shards = regions
             .iter()
             .map(|&region| ShardState {
@@ -433,6 +499,11 @@ impl OffloadServer {
             window_count: 0,
             window_elements: 0,
             compile_stall: Duration::ZERO,
+            remote_served: 0,
+            retries: 0,
+            fallback_local: 0,
+            fallback_software: 0,
+            compile_failures: 0,
             pending_spec: None,
         };
         let unroll = tenant.spec.unroll;
@@ -475,7 +546,7 @@ impl OffloadServer {
     /// and the pipeline model agrees (`offload::adapt` policy, per
     /// tenant, against the *shared* cache — so a second tenant reaching
     /// the same specialization is a cache hit).
-    fn adapt_tenant(&mut self, ti: usize, ap: &AdaptParams) {
+    pub(crate) fn adapt_tenant(&mut self, ti: usize, ap: &AdaptParams) {
         // Exact per-invocation deltas from the stub's cumulative counters
         // (mirrors `adapt::AdaptController::observe` — keep in sync).
         let (inv, elements) = {
@@ -534,10 +605,29 @@ impl OffloadServer {
             Some(observed),
             true,
         );
-        if let Ok(true) = swapped {
-            let t = &mut self.tenants[ti];
-            let at_request = t.served;
-            t.respecs.push(RespecEvent { at_request, from_unroll: from, to_unroll: target });
+        match swapped {
+            Ok(true) => {
+                let t = &mut self.tenants[ti];
+                let at_request = t.served;
+                t.respecs.push(RespecEvent {
+                    at_request,
+                    from_unroll: from,
+                    to_unroll: target,
+                });
+            }
+            Ok(false) => {}
+            Err(reason) => {
+                // Structured compile failure: the serve loop survives. A
+                // tenant whose live tier still works keeps serving it; one
+                // left unpatched is demoted to software with the reason
+                // recorded for the report.
+                let t = &mut self.tenants[ti];
+                t.compile_failures += 1;
+                if !t.engine.is_patched(t.func) {
+                    t.offload = None;
+                    t.reject = Some(format!("respecialization compile failed: {reason}"));
+                }
+            }
         }
     }
 
@@ -821,7 +911,9 @@ impl OffloadServer {
         self.report()
     }
 
-    fn report(&self) -> ServeReport {
+    /// Assemble the aggregate report from the current server state
+    /// (public so fleet-layer wrappers can report after their own loop).
+    pub fn report(&self) -> ServeReport {
         let tenants: Vec<TenantReport> = self
             .tenants
             .iter()
@@ -852,6 +944,11 @@ impl OffloadServer {
                 elements: t.retired_elements
                     + t.state.as_ref().map(|s| s.borrow().total_elements).unwrap_or(0),
                 compile_stall_secs: t.compile_stall.as_secs_f64(),
+                remote_served: t.remote_served,
+                retries: t.retries,
+                fallback_local: t.fallback_local,
+                fallback_software: t.fallback_software,
+                compile_failures: t.compile_failures,
             })
             .collect();
         let shards = self
@@ -977,9 +1074,9 @@ fn offload_tenant_impl(
         // Blocking portfolio race; the entry carries provenance (winning
         // seed, stats, placement) and the lowered wave executor, so
         // tenants hitting it skip P&R *and* the lowering.
-        let (c, _) = compile
-            .compile(cache, &off.dfg, key, warm, false)?
-            .expect("blocking compile returns an artifact");
+        let (c, _) = compile.compile(cache, &off.dfg, key, warm, false)?.ok_or_else(|| {
+            RejectReason::Unroutable("blocking compile produced no artifact".into())
+        })?;
         if respec {
             t.compile_stall += t0.elapsed();
         }
@@ -1155,9 +1252,12 @@ fn offload_tenant_tiled(
                     .clone()
                     .map(ParSeed::Warm)
                     .unwrap_or(ParSeed::Cold);
-                let (c, _) = compile
-                    .compile(cache, &tile.dfg, tk, warm, false)?
-                    .expect("blocking compile returns an artifact");
+                let (c, _) =
+                    compile.compile(cache, &tile.dfg, tk, warm, false)?.ok_or_else(|| {
+                        RejectReason::Unroutable(
+                            "blocking tile compile produced no artifact".into(),
+                        )
+                    })?;
                 c
             };
             tiles.push(PlanTile {
@@ -1266,7 +1366,7 @@ fn offload_tenant_tiled(
 /// Prefer the shard already holding `key`'s configuration; otherwise the
 /// least-loaded shard (fewest requests assigned this round, then earliest
 /// idle — `busy_until` alone is stale inside a round).
-fn pick_shard(shards: &[ShardState], round_load: &[u32], key: u64) -> usize {
+pub(crate) fn pick_shard(shards: &[ShardState], round_load: &[u32], key: u64) -> usize {
     for (i, s) in shards.iter().enumerate() {
         if s.resident == Some(key) {
             return i;
@@ -1284,7 +1384,12 @@ fn pick_shard(shards: &[ShardState], round_load: &[u32], key: u64) -> usize {
 /// Hotness-weighted round robin: every active tenant gets at least one
 /// slot per pass (fairness), hotter tenants claim the leftover window
 /// proportionally to their weight.
-fn pick_batch(order: &[usize], hotness: &[f64], remaining: &[u64], window: usize) -> Vec<usize> {
+pub(crate) fn pick_batch(
+    order: &[usize],
+    hotness: &[f64],
+    remaining: &[u64],
+    window: usize,
+) -> Vec<usize> {
     if order.is_empty() || window == 0 {
         return Vec::new();
     }
@@ -1347,6 +1452,17 @@ pub struct TenantReport {
     /// Wall seconds this tenant's serving path blocked inside place &
     /// route after admission. 0 with the compile service on (S7).
     pub compile_stall_secs: f64,
+    /// Requests completed on a remote fleet node (0 single-host).
+    pub remote_served: u64,
+    /// Network retry attempts spent on this tenant's remote exchanges.
+    pub retries: u64,
+    /// Requests that fell back from the fleet to the local shard fabric.
+    pub fallback_local: u64,
+    /// Fleet-mode requests served by the interpreter.
+    pub fallback_software: u64,
+    /// Structured respecialization-compile failures (tenant demoted or
+    /// tier kept; the serve loop never died).
+    pub compile_failures: u64,
 }
 
 #[derive(Clone, Copy, Debug)]
@@ -1724,6 +1840,39 @@ mod tests {
         };
         let err = OffloadServer::new(params, vec![gemm_spec()]).unwrap_err();
         assert!(err.to_string().contains("resource budget"), "{err}");
+    }
+
+    #[test]
+    fn structured_serve_errors_instead_of_panics() {
+        let err = OffloadServer::new(ServeParams::default(), vec![]).unwrap_err();
+        assert!(err.to_string().contains("at least one tenant"), "{err}");
+        let err = OffloadServer::new(
+            ServeParams { shards: 0, ..Default::default() },
+            vec![gemm_spec()],
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("at least one shard"), "{err}");
+        // More shards than grid cells: a structured error, not a panic
+        // from partition internals or the route-grid min().
+        let err = OffloadServer::new(
+            ServeParams { shards: 7, grid: Grid::new(2, 3), ..Default::default() },
+            vec![gemm_spec()],
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("cannot partition"), "{err}");
+    }
+
+    #[test]
+    fn serve_error_displays_are_stable() {
+        assert_eq!(ServeError::NoNodes.to_string(), "fleet needs at least one node");
+        assert_eq!(
+            ServeError::InfeasiblePartition { shards: 9, rows: 2, cols: 2 }.to_string(),
+            "cannot partition a 2x2 grid into 9 shards"
+        );
+        assert_eq!(
+            ServeError::EmptyPartition { shards: 3 }.to_string(),
+            "grid partition into 3 shard(s) produced no regions"
+        );
     }
 
     #[test]

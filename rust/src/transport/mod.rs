@@ -17,9 +17,14 @@
 
 use std::time::Duration;
 
+pub mod net;
 pub mod pipeline;
 
-pub use pipeline::{chunk_plan, AsyncLink, ChunkTimeline, PlanTimeline, TransportMode};
+pub use net::{Attempt, FaultProfile, NetLink, NetParams, NetStats};
+pub use pipeline::{
+    chunk_plan, expected_sends, AsyncLink, ChunkTimeline, NodeTimeline, PlanTimeline,
+    TransportMode,
+};
 
 /// Wire protocol used for payload framing.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]

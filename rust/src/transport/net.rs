@@ -1,0 +1,354 @@
+//! Datagram network transport for fleet serving (ROADMAP item 2).
+//!
+//! The serve layer scales past one host by talking to *remote* DFE nodes
+//! over a lossy datagram link — the shape of the UDP-attached Nexys4DDR
+//! offloader (SNIPPETS.md Snippet 3): command packets out, result packets
+//! back, no reliable-stream fiction in between. Failure is a first-class
+//! input here, not an afterthought: every link carries a per-node
+//! [`FaultProfile`] (drop, duplicate, reorder, latency jitter, and node
+//! crash/recover windows), and every fault draw comes from one seeded
+//! [`Rng`] stream per node, so an entire chaos run is bit-reproducible
+//! from a single `--fault-seed`.
+//!
+//! Same discipline as the PCIe model next door ([`super::PcieParams`] /
+//! [`super::PcieSim`]): this is an *accounting* model in virtual f64
+//! seconds. [`NetLink::exchange`] decides the fate and flight times of one
+//! command→execute→result exchange; the fleet scheduler
+//! (`offload::fleet`) owns the occupancy timelines, retries, and the
+//! idempotent result application — faults may cost time, never
+//! correctness.
+
+use crate::util::prng::Rng;
+
+/// Per-node fault profile. `drop`, `dup` and `reorder` are per-exchange
+/// probabilities (an exchange is one command/result datagram pair),
+/// `crash` is the per-exchange probability of entering a crash window
+/// (the node stays down for a seed-derived span, then recovers), and
+/// `jitter` scales each flight by a uniform factor in `[1, 1+jitter]`.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct FaultProfile {
+    pub drop: f64,
+    pub dup: f64,
+    pub reorder: f64,
+    pub jitter: f64,
+    pub crash: f64,
+}
+
+impl FaultProfile {
+    /// No faults: the datagram link behaves like a reliable transport.
+    pub fn healthy() -> FaultProfile {
+        FaultProfile::default()
+    }
+
+    pub fn is_healthy(&self) -> bool {
+        self.drop == 0.0
+            && self.dup == 0.0
+            && self.reorder == 0.0
+            && self.jitter == 0.0
+            && self.crash == 0.0
+    }
+
+    /// CLI spelling: `drop=P,dup=P,reorder=P,jitter=F,crash=P`
+    /// (comma-separated, every key optional, probabilities in `[0, 1]`).
+    pub fn parse(s: &str) -> Option<FaultProfile> {
+        let mut f = FaultProfile::default();
+        for part in s.split(',').filter(|p| !p.trim().is_empty()) {
+            let (k, v) = part.split_once('=')?;
+            let v: f64 = v.trim().parse().ok()?;
+            if !(0.0..=1.0).contains(&v) {
+                return None;
+            }
+            match k.trim() {
+                "drop" => f.drop = v,
+                "dup" | "duplicate" => f.dup = v,
+                "reorder" => f.reorder = v,
+                "jitter" => f.jitter = v,
+                "crash" => f.crash = v,
+                _ => return None,
+            }
+        }
+        Some(f)
+    }
+}
+
+/// Datagram link + NIC parameters (the fleet-side sibling of
+/// [`super::PcieParams`]).
+#[derive(Clone, Copy, Debug)]
+pub struct NetParams {
+    /// Payload rate of the NIC in bytes/s.
+    pub rate: f64,
+    /// One-way propagation latency in seconds.
+    pub latency: f64,
+    /// Payload bytes per datagram.
+    pub mtu: u64,
+    /// Per-datagram header bytes on the wire (Ethernet + IP + UDP).
+    pub header: u64,
+    /// Retransmit timer: how long the caller waits on a lost exchange
+    /// before declaring it failed (floor — slow exchanges extend it).
+    pub timeout: f64,
+    pub fault: FaultProfile,
+}
+
+impl Default for NetParams {
+    fn default() -> Self {
+        NetParams::lan_like()
+    }
+}
+
+impl NetParams {
+    /// A switched-GbE LAN, the Nexys4DDR offloader's environment: 125 MB/s
+    /// on the wire, ~50 µs one-way, 1472-byte UDP payloads.
+    pub fn lan_like() -> NetParams {
+        NetParams {
+            rate: 125.0e6,
+            latency: 50e-6,
+            mtu: 1472,
+            header: 42,
+            timeout: 2e-3,
+            fault: FaultProfile::healthy(),
+        }
+    }
+
+    /// Datagrams needed for `payload` bytes (an empty command still sends
+    /// one doorbell datagram).
+    pub fn datagrams(&self, payload: u64) -> u64 {
+        payload.div_ceil(self.mtu).max(1)
+    }
+
+    /// Bytes on the wire for `payload` bytes of useful data.
+    pub fn wire_bytes(&self, payload: u64) -> u64 {
+        payload + self.header * self.datagrams(payload)
+    }
+
+    /// Modeled one-way flight time for `payload` bytes, in f64 seconds.
+    pub fn transfer_secs(&self, payload: u64) -> f64 {
+        self.latency + self.wire_bytes(payload) as f64 / self.rate
+    }
+}
+
+/// The fate of one command→execute→result exchange.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Attempt {
+    /// Both flights arrived. `up`/`down` are the (jittered) flight times
+    /// in seconds; `down` already includes any reorder delay. `dup` means
+    /// the result datagram also arrived a second time, `reordered` that
+    /// it arrived after a later exchange's result — both are idempotency
+    /// hazards the caller must absorb without double-applying.
+    Delivered { up: f64, down: f64, dup: bool, reordered: bool },
+    /// One of the flights was lost; the caller notices after `wait`
+    /// seconds (its retransmit timer, floored by the exchange's own
+    /// modeled span so slow exchanges are not declared dead early).
+    Lost { wait: f64 },
+    /// The node is inside a crash window until `until`; nothing was sent.
+    Down { until: f64 },
+}
+
+/// Cumulative per-link accounting, for reports and chaos assertions.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct NetStats {
+    /// Exchanges attempted (including ones refused by a crash window).
+    pub exchanges: u64,
+    pub delivered: u64,
+    pub dropped: u64,
+    pub duplicated: u64,
+    pub reordered: u64,
+    /// Crash windows entered.
+    pub crash_windows: u64,
+    pub payload_bytes: u64,
+    pub wire_bytes: u64,
+}
+
+/// One remote node's datagram link: fault draws + wire accounting. The
+/// occupancy timeline lives with the scheduler
+/// ([`super::pipeline::NodeTimeline`]) — this type only decides *what
+/// happens* to each exchange and what the flights cost, deterministically
+/// from `(fleet seed, node index)`.
+#[derive(Clone, Debug)]
+pub struct NetLink {
+    pub params: NetParams,
+    pub node: usize,
+    rng: Rng,
+    /// Virtual time the current crash window ends, if one is open.
+    down_until: Option<f64>,
+    pub stats: NetStats,
+}
+
+impl NetLink {
+    /// Distinct per-node fault streams from one fleet seed: the node
+    /// index is mixed in with the golden-ratio constant so node 0 with
+    /// seed S and node 1 with seed S never replay each other's schedule.
+    pub fn new(params: NetParams, node: usize, seed: u64) -> NetLink {
+        let mixed = seed ^ 0x9E37_79B9_7F4A_7C15u64.wrapping_mul(node as u64 + 1);
+        NetLink { params, node, rng: Rng::new(mixed), down_until: None, stats: NetStats::default() }
+    }
+
+    /// Whether the node is inside a crash window at `now`.
+    pub fn is_down(&self, now: f64) -> bool {
+        self.down_until.map(|u| now < u).unwrap_or(false)
+    }
+
+    /// Attempt one exchange starting at `now`: `h2d` command payload
+    /// bytes out, `exec` seconds of remote fabric time, `d2h` result
+    /// payload bytes back. All fault draws come from this link's seeded
+    /// stream in a fixed order, so identical seeds replay identical
+    /// fault schedules exchange-for-exchange.
+    pub fn exchange(&mut self, h2d: u64, d2h: u64, exec: f64, now: f64) -> Attempt {
+        self.stats.exchanges += 1;
+        let f = self.params.fault;
+        // Standing crash window: nothing transmits until it closes.
+        if let Some(until) = self.down_until {
+            if now < until {
+                return Attempt::Down { until };
+            }
+            self.down_until = None;
+        }
+        // Fresh crash? The window span is seed-derived (8–32 timeouts),
+        // so crash *and* recovery replay from the same seed.
+        if f.crash > 0.0 && self.rng.chance(f.crash) {
+            let span = self.params.timeout * (8 + self.rng.below(24)) as f64;
+            let until = now + span;
+            self.down_until = Some(until);
+            self.stats.crash_windows += 1;
+            return Attempt::Down { until };
+        }
+        let jit_up = 1.0 + f.jitter * self.rng.f64();
+        let jit_down = 1.0 + f.jitter * self.rng.f64();
+        let up = self.params.transfer_secs(h2d) * jit_up;
+        let down = self.params.transfer_secs(d2h) * jit_down;
+        if f.drop > 0.0 && self.rng.chance(f.drop) {
+            // Either flight lost: the command datagrams hit the wire
+            // regardless (that traffic is spent), the result never lands.
+            self.stats.dropped += 1;
+            self.stats.payload_bytes += h2d;
+            self.stats.wire_bytes += self.params.wire_bytes(h2d);
+            return Attempt::Lost { wait: self.params.timeout.max(up + exec + down) };
+        }
+        let dup = f.dup > 0.0 && self.rng.chance(f.dup);
+        let reordered = f.reorder > 0.0 && self.rng.chance(f.reorder);
+        // A reordered result arrives behind a later exchange's result:
+        // model it as 1–3 extra propagation delays on the down flight.
+        let down = if reordered {
+            down + self.params.latency * (1 + self.rng.below(3)) as f64
+        } else {
+            down
+        };
+        self.stats.delivered += 1;
+        self.stats.payload_bytes += h2d + d2h;
+        self.stats.wire_bytes += self.params.wire_bytes(h2d) + self.params.wire_bytes(d2h);
+        if dup {
+            self.stats.duplicated += 1;
+            // The duplicate result datagram also rides the wire.
+            self.stats.payload_bytes += d2h;
+            self.stats.wire_bytes += self.params.wire_bytes(d2h);
+        }
+        if reordered {
+            self.stats.reordered += 1;
+        }
+        Attempt::Delivered { up, down, dup, reordered }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fault_profile_parses_and_rejects() {
+        let f = FaultProfile::parse("drop=0.05,reorder=0.1,crash=0.3").unwrap();
+        assert_eq!(f.drop, 0.05);
+        assert_eq!(f.reorder, 0.1);
+        assert_eq!(f.crash, 0.3);
+        assert_eq!(f.dup, 0.0);
+        assert!(FaultProfile::parse("").unwrap().is_healthy());
+        assert!(FaultProfile::parse(" dup=0.2 , jitter=0.5 ").is_some());
+        assert!(FaultProfile::parse("drop=1.5").is_none(), "out-of-range probability");
+        assert!(FaultProfile::parse("lag=0.1").is_none(), "unknown key");
+        assert!(FaultProfile::parse("drop").is_none(), "missing value");
+    }
+
+    #[test]
+    fn wire_accounting_frames_per_datagram() {
+        let p = NetParams::lan_like();
+        assert_eq!(p.datagrams(0), 1);
+        assert_eq!(p.datagrams(1472), 1);
+        assert_eq!(p.datagrams(1473), 2);
+        assert_eq!(p.wire_bytes(1472), 1472 + 42);
+        assert_eq!(p.wire_bytes(3000), 3000 + 3 * 42);
+        // Latency floor: even a doorbell costs a propagation delay.
+        assert!(p.transfer_secs(0) >= p.latency);
+        assert!(p.transfer_secs(1 << 20) > p.transfer_secs(1 << 10));
+    }
+
+    #[test]
+    fn identical_seeds_replay_identical_fault_schedules() {
+        let fault = FaultProfile {
+            drop: 0.3,
+            dup: 0.3,
+            reorder: 0.3,
+            jitter: 0.5,
+            crash: 0.1,
+        };
+        let params = NetParams { fault, ..NetParams::lan_like() };
+        let mut a = NetLink::new(params, 2, 0xC0FFEE);
+        let mut b = NetLink::new(params, 2, 0xC0FFEE);
+        let mut now = 0.0;
+        for i in 0..500u64 {
+            let ra = a.exchange(100 + i, 200, 1e-5, now);
+            let rb = b.exchange(100 + i, 200, 1e-5, now);
+            assert_eq!(ra, rb, "exchange {i} diverged");
+            now += 1e-3;
+        }
+        assert_eq!(a.stats, b.stats);
+        // The chaos profile actually exercised every fault class.
+        assert!(a.stats.dropped > 0 && a.stats.duplicated > 0);
+        assert!(a.stats.reordered > 0 && a.stats.crash_windows > 0);
+    }
+
+    #[test]
+    fn distinct_nodes_have_distinct_schedules() {
+        let fault = FaultProfile { drop: 0.5, ..FaultProfile::healthy() };
+        let params = NetParams { fault, ..NetParams::lan_like() };
+        let mut a = NetLink::new(params, 0, 42);
+        let mut b = NetLink::new(params, 1, 42);
+        let outcomes: (Vec<_>, Vec<_>) = (0..64)
+            .map(|_| (a.exchange(64, 64, 0.0, 0.0), b.exchange(64, 64, 0.0, 0.0)))
+            .unzip();
+        assert_ne!(outcomes.0, outcomes.1, "node streams must not be correlated");
+    }
+
+    #[test]
+    fn crash_window_refuses_then_recovers() {
+        let fault = FaultProfile { crash: 1.0, ..FaultProfile::healthy() };
+        let params = NetParams { fault, ..NetParams::lan_like() };
+        let mut link = NetLink::new(params, 0, 7);
+        let Attempt::Down { until } = link.exchange(64, 64, 0.0, 0.0) else {
+            panic!("crash=1.0 must enter a window on the first exchange");
+        };
+        assert!(link.is_down(until / 2.0));
+        assert_eq!(link.exchange(64, 64, 0.0, until / 2.0), Attempt::Down { until });
+        assert!(!link.is_down(until));
+        // After the window the node draws afresh (and crashes again under
+        // crash=1.0 — but the standing window is cleared first).
+        match link.exchange(64, 64, 0.0, until) {
+            Attempt::Down { until: u2 } => assert!(u2 > until, "new window, not the old one"),
+            other => panic!("unexpected {other:?}"),
+        }
+        assert_eq!(link.stats.crash_windows, 2);
+    }
+
+    #[test]
+    fn healthy_link_always_delivers() {
+        let mut link = NetLink::new(NetParams::lan_like(), 0, 1);
+        for _ in 0..100 {
+            match link.exchange(4096, 1024, 1e-6, 0.0) {
+                Attempt::Delivered { up, down, dup, reordered } => {
+                    assert!(up > 0.0 && down > 0.0);
+                    assert!(!dup && !reordered);
+                }
+                other => panic!("healthy link produced {other:?}"),
+            }
+        }
+        assert_eq!(link.stats.delivered, 100);
+        assert_eq!(link.stats.dropped, 0);
+    }
+}

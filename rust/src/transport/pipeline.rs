@@ -334,6 +334,58 @@ impl AsyncLink {
     }
 }
 
+/// One remote fleet node's full-duplex link timeline (the per-node
+/// sibling of [`AsyncLink`], in the same virtual f64 seconds). The fleet
+/// scheduler consults [`NodeTimeline::available`] when placing a request
+/// and occupies both directions with [`NodeTimeline::exchange`] once the
+/// datagram model (`transport::net`) has decided the exchange's fate —
+/// occupancy and fault draws stay separate so a replayed fault schedule
+/// never depends on scheduling order.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct NodeTimeline {
+    pub up_free: f64,
+    pub down_free: f64,
+}
+
+impl NodeTimeline {
+    pub fn new() -> NodeTimeline {
+        NodeTimeline::default()
+    }
+
+    /// Earliest time a new exchange could start at `now`.
+    pub fn available(&self, now: f64) -> f64 {
+        self.up_free.max(now)
+    }
+
+    /// Occupy the node for one command→execute→result exchange: `up`
+    /// seconds on the command direction, `exec` on the remote fabric,
+    /// `down` on the result direction. Returns `(start, done)`.
+    pub fn exchange(&mut self, up: f64, exec: f64, down: f64, now: f64) -> (f64, f64) {
+        let start = self.available(now);
+        self.up_free = start + up;
+        let exec_done = start + up + exec;
+        let down_start = exec_done.max(self.down_free);
+        let done = down_start + down;
+        self.down_free = done;
+        (start, done)
+    }
+}
+
+/// Expected datagram transmissions per *delivered* exchange on a link
+/// that drops with i.i.d. probability `p`, given at most `retries`
+/// retransmissions: the truncated geometric series
+/// `1 + p + p² + … + p^retries`. This is the fleet scheduler's
+/// transport-aware penalty — a flaky node's modeled exchange time is
+/// scaled by it, so flaky nodes lose placements (and promotions) to
+/// healthy ones even when their raw link is idle.
+pub fn expected_sends(p: f64, retries: u32) -> f64 {
+    let p = p.clamp(0.0, 1.0);
+    if p >= 1.0 {
+        return (retries + 1) as f64;
+    }
+    (1.0 - p.powi(retries as i32 + 1)) / (1.0 - p)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -520,5 +572,34 @@ mod tests {
         assert_eq!((s, e), (5.0, 5.0));
         assert_eq!(link.sim.transfers, 0);
         assert_eq!(link.up_free, 0.0);
+    }
+
+    #[test]
+    fn node_timeline_serializes_exchanges_full_duplex() {
+        let mut tl = NodeTimeline::new();
+        let (s0, d0) = tl.exchange(2.0, 1.0, 3.0, 0.0);
+        assert_eq!((s0, d0), (0.0, 6.0));
+        // The next exchange starts when the up direction frees (t=2), its
+        // download waits behind the first result flight.
+        let (s1, d1) = tl.exchange(2.0, 1.0, 3.0, 0.0);
+        assert_eq!(s1, 2.0);
+        assert_eq!(d1, 9.0, "down direction is one resource");
+        assert_eq!(tl.available(100.0), 100.0);
+    }
+
+    #[test]
+    fn expected_sends_is_monotone_and_bounded() {
+        assert_eq!(expected_sends(0.0, 4), 1.0);
+        assert_eq!(expected_sends(1.0, 4), 5.0);
+        let mut prev = 0.0;
+        for i in 0..=10 {
+            let p = i as f64 / 10.0;
+            let e = expected_sends(p, 3);
+            assert!(e >= prev, "monotone in p: {e} < {prev}");
+            assert!((1.0..=4.0).contains(&e));
+            prev = e;
+        }
+        // More retry budget, more expected sends on a lossy link.
+        assert!(expected_sends(0.5, 6) > expected_sends(0.5, 1));
     }
 }

@@ -1,0 +1,215 @@
+//! Chaos suite for the fleet layer (`offload::fleet` + `transport::net`):
+//!   F1  one fault seed replays an entire chaos run bit-for-bit —
+//!       identical counters, per-node traffic, makespan and outputs;
+//!   F2  duplicated and reordered result datagrams never double-apply
+//!       (the idempotency ledger absorbs every extra copy);
+//!   F3  a crash-prone node trips its circuit breaker and the fleet keeps
+//!       serving through the healthy node (flaky nodes lose placements);
+//!   F4  total loss degrades every request to the local shard fabric and
+//!       the output still matches the interpreter oracle bit-for-bit;
+//!   F5  lossy and healthy runs produce bit-identical outputs — faults
+//!       cost retries and latency, never numerics;
+//!   F6  admission backpressure defers rather than overloads a saturated
+//!       healthy fleet, and every deferred request still completes;
+//!   F7  the ledger arithmetic is internally consistent — every remote
+//!       request applies once or degrades once, per-tenant counters sum
+//!       to the fleet counters, per-node serve counts sum to the ledger.
+
+use tlo::offload::fleet::{FleetCounters, FleetParams, FleetReport, FleetServer};
+use tlo::offload::server::{polybench_mix, run_single_tenant, ServeParams, TenantSpec};
+use tlo::transport::{FaultProfile, NetParams};
+
+fn serve_params() -> ServeParams {
+    ServeParams {
+        shards: 2,
+        // Offload economics are not under test; keep tenants patched.
+        rollback_window: u64::MAX,
+        ..Default::default()
+    }
+}
+
+fn fleet_params(fault: FaultProfile) -> FleetParams {
+    FleetParams {
+        nodes: 3,
+        net: NetParams { fault, ..NetParams::lan_like() },
+        fault_seed: 0xC0FFEE,
+        ..Default::default()
+    }
+}
+
+fn run_fleet(
+    fleet: FleetParams,
+    specs: Vec<TenantSpec>,
+    requests: u64,
+) -> (FleetReport, Vec<Vec<Vec<i32>>>) {
+    let mut server = FleetServer::new(serve_params(), fleet, specs).expect("fleet server");
+    let report = server.run(requests);
+    let outs = (0..server.n_tenants()).map(|i| server.tenant_outputs(i)).collect();
+    (report, outs)
+}
+
+fn node_counters(report: &FleetReport) -> Vec<(u64, u64, tlo::transport::NetStats)> {
+    report.nodes.iter().map(|n| (n.served, n.breaker_opens, n.net)).collect()
+}
+
+#[test]
+fn f1_fault_schedules_replay_from_one_seed() {
+    let fault = FaultProfile { drop: 0.2, dup: 0.2, reorder: 0.2, jitter: 0.3, crash: 0.05 };
+    let (ra, outs_a) = run_fleet(fleet_params(fault), polybench_mix(4), 8);
+    let (rb, outs_b) = run_fleet(fleet_params(fault), polybench_mix(4), 8);
+    assert_eq!(ra.counters, rb.counters, "reliability counters diverged across replays");
+    assert_eq!(node_counters(&ra), node_counters(&rb), "per-node schedules diverged");
+    assert_eq!(ra.serve.makespan, rb.serve.makespan, "virtual time diverged");
+    assert_eq!(outs_a, outs_b, "numerics diverged across replays");
+    // The chaos run must actually have exercised the fault machinery.
+    assert!(ra.counters.retries > 0, "lossy profile produced no retries: {:?}", ra.counters);
+    // A different seed draws a different schedule (same workload).
+    let mut other = fleet_params(fault);
+    other.fault_seed = 0xBEEF;
+    let (rc, outs_c) = run_fleet(other, polybench_mix(4), 8);
+    assert_ne!(
+        node_counters(&ra),
+        node_counters(&rc),
+        "distinct seeds must draw distinct fault schedules"
+    );
+    assert_eq!(outs_a, outs_c, "the seed may only move time, never numerics");
+}
+
+#[test]
+fn f2_duplicates_and_reorders_never_double_apply() {
+    let fault = FaultProfile { dup: 0.5, reorder: 0.5, ..FaultProfile::healthy() };
+    let (report, outs) = run_fleet(fleet_params(fault), polybench_mix(4), 6);
+    let c = &report.counters;
+    assert!(c.remote_requests > 0, "mix must offload remotely");
+    // No loss: every remote request delivers on its first send and
+    // applies exactly once.
+    assert_eq!(c.retries, 0);
+    assert_eq!(c.applied_results, c.remote_requests, "one application per invocation");
+    // Every duplicated result datagram the links produced was absorbed by
+    // the idempotency ledger, and reordered arrivals were keyed in.
+    let link_dups: u64 = report.nodes.iter().map(|n| n.net.duplicated).sum();
+    let link_reord: u64 = report.nodes.iter().map(|n| n.net.reordered).sum();
+    assert!(link_dups > 0, "dup=0.5 produced no duplicates");
+    assert!(link_reord > 0, "reorder=0.5 produced no reorders");
+    assert_eq!(c.dup_suppressed, link_dups, "ledger must absorb every duplicate");
+    assert_eq!(c.reordered_absorbed, link_reord);
+    // And none of it touched numerics.
+    for (i, spec) in polybench_mix(4).iter().enumerate() {
+        let want = run_single_tenant(spec, 6).expect("oracle");
+        assert_eq!(outs[i], want, "tenant {} diverged under dup/reorder", spec.name);
+    }
+}
+
+#[test]
+fn f3_breaker_trips_on_crashy_node_and_fleet_keeps_serving() {
+    let mut fleet = fleet_params(FaultProfile::healthy());
+    fleet.nodes = 2;
+    // Node 0 crashes constantly; node 1 is healthy.
+    fleet.node_faults =
+        vec![FaultProfile { crash: 0.9, ..FaultProfile::healthy() }, FaultProfile::healthy()];
+    let (report, outs) = run_fleet(fleet, polybench_mix(4), 8);
+    let crashy = &report.nodes[0];
+    let healthy = &report.nodes[1];
+    assert!(
+        crashy.breaker_opens >= 1,
+        "crash-prone node must trip its breaker: {crashy:?}"
+    );
+    assert!(healthy.breaker_opens == 0, "healthy node must stay closed: {healthy:?}");
+    assert!(
+        healthy.served > crashy.served,
+        "flaky node must lose placements: {} vs {}",
+        healthy.served,
+        crashy.served
+    );
+    // The fleet as a whole absorbed the crashes: every remote request
+    // still completed somewhere (remote or degraded-local), numerics
+    // intact.
+    let c = &report.counters;
+    assert_eq!(c.applied_results + c.fallback_local, c.remote_requests);
+    for (i, spec) in polybench_mix(4).iter().enumerate() {
+        let want = run_single_tenant(spec, 8).expect("oracle");
+        assert_eq!(outs[i], want, "tenant {} diverged under node crashes", spec.name);
+    }
+}
+
+#[test]
+fn f4_total_loss_degrades_to_local_fabric_bit_identically() {
+    let fault = FaultProfile { drop: 1.0, ..FaultProfile::healthy() };
+    let (report, outs) = run_fleet(fleet_params(fault), polybench_mix(4), 6);
+    let c = &report.counters;
+    assert!(c.remote_requests > 0);
+    assert_eq!(c.applied_results, 0, "nothing can deliver under drop=1.0");
+    assert_eq!(
+        c.fallback_local, c.remote_requests,
+        "every remote request must degrade to the local shard fabric"
+    );
+    assert!(c.retries > 0, "the retry budget must be spent before degrading");
+    let executed: u64 = report.serve.shards.iter().map(|s| s.executed).sum();
+    assert_eq!(executed, c.fallback_local, "local shards absorbed the degraded load");
+    for (i, spec) in polybench_mix(4).iter().enumerate() {
+        let want = run_single_tenant(spec, 6).expect("oracle");
+        assert_eq!(outs[i], want, "tenant {} diverged under total loss", spec.name);
+    }
+}
+
+#[test]
+fn f5_lossy_run_is_bit_identical_to_healthy_run() {
+    let (healthy, outs_h) = run_fleet(fleet_params(FaultProfile::healthy()), polybench_mix(5), 5);
+    let lossy_profile =
+        FaultProfile { drop: 0.3, dup: 0.2, reorder: 0.2, jitter: 0.5, crash: 0.1 };
+    let (lossy, outs_l) = run_fleet(fleet_params(lossy_profile), polybench_mix(5), 5);
+    assert_eq!(outs_h, outs_l, "faults may cost time, never correctness");
+    assert_eq!(healthy.serve.total_elements, lossy.serve.total_elements);
+    assert_eq!(healthy.counters.retries, 0, "healthy fleet never retries");
+    assert!(lossy.counters.retries > 0, "lossy fleet must have retried");
+    assert!(
+        lossy.serve.makespan > healthy.serve.makespan,
+        "faults must cost virtual time: lossy {:?} vs healthy {:?}",
+        lossy.serve.makespan,
+        healthy.serve.makespan
+    );
+}
+
+#[test]
+fn f6_backpressure_defers_but_completes_everything() {
+    let mut fleet = fleet_params(FaultProfile::healthy());
+    fleet.nodes = 1;
+    fleet.node_depth = 1;
+    let requests = 5;
+    let specs = polybench_mix(4);
+    let n = specs.len() as u64;
+    let (report, outs) = run_fleet(fleet, specs.clone(), requests);
+    let c = &report.counters;
+    assert!(
+        c.deferred > 0,
+        "one node at depth 1 under 4 tenants must defer: {c:?}"
+    );
+    assert_eq!(report.serve.total_requests, n * requests, "deferred work must complete");
+    assert_eq!(c.applied_results, c.remote_requests, "no remote request lost to deferral");
+    assert_eq!(c.fallback_local, 0, "backpressure defers, it does not degrade");
+    for (i, spec) in specs.iter().enumerate() {
+        let want = run_single_tenant(spec, requests).expect("oracle");
+        assert_eq!(outs[i], want, "tenant {} diverged under backpressure", spec.name);
+    }
+}
+
+#[test]
+fn f7_counters_are_internally_consistent() {
+    // Cross-check the ledger arithmetic under a mixed profile: every
+    // remote request either applied remotely or degraded locally, and the
+    // per-tenant counters in the serve report sum to the fleet counters.
+    let fault = FaultProfile { drop: 0.25, dup: 0.25, reorder: 0.1, jitter: 0.2, crash: 0.05 };
+    let (report, _) = run_fleet(fleet_params(fault), polybench_mix(4), 8);
+    let c: FleetCounters = report.counters;
+    assert_eq!(c.applied_results + c.fallback_local, c.remote_requests);
+    let t_remote: u64 = report.serve.tenants.iter().map(|t| t.remote_served).sum();
+    let t_retries: u64 = report.serve.tenants.iter().map(|t| t.retries).sum();
+    let t_local: u64 = report.serve.tenants.iter().map(|t| t.fallback_local).sum();
+    let t_soft: u64 = report.serve.tenants.iter().map(|t| t.fallback_software).sum();
+    assert_eq!(t_remote, c.applied_results);
+    assert_eq!(t_retries, c.retries);
+    assert_eq!(t_local, c.fallback_local);
+    assert_eq!(t_soft, c.fallback_software);
+    let node_served: u64 = report.nodes.iter().map(|n| n.served).sum();
+    assert_eq!(node_served, c.applied_results, "node serve counts match the ledger");
+}

@@ -22,7 +22,12 @@
 //!   P9  DFG partitioning is deterministic (identical tile boundaries,
 //!       spill slots and per-tile structural keys on repeated cuts),
 //!       `tile_key` is positional and separates distinct specialization
-//!       signatures, and the cut preserves evaluation semantics.
+//!       signatures, and the cut preserves evaluation semantics;
+//!   P10 fleet reliability: the retry backoff envelope is monotone in the
+//!       attempt number and capped (jittered delays stay inside it), and
+//!       under random fault schedules every remote request applies at
+//!       most once — replays are bit-identical and the idempotency
+//!       ledger absorbs every duplicate.
 
 use tlo::dfe::grid::Grid;
 use tlo::dfe::opcodes::{Op, ALL_OPS};
@@ -457,4 +462,73 @@ fn p9_partitioning_is_deterministic_and_plan_keys_separate() {
         }
     }
     assert!(exercised >= 30, "only {exercised} partitions exercised — property too weak");
+}
+
+#[test]
+fn p10_fleet_backoff_and_retry_idempotency_under_random_faults() {
+    use tlo::offload::fleet::{backoff_delay, backoff_envelope, FleetParams, FleetServer};
+    use tlo::offload::server::{polybench_mix, ServeParams};
+    use tlo::transport::{FaultProfile, NetParams};
+
+    // Backoff: the envelope is monotone non-decreasing in the attempt
+    // number, never exceeds the cap, and the jittered delay always lands
+    // inside (0, envelope] (decorrelated but bounded retransmit pacing).
+    let mut rng = Rng::new(0xB0FF);
+    for _ in 0..50 {
+        let base = 1e-4 * (1.0 + rng.f64() * 9.0);
+        let cap = base * (1.0 + rng.f64() * 31.0);
+        let mut prev = 0.0;
+        for attempt in 0..12 {
+            let env = backoff_envelope(base, cap, attempt);
+            assert!(env >= prev, "envelope must be monotone in attempt");
+            assert!(env <= cap, "envelope must respect the cap");
+            let d = backoff_delay(base, cap, attempt, &mut rng);
+            assert!(d > 0.0 && d <= env, "delay {d} outside (0, {env}]");
+            prev = env;
+        }
+    }
+
+    // Retry idempotency under random fault schedules: however lossy the
+    // links, every dispatched remote request applies at most once (the
+    // rest degrade to the local fabric), the ledger absorbs every
+    // duplicate, and a replay from the same seed is bit-identical.
+    let mut exercised_dups = 0u64;
+    let mut exercised_remote = 0u64;
+    for case in 0..4u64 {
+        let fault = FaultProfile {
+            drop: rng.f64() * 0.5,
+            dup: rng.f64() * 0.5,
+            reorder: rng.f64() * 0.5,
+            jitter: rng.f64() * 0.5,
+            crash: rng.f64() * 0.2,
+        };
+        let run = |seed: u64| {
+            let serve = ServeParams { rollback_window: u64::MAX, ..Default::default() };
+            let fleet = FleetParams {
+                nodes: 2,
+                net: NetParams { fault, ..NetParams::lan_like() },
+                fault_seed: seed,
+                ..Default::default()
+            };
+            let mut s = FleetServer::new(serve, fleet, polybench_mix(3)).expect("fleet");
+            let rep = s.run(4);
+            let outs: Vec<Vec<Vec<i32>>> =
+                (0..s.n_tenants()).map(|i| s.tenant_outputs(i)).collect();
+            (rep.counters, outs)
+        };
+        let (ca, outs_a) = run(1000 + case);
+        let (cb, outs_b) = run(1000 + case);
+        assert_eq!(ca, cb, "case {case}: replay diverged");
+        assert_eq!(outs_a, outs_b, "case {case}: numerics diverged across replays");
+        assert!(ca.applied_results <= ca.remote_requests, "case {case}: over-application");
+        assert_eq!(
+            ca.applied_results + ca.fallback_local,
+            ca.remote_requests,
+            "case {case}: every remote request must apply once or degrade once"
+        );
+        exercised_dups += ca.dup_suppressed;
+        exercised_remote += ca.remote_requests;
+    }
+    assert!(exercised_remote > 0, "random cases never dispatched remote work");
+    assert!(exercised_dups > 0, "random profiles never exercised duplicate suppression");
 }
