@@ -34,6 +34,16 @@
 //! routes around it); neither costs elements — all three regimes serve
 //! identical work, and faults only move the makespan.
 //!
+//! What holds under overload (A11): the same mix with one tenant promoted
+//! to a latency-critical SLO class, run against a fabric-time budget no
+//! round can meet. The scheduler sheds best-effort classes to the
+//! software tier — never the critical class, and never numerics
+//! (`tests/serve.rs` S9 holds the bit-identity oracle) — and every
+//! tenant's log2-bucketed latency histogram lands p50/p95/p99 in the
+//! JSON. The restart leg snapshots the configuration cache to disk and
+//! proves a reloaded server serves the same work with zero
+//! place-&-route invocations.
+//!
 //! Acceptance: aggregate throughput must scale > 1.5x from 1 shard to 4,
 //! and the async transport must serve >= 1.3x the sync element
 //! throughput on the PolyBench mix (>= 1.05x in the quick smoke mode,
@@ -326,6 +336,109 @@ fn main() {
         fleet_crash.nodes[0].breaker_opens
     );
 
+    // ---- A11: SLO classes under overload + warm-restart persistence ----
+    println!(
+        "\n== A11: SLO shedding + warm restart (2 shards, {tenants} tenants x {requests} requests) =="
+    );
+    let mix_with_classes = || {
+        let mut specs = polybench_mix(tenants);
+        specs[0].priority = 3; // latency-critical; the rest stay best-effort (1)
+        specs
+    };
+    let run_slo = |slo: Option<f64>, cache_dir: Option<std::path::PathBuf>| {
+        let params = ServeParams {
+            shards: 2,
+            grid: Grid::new(16, 12),
+            rollback_window: u64::MAX,
+            slo,
+            cache_dir,
+            ..Default::default()
+        };
+        let mut server = OffloadServer::new(params, mix_with_classes()).expect("server setup");
+        let report = server.run(requests);
+        (server, report)
+    };
+    let (_, no_slo) = run_slo(None, None);
+    // A budget far below any round's fabric time: a hard, total overload.
+    let budget = 1e-9;
+    let (_, with_slo) = run_slo(Some(budget), None);
+    assert_eq!(no_slo.shed, 0, "no SLO budget must mean no shedding");
+    assert!(with_slo.shed > 0, "an overloaded budget must shed best-effort work");
+    println!(
+        "{:>10} {:>6} {:>6} {:>12} {:>12} {:>12}",
+        "tenant", "class", "shed", "p50", "p95", "p99"
+    );
+    for t in &with_slo.tenants {
+        println!(
+            "{:>10} {:>6} {:>6} {:>12} {:>12} {:>12}",
+            t.name,
+            t.priority,
+            t.shed,
+            fmt_duration(std::time::Duration::from_secs_f64(t.p50_secs)),
+            fmt_duration(std::time::Duration::from_secs_f64(t.p95_secs)),
+            fmt_duration(std::time::Duration::from_secs_f64(t.p99_secs)),
+        );
+        assert!(
+            t.p50_secs <= t.p95_secs && t.p95_secs <= t.p99_secs,
+            "{}: percentiles must be monotone",
+            t.name
+        );
+        if t.requests > 0 {
+            assert!(t.p99_secs > 0.0, "{}: served tenants must report a tail", t.name);
+        }
+    }
+    let critical =
+        with_slo.tenants.iter().find(|t| t.priority == 3).expect("critical-class row");
+    assert_eq!(critical.shed, 0, "the top class must never shed");
+    println!(
+        "PASS: overload shed {} best-effort request(s); critical class '{}' shed 0",
+        with_slo.shed, critical.name
+    );
+
+    let cache_dir = std::env::temp_dir().join(format!("tlo-bench-a11-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&cache_dir);
+    let (cold_server, cold) = run_slo(None, Some(cache_dir.clone()));
+    tlo::dfe::persist::save_cache(&cold_server.cache, &cache_dir).expect("cache snapshot");
+    let (_, warm) = run_slo(None, Some(cache_dir.clone()));
+    let _ = std::fs::remove_dir_all(&cache_dir);
+    assert!(cold.pr_compiles > 0, "the cold run must place & route its working set");
+    assert_eq!(warm.pr_compiles, 0, "a warm restart must serve with zero recompiles");
+    assert_eq!(
+        cold.total_elements, warm.total_elements,
+        "a restart must serve identical work"
+    );
+    println!(
+        "PASS: warm restart reloaded {} config(s): {} P&R invocation(s) cold -> 0 warm",
+        cold_server.cache.len(),
+        cold.pr_compiles
+    );
+    let tenant_latency: Vec<String> = with_slo
+        .tenants
+        .iter()
+        .map(|t| {
+            format!(
+                "\n      {{\"tenant\": \"{}\", \"priority\": {}, \"shed\": {}, \
+                 \"p50\": {:.9}, \"p95\": {:.9}, \"p99\": {:.9}}}",
+                t.name, t.priority, t.shed, t.p50_secs, t.p95_secs, t.p99_secs
+            )
+        })
+        .collect();
+    let slo_json = format!(
+        "{{\n    \"budget_sec\": {budget:e},\n    \"no_slo_shed\": {},\n    \
+         \"with_slo_shed\": {},\n    \"critical_tenant\": \"{}\",\n    \
+         \"critical_shed\": {},\n    \"tenant_latency\": [{}\n    ],\n    \
+         \"restart\": {{\"cold_pr_compiles\": {}, \"warm_pr_compiles\": {}, \
+         \"elements\": {}}}\n  }}",
+        no_slo.shed,
+        with_slo.shed,
+        critical.name,
+        critical.shed,
+        tenant_latency.join(","),
+        cold.pr_compiles,
+        warm.pr_compiles,
+        warm.total_elements
+    );
+
     if let Ok(path) = std::env::var("TLO_BENCH_JSON") {
         let doc = format!(
             "{{\n  \"bench\": \"serve\",\n  \"mode\": \"{}\",\n  \
@@ -355,7 +468,7 @@ fn main() {
              \"fleet_lossy_fallback_local\": {},\n    \
              \"fleet_crash_dead_node_served\": {},\n    \
              \"fleet_crash_breaker_opens\": {},\n    \
-             \"fleet_crash_survivor_served\": {}\n  }}\n}}\n",
+             \"fleet_crash_survivor_served\": {}\n  }},\n  \"slo\": {}\n}}\n",
             if quick { "quick" } else { "full" },
             tenants,
             requests,
@@ -380,7 +493,8 @@ fn main() {
             fleet_lossy.counters.fallback_local,
             fleet_crash.nodes[0].served,
             fleet_crash.nodes[0].breaker_opens,
-            crash_rest
+            crash_rest,
+            slo_json
         );
         std::fs::write(&path, doc).expect("write TLO_BENCH_JSON");
         println!("wrote {path}");

@@ -319,6 +319,18 @@ impl ConfigCache {
         }
     }
 
+    /// Every resident single-tile entry, LRU-silently (persistence walks
+    /// the store to serialize it; a snapshot is not a lookup). Iteration
+    /// order is unspecified — the on-disk writer sorts by key.
+    pub fn iter_entries(&self) -> impl Iterator<Item = (u64, &CachedConfig)> {
+        self.map.iter().map(|(&k, (c, _))| (k, c))
+    }
+
+    /// Plan-store mirror of [`Self::iter_entries`].
+    pub fn iter_plans(&self) -> impl Iterator<Item = (u64, &ExecutionPlan)> {
+        self.plans.iter().map(|(&k, (p, _))| (k, p))
+    }
+
     pub fn hit_rate(&self) -> f64 {
         let total = self.stats.hits + self.stats.misses;
         if total == 0 {

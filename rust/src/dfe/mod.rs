@@ -10,6 +10,7 @@ pub mod exec;
 pub mod grid;
 pub mod image;
 pub mod opcodes;
+pub mod persist;
 pub mod plan;
 pub mod resource;
 pub mod sim;

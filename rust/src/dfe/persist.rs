@@ -1,0 +1,556 @@
+//! Warm-restart persistence for the configuration cache.
+//!
+//! Serializes every resident artifact — single-tile entries and tiled
+//! execution plans, with their placement/seed provenance — to one
+//! human-readable text file under a cache directory, and loads it back
+//! into a fresh [`ConfigCache`] on restart (`tlo serve --cache-dir`).
+//! A reloaded server's admission lookups all hit, so a restart performs
+//! **zero** place & route invocations: the PR-5 warm-start machinery
+//! becomes fleet-restart resilience.
+//!
+//! Design notes:
+//! * Hand-rolled line-based format, zero external crates (the repo's
+//!   dependency section is deliberately empty). Writers sort by key, so
+//!   the file is byte-deterministic for a given cache content.
+//! * Only the [`GridConfig`] and provenance are persisted. The execution
+//!   image and compiled wave fabric are *rebuilt* on load (`to_image()` +
+//!   `CompiledFabric::compile`) — re-lowering is microseconds, carries no
+//!   cross-process pointer state, and is not a P&R invocation, so the
+//!   zero-recompile guarantee is preserved.
+//! * A missing file is a cold start, not an error; a corrupt file is an
+//!   `InvalidData` error so a truncated write cannot silently serve a
+//!   half-cache.
+
+use std::fs;
+use std::io::{self, ErrorKind};
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+use super::cache::{CachedConfig, ConfigCache};
+use super::config::{FuSrc, GridConfig, IoAssign, OutSrc};
+use super::grid::{CellCoord, Dir, Grid};
+use super::opcodes::Op;
+use super::plan::{ExecutionPlan, PlanTile};
+use crate::dfg::graph::NodeId;
+use crate::dfg::partition::{TileSink, TileSource};
+use crate::par::lasvegas::ParStats;
+
+/// File the snapshot lives in, inside the cache directory.
+pub const CACHE_FILE: &str = "config-cache.tlo";
+
+const HEADER: &str = "tlo-cache v1";
+
+/// What a successful load brought back.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheSnapshot {
+    pub entries: usize,
+    pub plans: usize,
+}
+
+fn bad(msg: impl Into<String>) -> io::Error {
+    io::Error::new(ErrorKind::InvalidData, msg.into())
+}
+
+// ---------------------------------------------------------------------------
+// Writing
+// ---------------------------------------------------------------------------
+
+fn fu_token(s: FuSrc) -> String {
+    match s {
+        FuSrc::None => "-".into(),
+        FuSrc::In(d) => format!("i{}", d.index()),
+        FuSrc::Const(v) => format!("c{v}"),
+    }
+}
+
+fn out_token(s: OutSrc) -> String {
+    match s {
+        OutSrc::None => "-".into(),
+        OutSrc::In(d) => format!("i{}", d.index()),
+        OutSrc::Fu => "f".into(),
+    }
+}
+
+/// The shared payload of a cached artifact: provenance + configuration +
+/// placement. Used verbatim for single-tile entries and per plan tile.
+fn write_payload(buf: &mut String, c: &CachedConfig) {
+    buf.push_str(&format!("variant {}\n", c.variant));
+    buf.push_str(&format!("seed {}\n", c.seed));
+    if let Some(s) = c.par_stats {
+        buf.push_str(&format!(
+            "stats {} {} {} {} {} {} {} {}\n",
+            s.placements,
+            s.route_calls,
+            s.pos_retries,
+            s.backtracks,
+            s.restarts,
+            s.elapsed.as_nanos(),
+            s.attempt_elapsed.as_nanos(),
+            s.warm_placed,
+        ));
+    }
+    let g = c.config.grid;
+    buf.push_str(&format!("grid {} {}\n", g.rows, g.cols));
+    for (idx, cell) in c.config.cells.iter().enumerate() {
+        if cell.is_empty() {
+            continue;
+        }
+        let op = cell.op.map(|o| o.code().to_string()).unwrap_or_else(|| "-".into());
+        buf.push_str(&format!(
+            "cell {} {} {} {} {} {} {} {} {}\n",
+            idx,
+            op,
+            fu_token(cell.fu1),
+            fu_token(cell.fu2),
+            fu_token(cell.fsel),
+            out_token(cell.out[0]),
+            out_token(cell.out[1]),
+            out_token(cell.out[2]),
+            out_token(cell.out[3]),
+        ));
+    }
+    for io in &c.config.inputs {
+        buf.push_str(&format!("in {} {} {} {}\n", io.cell.r, io.cell.c, io.dir.index(), io.index));
+    }
+    for io in &c.config.outputs {
+        buf.push_str(&format!(
+            "out {} {} {} {}\n",
+            io.cell.r, io.cell.c, io.dir.index(), io.index
+        ));
+    }
+    for (n, p) in &c.placement {
+        buf.push_str(&format!("place {} {} {}\n", n, p.r, p.c));
+    }
+}
+
+fn stream_token(s: &TileSource) -> String {
+    match s {
+        TileSource::External(j) => format!("e{j}"),
+        TileSource::Spill(k) => format!("s{k}"),
+    }
+}
+
+fn sink_token(s: &TileSink) -> String {
+    match s {
+        TileSink::External(j) => format!("e{j}"),
+        TileSink::Spill(k) => format!("s{k}"),
+    }
+}
+
+/// Serialize every resident artifact of `cache` into `dir/CACHE_FILE`.
+/// Creates the directory; returns the file path written.
+pub fn save_cache(cache: &ConfigCache, dir: &Path) -> io::Result<PathBuf> {
+    fs::create_dir_all(dir)?;
+    let mut buf = String::from(HEADER);
+    buf.push('\n');
+    let mut entries: Vec<_> = cache.iter_entries().collect();
+    entries.sort_by_key(|(k, _)| *k);
+    for (key, c) in entries {
+        buf.push_str(&format!("entry {key}\n"));
+        write_payload(&mut buf, c);
+        buf.push_str("end\n");
+    }
+    let mut plans: Vec<_> = cache.iter_plans().collect();
+    plans.sort_by_key(|(k, _)| *k);
+    for (key, plan) in plans {
+        buf.push_str(&format!("plan {} {}\n", key, plan.n_spills));
+        for t in &plan.tiles {
+            buf.push_str(&format!("tile {}\n", t.key));
+            write_payload(&mut buf, &t.cached);
+            let srcs: Vec<String> = t.sources.iter().map(stream_token).collect();
+            buf.push_str(&format!("srcs {}\n", srcs.join(" ")));
+            let sinks: Vec<String> = t.sinks.iter().map(sink_token).collect();
+            buf.push_str(&format!("sinks {}\n", sinks.join(" ")));
+            buf.push_str("endtile\n");
+        }
+        buf.push_str("endplan\n");
+    }
+    let path = dir.join(CACHE_FILE);
+    fs::write(&path, buf)?;
+    Ok(path)
+}
+
+// ---------------------------------------------------------------------------
+// Reading
+// ---------------------------------------------------------------------------
+
+struct Cursor<'a> {
+    lines: Vec<&'a str>,
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(text: &'a str) -> Cursor<'a> {
+        Cursor { lines: text.lines().collect(), pos: 0 }
+    }
+
+    fn peek(&self) -> Option<&'a str> {
+        self.lines.get(self.pos).copied()
+    }
+
+    fn next(&mut self) -> Option<&'a str> {
+        let l = self.peek();
+        if l.is_some() {
+            self.pos += 1;
+        }
+        l
+    }
+}
+
+fn parse_num<T: std::str::FromStr>(tok: Option<&&str>, what: &str) -> io::Result<T> {
+    tok.ok_or_else(|| bad(format!("missing {what}")))?
+        .parse::<T>()
+        .map_err(|_| bad(format!("malformed {what}")))
+}
+
+fn parse_dir(i: usize) -> io::Result<Dir> {
+    if i < 4 {
+        Ok(Dir::from_index(i))
+    } else {
+        Err(bad(format!("direction index {i} out of range")))
+    }
+}
+
+fn parse_fu(tok: &str) -> io::Result<FuSrc> {
+    if tok == "-" {
+        Ok(FuSrc::None)
+    } else if let Some(r) = tok.strip_prefix('i') {
+        let i: usize = r.parse().map_err(|_| bad(format!("malformed fu mux {tok}")))?;
+        Ok(FuSrc::In(parse_dir(i)?))
+    } else if let Some(r) = tok.strip_prefix('c') {
+        let v: i32 = r.parse().map_err(|_| bad(format!("malformed fu const {tok}")))?;
+        Ok(FuSrc::Const(v))
+    } else {
+        Err(bad(format!("unknown fu source token {tok}")))
+    }
+}
+
+fn parse_out(tok: &str) -> io::Result<OutSrc> {
+    if tok == "-" {
+        Ok(OutSrc::None)
+    } else if tok == "f" {
+        Ok(OutSrc::Fu)
+    } else if let Some(r) = tok.strip_prefix('i') {
+        let i: usize = r.parse().map_err(|_| bad(format!("malformed out mux {tok}")))?;
+        Ok(OutSrc::In(parse_dir(i)?))
+    } else {
+        Err(bad(format!("unknown out source token {tok}")))
+    }
+}
+
+#[derive(Default)]
+struct Payload {
+    variant: String,
+    seed: u64,
+    stats: Option<ParStats>,
+    config: Option<GridConfig>,
+    placement: Vec<(NodeId, CellCoord)>,
+}
+
+/// Consume payload lines (variant/seed/stats/grid/cell/in/out/place) up to
+/// — but not including — the caller's terminator keyword.
+fn parse_payload(cur: &mut Cursor<'_>) -> io::Result<Payload> {
+    let mut p = Payload::default();
+    while let Some(line) = cur.peek() {
+        let toks: Vec<&str> = line.split_whitespace().collect();
+        match toks.first().copied() {
+            Some("variant") => {
+                p.variant = toks.get(1).copied().unwrap_or("").to_string();
+            }
+            Some("seed") => {
+                p.seed = parse_num(toks.get(1), "seed")?;
+            }
+            Some("stats") => {
+                let elapsed_ns: u64 = parse_num(toks.get(6), "stats elapsed")?;
+                let attempt_ns: u64 = parse_num(toks.get(7), "stats attempt")?;
+                p.stats = Some(ParStats {
+                    placements: parse_num(toks.get(1), "stats placements")?,
+                    route_calls: parse_num(toks.get(2), "stats route_calls")?,
+                    pos_retries: parse_num(toks.get(3), "stats pos_retries")?,
+                    backtracks: parse_num(toks.get(4), "stats backtracks")?,
+                    restarts: parse_num(toks.get(5), "stats restarts")?,
+                    elapsed: Duration::from_nanos(elapsed_ns),
+                    attempt_elapsed: Duration::from_nanos(attempt_ns),
+                    warm_placed: parse_num(toks.get(8), "stats warm_placed")?,
+                });
+            }
+            Some("grid") => {
+                let rows: usize = parse_num(toks.get(1), "grid rows")?;
+                let cols: usize = parse_num(toks.get(2), "grid cols")?;
+                if rows == 0 || cols == 0 {
+                    return Err(bad("degenerate grid in cache file"));
+                }
+                p.config = Some(GridConfig::empty(Grid::new(rows, cols)));
+            }
+            Some("cell") => {
+                let cfg = p.config.as_mut().ok_or_else(|| bad("cell before grid"))?;
+                let idx: usize = parse_num(toks.get(1), "cell index")?;
+                if idx >= cfg.cells.len() || toks.len() < 10 {
+                    return Err(bad(format!("malformed cell line: {line}")));
+                }
+                let cell = &mut cfg.cells[idx];
+                cell.op = match toks[2] {
+                    "-" => None,
+                    t => {
+                        let code: i32 =
+                            t.parse().map_err(|_| bad(format!("malformed opcode {t}")))?;
+                        Some(
+                            Op::from_i32(code)
+                                .ok_or_else(|| bad(format!("unknown opcode {code}")))?,
+                        )
+                    }
+                };
+                cell.fu1 = parse_fu(toks[3])?;
+                cell.fu2 = parse_fu(toks[4])?;
+                cell.fsel = parse_fu(toks[5])?;
+                for (i, t) in toks[6..10].iter().enumerate() {
+                    cell.out[i] = parse_out(t)?;
+                }
+            }
+            Some("in") | Some("out") => {
+                let cfg = p.config.as_mut().ok_or_else(|| bad("io before grid"))?;
+                let r: usize = parse_num(toks.get(1), "io row")?;
+                let c: usize = parse_num(toks.get(2), "io col")?;
+                let d: usize = parse_num(toks.get(3), "io dir")?;
+                let index: usize = parse_num(toks.get(4), "io stream index")?;
+                let io = IoAssign { cell: CellCoord::new(r, c), dir: parse_dir(d)?, index };
+                if toks[0] == "in" {
+                    cfg.inputs.push(io);
+                } else {
+                    cfg.outputs.push(io);
+                }
+            }
+            Some("place") => {
+                let n: NodeId = parse_num(toks.get(1), "placement node")?;
+                let r: usize = parse_num(toks.get(2), "placement row")?;
+                let c: usize = parse_num(toks.get(3), "placement col")?;
+                p.placement.push((n, CellCoord::new(r, c)));
+            }
+            _ => break,
+        }
+        cur.next();
+    }
+    Ok(p)
+}
+
+/// Rebuild a full [`CachedConfig`] from a parsed payload: re-lower the
+/// execution image and wave fabric from the persisted configuration.
+fn build_entry(p: Payload) -> io::Result<CachedConfig> {
+    let config = p.config.ok_or_else(|| bad("artifact payload missing its grid"))?;
+    let image = config
+        .to_image()
+        .map_err(|e| bad(format!("persisted configuration fails to lower: {e}")))?;
+    let mut c = CachedConfig::new(config, image, p.variant);
+    c.seed = p.seed;
+    c.par_stats = p.stats;
+    c.placement = p.placement;
+    Ok(c)
+}
+
+fn expect(cur: &mut Cursor<'_>, keyword: &str) -> io::Result<()> {
+    match cur.next() {
+        Some(l) if l.trim() == keyword => Ok(()),
+        other => Err(bad(format!("expected {keyword:?}, found {other:?}"))),
+    }
+}
+
+fn parse_stream_line<'a>(cur: &mut Cursor<'a>, keyword: &str) -> io::Result<Vec<&'a str>> {
+    let line = cur.next().ok_or_else(|| bad(format!("missing {keyword} line")))?;
+    let toks: Vec<&str> = line.split_whitespace().collect();
+    if toks.first().copied() != Some(keyword) {
+        return Err(bad(format!("expected {keyword} line, found {line:?}")));
+    }
+    Ok(toks[1..].to_vec())
+}
+
+fn parse_source(tok: &str) -> io::Result<TileSource> {
+    if let Some(r) = tok.strip_prefix('e') {
+        Ok(TileSource::External(r.parse().map_err(|_| bad("malformed source"))?))
+    } else if let Some(r) = tok.strip_prefix('s') {
+        Ok(TileSource::Spill(r.parse().map_err(|_| bad("malformed source"))?))
+    } else {
+        Err(bad(format!("unknown tile source {tok}")))
+    }
+}
+
+fn parse_sink(tok: &str) -> io::Result<TileSink> {
+    if let Some(r) = tok.strip_prefix('e') {
+        Ok(TileSink::External(r.parse().map_err(|_| bad("malformed sink"))?))
+    } else if let Some(r) = tok.strip_prefix('s') {
+        Ok(TileSink::Spill(r.parse().map_err(|_| bad("malformed sink"))?))
+    } else {
+        Err(bad(format!("unknown tile sink {tok}")))
+    }
+}
+
+/// Load a persisted snapshot from `dir` into `cache`. `Ok(None)` when no
+/// snapshot exists (cold start); `Err` on a corrupt file. Artifacts are
+/// inserted in ascending key order, so the LRU stamps of a fresh load are
+/// deterministic.
+pub fn load_cache(cache: &mut ConfigCache, dir: &Path) -> io::Result<Option<CacheSnapshot>> {
+    let path = dir.join(CACHE_FILE);
+    let text = match fs::read_to_string(&path) {
+        Ok(t) => t,
+        Err(e) if e.kind() == ErrorKind::NotFound => return Ok(None),
+        Err(e) => return Err(e),
+    };
+    let mut cur = Cursor::new(&text);
+    match cur.next() {
+        Some(h) if h.trim() == HEADER => {}
+        other => return Err(bad(format!("bad cache header: {other:?}"))),
+    }
+    let mut snap = CacheSnapshot::default();
+    while let Some(line) = cur.next() {
+        let toks: Vec<&str> = line.split_whitespace().collect();
+        match toks.first().copied() {
+            None => continue,
+            Some("entry") => {
+                let key: u64 = parse_num(toks.get(1), "entry key")?;
+                let payload = parse_payload(&mut cur)?;
+                expect(&mut cur, "end")?;
+                cache.insert(key, build_entry(payload)?);
+                snap.entries += 1;
+            }
+            Some("plan") => {
+                let key: u64 = parse_num(toks.get(1), "plan key")?;
+                let n_spills: usize = parse_num(toks.get(2), "plan spills")?;
+                let mut tiles = Vec::new();
+                loop {
+                    let line = cur.next().ok_or_else(|| bad("unterminated plan block"))?;
+                    let t: Vec<&str> = line.split_whitespace().collect();
+                    match t.first().copied() {
+                        Some("tile") => {
+                            let tile_key: u64 = parse_num(t.get(1), "tile key")?;
+                            let payload = parse_payload(&mut cur)?;
+                            let sources = parse_stream_line(&mut cur, "srcs")?
+                                .iter()
+                                .map(|t| parse_source(t))
+                                .collect::<io::Result<Vec<_>>>()?;
+                            let sinks = parse_stream_line(&mut cur, "sinks")?
+                                .iter()
+                                .map(|t| parse_sink(t))
+                                .collect::<io::Result<Vec<_>>>()?;
+                            expect(&mut cur, "endtile")?;
+                            tiles.push(PlanTile {
+                                cached: build_entry(payload)?,
+                                sources,
+                                sinks,
+                                key: tile_key,
+                            });
+                        }
+                        Some("endplan") => break,
+                        _ => return Err(bad(format!("unexpected plan line: {line}"))),
+                    }
+                }
+                let plan = ExecutionPlan::from_tiles(tiles, n_spills)
+                    .ok_or_else(|| bad("persisted plan has no tiles"))?;
+                cache.insert_plan(key, plan);
+                snap.plans += 1;
+            }
+            Some(_) => return Err(bad(format!("unexpected line in cache file: {line}"))),
+        }
+    }
+    Ok(Some(snap))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dfe::config::fig2_config;
+
+    fn scratch_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("tlo-persist-{}-{}", tag, std::process::id()));
+        let _ = fs::remove_dir_all(&d);
+        d
+    }
+
+    fn provenance_entry(seed: u64) -> CachedConfig {
+        let config = fig2_config();
+        let image = config.to_image().unwrap();
+        let stats = ParStats {
+            placements: 12,
+            route_calls: 34,
+            restarts: 1,
+            elapsed: Duration::from_micros(5),
+            attempt_elapsed: Duration::from_micros(3),
+            warm_placed: 2,
+            ..Default::default()
+        };
+        let placement = vec![(2, CellCoord::new(0, 0)), (4, CellCoord::new(1, 1))];
+        CachedConfig::with_provenance(config, image, "dfe_2x2".into(), seed, stats, placement)
+    }
+
+    #[test]
+    fn entries_round_trip_with_provenance() {
+        let dir = scratch_dir("entries");
+        let mut cache = ConfigCache::new(8);
+        cache.insert(0xA1, provenance_entry(7));
+        cache.insert(0xB2, provenance_entry(9));
+        save_cache(&cache, &dir).unwrap();
+        let mut back = ConfigCache::new(8);
+        let snap = load_cache(&mut back, &dir).unwrap().expect("snapshot exists");
+        assert_eq!(snap, CacheSnapshot { entries: 2, plans: 0 });
+        for key in [0xA1u64, 0xB2] {
+            let orig = cache.peek(key).unwrap();
+            let got = back.peek(key).unwrap();
+            assert_eq!(got.config, orig.config, "configuration must survive the disk");
+            assert_eq!(got.seed, orig.seed);
+            assert_eq!(got.variant, orig.variant);
+            assert_eq!(got.placement, orig.placement);
+            let (a, b) = (got.par_stats.unwrap(), orig.par_stats.unwrap());
+            assert_eq!(a.route_calls, b.route_calls);
+            assert_eq!(a.elapsed, b.elapsed);
+            assert!(got.fabric.is_some(), "fabric re-lowers on load");
+            // The rebuilt image computes the same function.
+            assert_eq!(got.image.eval_scalar(&[10, 5]), orig.image.eval_scalar(&[10, 5]));
+        }
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn plans_round_trip_and_missing_dir_is_cold_start() {
+        let dir = scratch_dir("plans");
+        let mut cache = ConfigCache::new(8);
+        let mut plan = ExecutionPlan::single(provenance_entry(3), 77);
+        plan.tiles[0].sinks = vec![TileSink::Spill(0)];
+        let mut second = plan.tiles[0].clone();
+        second.key = 78;
+        second.sources = vec![TileSource::Spill(0), TileSource::External(1)];
+        second.sinks = vec![TileSink::External(0)];
+        plan.tiles.push(second);
+        plan.n_spills = 1;
+        cache.insert_plan(0xC3, plan);
+        save_cache(&cache, &dir).unwrap();
+        let mut back = ConfigCache::new(8);
+        let snap = load_cache(&mut back, &dir).unwrap().unwrap();
+        assert_eq!(snap, CacheSnapshot { entries: 0, plans: 1 });
+        let got = back.peek_plan(0xC3).unwrap();
+        let orig = cache.peek_plan(0xC3).unwrap();
+        assert_eq!(got.n_spills, 1);
+        assert_eq!(got.tiles.len(), 2);
+        for (g, o) in got.tiles.iter().zip(&orig.tiles) {
+            assert_eq!(g.key, o.key);
+            assert_eq!(g.sources, o.sources);
+            assert_eq!(g.sinks, o.sinks);
+            assert_eq!(g.cached.config, o.cached.config);
+        }
+        // No snapshot at all is a cold start, not an error.
+        let empty = scratch_dir("cold");
+        let mut fresh = ConfigCache::new(4);
+        assert!(load_cache(&mut fresh, &empty).unwrap().is_none());
+        assert!(fresh.is_empty());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_snapshots_error_instead_of_half_loading() {
+        let dir = scratch_dir("corrupt");
+        fs::create_dir_all(&dir).unwrap();
+        fs::write(dir.join(CACHE_FILE), "not a cache\n").unwrap();
+        let mut c = ConfigCache::new(4);
+        assert!(load_cache(&mut c, &dir).is_err(), "bad header must refuse");
+        fs::write(dir.join(CACHE_FILE), format!("{HEADER}\nentry 5\ngrid 2 2\n")).unwrap();
+        assert!(load_cache(&mut c, &dir).is_err(), "unterminated entry must refuse");
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

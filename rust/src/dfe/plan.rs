@@ -59,6 +59,18 @@ impl ExecutionPlan {
         ExecutionPlan { tiles: vec![PlanTile { cached, sources, sinks, key }], n_spills: 0 }
     }
 
+    /// Checked constructor: `None` when `tiles` is empty, making the
+    /// zero-tile plan unrepresentable at the construction sites instead
+    /// of panicking later inside the timing comparator
+    /// (`plan_invocation_time` dereferences the last tile). All assembly
+    /// paths go through this; `single` is non-empty by construction.
+    pub fn from_tiles(tiles: Vec<PlanTile>, n_spills: usize) -> Option<ExecutionPlan> {
+        if tiles.is_empty() {
+            return None;
+        }
+        Some(ExecutionPlan { tiles, n_spills })
+    }
+
     pub fn n_tiles(&self) -> usize {
         self.tiles.len()
     }
@@ -120,6 +132,17 @@ mod tests {
         );
         assert_eq!(p.tiles[0].sinks, (0..n_out).map(TileSink::External).collect::<Vec<_>>());
         assert_eq!(p.config_words(), p.tiles[0].cached.config.config_words() as u64);
+    }
+
+    #[test]
+    fn from_tiles_rejects_the_empty_plan() {
+        assert!(ExecutionPlan::from_tiles(Vec::new(), 0).is_none());
+        let c = dummy_cached();
+        let single = ExecutionPlan::single(c, 7);
+        let rebuilt = ExecutionPlan::from_tiles(single.tiles.clone(), single.n_spills)
+            .expect("non-empty tile list must construct");
+        assert_eq!(rebuilt.n_tiles(), 1);
+        assert_eq!(rebuilt.tiles[0].key, 7);
     }
 
     #[test]

@@ -14,6 +14,7 @@ use tlo::util::cli::Args;
 const USAGE: &str = "subcommands: table1 | table2 [--device NAME] | video [--frames N --riffa] \
 | serve [--tenants N --shards K --requests R --grid RxC --transport sync|async|async:D \
 --compile-threads N --par-portfolio K --tagged --no-adapt --no-verify \
+--slo SECS --cache-dir DIR --drain-timeout SECS \
 --fleet N --fault-profile drop=P,dup=P,reorder=P,jitter=F,crash=P --fault-seed S] \
 | devices";
 
@@ -21,6 +22,7 @@ fn main() {
     let args = Args::from_env(&[
         "device", "frames", "n", "seed", "tenants", "shards", "requests", "grid", "transport",
         "compile-threads", "par-portfolio", "fleet", "fault-profile", "fault-seed",
+        "slo", "cache-dir", "drain-timeout",
     ]);
     match args.positional.first().map(String::as_str) {
         Some("table1") => table1(),
@@ -205,6 +207,19 @@ fn serve(args: &Args) {
     // `--par-portfolio 1` restores single-seed search.
     let compile_threads = args.get_usize("compile-threads", 2);
     let portfolio = args.get_usize("par-portfolio", 4).max(1);
+    // --slo S: per-round fabric-time budget in virtual seconds. Overload
+    // sheds lowest-priority classes to the software tier (numerics are
+    // unaffected — a shed request still executes, on the host).
+    let slo = match args.get("slo") {
+        None => None,
+        Some(s) => match s.parse::<f64>() {
+            Ok(v) if v > 0.0 => Some(v),
+            _ => {
+                eprintln!("bad --slo '{s}' (expected positive seconds, e.g. 0.002)");
+                std::process::exit(2);
+            }
+        },
+    };
     let mut params = ServeParams {
         shards,
         grid,
@@ -216,6 +231,14 @@ fn serve(args: &Args) {
             .then(tlo::offload::adapt::AdaptParams::default),
         portfolio,
         compile_threads,
+        slo,
+        // --cache-dir DIR: load a configuration-cache snapshot at startup
+        // and persist one at shutdown, so a restarted server serves its
+        // working set with zero recompiles (warm restart).
+        cache_dir: args.get("cache-dir").map(std::path::PathBuf::from),
+        drain_timeout: std::time::Duration::from_secs_f64(
+            args.get_f64("drain-timeout", 30.0).max(0.001),
+        ),
         ..Default::default()
     };
     if args.flag("tagged") {
@@ -256,6 +279,22 @@ fn serve(args: &Args) {
     }
     let report = server.run(requests);
     println!("\n{report}");
+    if server.params.cache_dir.is_some() {
+        // Orderly shutdown: land in-flight background compiles first, so
+        // the snapshot holds the whole working set and a restart really
+        // does serve with zero recompiles.
+        server.drain_compiles();
+    }
+    if let Some(dir) = server.params.cache_dir.clone() {
+        match tlo::dfe::persist::save_cache(&server.cache, &dir) {
+            Ok(path) => println!(
+                "cache snapshot: {} config(s) -> {}",
+                server.cache.len(),
+                path.display()
+            ),
+            Err(e) => eprintln!("cache snapshot to {} failed: {e}", dir.display()),
+        }
+    }
     for t in &server.tenants {
         for r in &t.respecs {
             println!(
@@ -338,6 +377,19 @@ fn serve_fleet(
     };
     let report = fleet.run(requests);
     println!("\n{report}");
+    if fleet.server.params.cache_dir.is_some() {
+        fleet.server.drain_compiles();
+    }
+    if let Some(dir) = fleet.server.params.cache_dir.clone() {
+        match tlo::dfe::persist::save_cache(&fleet.server.cache, &dir) {
+            Ok(path) => println!(
+                "cache snapshot: {} config(s) -> {}",
+                fleet.server.cache.len(),
+                path.display()
+            ),
+            Err(e) => eprintln!("cache snapshot to {} failed: {e}", dir.display()),
+        }
+    }
 
     if !args.flag("no-verify") {
         let mut ok = true;

@@ -255,6 +255,10 @@ pub struct FleetCounters {
     pub fallback_local: u64,
     /// Requests served on the interpreter (no fabric path).
     pub fallback_software: u64,
+    /// Requests shed to the host by SLO admission control (distinct from
+    /// `fallback_software`: shedding is a policy decision on a healthy
+    /// fabric path, not a degradation rung).
+    pub shed: u64,
 }
 
 /// The fleet scheduler: wraps the single-host [`OffloadServer`] (which
@@ -335,23 +339,37 @@ impl FleetServer {
                 n.inflight = 0;
             }
 
-            // ---- admission: hotness-weighted round robin ----
+            // ---- admission: priority- and hotness-weighted round robin ----
+            // Same discipline as the single-host server: weights clamp
+            // hotness at the fairness floor before scaling by the SLO
+            // class, and `total_cmp` keeps the order total (a NaN
+            // hotness can no longer make two fleet replays diverge).
+            let weights: Vec<f64> = self
+                .server
+                .tenants
+                .iter()
+                .map(|t| t.hotness.max(1.0) * f64::from(t.spec.priority.max(1)))
+                .collect();
             let mut order: Vec<usize> = (0..n_t).filter(|&i| remaining[i] > 0).collect();
-            order.sort_by(|&a, &b| {
-                self.server.tenants[b]
-                    .hotness
-                    .partial_cmp(&self.server.tenants[a].hotness)
-                    .unwrap_or(std::cmp::Ordering::Equal)
-                    .then(a.cmp(&b))
-            });
-            let hotness: Vec<f64> = self.server.tenants.iter().map(|t| t.hotness).collect();
-            let mut batch = pick_batch(&order, &hotness, &remaining, window);
+            order.sort_by(|&a, &b| weights[b].total_cmp(&weights[a]).then(a.cmp(&b)));
+            let mut batch = pick_batch(&order, &weights, &remaining, window);
             batch.sort_by_key(|&ti| {
-                self.server.tenants[ti].offload.as_ref().map(|o| o.key).unwrap_or(0)
+                (
+                    std::cmp::Reverse(self.server.tenants[ti].spec.priority),
+                    self.server.tenants[ti].offload.as_ref().map(|o| o.key).unwrap_or(0),
+                )
             });
+            let top_priority = batch
+                .iter()
+                .map(|&ti| self.server.tenants[ti].spec.priority)
+                .max()
+                .unwrap_or(0);
 
             let mut round_load = vec![0u32; self.server.shards.len()];
             let mut round_end = round_start;
+            // Projected remote fabric occupancy this round (SLO admission
+            // control, mirroring the single-host server).
+            let mut projected = 0f64;
 
             for &ti in &batch {
                 // Backpressure: defer a remote-eligible request when every
@@ -424,50 +442,85 @@ impl FleetServer {
                 }
 
                 // ---- virtual time: remote, degraded-local, or software ----
-                let offloaded = {
+                // Unwrap-free offload identity: a tenant with a missing
+                // offload record or runtime state (never offloaded, or
+                // demoted mid-run) rides the software rung instead of
+                // panicking the fleet loop.
+                let offload_info = {
                     let t = &self.server.tenants[ti];
-                    !t.rolled_back && t.offload.is_some() && t.engine.is_patched(t.func)
-                };
-                if offloaded {
-                    let (key, cfg_bytes, h2d, d2h, exec) = {
-                        let t = &self.server.tenants[ti];
-                        let o = t.offload.as_ref().unwrap();
-                        let r = t.state.as_ref().unwrap().borrow().last_report;
-                        (
-                            o.key,
-                            o.config_words * 4,
-                            r.h2d_bytes,
-                            r.d2h_bytes,
-                            r.dfe_exec.as_secs_f64(),
-                        )
-                    };
-                    self.counters.remote_requests += 1;
-                    let inv_key = invocation_key(ti, seq);
-                    match self
-                        .serve_remote(ti, inv_key, key, cfg_bytes, h2d, d2h, exec, round_start)
-                    {
-                        Some(done) => {
-                            self.server.tenants[ti].remote_served += 1;
-                            round_end = round_end.max(done);
-                        }
-                        None => {
-                            // Degradation rung 1: the local shard fabric.
-                            let done = self.fallback_local(
-                                key, cfg_bytes, h2d, d2h, exec, round_start, &mut round_load,
-                            );
-                            self.counters.fallback_local += 1;
-                            self.server.tenants[ti].fallback_local += 1;
-                            round_end = round_end.max(done);
-                        }
+                    if t.rolled_back || !t.engine.is_patched(t.func) {
+                        None
+                    } else {
+                        t.offload.as_ref().zip(t.state.as_ref()).map(|(o, state)| {
+                            let r = state.borrow().last_report;
+                            (
+                                o.key,
+                                o.config_words * 4,
+                                r.h2d_bytes,
+                                r.d2h_bytes,
+                                r.dfe_exec.as_secs_f64(),
+                            )
+                        })
                     }
-                } else {
-                    // Degradation rung 2: the interpreter (one serialized
-                    // host core).
-                    let t = &mut self.server.tenants[ti];
-                    host_free = host_free.max(round_start) + t.baseline_per_inv.as_secs_f64();
-                    t.fallback_software += 1;
-                    self.counters.fallback_software += 1;
-                    round_end = round_end.max(host_free);
+                };
+                // SLO admission control, fleet flavor: once this round's
+                // projected fabric seconds exceed the objective, requests
+                // below the batch's top class stay on the host. Numerics
+                // already ran — only the virtual-time arm changes.
+                let shed = match (&offload_info, self.server.params.slo) {
+                    (Some((_, _, _, _, exec)), Some(slo)) => {
+                        self.server.tenants[ti].spec.priority < top_priority
+                            && projected + exec > slo
+                    }
+                    _ => false,
+                };
+                match offload_info {
+                    Some((key, cfg_bytes, h2d, d2h, exec)) if !shed => {
+                        self.counters.remote_requests += 1;
+                        let inv_key = invocation_key(ti, seq);
+                        match self.serve_remote(
+                            ti, inv_key, key, cfg_bytes, h2d, d2h, exec, round_start,
+                        ) {
+                            Some(done) => {
+                                self.server.tenants[ti].remote_served += 1;
+                                round_end = round_end.max(done);
+                                self.server.tenants[ti].latency.record(
+                                    Duration::from_secs_f64((done - round_start).max(0.0)),
+                                );
+                            }
+                            None => {
+                                // Degradation rung 1: the local shard fabric.
+                                let done = self.fallback_local(
+                                    key, cfg_bytes, h2d, d2h, exec, round_start,
+                                    &mut round_load,
+                                );
+                                self.counters.fallback_local += 1;
+                                let t = &mut self.server.tenants[ti];
+                                t.fallback_local += 1;
+                                t.latency.record(Duration::from_secs_f64(
+                                    (done - round_start).max(0.0),
+                                ));
+                                round_end = round_end.max(done);
+                            }
+                        }
+                        projected += exec;
+                    }
+                    _ => {
+                        // Degradation rung 2: the interpreter (one
+                        // serialized host core) — also the shed tier.
+                        let t = &mut self.server.tenants[ti];
+                        host_free =
+                            host_free.max(round_start) + t.baseline_per_inv.as_secs_f64();
+                        if shed {
+                            t.shed += 1;
+                            self.counters.shed += 1;
+                        } else {
+                            t.fallback_software += 1;
+                            self.counters.fallback_software += 1;
+                        }
+                        t.latency.record(t.baseline_per_inv);
+                        round_end = round_end.max(host_free);
+                    }
                 }
                 self.server.tenants[ti].served += 1;
             }
@@ -729,7 +782,7 @@ impl fmt::Display for FleetReport {
         write!(
             f,
             "fleet: {} remote ({} applied, {} dup suppressed, {} reordered absorbed), \
-             {} retries, {} deferred, {} fell back local, {} software",
+             {} retries, {} deferred, {} fell back local, {} software, {} shed",
             c.remote_requests,
             c.applied_results,
             c.dup_suppressed,
@@ -738,6 +791,7 @@ impl fmt::Display for FleetReport {
             c.deferred,
             c.fallback_local,
             c.fallback_software,
+            c.shed,
         )
     }
 }

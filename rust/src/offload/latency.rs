@@ -1,0 +1,162 @@
+//! Deterministic per-tenant latency histogram for tail observability.
+//!
+//! Same log2 fixed-bucket shape as the JIT profiler's trip-count
+//! [`Histogram`](crate::jit::engine::Histogram), applied to virtual-time
+//! latencies in nanoseconds: bucket `b` covers `[2^(b-1), 2^b)` ns with
+//! bucket 0 reserved for zero. Fixed buckets make the percentile readout
+//! a pure function of the recorded multiset — replayable across runs,
+//! processes and hosts, which is what lets the serve tests assert on
+//! p50/p95/p99 at all. The floor-of-bucket readout under-reports by at
+//! most 2x (one octave), a deliberate trade for determinism: an exact
+//! streaming quantile would need per-sample storage or randomized
+//! sketches, both of which break the bit-replayable-report invariant.
+
+use std::time::Duration;
+
+/// Number of log2 buckets: zero + one per bit of a u64 latency in ns
+/// (bucket 32 absorbs everything >= 2^31 ns ~ 2.1 s, far beyond any
+/// virtual-time latency the serve model produces).
+pub const LAT_BUCKETS: usize = 33;
+
+/// Fixed-bucket log2 latency histogram over nanoseconds.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct LatencyHist {
+    counts: [u64; LAT_BUCKETS],
+    total: u64,
+}
+
+impl LatencyHist {
+    pub fn new() -> LatencyHist {
+        LatencyHist { counts: [0; LAT_BUCKETS], total: 0 }
+    }
+
+    /// log2 bucket of a nanosecond latency (0 stays in bucket 0).
+    pub fn bucket_of(ns: u64) -> usize {
+        if ns == 0 {
+            0
+        } else {
+            ((64 - ns.leading_zeros()) as usize).min(LAT_BUCKETS - 1)
+        }
+    }
+
+    /// Lower edge of bucket `b` in nanoseconds.
+    pub fn bucket_floor(b: usize) -> u64 {
+        if b == 0 {
+            0
+        } else {
+            1u64 << (b - 1)
+        }
+    }
+
+    /// Record one invocation latency.
+    pub fn record(&mut self, latency: Duration) {
+        let ns = latency.as_nanos().min(u64::MAX as u128) as u64;
+        self.counts[Self::bucket_of(ns)] += 1;
+        self.total += 1;
+    }
+
+    /// Samples recorded so far.
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    pub fn counts(&self) -> &[u64; LAT_BUCKETS] {
+        &self.counts
+    }
+
+    /// Fold another histogram into this one (report aggregation).
+    pub fn merge(&mut self, other: &LatencyHist) {
+        for (c, o) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *c += o;
+        }
+        self.total += other.total;
+    }
+
+    pub fn clear(&mut self) {
+        self.counts = [0; LAT_BUCKETS];
+        self.total = 0;
+    }
+
+    /// The `p`-th percentile (0 < p <= 1) as the floor of the bucket
+    /// holding the ceil(p * total)-th smallest sample; `Duration::ZERO`
+    /// when nothing was recorded. Monotone in `p` by construction.
+    pub fn percentile(&self, p: f64) -> Duration {
+        if self.total == 0 {
+            return Duration::ZERO;
+        }
+        let p = p.clamp(0.0, 1.0);
+        let rank = ((p * self.total as f64).ceil() as u64).max(1).min(self.total);
+        let mut seen = 0u64;
+        for (b, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return Duration::from_nanos(Self::bucket_floor(b));
+            }
+        }
+        // Unreachable while counts sum to total; conservative fallback.
+        Duration::from_nanos(Self::bucket_floor(LAT_BUCKETS - 1))
+    }
+
+    pub fn p50(&self) -> Duration {
+        self.percentile(0.50)
+    }
+
+    pub fn p95(&self) -> Duration {
+        self.percentile(0.95)
+    }
+
+    pub fn p99(&self) -> Duration {
+        self.percentile(0.99)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buckets_cover_the_u64_range_without_gaps() {
+        assert_eq!(LatencyHist::bucket_of(0), 0);
+        assert_eq!(LatencyHist::bucket_of(1), 1);
+        assert_eq!(LatencyHist::bucket_of(2), 2);
+        assert_eq!(LatencyHist::bucket_of(3), 2);
+        assert_eq!(LatencyHist::bucket_of(4), 3);
+        assert_eq!(LatencyHist::bucket_of(u64::MAX), LAT_BUCKETS - 1);
+        for b in 1..LAT_BUCKETS - 1 {
+            let lo = LatencyHist::bucket_floor(b);
+            assert_eq!(LatencyHist::bucket_of(lo), b, "floor lands in its own bucket");
+            assert_eq!(LatencyHist::bucket_of(2 * lo - 1), b, "top edge stays in bucket");
+        }
+    }
+
+    #[test]
+    fn percentiles_are_monotone_and_conserve_counts() {
+        let mut h = LatencyHist::new();
+        for ns in [0u64, 1, 5, 5, 100, 1000, 1000, 50_000, 1_000_000] {
+            h.record(Duration::from_nanos(ns));
+        }
+        assert_eq!(h.total(), 9);
+        assert_eq!(h.counts().iter().sum::<u64>(), h.total());
+        let (p50, p95, p99) = (h.p50(), h.p95(), h.p99());
+        assert!(p50 <= p95 && p95 <= p99, "{p50:?} {p95:?} {p99:?}");
+        // p100 floor never exceeds the max sample; p50 floor is within one
+        // octave below the true median (100ns -> floor 64ns).
+        assert!(h.percentile(1.0) <= Duration::from_nanos(1_000_000));
+        assert_eq!(p50, Duration::from_nanos(64));
+    }
+
+    #[test]
+    fn empty_histogram_reads_zero_and_merge_folds() {
+        let mut a = LatencyHist::new();
+        assert_eq!(a.p99(), Duration::ZERO);
+        let mut b = LatencyHist::new();
+        b.record(Duration::from_nanos(300));
+        b.record(Duration::from_nanos(700));
+        a.merge(&b);
+        assert_eq!(a.total(), 2);
+        assert_eq!(a.p50(), b.p50());
+        a.clear();
+        assert_eq!(a.total(), 0);
+        assert_eq!(a.counts().iter().sum::<u64>(), 0);
+    }
+}

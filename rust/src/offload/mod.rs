@@ -9,6 +9,7 @@
 
 pub mod adapt;
 pub mod fleet;
+pub mod latency;
 pub mod server;
 pub mod stub;
 
@@ -91,6 +92,11 @@ pub struct OffloadParams {
     /// behaviour); N > 0 = respecializations compile in the background
     /// and swap in at the next tier decision, never stalling a caller.
     pub compile_threads: usize,
+    /// Deadline for one blocking wait on the background compile service
+    /// (`CompileSlot::compile` with `defer = false`, and `drain`). A job
+    /// still pending when it expires surfaces as the structured
+    /// [`RejectReason::CompileTimeout`] instead of silently stalling.
+    pub drain_timeout: Duration,
 }
 
 impl Default for OffloadParams {
@@ -110,6 +116,7 @@ impl Default for OffloadParams {
             transport: TransportMode::Sync,
             portfolio: 1,
             compile_threads: 0,
+            drain_timeout: Duration::from_secs(30),
         }
     }
 }
@@ -133,6 +140,17 @@ pub struct CompileSlot {
     /// the order compiles run in.
     seed: u64,
     variant: String,
+    /// Deadline for one blocking wait on the service (see
+    /// [`OffloadParams::drain_timeout`]); callers override after `new`.
+    pub drain_timeout: Duration,
+    /// Priority stamped onto the next submitted [`CompileJob`] (higher
+    /// races first); 0 keeps the service's plain-FIFO order.
+    pub priority: u64,
+    /// Place-&-route invocations actually performed (blocking races plus
+    /// landed background jobs) — cache hits and warm-restart reloads do
+    /// not count, which is what lets the persistence CI leg assert "zero
+    /// recompiles after reload".
+    pub compiled: u64,
 }
 
 impl CompileSlot {
@@ -153,6 +171,9 @@ impl CompileSlot {
             par,
             seed,
             variant: format!("dfe_{}x{}", grid.rows, grid.cols),
+            drain_timeout: Duration::from_secs(30),
+            priority: 0,
+            compiled: 0,
         }
     }
 
@@ -201,8 +222,11 @@ impl CompileSlot {
                     params: self.par,
                     portfolio: self.portfolio,
                     warm,
+                    priority: self.priority,
                 };
-                self.service.as_mut().unwrap().submit(job);
+                if let Some(svc) = self.service.as_mut() {
+                    svc.submit(job);
+                }
             }
             return Ok(None);
         }
@@ -213,13 +237,22 @@ impl CompileSlot {
         if self.service.is_some() {
             self.pump(cache);
             while self.pending.contains(&key) {
-                let done =
-                    self.service.as_mut().unwrap().recv_timeout(Duration::from_secs(30));
-                match done {
+                let Some(svc) = self.service.as_mut() else { break };
+                match svc.recv_timeout(self.drain_timeout) {
                     Some(d) => {
                         self.land(cache, d);
                     }
-                    None => break,
+                    None => {
+                        // The deadline expired with zero completions from
+                        // any worker while this key is still in flight: a
+                        // wedged job. Surface the structured timeout so
+                        // the caller can account the stall instead of
+                        // silently re-running the whole race on top of it.
+                        if self.pending.contains(&key) {
+                            return Err(RejectReason::CompileTimeout(self.drain_timeout));
+                        }
+                        break;
+                    }
                 }
             }
             if let Some(msg) = self.dead.get(&key) {
@@ -237,6 +270,7 @@ impl CompileSlot {
         };
         let outcome = place_and_route_portfolio(dfg, self.grid, &self.par, &warm, &pf)
             .map_err(|e| reject_of(&e))?;
+        self.compiled += 1;
         let stats = outcome.result.stats;
         let c = self.entry(outcome);
         cache.insert(key, c.clone());
@@ -249,6 +283,7 @@ impl CompileSlot {
         self.pending.remove(&done.key);
         match done.outcome {
             Ok(o) => {
+                self.compiled += 1;
                 let entry = self.entry(o);
                 cache.insert(done.key, entry);
                 Some(done.key)
@@ -275,9 +310,9 @@ impl CompileSlot {
     /// `timeout` without a completion rather than hanging.
     pub fn drain(&mut self, cache: &mut ConfigCache, timeout: Duration) -> Vec<u64> {
         let mut landed = self.pump(cache);
-        while !self.pending.is_empty() && self.service.is_some() {
-            let done = self.service.as_mut().unwrap().recv_timeout(timeout);
-            match done {
+        while !self.pending.is_empty() {
+            let Some(svc) = self.service.as_mut() else { break };
+            match svc.recv_timeout(timeout) {
                 Some(d) => landed.extend(self.land(cache, d)),
                 None => break,
             }
@@ -298,6 +333,11 @@ pub enum RejectReason {
     /// routing search that merely failed).
     TooLarge { needed: usize, budget: usize },
     Unroutable(String),
+    /// A blocking wait on the background compile service expired with the
+    /// job still in flight (a wedged worker): the caller keeps its current
+    /// tier and accounts the stall instead of panicking or silently
+    /// re-racing. Carries the deadline that expired.
+    CompileTimeout(Duration),
 }
 
 impl std::fmt::Display for RejectReason {
@@ -312,6 +352,9 @@ impl std::fmt::Display for RejectReason {
                 write!(f, "DFG too large ({needed} needed, budget {budget})")
             }
             RejectReason::Unroutable(s) => write!(f, "unroutable: {s}"),
+            RejectReason::CompileTimeout(d) => {
+                write!(f, "compile service timed out after {:.3}s", d.as_secs_f64())
+            }
         }
     }
 }
@@ -469,7 +512,8 @@ impl OffloadManager {
     /// Block until every in-flight compile job has landed (test barrier /
     /// orderly shutdown; the hot path only ever pumps).
     pub fn drain_compiles(&mut self) -> Vec<u64> {
-        self.compile.drain(&mut self.cache, Duration::from_secs(30))
+        let timeout = self.params.drain_timeout;
+        self.compile.drain(&mut self.cache, timeout)
     }
 
     pub fn state(&self, func: u32) -> Option<Rc<RefCell<RuntimeState>>> {
@@ -773,7 +817,9 @@ impl OffloadManager {
                 key: tk,
             });
         }
-        let plan = ExecutionPlan { tiles, n_spills: tiled.n_spills };
+        let plan = ExecutionPlan::from_tiles(tiles, tiled.n_spills).ok_or_else(|| {
+            RejectReason::Illegal("partition produced an empty execution plan".into())
+        })?;
         self.cache.insert_plan(plan_key, plan.clone());
         Ok((plan, false, par_stats))
     }
@@ -1240,7 +1286,14 @@ pub fn plan_invocation_time(
     let u = unroll.max(1) as u64;
     let lanes = (batch / u) as usize;
     let eps = RECONFIG_EPSILON.as_secs_f64();
-    let ii_last = pipeline_model(&plan.tiles.last().unwrap().cached).1;
+    // `ExecutionPlan::from_tiles` makes empty plans unrepresentable at
+    // construction; if one slips through anyway, model it as infinitely
+    // slow (the comparator then never swaps it in) rather than panicking.
+    let Some(last_tile) = plan.tiles.last() else {
+        debug_assert!(false, "ExecutionPlan invariant violated: empty tile list");
+        return Duration::MAX;
+    };
+    let ii_last = pipeline_model(&last_tile.cached).1;
     let rem_secs = (batch % u) as f64 * ii_last / fmax;
     if lanes == 0 {
         return Duration::from_secs_f64(rem_secs);

@@ -55,6 +55,7 @@ use crate::util::fmt_duration;
 use crate::workloads::{polybench, video};
 
 use super::adapt::{target_unroll, AdaptParams};
+use super::latency::LatencyHist;
 use super::stub::{make_offload_hook, make_plan_hook, DfeBackend, TimeModel};
 use super::{CompileSlot, OffloadManager, OffloadParams, RejectReason, RuntimeState};
 
@@ -151,6 +152,22 @@ pub struct ServeParams {
     /// background and swap in at a later round boundary — no tenant ever
     /// blocks on P&R after admission (`tests/serve.rs` S7).
     pub compile_threads: usize,
+    /// Per-round service-level objective in virtual seconds. When the
+    /// projected fabric occupancy of a scheduling round exceeds it, the
+    /// remaining requests of tenants *below* the batch's top priority
+    /// class are shed to the software tier (numerics still execute; only
+    /// the virtual-time accounting and the `shed` counter change).
+    /// `None` = no admission control (the historical behavior).
+    pub slo: Option<f64>,
+    /// Directory holding the [`ConfigCache`] snapshot. When set, the
+    /// server reloads routed artifacts, plans and provenance at
+    /// construction (a warm restart performs zero P&R invocations) and
+    /// `tlo serve` re-serializes the cache after the run.
+    pub cache_dir: Option<std::path::PathBuf>,
+    /// Deadline for one blocking wait on the compile service (admission
+    /// drains and shutdown barriers). An expired wait surfaces as
+    /// [`RejectReason::CompileTimeout`] instead of blocking forever.
+    pub drain_timeout: Duration,
 }
 
 impl Default for ServeParams {
@@ -172,6 +189,9 @@ impl Default for ServeParams {
             transport: TransportMode::Sync,
             portfolio: 1,
             compile_threads: 0,
+            slo: None,
+            cache_dir: None,
+            drain_timeout: Duration::from_secs(30),
         }
     }
 }
@@ -199,6 +219,11 @@ pub struct TenantSpec {
     /// failure rollback (a trapped offload replays in software after
     /// restoring these handles to their pre-call contents).
     pub outputs: fn(&[Val]) -> Vec<u32>,
+    /// SLO class: scheduling weight multiplier and shed ordering. Higher
+    /// classes are admitted first, race their compiles first, and are
+    /// shed last under an overloaded `ServeParams::slo`. Equal priorities
+    /// (the default, 1) reproduce the historical scheduler bit-for-bit.
+    pub priority: u32,
 }
 
 /// A tenant's accepted offload, as scheduled on the shards.
@@ -291,6 +316,11 @@ pub struct Tenant {
     /// return immediately — no re-extraction, no spurious cache-miss
     /// accounting for a compile that is already running.
     pending_spec: Option<(usize, usize, u64)>,
+    /// Per-request virtual latency distribution (fixed log2 buckets, so
+    /// percentiles are deterministic and mergeable across nodes).
+    pub latency: LatencyHist,
+    /// Requests shed to the software tier by SLO admission control.
+    pub shed: u64,
 }
 
 /// One shard region's live state.
@@ -411,13 +441,14 @@ impl OffloadServer {
                 ServeLink::Async(AsyncLink::new(params.pcie, params.shards, depth))
             }
         };
-        let compile = CompileSlot::new(
+        let mut compile = CompileSlot::new(
             params.portfolio,
             params.compile_threads,
             route_grid,
             params.par,
             params.seed,
         );
+        compile.drain_timeout = params.drain_timeout;
         let mut server = OffloadServer {
             device,
             regions: regions.clone(),
@@ -431,6 +462,13 @@ impl OffloadServer {
             compile,
             params,
         };
+        // Warm restart: reload the persisted cache snapshot *before*
+        // admission, so every tenant's artifact and plan resolves as a
+        // pure hit — zero P&R invocations on a restarted server.
+        if let Some(dir) = server.params.cache_dir.clone() {
+            crate::dfe::persist::load_cache(&mut server.cache, &dir)
+                .map_err(|e| anyhow!("cache snapshot in {}: {e}", dir.display()))?;
+        }
         for spec in specs {
             server.admit(spec)?;
         }
@@ -505,6 +543,8 @@ impl OffloadServer {
             fallback_software: 0,
             compile_failures: 0,
             pending_spec: None,
+            latency: LatencyHist::new(),
+            shed: 0,
         };
         let unroll = tenant.spec.unroll;
         // Admission compiles synchronously (warmup): the tenant is not
@@ -537,7 +577,8 @@ impl OffloadServer {
     /// Block until every in-flight compile job has landed (test barrier /
     /// orderly shutdown; `run` only ever pumps).
     pub fn drain_compiles(&mut self) -> Vec<u64> {
-        self.compile.drain(&mut self.cache, Duration::from_secs(30))
+        let timeout = self.params.drain_timeout;
+        self.compile.drain(&mut self.cache, timeout)
     }
 
     /// Post-round adaptive pass: fold each offloaded tenant's observed
@@ -593,6 +634,13 @@ impl OffloadServer {
         } else {
             Histogram::bucket_of(observed)
         };
+        // Background jobs race in tenant-importance order: hot/high-class
+        // tenants' respecializations jump the compile queue. Scheduling
+        // only — the landed artifact stays a pure function of the key.
+        self.compile.priority = {
+            let t = &self.tenants[ti];
+            t.spec.priority as u64 * (t.hotness.max(0.0) as u64).max(1)
+        };
         let swapped = offload_tenant_impl(
             &mut self.cache,
             &mut self.compile,
@@ -622,6 +670,12 @@ impl OffloadServer {
                 // left unpatched is demoted to software with the reason
                 // recorded for the report.
                 let t = &mut self.tenants[ti];
+                // A compile-service stall is tail latency, not a crash:
+                // the expired deadline lands in the histogram so p99
+                // reflects it.
+                if let RejectReason::CompileTimeout(d) = &reason {
+                    t.latency.record(*d);
+                }
                 t.compile_failures += 1;
                 if !t.engine.is_patched(t.func) {
                     t.offload = None;
@@ -656,21 +710,32 @@ impl OffloadServer {
             self.pump_compiles();
             let round_start = self.clock;
 
-            // ---- admission: hotness-weighted round robin ----
+            // ---- admission: priority- and hotness-weighted round robin ----
+            // The weight clamps hotness at 1.0 (exactly what `pick_batch`
+            // does internally) before scaling by the SLO class, so a NaN
+            // hotness degrades to the fairness floor instead of poisoning
+            // the sort; `total_cmp` keeps the order total and replayable
+            // either way. All-default priorities reproduce the historical
+            // hotness order bit-for-bit.
+            let weights: Vec<f64> = self
+                .tenants
+                .iter()
+                .map(|t| t.hotness.max(1.0) * f64::from(t.spec.priority.max(1)))
+                .collect();
             let mut order: Vec<usize> = (0..n_t).filter(|&i| remaining[i] > 0).collect();
-            order.sort_by(|&a, &b| {
-                self.tenants[b]
-                    .hotness
-                    .partial_cmp(&self.tenants[a].hotness)
-                    .unwrap_or(std::cmp::Ordering::Equal)
-                    .then(a.cmp(&b))
-            });
-            let hotness: Vec<f64> = self.tenants.iter().map(|t| t.hotness).collect();
-            let mut batch = pick_batch(&order, &hotness, &remaining, window);
-            // Shard affinity: same-configuration requests back-to-back.
+            order.sort_by(|&a, &b| weights[b].total_cmp(&weights[a]).then(a.cmp(&b)));
+            let mut batch = pick_batch(&order, &weights, &remaining, window);
+            // High classes schedule first (their fabric time accrues
+            // before the SLO projection trips), then shard affinity keeps
+            // same-configuration requests back-to-back within a class.
             batch.sort_by_key(|&ti| {
-                self.tenants[ti].offload.as_ref().map(|o| o.key).unwrap_or(0)
+                (
+                    std::cmp::Reverse(self.tenants[ti].spec.priority),
+                    self.tenants[ti].offload.as_ref().map(|o| o.key).unwrap_or(0),
+                )
             });
+            let top_priority =
+                batch.iter().map(|&ti| self.tenants[ti].spec.priority).max().unwrap_or(0);
 
             struct PendingExec {
                 shard: usize,
@@ -682,6 +747,10 @@ impl OffloadServer {
             let mut recfg_extra = vec![Duration::ZERO; self.shards.len()];
             let mut round_load = vec![0u32; self.shards.len()];
             let mut sw_time = Duration::ZERO;
+            // Projected fabric occupancy this round, for SLO admission
+            // control (deterministic: per-invocation model times, not
+            // wall clock).
+            let mut projected = Duration::ZERO;
 
             for &ti in &batch {
                 remaining[ti] -= 1;
@@ -732,42 +801,67 @@ impl OffloadServer {
                         tenant.reject = Some(format!("software replay failed: {e}"));
                     }
                 }
-                let offloaded = {
+                // Offloaded identity without unwraps: a tenant whose
+                // offload record or runtime state is missing (however it
+                // got into that state) rides the software arm instead of
+                // panicking the serve loop.
+                let offload_info = {
                     let t = &self.tenants[ti];
-                    !t.rolled_back && t.offload.is_some() && t.engine.is_patched(t.func)
+                    if t.rolled_back || !t.engine.is_patched(t.func) {
+                        None
+                    } else {
+                        t.offload.as_ref().zip(t.state.as_ref()).map(|(o, state)| {
+                            (o.key, o.config_words * 4, state.borrow().last_report)
+                        })
+                    }
                 };
-                if offloaded {
-                    let (key, cfg_bytes, report) = {
-                        let t = &self.tenants[ti];
-                        let o = t.offload.as_ref().unwrap();
-                        let report = t.state.as_ref().unwrap().borrow().last_report;
-                        (o.key, o.config_words * 4, report)
-                    };
-                    let shard = pick_shard(&self.shards, &round_load, key);
-                    round_load[shard] += 1;
-                    if self.shards[shard].resident != Some(key) {
-                        self.shards[shard].resident = Some(key);
-                        self.shards[shard].reconfigs += 1;
-                        recfg_extra[shard] += epsilon;
-                        up_payloads[shard].push(cfg_bytes);
-                        self.tracer.borrow_mut().simulated(Phase::Configure, epsilon);
+                // SLO admission control: once the round's projected
+                // fabric time exceeds the objective, requests below the
+                // batch's top class are shed to the software tier. The
+                // numerics already executed above — shedding only changes
+                // which virtual-time arm accounts the request.
+                let shed = match (&offload_info, self.params.slo) {
+                    (Some((_, _, report)), Some(slo)) => {
+                        self.tenants[ti].spec.priority < top_priority
+                            && (projected + report.dfe_exec).as_secs_f64() > slo
                     }
-                    up_payloads[shard].push(report.h2d_bytes);
-                    pending.push(PendingExec {
-                        shard,
-                        exec: report.dfe_exec,
-                        d2h: report.d2h_bytes,
-                    });
-                } else {
-                    // Software request: the host is one serialized core
-                    // (it only waits on the round barrier when there is
-                    // one).
-                    let t = &self.tenants[ti];
-                    if barrier {
-                        host_free = host_free.max(round_start);
+                    _ => false,
+                };
+                match offload_info {
+                    Some((key, cfg_bytes, report)) if !shed => {
+                        let shard = pick_shard(&self.shards, &round_load, key);
+                        round_load[shard] += 1;
+                        if self.shards[shard].resident != Some(key) {
+                            self.shards[shard].resident = Some(key);
+                            self.shards[shard].reconfigs += 1;
+                            recfg_extra[shard] += epsilon;
+                            up_payloads[shard].push(cfg_bytes);
+                            self.tracer.borrow_mut().simulated(Phase::Configure, epsilon);
+                        }
+                        up_payloads[shard].push(report.h2d_bytes);
+                        pending.push(PendingExec {
+                            shard,
+                            exec: report.dfe_exec,
+                            d2h: report.d2h_bytes,
+                        });
+                        projected += report.dfe_exec;
+                        self.tenants[ti].latency.record(report.offload_time());
                     }
-                    host_free += t.baseline_per_inv;
-                    sw_time += t.baseline_per_inv;
+                    _ => {
+                        // Software request: the host is one serialized core
+                        // (it only waits on the round barrier when there is
+                        // one).
+                        let t = &mut self.tenants[ti];
+                        if barrier {
+                            host_free = host_free.max(round_start);
+                        }
+                        host_free += t.baseline_per_inv;
+                        sw_time += t.baseline_per_inv;
+                        if shed {
+                            t.shed += 1;
+                        }
+                        t.latency.record(t.baseline_per_inv);
+                    }
                 }
                 self.tenants[ti].served += 1;
             }
@@ -949,6 +1043,11 @@ impl OffloadServer {
                 fallback_local: t.fallback_local,
                 fallback_software: t.fallback_software,
                 compile_failures: t.compile_failures,
+                priority: t.spec.priority,
+                shed: t.shed,
+                p50_secs: t.latency.p50().as_secs_f64(),
+                p95_secs: t.latency.p95().as_secs_f64(),
+                p99_secs: t.latency.p99().as_secs_f64(),
             })
             .collect();
         let shards = self
@@ -976,6 +1075,8 @@ impl OffloadServer {
             cache_hit_rate: self.cache.hit_rate(),
             compile_stall_secs,
             pending_compiles: self.compile.pending(),
+            pr_compiles: self.compile.compiled,
+            shed: self.tenants.iter().map(|t| t.shed).sum(),
             tenants,
         }
     }
@@ -1463,6 +1564,15 @@ pub struct TenantReport {
     /// Structured respecialization-compile failures (tenant demoted or
     /// tier kept; the serve loop never died).
     pub compile_failures: u64,
+    /// SLO class the tenant was admitted with (1 = default).
+    pub priority: u32,
+    /// Requests shed to the software tier by SLO admission control.
+    pub shed: u64,
+    /// Per-request virtual latency percentiles (log2-bucket floors, so
+    /// they are deterministic and comparable across runs and nodes).
+    pub p50_secs: f64,
+    pub p95_secs: f64,
+    pub p99_secs: f64,
 }
 
 #[derive(Clone, Copy, Debug)]
@@ -1493,6 +1603,14 @@ pub struct ServeReport {
     pub compile_stall_secs: f64,
     /// Compile jobs still in flight when the report was taken.
     pub pending_compiles: usize,
+    /// Place-&-route invocations actually performed (blocking races plus
+    /// landed background jobs). Cache hits — including a warm restart
+    /// from a persisted snapshot — do not count: a restarted server with
+    /// a full cache reports 0.
+    pub pr_compiles: u64,
+    /// Requests shed to the software tier by SLO admission control
+    /// (sum over tenants).
+    pub shed: u64,
 }
 
 impl ServeReport {
@@ -1584,12 +1702,28 @@ impl fmt::Display for ServeReport {
             100.0 * self.cache_hit_rate,
             self.cache.evictions
         )?;
+        for t in &self.tenants {
+            if t.requests == 0 {
+                continue;
+            }
+            writeln!(
+                f,
+                "latency {:<16} p50 {:>10} p95 {:>10} p99 {:>10}  class {} ({} shed)",
+                t.name,
+                fmt_duration(Duration::from_secs_f64(t.p50_secs)),
+                fmt_duration(Duration::from_secs_f64(t.p95_secs)),
+                fmt_duration(Duration::from_secs_f64(t.p99_secs)),
+                t.priority,
+                t.shed
+            )?;
+        }
         writeln!(
             f,
             "compile: {} stall after warmup, {} job(s) still in flight",
             fmt_duration(Duration::from_secs_f64(self.compile_stall_secs)),
             self.pending_compiles
         )?;
+        writeln!(f, "pr-compiles: {} ({} request(s) shed)", self.pr_compiles, self.shed)?;
         write!(
             f,
             "makespan {} for {} requests ({} transport) -> {:.1} req/s, {:.2e} el/s aggregate",
@@ -1715,6 +1849,7 @@ pub fn gemm_spec() -> TenantSpec {
         setup: gemm_setup,
         refresh: None,
         outputs: out0,
+        priority: 1,
     }
 }
 
@@ -1727,6 +1862,7 @@ pub fn trmm_spec() -> TenantSpec {
         setup: trmm_setup,
         refresh: None,
         outputs: out0,
+        priority: 1,
     }
 }
 
@@ -1739,6 +1875,7 @@ pub fn syr2k_spec() -> TenantSpec {
         setup: syr2k_setup,
         refresh: None,
         outputs: out0,
+        priority: 1,
     }
 }
 
@@ -1751,6 +1888,7 @@ pub fn gesummv_spec() -> TenantSpec {
         setup: gesummv_setup,
         refresh: None,
         outputs: out_gesummv,
+        priority: 1,
     }
 }
 
@@ -1763,6 +1901,7 @@ pub fn conv_spec() -> TenantSpec {
         setup: conv_setup,
         refresh: Some(conv_refresh),
         outputs: out0,
+        priority: 1,
     }
 }
 
@@ -1949,6 +2088,7 @@ mod tests {
             setup: atax_setup,
             refresh: None,
             outputs: atax_outs,
+            priority: 1,
         };
         let mut server =
             OffloadServer::new(ServeParams::default(), vec![spec.clone()]).expect("server");
@@ -2059,5 +2199,32 @@ mod tests {
         assert_eq!(pick_shard(&shards, &[0, 0], 9), 1, "miss goes to the idle shard");
         // Same-round load breaks ties before busy_until.
         assert_eq!(pick_shard(&shards, &[0, 3], 9), 0, "round load dominates");
+    }
+
+    #[test]
+    fn nan_hotness_keeps_the_batch_order_stable_and_replayable() {
+        // A NaN scheduling weight (e.g. a poisoned profile) used to hit
+        // the `partial_cmp(..).unwrap_or(Equal)` sort, where the outcome
+        // depends on the comparison order the sort happens to take. With
+        // `total_cmp` over the clamped weights the schedule is total:
+        // two identically poisoned servers replay the same batches.
+        let run_poisoned = || {
+            let mut server = OffloadServer::new(ServeParams::default(), polybench_mix(3))
+                .expect("server");
+            server.tenants[1].hotness = f64::NAN;
+            let report = server.run(4);
+            let outs: Vec<Vec<Vec<i32>>> =
+                (0..server.n_tenants()).map(|i| server.tenant_outputs(i)).collect();
+            let served: Vec<u64> = report.tenants.iter().map(|t| t.requests).collect();
+            let offl: Vec<bool> = report.tenants.iter().map(|t| t.offloaded).collect();
+            (outs, served, offl, report.total_elements)
+        };
+        let a = run_poisoned();
+        let b = run_poisoned();
+        assert_eq!(a.1, b.1, "served counts must replay under NaN hotness");
+        assert_eq!(a.2, b.2, "offload decisions must replay under NaN hotness");
+        assert_eq!(a.3, b.3, "element totals must replay under NaN hotness");
+        assert_eq!(a.0, b.0, "outputs must replay bit-identically under NaN hotness");
+        assert_eq!(a.1, vec![4, 4, 4], "every tenant still serves its quota");
     }
 }

@@ -253,6 +253,12 @@ pub struct CompileJob {
     pub portfolio: usize,
     /// Warm placement hint (the prior tier's), or `Cold`.
     pub warm: ParSeed,
+    /// Queue priority (higher races first; the serve layer stamps tenant
+    /// hotness here so hot tenants' respecializations land soonest). Only
+    /// *scheduling* moves — each job's winner stays the pure function of
+    /// `(base_seed, K)`, so priority can never change an artifact. 0 (the
+    /// default everywhere else) degenerates to plain FIFO.
+    pub priority: u64,
 }
 
 /// A finished compile job, delivered by [`CompileService::poll`].
@@ -274,6 +280,7 @@ struct JobState {
     warm: ParSeed,
     book: RaceBook,
     remaining: AtomicUsize,
+    priority: u64,
 }
 
 /// Task queue shared with the workers: per-entrant tasks plus a shutdown
@@ -338,11 +345,21 @@ impl CompileService {
             warm: job.warm,
             book: RaceBook::new(),
             remaining: AtomicUsize::new(k),
+            priority: job.priority,
         });
         {
             let mut g = self.queue.tasks.lock().unwrap();
+            // The k-entrant block jumps ahead of every queued task of
+            // strictly lower priority, but never splits or reorders equal
+            // priorities — all-default (0) submissions keep the exact
+            // FIFO order the pre-priority service had.
+            let at = g
+                .0
+                .iter()
+                .position(|(s, _)| s.priority < state.priority)
+                .unwrap_or(g.0.len());
             for entrant in 0..k {
-                g.0.push_back((state.clone(), entrant));
+                g.0.insert(at + entrant, (state.clone(), entrant));
             }
         }
         self.queue.cv.notify_all();
@@ -488,6 +505,7 @@ mod tests {
                 params: ParParams::default(),
                 portfolio: 2,
                 warm: ParSeed::Cold,
+                priority: 0,
             });
         }
         let mut got = Vec::new();

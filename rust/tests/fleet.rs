@@ -13,7 +13,11 @@
 //!       healthy fleet, and every deferred request still completes;
 //!   F7  the ledger arithmetic is internally consistent — every remote
 //!       request applies once or degrades once, per-tenant counters sum
-//!       to the fleet counters, per-node serve counts sum to the ledger.
+//!       to the fleet counters, per-node serve counts sum to the ledger;
+//!   F8  a tenant with no fabric path at all (multi-SCoP function, never
+//!       offloaded) serves on the software tier and the fleet report
+//!       surfaces it gracefully — no unwrap panic on the missing offload
+//!       state, correct software-tier row, populated latency percentiles.
 
 use tlo::offload::fleet::{FleetCounters, FleetParams, FleetReport, FleetServer};
 use tlo::offload::server::{polybench_mix, run_single_tenant, ServeParams, TenantSpec};
@@ -212,4 +216,73 @@ fn f7_counters_are_internally_consistent() {
     assert_eq!(t_soft, c.fallback_software);
     let node_served: u64 = report.nodes.iter().map(|n| n.served).sum();
     assert_eq!(node_served, c.applied_results, "node serve counts match the ledger");
+}
+
+#[test]
+fn f8_never_offloaded_tenant_reports_gracefully_on_the_software_tier() {
+    use tlo::ir::func::Module;
+    use tlo::jit::interp::{Memory, Val};
+    use tlo::workloads::polybench;
+
+    // atax has two loop nests: patching the whole function would drop the
+    // second, so it is structurally rejected at admission and serves on
+    // the interpreter for the whole run — its offload and runtime-state
+    // slots stay `None`, which is exactly what used to feed the report
+    // collector's unwraps.
+    fn atax_module() -> Module {
+        let mut m = Module::new();
+        m.add(polybench::atax());
+        m
+    }
+    fn atax_setup(mem: &mut Memory) -> Vec<Val> {
+        let n = 8usize;
+        let ha = mem.from_i32(&(0..n * n).map(|i| (i as i32 % 5) - 2).collect::<Vec<_>>());
+        let hx = mem.from_i32(&(0..n).map(|i| i as i32 - 3).collect::<Vec<_>>());
+        let hy = mem.alloc_i32(n);
+        let htmp = mem.alloc_i32(n);
+        vec![Val::P(ha), Val::P(hx), Val::P(hy), Val::P(htmp), Val::I(n as i32)]
+    }
+    fn atax_outs(args: &[Val]) -> Vec<u32> {
+        vec![args[2].as_ptr(), args[3].as_ptr()]
+    }
+    let atax = TenantSpec {
+        name: "atax-soft".into(),
+        module: atax_module,
+        func: "atax",
+        unroll: 2,
+        setup: atax_setup,
+        refresh: None,
+        outputs: atax_outs,
+        priority: 1,
+    };
+    let requests = 5u64;
+    let mut specs = polybench_mix(2);
+    specs.push(atax.clone());
+    let (report, outs) =
+        run_fleet(fleet_params(FaultProfile::healthy()), specs.clone(), requests);
+
+    let row = report
+        .serve
+        .tenants
+        .iter()
+        .find(|t| t.name == "atax-soft")
+        .expect("software tenant must appear in the fleet report");
+    assert!(!row.offloaded, "atax must not offload: {row:?}");
+    assert_eq!(row.requests, requests, "software tier must serve the full quota");
+    assert_eq!(row.fallback_software, requests, "every request rode the interpreter");
+    assert_eq!(row.remote_served, 0);
+    assert_eq!(row.shed, 0, "no SLO configured, nothing sheds");
+    assert!(row.reject.as_deref().unwrap_or("").contains("SCoP"), "{row:?}");
+    // Tail observability covers the software tier too.
+    assert!(row.p50_secs > 0.0, "software requests must land in the histogram");
+    assert!(row.p50_secs <= row.p95_secs && row.p95_secs <= row.p99_secs);
+    // The offloadable co-tenants were not disturbed, and the software
+    // tenant's numerics match the oracle.
+    for (i, spec) in specs.iter().enumerate() {
+        let want = run_single_tenant(spec, requests).expect("oracle");
+        assert_eq!(outs[i], want, "tenant {} diverged", spec.name);
+    }
+    // Display paths (serve + fleet) must also survive the None state.
+    let rendered = format!("{report}");
+    assert!(rendered.contains("atax-soft"), "report display must include the tenant");
 }

@@ -181,6 +181,7 @@ fn ps4_service_jobs_land_with_the_foreground_winner() {
             params: ParParams::default(),
             portfolio: 3,
             warm: ParSeed::Cold,
+            priority: 0,
         });
     }
     let mut done = Vec::new();
@@ -221,6 +222,7 @@ fn ps4b_unroutable_jobs_surface_errors_not_hangs() {
         params: ParParams::default(),
         portfolio: 2,
         warm: ParSeed::Cold,
+        priority: 0,
     });
     let d = svc
         .recv_timeout(std::time::Duration::from_secs(30))

@@ -27,7 +27,12 @@
 //!       attempt number and capped (jittered delays stay inside it), and
 //!       under random fault schedules every remote request applies at
 //!       most once — replays are bit-identical and the idempotency
-//!       ledger absorbs every duplicate.
+//!       ledger absorbs every duplicate;
+//!   P11 latency-histogram soundness: for random sample streams the
+//!       recorded count is conserved across buckets and merges, reported
+//!       percentiles are monotone (p50 <= p95 <= p99), every percentile
+//!       is a bucket floor no larger than the true sample maximum, and
+//!       identical streams produce bit-identical histograms.
 
 use tlo::dfe::grid::Grid;
 use tlo::dfe::opcodes::{Op, ALL_OPS};
@@ -531,4 +536,93 @@ fn p10_fleet_backoff_and_retry_idempotency_under_random_faults() {
     }
     assert!(exercised_remote > 0, "random cases never dispatched remote work");
     assert!(exercised_dups > 0, "random profiles never exercised duplicate suppression");
+}
+
+#[test]
+fn p11_latency_histogram_percentiles_are_monotone_conserved_and_deterministic() {
+    use std::time::Duration;
+    use tlo::offload::latency::{LatencyHist, LAT_BUCKETS};
+
+    let mut rng = Rng::new(0x1A7);
+    let mut nonempty = 0usize;
+    for case in 0..150u64 {
+        let n = rng.below(200);
+        // Span every magnitude the serve layer produces: sub-microsecond
+        // fabric times up to multi-second compile stalls.
+        let samples: Vec<u64> = (0..n)
+            .map(|_| {
+                let mag = rng.below(40) as u32;
+                let base = 1u64 << mag.min(39);
+                base + rng.below(base.min(1 << 20) as usize) as u64
+            })
+            .collect();
+        let mut h = LatencyHist::new();
+        for &s in &samples {
+            h.record(Duration::from_nanos(s));
+        }
+
+        // Conservation: every sample lands in exactly one bucket.
+        assert_eq!(h.total(), n as u64, "case {case}");
+        let bucket_sum: u64 = h.counts().iter().sum();
+        assert_eq!(bucket_sum, n as u64, "case {case}: buckets leak samples");
+
+        // Determinism: the same stream is bit-identical.
+        let mut h2 = LatencyHist::new();
+        for &s in &samples {
+            h2.record(Duration::from_nanos(s));
+        }
+        assert_eq!(h, h2, "case {case}: identical streams diverged");
+
+        // Merge conservation: any split of the stream folds back exactly.
+        let cut = rng.below(samples.len().max(1));
+        let (left, right) = samples.split_at(cut);
+        let mut ha = LatencyHist::new();
+        let mut hb = LatencyHist::new();
+        for &s in left {
+            ha.record(Duration::from_nanos(s));
+        }
+        for &s in right {
+            hb.record(Duration::from_nanos(s));
+        }
+        ha.merge(&hb);
+        assert_eq!(ha, h, "case {case}: merge is not record-equivalent");
+
+        if n == 0 {
+            assert_eq!(h.p99(), Duration::ZERO, "case {case}: empty hist must read zero");
+            continue;
+        }
+        nonempty += 1;
+
+        // Percentile monotonicity, both across the named trio and along a
+        // sweep of the full range.
+        assert!(h.p50() <= h.p95() && h.p95() <= h.p99(), "case {case}");
+        let mut prev = Duration::ZERO;
+        for i in 0..=20 {
+            let q = h.percentile(i as f64 / 20.0);
+            assert!(q >= prev, "case {case}: percentile sweep not monotone at {i}");
+            prev = q;
+        }
+
+        // Every reported percentile is a bucket floor: never above the
+        // true sample maximum, and p99 at least the floor of the median
+        // sample's bucket (the floor halves a value at worst).
+        let max = *samples.iter().max().unwrap();
+        assert!(
+            h.p99() <= Duration::from_nanos(max),
+            "case {case}: p99 {:?} above the true max {max}ns",
+            h.p99()
+        );
+        let mut sorted = samples.clone();
+        sorted.sort_unstable();
+        let median = sorted[(n - 1) / 2];
+        assert!(
+            h.p99().as_nanos() as u64 >= median / 2,
+            "case {case}: p99 {:?} below half the median {median}ns",
+            h.p99()
+        );
+    }
+    assert!(nonempty >= 100, "only {nonempty} non-empty cases — property too weak");
+    // The bucket axis is part of the persisted format: changing it
+    // silently would corrupt merged cross-node histograms.
+    assert_eq!(LAT_BUCKETS, 33);
 }

@@ -22,7 +22,12 @@
 //!       multi-tile execution plan: outputs stay bit-identical to the
 //!       interpreter under both transport modes, single-tile co-tenants
 //!       are unaffected, and the async multi-pass pipeline never loses to
-//!       the synchronous one on makespan.
+//!       the synchronous one on makespan;
+//!   S9  SLO admission control under overload: the top priority class is
+//!       never shed, lower classes shed to the software tier, latency
+//!       percentiles surface per tenant, and shedding never changes
+//!       numerics (outputs stay bit-identical to the single-tenant
+//!       offload oracle).
 
 use tlo::dfe::grid::Grid;
 use tlo::jit::engine::Engine;
@@ -393,4 +398,92 @@ fn s8_oversized_tenant_serves_as_a_multi_tile_plan_without_hurting_others() {
         rep_async.makespan,
         rep_sync.makespan
     );
+}
+
+#[test]
+fn s9_slo_overload_sheds_low_classes_only_and_never_changes_numerics() {
+    let requests = 4u64;
+    // One high-class tenant against two low-class co-tenants, under an
+    // SLO so tight that any round with more than the high tenant's own
+    // fabric time is over budget — a deterministic overload.
+    let mut high = gemm_spec();
+    high.name = "gemm-high".into();
+    high.priority = 3;
+    let mut low_same = gemm_spec();
+    low_same.name = "gemm-low".into();
+    let mut low_other = trmm_spec();
+    low_other.name = "trmm-low".into();
+    let specs = vec![high, low_same, low_other];
+    let params = ServeParams {
+        shards: 2,
+        slo: Some(1e-9),
+        ..Default::default()
+    };
+    let mut server = OffloadServer::new(params, specs.clone()).expect("server");
+    for (i, spec) in specs.iter().enumerate() {
+        assert!(
+            server.tenants[i].offload.is_some(),
+            "tenant {} must offload for the shed test to bite",
+            spec.name
+        );
+        // Pin hotness so the weighted window hands out exactly one slot
+        // per tenant per round (weights 3/1/1): the high class is then in
+        // every batch and the shed counts below are exact, independent of
+        // what the profiler thinks of gemm vs trmm.
+        server.tenants[i].hotness = 1.0;
+    }
+    let report = server.run(requests);
+
+    // Policy: the top class keeps its fabric path; every lower-class
+    // offloaded request sheds (its exec alone exceeds the 1 ns budget).
+    let by_name = |n: &str| report.tenants.iter().find(|t| t.name == n).unwrap();
+    let t_high = by_name("gemm-high");
+    let t_low = by_name("gemm-low");
+    let t_other = by_name("trmm-low");
+    assert_eq!(t_high.shed, 0, "the top class must never shed");
+    assert_eq!(t_high.priority, 3);
+    assert_eq!(t_low.shed, requests, "every low-class request sheds: {t_low:?}");
+    assert_eq!(t_other.shed, requests, "every low-class request sheds: {t_other:?}");
+    assert_eq!(report.shed, 2 * requests, "aggregate shed is the per-tenant sum");
+    assert_eq!(report.total_requests, 3 * requests, "shed requests still serve");
+
+    // Observability: percentiles populated and monotone for every tenant.
+    for t in &report.tenants {
+        assert!(t.p50_secs > 0.0, "{}: empty latency histogram", t.name);
+        assert!(t.p50_secs <= t.p95_secs && t.p95_secs <= t.p99_secs, "{t:?}");
+    }
+    // The shed tier is the (slower) software tier: the low tenant's
+    // latency floor is its interpreter baseline, not the fabric time.
+    assert!(
+        t_low.p50_secs >= t_low.baseline_per_inv.as_secs_f64() / 2.0,
+        "shed requests must account software latency: {t_low:?}"
+    );
+
+    // Correctness: shedding re-times requests, it never re-computes them.
+    for (i, spec) in specs.iter().enumerate() {
+        let want = run_single_tenant(spec, requests).expect("single-tenant replay");
+        assert_eq!(
+            server.tenant_outputs(i),
+            want,
+            "tenant {} diverges under SLO shedding",
+            spec.name
+        );
+    }
+
+    // Control: the same mix with no SLO sheds nothing.
+    let mut free = OffloadServer::new(
+        ServeParams { shards: 2, ..Default::default() },
+        specs.clone(),
+    )
+    .expect("server");
+    let free_report = free.run(requests);
+    assert_eq!(free_report.shed, 0, "no SLO, no shedding");
+    for (i, spec) in specs.iter().enumerate() {
+        assert_eq!(
+            server.tenant_outputs(i),
+            free.tenant_outputs(i),
+            "tenant {}: SLO shedding changed numerics",
+            spec.name
+        );
+    }
 }
