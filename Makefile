@@ -28,9 +28,18 @@
 #                    and the P10 reliability property. Zero panics and
 #                    oracle-verified outputs are the acceptance bar.
 
+#   make lint        Style + static-analysis gate (mirrors the CI `lint`
+#                    suite): rustfmt in check mode and clippy over every
+#                    target with warnings promoted to errors. The clippy
+#                    run also enforces the unwrap audit (clippy.toml
+#                    disallowed_methods, opted into by the serve / fleet /
+#                    persist hot paths). `tlo lint` — the artifact
+#                    verifier sweep over the PolyBench suite — is the
+#                    runtime half; CI runs it in the `verifier` suite.
+
 PYTHON ?= python3
 
-.PHONY: artifacts build test bench chaos clean
+.PHONY: artifacts build test bench chaos lint clean
 
 artifacts:
 	cd python && $(PYTHON) -m compile.aot --out-dir ../artifacts
@@ -54,6 +63,10 @@ bench:
 	cargo bench --bench fig6_phases
 	cargo bench --bench table1
 	cargo bench --bench table2
+
+lint:
+	cargo fmt --check
+	cargo clippy --all-targets -- -D warnings
 
 chaos:
 	cargo run --release -- serve --tenants 4 --shards 2 --requests 6 --fleet 4 --fault-profile drop=0.2,dup=0.2,reorder=0.2,jitter=0.3,crash=0.05 --fault-seed 51966

@@ -260,6 +260,46 @@ fn main() {
     );
     println!("PASS: async multi-pass makespan <= sync over {} tiles", plan.n_tiles());
 
+    // ---- static verifier overhead (DESIGN.md §11) ----
+    // The verify-on-insert hook runs under debug_assertions only; this
+    // measures what that debug tax costs per artifact (and what a release
+    // `tlo lint` pays per kernel), so the trajectory JSON catches the
+    // verifier silently growing superlinear.
+    print_header("static verifier — re-verification cost per artifact");
+    let artifacts: Vec<(&str, CachedConfig)> = mix
+        .iter()
+        .map(|c| {
+            let image = c.config.to_image().expect("mix configs lower");
+            (c.name, CachedConfig::new(c.config.clone(), image, format!("verify_{}", c.name)))
+        })
+        .collect();
+    let reps = if quick { 5u32 } else { 50 };
+    let mut verify_clean = true;
+    let t0 = std::time::Instant::now();
+    for _ in 0..reps {
+        for (_, a) in &artifacts {
+            let diags = tlo::analysis::verifier::verify_artifact(black_box(a));
+            verify_clean &= !tlo::analysis::diag::has_errors(&diags);
+            black_box(diags);
+        }
+    }
+    let verify_artifact_micros =
+        t0.elapsed().as_secs_f64() * 1e6 / (reps as usize * artifacts.len()) as f64;
+    let t1 = std::time::Instant::now();
+    for _ in 0..reps {
+        let diags = tlo::analysis::verifier::verify_plan(black_box(&plan));
+        verify_clean &= !tlo::analysis::diag::has_errors(&diags);
+        black_box(diags);
+    }
+    let verify_plan_micros = t1.elapsed().as_secs_f64() * 1e6 / reps as f64;
+    println!(
+        "  verify_artifact: {verify_artifact_micros:.1} us/artifact over {} mix configs; \
+         verify_plan: {verify_plan_micros:.1} us/plan over {} tiles; clean: {verify_clean}",
+        artifacts.len(),
+        plan.n_tiles(),
+    );
+    assert!(verify_clean, "benchmarked artifacts must verify clean");
+
     // ---- perf-trajectory JSON (written by `make bench`) ----
     if let Ok(path) = std::env::var("TLO_BENCH_JSON") {
         let mut kernels = String::new();
@@ -284,7 +324,10 @@ fn main() {
              \"tiled_tiles_per_plan\": {},\n  \"tiled_spill_streams\": {},\n  \
              \"tiled_makespan_sync_secs\": {:.9},\n  \
              \"tiled_makespan_async_secs\": {:.9},\n  \
-             \"tiled_overlap_efficiency\": {:.3}\n}}\n",
+             \"tiled_overlap_efficiency\": {:.3},\n  \
+             \"verify_artifact_micros\": {:.3},\n  \
+             \"verify_plan_micros\": {:.3},\n  \
+             \"verify_clean\": {}\n}}\n",
             if quick { "quick" } else { "full" },
             n_elems,
             kernels,
@@ -293,7 +336,10 @@ fn main() {
             plan.n_spills,
             plan_sync.as_secs_f64(),
             plan_async.as_secs_f64(),
-            overlap
+            overlap,
+            verify_artifact_micros,
+            verify_plan_micros,
+            verify_clean
         );
         std::fs::write(&path, doc).expect("write TLO_BENCH_JSON");
         println!("wrote {path}");

@@ -1,0 +1,174 @@
+//! Structured diagnostics for the static artifact verifier
+//! (`analysis::verifier`).
+//!
+//! Every verifier pass reports through one shape — `Diag { pass,
+//! severity, location, message }` — so the CLI (`tlo lint`), the
+//! debug-build sanitizer hooks and the mutation self-test harness all
+//! consume the same stream. Ordering is deterministic: diagnostics sort
+//! by (pass, severity, location, message), so two runs over the same
+//! artifact render byte-identical tables (locked by proptest `p12_`).
+
+use std::fmt;
+
+/// The verifier passes, in pipeline order. See DESIGN.md §11 for what
+/// each pass re-derives.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Pass {
+    /// IR ↔ DFG consistency (extraction boundary).
+    V1IrDfg,
+    /// Grid-configuration legality, re-proved independently of P&R.
+    V2GridLegality,
+    /// Wave-schedule hazard analysis on `CompiledFabric`.
+    V3WaveHazard,
+    /// Tiled-execution-plan soundness.
+    V4PlanSoundness,
+    /// Persisted-snapshot integrity (load-time re-verification).
+    V5SnapshotIntegrity,
+}
+
+impl Pass {
+    pub fn name(self) -> &'static str {
+        match self {
+            Pass::V1IrDfg => "V1",
+            Pass::V2GridLegality => "V2",
+            Pass::V3WaveHazard => "V3",
+            Pass::V4PlanSoundness => "V4",
+            Pass::V5SnapshotIntegrity => "V5",
+        }
+    }
+
+    pub fn title(self) -> &'static str {
+        match self {
+            Pass::V1IrDfg => "IR/DFG consistency",
+            Pass::V2GridLegality => "grid-config legality",
+            Pass::V3WaveHazard => "wave-schedule hazards",
+            Pass::V4PlanSoundness => "tiled-plan soundness",
+            Pass::V5SnapshotIntegrity => "snapshot integrity",
+        }
+    }
+}
+
+impl fmt::Display for Pass {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Errors fail verification (the sanitizer rejects the artifact);
+/// warnings flag convention drift that cannot corrupt numerics. `Error`
+/// orders first so sorted output leads with what matters.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Severity {
+    Error,
+    Warning,
+}
+
+impl fmt::Display for Severity {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            Severity::Error => "error",
+            Severity::Warning => "warning",
+        })
+    }
+}
+
+/// One finding: which pass, how severe, where (a human-readable artifact
+/// coordinate like `cell (1,0)` or `tile 2 sink 0`), and what.
+#[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Diag {
+    pub pass: Pass,
+    pub severity: Severity,
+    pub location: String,
+    pub message: String,
+}
+
+impl Diag {
+    pub fn error(pass: Pass, location: impl Into<String>, message: impl Into<String>) -> Diag {
+        Diag { pass, severity: Severity::Error, location: location.into(), message: message.into() }
+    }
+
+    pub fn warning(pass: Pass, location: impl Into<String>, message: impl Into<String>) -> Diag {
+        Diag {
+            pass,
+            severity: Severity::Warning,
+            location: location.into(),
+            message: message.into(),
+        }
+    }
+}
+
+impl fmt::Display for Diag {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "[{}/{}] {}: {}", self.pass, self.severity, self.location, self.message)
+    }
+}
+
+/// Canonical deterministic order: pass, then severity (errors first),
+/// then location, then message. Every verifier entry point returns its
+/// findings already sorted through this.
+pub fn sort_diags(diags: &mut [Diag]) {
+    diags.sort();
+}
+
+pub fn has_errors(diags: &[Diag]) -> bool {
+    diags.iter().any(|d| d.severity == Severity::Error)
+}
+
+pub fn error_count(diags: &[Diag]) -> usize {
+    diags.iter().filter(|d| d.severity == Severity::Error).count()
+}
+
+/// Render a sorted diagnostic stream as an aligned table (the `tlo lint`
+/// output format). Empty input renders an empty string.
+pub fn render_table(diags: &[Diag]) -> String {
+    use std::fmt::Write as _;
+    let mut out = String::new();
+    let loc_w = diags.iter().map(|d| d.location.len()).max().unwrap_or(0).max(8);
+    for d in diags {
+        let _ = writeln!(
+            out,
+            "  {:<2} {:<7} {:<loc_w$}  {}",
+            d.pass.name(),
+            d.severity.to_string(),
+            d.location,
+            d.message,
+        );
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ordering_is_pass_severity_location_message() {
+        let mut v = vec![
+            Diag::warning(Pass::V2GridLegality, "b", "w"),
+            Diag::error(Pass::V3WaveHazard, "a", "x"),
+            Diag::error(Pass::V2GridLegality, "a", "y"),
+            Diag::error(Pass::V2GridLegality, "a", "x"),
+        ];
+        sort_diags(&mut v);
+        let rendered: Vec<String> = v.iter().map(|d| d.to_string()).collect();
+        assert_eq!(
+            rendered,
+            vec![
+                "[V2/error] a: x",
+                "[V2/error] a: y",
+                "[V2/warning] b: w",
+                "[V3/error] a: x",
+            ]
+        );
+        assert!(has_errors(&v));
+        assert_eq!(error_count(&v), 3);
+    }
+
+    #[test]
+    fn table_renders_aligned_rows_and_empty_input_is_empty() {
+        assert_eq!(render_table(&[]), "");
+        let v = [Diag::error(Pass::V5SnapshotIntegrity, "entry 0x1", "truncated")];
+        let t = render_table(&v);
+        assert!(t.contains("V5") && t.contains("error") && t.contains("truncated"));
+    }
+}

@@ -1,6 +1,13 @@
 //! Analysis phase (paper §III): SCoP detection, affine machinery and the
 //! DFE legality screen driving Table I.
 pub mod affine;
+pub mod diag;
 pub mod scop;
+pub mod verifier;
 pub use affine::Affine;
+pub use diag::{render_table, sort_diags, Diag, Pass, Severity};
 pub use scop::{analyze_function, FuncAnalysis, LoopInfo, ScopInfo, ScopReject};
+pub use verifier::{
+    snapshot_gate, verify_artifact, verify_config, verify_fabric, verify_offload, verify_plan,
+    verify_plan_with_provenance,
+};

@@ -1,0 +1,956 @@
+//! Static artifact verifier & hazard analyzer (DESIGN.md §11).
+//!
+//! The runtime — not a human — extracts DFGs, routes them, lowers wave
+//! schedules, cuts tiled plans and persists the lot; a single bad
+//! artifact silently corrupts tenant numerics at serve time. In the
+//! translation-validation spirit of *Best-Effort FPGA Programming*
+//! (Cong et al.), this module re-derives every pipeline invariant from
+//! scratch and cross-checks it against what the pipeline actually
+//! produced, instead of trusting the producer's own bookkeeping:
+//!
+//!   * **V1** — IR ↔ DFG consistency at the extraction boundary
+//!     ([`verify_offload`]): the source function passes IR verification,
+//!     the DFG is a well-formed DAG, and its stream bindings are dense
+//!     and 1:1 with the extraction's `StreamIn`/`StreamOut` tables.
+//!   * **V2** — grid-configuration legality re-proved independently of
+//!     P&R ([`verify_config`]): I/O pads on border faces with no face
+//!     double-booked, every route edge present in the `Grid` topology,
+//!     FU opcodes within cell capability with all used operands
+//!     configured, pass-through routing acyclic, pad counts within the
+//!     perimeter budget.
+//!   * **V3** — wave-schedule hazard analysis ([`verify_fabric`]): every
+//!     FU firing reads only slots already defined (the re-derived
+//!     topological order agrees with the stored schedule), destination
+//!     slots never alias, all slot indices in bounds, and the fill
+//!     latency / drain depth / II re-computed from the configuration
+//!     match the numbers the artifact advertises.
+//!   * **V4** — tiled-plan soundness ([`verify_plan`],
+//!     [`verify_plan_with_provenance`]): every spill slot written exactly
+//!     once and only read by strictly later tiles, external outputs
+//!     landed exactly once, stream arities match each tile's image,
+//!     `config_words()` accounting consistent, and — with provenance —
+//!     positional `tile_key`s match the plan key and the cut covers the
+//!     source DFG exactly once (calc-node conservation plus a
+//!     deterministic semantic probe).
+//!   * **V5** — persisted-snapshot integrity ([`snapshot_gate`]):
+//!     `dfe/persist.rs` re-runs V2–V4 on every freshly parsed "tlo-cache
+//!     v1" artifact, so a byte-valid but semantically corrupt snapshot is
+//!     rejected at load instead of served.
+//!
+//! All entry points are pure (`&`-only, no interior mutability) and
+//! return diagnostics in the canonical deterministic order
+//! ([`crate::analysis::diag::sort_diags`]); determinism and cleanliness
+//! on every routed artifact are locked by proptest `p12_` and the
+//! mutation self-test harness in `tests/verifier.rs`.
+
+use std::collections::{BTreeSet, HashMap};
+
+use crate::analysis::diag::{error_count, has_errors, sort_diags, Diag, Pass, Severity};
+use crate::dfe::cache::{dfg_key, CachedConfig};
+use crate::dfe::config::{FuSrc, GridConfig, OutSrc};
+use crate::dfe::exec::CompiledFabric;
+use crate::dfe::grid::{CellCoord, Dir, DIRS};
+use crate::dfe::opcodes::Op;
+use crate::dfe::plan::{tile_key, ExecutionPlan};
+use crate::dfg::extract::OffloadDfg;
+use crate::dfg::graph::{Dfg, NodeKind};
+use crate::dfg::partition::{TileBudget, TileSink, TileSource, TiledDfg};
+use crate::ir::func::Function;
+
+// ---------------------------------------------------------------- V1 --
+
+/// V1: the extraction boundary. The source function must pass IR
+/// verification, the extracted DFG must be a well-formed DAG, and its
+/// `Input(j)`/`Output(j)` bindings must be dense and 1:1 with the
+/// extraction's stream tables (the offload stub indexes both by `j`).
+pub fn verify_offload(func: &Function, off: &OffloadDfg) -> Vec<Diag> {
+    let mut diags = Vec::new();
+    if let Err(e) = crate::ir::verify::verify_function(func, None) {
+        diags.push(Diag::error(
+            Pass::V1IrDfg,
+            format!("fn {}", func.name),
+            format!("source function fails IR verification: {e}"),
+        ));
+    }
+    verify_dfg_into(&off.dfg, Some((off.inputs.len(), off.outputs.len())), &mut diags);
+    sort_diags(&mut diags);
+    diags
+}
+
+/// Structural DFG re-derivation shared by V1 and the provenance side of
+/// V4. `expected_io` pins the dense stream-binding counts when the
+/// caller knows them.
+fn verify_dfg_into(dfg: &Dfg, expected_io: Option<(usize, usize)>, diags: &mut Vec<Diag>) {
+    let n = dfg.nodes.len();
+    let mut ins: Vec<usize> = Vec::new();
+    let mut outs: Vec<usize> = Vec::new();
+    for (i, node) in dfg.nodes.iter().enumerate() {
+        let loc = format!("dfg node {i}");
+        for &s in &node.srcs {
+            if s >= n {
+                diags.push(Diag::error(
+                    Pass::V1IrDfg,
+                    loc.clone(),
+                    format!("value edge dangles: source {s} of {n} nodes"),
+                ));
+            }
+        }
+        let want = match &node.kind {
+            NodeKind::Input(j) => {
+                ins.push(*j);
+                0
+            }
+            NodeKind::Const(_) => 0,
+            NodeKind::Calc(op) => {
+                if *op == Op::Mux {
+                    3
+                } else {
+                    2
+                }
+            }
+            NodeKind::Output(j) => {
+                outs.push(*j);
+                1
+            }
+        };
+        if node.srcs.len() != want {
+            diags.push(Diag::error(
+                Pass::V1IrDfg,
+                loc,
+                format!("{:?} carries {} sources, wants {want}", node.kind, node.srcs.len()),
+            ));
+        }
+    }
+    if dfg.topo_order().is_err() {
+        diags.push(Diag::error(Pass::V1IrDfg, "dfg", "graph is not acyclic"));
+    }
+    for (what, idxs) in [("input", &mut ins), ("output", &mut outs)] {
+        idxs.sort_unstable();
+        for w in idxs.windows(2) {
+            if w[0] == w[1] {
+                diags.push(Diag::error(
+                    Pass::V1IrDfg,
+                    "dfg",
+                    format!("{what} stream {} bound by two nodes", w[0]),
+                ));
+            }
+        }
+    }
+    if let Some((n_in, n_out)) = expected_io {
+        for (what, idxs, expect) in [("input", &ins, n_in), ("output", &outs, n_out)] {
+            if idxs.len() != expect || idxs.iter().enumerate().any(|(k, &j)| j != k) {
+                diags.push(Diag::error(
+                    Pass::V1IrDfg,
+                    "dfg",
+                    format!(
+                        "{what} streams {idxs:?} are not dense 0..{expect} \
+                         (extraction table has {expect})"
+                    ),
+                ));
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------- V2 --
+
+/// V2: grid-configuration legality, re-proved from the `Grid` topology
+/// without calling `GridConfig::validate` (the point is to catch drift
+/// in the producer's own checks, not to repeat them).
+pub fn verify_config(cfg: &GridConfig) -> Vec<Diag> {
+    let mut diags = Vec::new();
+    verify_config_into(cfg, &mut diags);
+    sort_diags(&mut diags);
+    diags
+}
+
+fn verify_config_into(cfg: &GridConfig, diags: &mut Vec<Diag>) {
+    let grid = cfg.grid;
+    let err = |loc: String, msg: String| Diag::error(Pass::V2GridLegality, loc, msg);
+
+    if cfg.cells.len() != grid.n_cells() {
+        diags.push(err(
+            "grid".into(),
+            format!("{} cell configs for a {}x{} grid", cfg.cells.len(), grid.rows, grid.cols),
+        ));
+        return; // cell indexing below would be meaningless
+    }
+
+    // I/O pads: on-grid, border, no face double-booked across both
+    // groups, output streams claimed at most once, pad count within the
+    // perimeter (and, advisory, within the partitioner's eff_io budget).
+    let mut faces: HashMap<(CellCoord, Dir), &'static str> = HashMap::new();
+    for (group, pads) in [("input", &cfg.inputs), ("output", &cfg.outputs)] {
+        for io in pads {
+            let loc = format!("{group} pad {}{}", io.cell, io.dir);
+            if !grid.contains(io.cell) {
+                diags.push(err(loc, format!("pad cell off the {}x{} grid", grid.rows, grid.cols)));
+                continue;
+            }
+            if !grid.is_border_face(io.cell, io.dir) {
+                diags.push(err(loc.clone(), "pad face is not on the border".into()));
+            }
+            if let Some(prev) = faces.insert((io.cell, io.dir), group) {
+                diags.push(err(loc, format!("face already bound as an {prev} pad")));
+            }
+        }
+    }
+    let mut out_idx: Vec<usize> = cfg.outputs.iter().map(|io| io.index).collect();
+    out_idx.sort_unstable();
+    for w in out_idx.windows(2) {
+        if w[0] == w[1] {
+            diags.push(err(
+                format!("output stream {}", w[0]),
+                "double-booked: two pads claim the same output stream".into(),
+            ));
+        }
+    }
+    let budget = TileBudget::for_grid(grid);
+    let pads = cfg.inputs.len() + cfg.outputs.len();
+    if pads > budget.io {
+        diags.push(err(
+            "io".into(),
+            format!("{pads} pads exceed the {} border faces of the grid", budget.io),
+        ));
+    } else if pads > budget.eff_io() {
+        diags.push(Diag::warning(
+            Pass::V2GridLegality,
+            "io",
+            format!("{pads} pads exceed the partitioner's eff_io budget {}", budget.eff_io()),
+        ));
+    }
+
+    // Per-cell FU legality: opcode within capability, every operand the
+    // opcode uses configured, FU result consumed; op-less cells carry no
+    // FU state.
+    for p in grid.iter_coords() {
+        let c = cfg.cell(p);
+        let loc = format!("cell {p}");
+        match c.op {
+            Some(op) => {
+                if Op::from_i32(op.code()) != Some(op) {
+                    diags.push(err(loc.clone(), format!("opcode {op:?} outside cell capability")));
+                }
+                if matches!(c.fu1, FuSrc::None) {
+                    diags.push(err(loc.clone(), format!("op {} missing operand a", op.name())));
+                }
+                if op.uses_rhs() && matches!(c.fu2, FuSrc::None) {
+                    diags.push(err(loc.clone(), format!("op {} missing operand b", op.name())));
+                }
+                if op.uses_sel() && matches!(c.fsel, FuSrc::None) {
+                    diags.push(err(loc.clone(), format!("op {} missing operand sel", op.name())));
+                }
+                if !c.out.iter().any(|o| *o == OutSrc::Fu) {
+                    diags.push(err(loc, "FU result reaches no output face".into()));
+                }
+            }
+            None => {
+                if !matches!(c.fu1, FuSrc::None)
+                    || !matches!(c.fu2, FuSrc::None)
+                    || !matches!(c.fsel, FuSrc::None)
+                {
+                    diags.push(err(loc.clone(), "operand mux configured on an op-less cell".into()));
+                }
+                if c.out.iter().any(|o| *o == OutSrc::Fu) {
+                    diags.push(err(loc, "output face routes an FU result but the cell has no op".into()));
+                }
+            }
+        }
+    }
+
+    // Route edges: every consumed input face must have a driver that
+    // exists in the grid topology — a bound external pad on a border
+    // face, or the adjacent neighbor's facing output register.
+    for p in grid.iter_coords() {
+        let c = cfg.cell(p);
+        let mut consumed: Vec<Dir> = Vec::new();
+        for s in [c.fu1, c.fu2, c.fsel] {
+            if let FuSrc::In(d) = s {
+                consumed.push(d);
+            }
+        }
+        for d in DIRS {
+            if let OutSrc::In(d2) = c.out[d.index()] {
+                consumed.push(d2);
+            }
+        }
+        consumed.sort_by_key(|d| d.index());
+        consumed.dedup();
+        for d in consumed {
+            let loc = format!("cell {p} input {d}");
+            match grid.neighbor(p, d) {
+                None => {
+                    if !cfg.inputs.iter().any(|io| io.cell == p && io.dir == d) {
+                        diags.push(err(loc, "border face consumed but no input pad bound".into()));
+                    }
+                }
+                Some(q) => {
+                    let qd = d.opposite();
+                    if cfg.cell(q).out[qd.index()] == OutSrc::None {
+                        diags.push(err(
+                            loc,
+                            format!("reads neighbor {q}{qd}, which drives nothing"),
+                        ));
+                    }
+                }
+            }
+        }
+    }
+
+    // Output pads tap a driven face.
+    for io in &cfg.outputs {
+        if grid.contains(io.cell) && cfg.cell(io.cell).out[io.dir.index()] == OutSrc::None {
+            diags.push(err(
+                format!("output pad {}{}", io.cell, io.dir),
+                "taps an undriven output face".into(),
+            ));
+        }
+    }
+
+    // Pass-through routing must be acyclic: out[d] = In(d2) chains form a
+    // graph over (cell, input face) nodes; any cycle deadlocks the
+    // elastic pipeline and is unlowerable.
+    let mut state: HashMap<(CellCoord, Dir), u8> = HashMap::new(); // 1 visiting, 2 done
+    fn walk(
+        cfg: &GridConfig,
+        node: (CellCoord, Dir),
+        state: &mut HashMap<(CellCoord, Dir), u8>,
+        diags: &mut Vec<Diag>,
+    ) {
+        match state.get(&node) {
+            Some(1) => {
+                diags.push(Diag::error(
+                    Pass::V2GridLegality,
+                    format!("cell {} input {}", node.0, node.1),
+                    "pass-through routing cycle",
+                ));
+                return;
+            }
+            Some(_) => return,
+            None => {}
+        }
+        state.insert(node, 1);
+        if let Some(q) = cfg.grid.neighbor(node.0, node.1) {
+            if let OutSrc::In(d2) = cfg.cell(q).out[node.1.opposite().index()] {
+                walk(cfg, (q, d2), state, diags);
+            }
+        }
+        state.insert(node, 2);
+    }
+    for p in grid.iter_coords() {
+        for d in DIRS {
+            walk(cfg, (p, d), &mut state, diags);
+        }
+    }
+}
+
+// ---------------------------------------------------------------- V3 --
+
+/// V3: wave-schedule hazard analysis. Checks the stored schedule of a
+/// [`CompiledFabric`] against a topological order and timing model
+/// re-derived here from the configuration alone.
+pub fn verify_fabric(cfg: &GridConfig, fabric: &CompiledFabric) -> Vec<Diag> {
+    let mut diags = Vec::new();
+    verify_fabric_into(cfg, fabric, &mut diags);
+    sort_diags(&mut diags);
+    diags
+}
+
+fn verify_fabric_into(cfg: &GridConfig, fab: &CompiledFabric, diags: &mut Vec<Diag>) {
+    let err = |loc: String, msg: String| Diag::error(Pass::V3WaveHazard, loc, msg);
+    let n_slots = fab.n_slots;
+    if n_slots == 0 {
+        diags.push(err("slots".into(), "schedule has no value slots (missing zero slot)".into()));
+        return;
+    }
+
+    // Slot definition map: zero slot, constants, external inputs.
+    let mut defined = vec![false; n_slots];
+    defined[0] = true;
+    for &(slot, _) in &fab.consts {
+        match defined.get_mut(slot) {
+            None => diags.push(err(
+                format!("const slot {slot}"),
+                format!("out of bounds for {n_slots} slots"),
+            )),
+            Some(d) if *d => {
+                diags.push(err(format!("const slot {slot}"), "aliases another pre-image slot".into()))
+            }
+            Some(d) => *d = true,
+        }
+    }
+    let mut ext_streams: BTreeSet<usize> = BTreeSet::new();
+    for &(slot, j) in &fab.ext_ins {
+        if j >= fab.n_inputs {
+            diags.push(err(
+                format!("ext slot {slot}"),
+                format!("binds stream {j} beyond n_inputs {}", fab.n_inputs),
+            ));
+        }
+        ext_streams.insert(j);
+        match defined.get_mut(slot) {
+            None => diags.push(err(
+                format!("ext slot {slot}"),
+                format!("out of bounds for {n_slots} slots"),
+            )),
+            Some(d) if *d => {
+                diags.push(err(format!("ext slot {slot}"), "aliases another pre-image slot".into()))
+            }
+            Some(d) => *d = true,
+        }
+    }
+
+    // External bindings must mirror the configuration's pads exactly.
+    let cfg_streams: BTreeSet<usize> = cfg.inputs.iter().map(|io| io.index).collect();
+    if ext_streams != cfg_streams {
+        diags.push(err(
+            "ext".into(),
+            format!("schedule reads streams {ext_streams:?}, config binds {cfg_streams:?}"),
+        ));
+    }
+    let want_n_inputs = cfg.inputs.iter().map(|io| io.index + 1).max().unwrap_or(0);
+    if fab.n_inputs != want_n_inputs {
+        diags.push(err(
+            "ext".into(),
+            format!("n_inputs {} vs {} re-derived from the config", fab.n_inputs, want_n_inputs),
+        ));
+    }
+
+    // Hazard scan: in stored order, every firing may read only slots
+    // already defined (zero/const/ext or an earlier firing's dst), and
+    // must define a fresh, in-bounds destination.
+    let n_op_cells = cfg.op_cells().count();
+    if fab.ops.len() != n_op_cells {
+        diags.push(err(
+            "schedule".into(),
+            format!("{} firings for {} op cells in the config", fab.ops.len(), n_op_cells),
+        ));
+    }
+    for (i, op) in fab.ops.iter().enumerate() {
+        let loc = format!("firing {i:03} ({})", op.op.name());
+        for (name, slot, used) in [
+            ("a", op.a, true),
+            ("b", op.b, op.op.uses_rhs()),
+            ("s", op.s, op.op.uses_sel()),
+        ] {
+            if slot >= n_slots {
+                diags.push(err(
+                    loc.clone(),
+                    format!("operand {name} slot {slot} out of bounds ({n_slots} slots)"),
+                ));
+            } else if used && !defined[slot] {
+                diags.push(err(
+                    loc.clone(),
+                    format!("operand {name} reads slot {slot} before any producer defines it"),
+                ));
+            }
+        }
+        if op.dst >= n_slots {
+            diags.push(err(loc, format!("dst slot {} out of bounds ({n_slots} slots)", op.dst)));
+        } else if defined[op.dst] {
+            diags.push(err(loc, format!("dst slot {} aliases an already-defined slot", op.dst)));
+        } else {
+            defined[op.dst] = true;
+        }
+    }
+
+    // Output taps: strictly ascending stream order, defined slots,
+    // stream count consistent with the config.
+    let mut prev_stream: Option<usize> = None;
+    for &(stream, slot) in &fab.outs {
+        let loc = format!("out stream {stream}");
+        if let Some(p) = prev_stream {
+            if stream <= p {
+                diags.push(err(loc.clone(), format!("tap order not ascending (after {p})")));
+            }
+        }
+        prev_stream = Some(stream);
+        if stream >= fab.n_out_streams {
+            diags.push(err(
+                loc.clone(),
+                format!("beyond n_out_streams {}", fab.n_out_streams),
+            ));
+        }
+        if slot >= n_slots {
+            diags.push(err(loc, format!("taps slot {slot} out of bounds ({n_slots} slots)")));
+        } else if !defined[slot] {
+            diags.push(err(loc, format!("taps slot {slot} that nothing defines")));
+        }
+    }
+    let want_out_streams = cfg.outputs.iter().map(|io| io.index + 1).max().unwrap_or(0);
+    if fab.n_out_streams != want_out_streams {
+        diags.push(err(
+            "out".into(),
+            format!(
+                "n_out_streams {} vs {} re-derived from the config",
+                fab.n_out_streams, want_out_streams
+            ),
+        ));
+    }
+
+    // Timing: re-derive registered-stage depths from the configuration
+    // alone and diff against the stored fill latency / drain depth / II.
+    // Skipped (silently — V2 reports the cause) if the routing is not
+    // resolvable.
+    if let Some(taps) = tap_depths(cfg) {
+        if !taps.is_empty() {
+            let fill = 1 + taps.iter().copied().min().unwrap_or(0);
+            let drain = 1 + taps.iter().copied().max().unwrap_or(0);
+            if fab.fill_latency != fill {
+                diags.push(err(
+                    "timing".into(),
+                    format!("fill latency {} stored, {fill} re-derived", fab.fill_latency),
+                ));
+            }
+            if fab.drain_depth != drain {
+                diags.push(err(
+                    "timing".into(),
+                    format!("drain depth {} stored, {drain} re-derived", fab.drain_depth),
+                ));
+            }
+        }
+    }
+    if fab.initiation_interval != 1.0 {
+        diags.push(err(
+            "timing".into(),
+            format!(
+                "II {} stored; a feed-forward overlay pipelines at the analytic 1.0",
+                fab.initiation_interval
+            ),
+        ));
+    }
+}
+
+/// Producer endpoints of the re-derived timing model (mirrors the wave
+/// lowering's `Producer` without sharing its code — the point is an
+/// independent derivation).
+#[derive(Clone, Copy, PartialEq, Eq, Hash)]
+enum Prod {
+    Out(CellCoord, Dir),
+    Fu(CellCoord),
+}
+
+/// Registered-stage depth of every tapped output face, walking the
+/// routing fabric from the configuration alone: external inputs are
+/// depth 0, every FU register and routed output register costs one
+/// stage. `None` when the routing cannot be resolved (undriven face or
+/// cycle — V2 territory).
+fn tap_depths(cfg: &GridConfig) -> Option<Vec<u64>> {
+    let mut memo: HashMap<Prod, Option<u64>> = HashMap::new();
+
+    fn face_depth(
+        cfg: &GridConfig,
+        p: CellCoord,
+        d: Dir,
+        memo: &mut HashMap<Prod, Option<u64>>,
+    ) -> Option<u64> {
+        match cfg.grid.neighbor(p, d) {
+            None => cfg
+                .inputs
+                .iter()
+                .any(|io| io.cell == p && io.dir == d)
+                .then_some(0),
+            Some(q) => depth_of(cfg, Prod::Out(q, d.opposite()), memo),
+        }
+    }
+
+    fn operand_depth(
+        cfg: &GridConfig,
+        p: CellCoord,
+        s: FuSrc,
+        memo: &mut HashMap<Prod, Option<u64>>,
+    ) -> Option<u64> {
+        match s {
+            FuSrc::None | FuSrc::Const(_) => Some(0),
+            FuSrc::In(d) => face_depth(cfg, p, d, memo),
+        }
+    }
+
+    fn depth_of(
+        cfg: &GridConfig,
+        prod: Prod,
+        memo: &mut HashMap<Prod, Option<u64>>,
+    ) -> Option<u64> {
+        if let Some(&cached) = memo.get(&prod) {
+            return cached; // `None` doubles as the in-progress marker: a
+                           // cycle resolves to None, never recurses.
+        }
+        memo.insert(prod, None);
+        let depth = match prod {
+            Prod::Out(p, d) => match cfg.cell(p).out[d.index()] {
+                OutSrc::None => None,
+                OutSrc::Fu => depth_of(cfg, Prod::Fu(p), memo).map(|x| 1 + x),
+                OutSrc::In(d2) => face_depth(cfg, p, d2, memo).map(|x| 1 + x),
+            },
+            Prod::Fu(p) => {
+                let c = cfg.cell(p);
+                let mut worst = 0u64;
+                for s in [c.fu1, c.fu2, c.fsel] {
+                    worst = worst.max(operand_depth(cfg, p, s, memo)?);
+                }
+                Some(1 + worst)
+            }
+        };
+        memo.insert(prod, depth);
+        depth
+    }
+
+    let mut taps = Vec::with_capacity(cfg.outputs.len());
+    for io in &cfg.outputs {
+        if !cfg.grid.contains(io.cell) {
+            return None;
+        }
+        // The pad reads the face's *output register*: its stage is the
+        // `1 + ...` inside depth_of for the Out producer itself.
+        taps.push(depth_of(cfg, Prod::Out(io.cell, io.dir), &mut memo)?);
+    }
+    Some(taps)
+}
+
+// ---------------------------------------------------------- artifacts --
+
+/// The single-tile sanitizer: V2 on the configuration, an image-drift
+/// cross-check, and V3 on the compiled wave schedule (when the artifact
+/// carries one). This is what the debug-build verify-on-insert hook in
+/// [`crate::dfe::cache::ConfigCache`] runs.
+pub fn verify_artifact(cached: &CachedConfig) -> Vec<Diag> {
+    let mut diags = Vec::new();
+    verify_artifact_into(cached, &mut diags);
+    sort_diags(&mut diags);
+    diags
+}
+
+fn verify_artifact_into(cached: &CachedConfig, diags: &mut Vec<Diag>) {
+    verify_config_into(&cached.config, diags);
+    match cached.config.to_image() {
+        Ok(img) => {
+            if img != cached.image {
+                diags.push(Diag::error(
+                    Pass::V2GridLegality,
+                    "image",
+                    "cached execution image drifted from its configuration",
+                ));
+            }
+        }
+        Err(e) => diags.push(Diag::error(
+            Pass::V2GridLegality,
+            "image",
+            format!("configuration no longer lowers to an image: {e}"),
+        )),
+    }
+    match &cached.fabric {
+        Some(f) => verify_fabric_into(&cached.config, f, diags),
+        None => diags.push(Diag::warning(
+            Pass::V3WaveHazard,
+            "fabric",
+            "no compiled wave schedule (CycleSim fallback artifact)",
+        )),
+    }
+}
+
+// ---------------------------------------------------------------- V4 --
+
+/// V4 without provenance: everything a plan must satisfy regardless of
+/// which DFG it was cut from. Runs the single-tile sanitizer on every
+/// tile. This is the verify-on-insert hook for the plan store.
+pub fn verify_plan(plan: &ExecutionPlan) -> Vec<Diag> {
+    let mut diags = Vec::new();
+    verify_plan_into(plan, &mut diags);
+    sort_diags(&mut diags);
+    diags
+}
+
+fn verify_plan_into(plan: &ExecutionPlan, diags: &mut Vec<Diag>) {
+    let err = |loc: String, msg: String| Diag::error(Pass::V4PlanSoundness, loc, msg);
+    if plan.tiles.is_empty() {
+        diags.push(err("plan".into(), "no tiles".into()));
+        return;
+    }
+
+    // Per-tile: stream arities match the tile's image; the tile artifact
+    // itself passes V2/V3 (locations prefixed with the tile index).
+    for (i, t) in plan.tiles.iter().enumerate() {
+        if t.sources.len() != t.cached.image.n_inputs {
+            diags.push(err(
+                format!("tile {i}"),
+                format!(
+                    "{} local sources for an image reading {} input streams",
+                    t.sources.len(),
+                    t.cached.image.n_inputs
+                ),
+            ));
+        }
+        if t.sinks.len() != t.cached.image.out_sel.len() {
+            diags.push(err(
+                format!("tile {i}"),
+                format!(
+                    "{} local sinks for an image producing {} output streams",
+                    t.sinks.len(),
+                    t.cached.image.out_sel.len()
+                ),
+            ));
+        }
+        let mut sub = Vec::new();
+        verify_artifact_into(&t.cached, &mut sub);
+        for d in sub {
+            diags.push(Diag {
+                pass: d.pass,
+                severity: d.severity,
+                location: format!("tile {i} {}", d.location),
+                message: d.message,
+            });
+        }
+    }
+
+    // Spill discipline: each slot written exactly once, by its producer
+    // tile; read only by strictly later tiles; slots dense.
+    let mut writer: Vec<Option<usize>> = vec![None; plan.n_spills];
+    let mut ext_writer: HashMap<usize, usize> = HashMap::new();
+    let mut spill_sink_order: Vec<usize> = Vec::new();
+    for (i, t) in plan.tiles.iter().enumerate() {
+        for (jj, sink) in t.sinks.iter().enumerate() {
+            match *sink {
+                TileSink::Spill(k) => {
+                    spill_sink_order.push(k);
+                    if k >= plan.n_spills {
+                        diags.push(err(
+                            format!("tile {i} sink {jj}"),
+                            format!("spill slot {k} beyond n_spills {}", plan.n_spills),
+                        ));
+                    } else if let Some(w) = writer[k] {
+                        diags.push(err(
+                            format!("tile {i} sink {jj}"),
+                            format!("spill slot {k} already written by tile {w}"),
+                        ));
+                    } else {
+                        writer[k] = Some(i);
+                    }
+                }
+                TileSink::External(j) => {
+                    if let Some(w) = ext_writer.insert(j, i) {
+                        diags.push(err(
+                            format!("tile {i} sink {jj}"),
+                            format!("external output {j} already written by tile {w}"),
+                        ));
+                    }
+                }
+            }
+        }
+    }
+    for (k, w) in writer.iter().enumerate() {
+        if w.is_none() {
+            diags.push(err(format!("spill {k}"), "slot is never written by any tile".into()));
+        }
+    }
+    let mut read = vec![false; plan.n_spills];
+    for (i, t) in plan.tiles.iter().enumerate() {
+        for (jj, src) in t.sources.iter().enumerate() {
+            if let TileSource::Spill(k) = *src {
+                if k >= plan.n_spills {
+                    diags.push(err(
+                        format!("tile {i} source {jj}"),
+                        format!("spill slot {k} beyond n_spills {}", plan.n_spills),
+                    ));
+                    continue;
+                }
+                read[k] = true;
+                match writer[k] {
+                    Some(w) if w < i => {}
+                    Some(w) => diags.push(err(
+                        format!("tile {i} source {jj}"),
+                        format!("reads spill {k} which tile {w} writes — not strictly earlier"),
+                    )),
+                    None => {} // unwritten slot already reported above
+                }
+            }
+        }
+    }
+    for (k, r) in read.iter().enumerate() {
+        if !*r && writer[k].is_some() {
+            diags.push(Diag::warning(
+                Pass::V4PlanSoundness,
+                format!("spill {k}"),
+                "slot is written but never read",
+            ));
+        }
+    }
+    // The partitioner assigns spill slots in producer topological order;
+    // drift is harmless at execution time but flags a convention break.
+    if spill_sink_order.iter().enumerate().any(|(k, &s)| s != k) {
+        diags.push(Diag::warning(
+            Pass::V4PlanSoundness,
+            "spills",
+            format!("sink slots {spill_sink_order:?} not in dense producer order"),
+        ));
+    }
+
+    // config_words accounting: the plan's own total must equal an
+    // independent per-tile recount from raw cell state.
+    let independent: u64 = plan.tiles.iter().map(|t| recount_config_words(&t.cached.config)).sum();
+    if plan.config_words() != independent {
+        diags.push(err(
+            "config-words".into(),
+            format!("plan reports {} words, independent recount gives {independent}", plan.config_words()),
+        ));
+    }
+}
+
+/// Independent re-derivation of the configuration word count (the
+/// transport/timing model's download size): 8 mux words per non-empty
+/// cell, one payload word per constant operand, one word per I/O pad.
+fn recount_config_words(cfg: &GridConfig) -> u64 {
+    let mut words = (cfg.inputs.len() + cfg.outputs.len()) as u64;
+    for c in &cfg.cells {
+        if c.is_empty() {
+            continue;
+        }
+        words += 8;
+        words += [c.fu1, c.fu2, c.fsel]
+            .iter()
+            .filter(|s| matches!(s, FuSrc::Const(_)))
+            .count() as u64;
+    }
+    words
+}
+
+/// V4 with provenance: everything [`verify_plan`] checks, plus the
+/// cross-checks that need the source DFG and its cut — positional
+/// `tile_key` identity against the plan key, source/sink tables matching
+/// the partitioner's, calc-node conservation (the cut partitions the
+/// DFG exactly once) and a deterministic semantic probe through
+/// `TiledDfg::eval`.
+pub fn verify_plan_with_provenance(
+    plan: &ExecutionPlan,
+    plan_key: u64,
+    dfg: &Dfg,
+    tiled: &TiledDfg,
+) -> Vec<Diag> {
+    let mut diags = Vec::new();
+    verify_plan_into(plan, &mut diags);
+    let err = |loc: String, msg: String| Diag::error(Pass::V4PlanSoundness, loc, msg);
+
+    if plan.tiles.len() != tiled.tiles.len() {
+        diags.push(err(
+            "plan".into(),
+            format!("{} tiles assembled from a {}-tile cut", plan.tiles.len(), tiled.tiles.len()),
+        ));
+    }
+    if plan.n_spills != tiled.n_spills {
+        diags.push(err(
+            "plan".into(),
+            format!("{} spill slots for a cut with {}", plan.n_spills, tiled.n_spills),
+        ));
+    }
+    for (i, (pt, tt)) in plan.tiles.iter().zip(&tiled.tiles).enumerate() {
+        let expect = tile_key(plan_key, i, dfg_key(&tt.dfg));
+        if pt.key != expect {
+            diags.push(err(
+                format!("tile {i}"),
+                format!(
+                    "tile_key provenance mismatch: stored {:#018x}, derived {expect:#018x}",
+                    pt.key
+                ),
+            ));
+        }
+        if pt.sources != tt.sources {
+            diags.push(err(format!("tile {i}"), "source table differs from the cut's".into()));
+        }
+        if pt.sinks != tt.sinks {
+            diags.push(err(format!("tile {i}"), "sink table differs from the cut's".into()));
+        }
+    }
+
+    // The cut covers the DFG exactly once: calc-node conservation…
+    let cut_calc: usize = tiled.tiles.iter().map(|t| t.dfg.stats().calc).sum();
+    let want_calc = dfg.stats().calc;
+    if cut_calc != want_calc {
+        diags.push(err(
+            "cut".into(),
+            format!("tiles carry {cut_calc} calc nodes, the source DFG has {want_calc}"),
+        ));
+    }
+    // …and a deterministic semantic probe (a partition that duplicates or
+    // drops work diverges on almost any input).
+    let n_in = dfg.stats().inputs;
+    let probe: Vec<i32> =
+        (0..n_in).map(|i| (i as i32).wrapping_mul(-1640531527).wrapping_add(12345)).collect();
+    match (dfg.eval(&probe), tiled.eval(&probe)) {
+        (Ok(want), Ok(got)) => {
+            if want != got {
+                diags.push(err(
+                    "cut".into(),
+                    "tiled evaluation diverges from the source DFG on the probe vector".into(),
+                ));
+            }
+        }
+        (Err(e), _) => diags.push(err("cut".into(), format!("source DFG fails to evaluate: {e}"))),
+        (_, Err(e)) => diags.push(err("cut".into(), format!("tiled cut fails to evaluate: {e}"))),
+    }
+
+    sort_diags(&mut diags);
+    diags
+}
+
+// ---------------------------------------------------------------- V5 --
+
+/// V5: the load-time gate for "tlo-cache v1" snapshots. `what` names the
+/// artifact class (`"entry"` / `"plan"`); `diags` is the V2–V4 stream
+/// re-derived from the freshly parsed artifact. Errors reject the load
+/// (the snapshot is semantically corrupt even if it parsed); warnings
+/// pass. The returned message leads with the V5 banner and quotes the
+/// first underlying diagnostic, so callers surface both the gate and the
+/// root cause.
+pub fn snapshot_gate(what: &str, key: u64, diags: &[Diag]) -> Result<(), String> {
+    if !has_errors(diags) {
+        return Ok(());
+    }
+    let first = diags
+        .iter()
+        .find(|d| d.severity == Severity::Error)
+        .expect("has_errors implies an error diagnostic");
+    Err(format!(
+        "V5 snapshot integrity: {what} {key:#018x} failed re-verification \
+         ({} error(s); first: {first})",
+        error_count(diags)
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dfe::config::fig2_config;
+
+    // The deep mutation harness lives in tests/verifier.rs; these unit
+    // tests pin the in-crate surface the harness builds on.
+
+    #[test]
+    fn fig2_artifact_verifies_clean() {
+        let config = fig2_config();
+        let image = config.to_image().expect("fig2 lowers");
+        let cached = CachedConfig::new(config, image, "unit".into());
+        assert!(cached.fabric.is_some(), "fig2 compiles to a wave schedule");
+        let diags = verify_artifact(&cached);
+        assert!(diags.is_empty(), "{}", crate::analysis::diag::render_table(&diags));
+    }
+
+    #[test]
+    fn timing_rederivation_matches_the_lowering_on_fig2() {
+        let config = fig2_config();
+        let fab = CompiledFabric::compile(&config).expect("fig2 compiles");
+        let taps = tap_depths(&config).expect("fig2 routing resolves");
+        assert_eq!(1 + taps.iter().min().unwrap(), fab.fill_latency);
+    }
+
+    #[test]
+    fn snapshot_gate_passes_clean_and_quotes_the_first_error() {
+        assert!(snapshot_gate("entry", 7, &[]).is_ok());
+        let warn = [Diag::warning(Pass::V2GridLegality, "io", "advisory")];
+        assert!(snapshot_gate("entry", 7, &warn).is_ok(), "warnings must not block a load");
+        let diags = [
+            Diag::warning(Pass::V4PlanSoundness, "spill 0", "unread"),
+            Diag::error(Pass::V2GridLegality, "cell (0,0)", "boom"),
+        ];
+        let msg = snapshot_gate("plan", 0xAB, &diags).unwrap_err();
+        assert!(msg.contains("V5") && msg.contains("V2") && msg.contains("boom"), "{msg}");
+    }
+}

@@ -232,6 +232,19 @@ impl ConfigCache {
     }
 
     pub fn insert(&mut self, key: u64, value: CachedConfig) {
+        // Debug-build sanitizer (DESIGN.md §11): every artifact entering
+        // the cache re-verifies V2/V3 from scratch, so any test that
+        // exercises the pipeline transparently runs under the verifier.
+        // Release builds pay nothing.
+        #[cfg(debug_assertions)]
+        {
+            let diags = crate::analysis::verifier::verify_artifact(&value);
+            assert!(
+                !crate::analysis::diag::has_errors(&diags),
+                "verify-on-insert: artifact {key:#018x} fails static verification\n{}",
+                crate::analysis::diag::render_table(&diags)
+            );
+        }
         self.clock += 1;
         self.make_room(1, Residency::Entry(key));
         self.map.insert(key, (value, self.clock));
@@ -267,6 +280,17 @@ impl ConfigCache {
 
     /// Insert an assembled plan at its tile-count weight.
     pub fn insert_plan(&mut self, key: u64, plan: ExecutionPlan) {
+        // Debug-build sanitizer: provenance-free V4 (plus per-tile V2/V3)
+        // on every plan entering the store. See `Self::insert`.
+        #[cfg(debug_assertions)]
+        {
+            let diags = crate::analysis::verifier::verify_plan(&plan);
+            assert!(
+                !crate::analysis::diag::has_errors(&diags),
+                "verify-on-insert: plan {key:#018x} fails static verification\n{}",
+                crate::analysis::diag::render_table(&diags)
+            );
+        }
         self.clock += 1;
         self.make_room(plan.weight(), Residency::Plan(key));
         self.plans.insert(key, (plan, self.clock));
@@ -478,13 +502,27 @@ mod tests {
     }
 
     fn dummy_plan(tiles: usize) -> ExecutionPlan {
-        let mut p = ExecutionPlan::single(dummy_entry(), 0);
-        while p.tiles.len() < tiles {
-            let mut t = p.tiles[0].clone();
-            t.key = p.tiles.len() as u64;
-            p.tiles.push(t);
+        // A verifier-clean spill chain (verify-on-insert runs V4 under
+        // debug_assertions): tile i feeds tile i+1 through spill slot i,
+        // only the last tile lands the external output.
+        use crate::dfg::partition::{TileSink, TileSource};
+        let single = ExecutionPlan::single(dummy_entry(), 0);
+        if tiles <= 1 {
+            return single;
         }
-        p
+        let mut ts = Vec::with_capacity(tiles);
+        for i in 0..tiles {
+            let mut t = single.tiles[0].clone();
+            t.key = i as u64;
+            if i > 0 {
+                t.sources = vec![TileSource::Spill(i - 1), TileSource::External(1)];
+            }
+            if i + 1 < tiles {
+                t.sinks = vec![TileSink::Spill(i)];
+            }
+            ts.push(t);
+        }
+        ExecutionPlan::from_tiles(ts, tiles - 1).unwrap()
     }
 
     #[test]

@@ -73,12 +73,12 @@ impl std::error::Error for CompileError {}
 /// all operands resolved to dense slot indices at compile time (constants
 /// live in pre-filled slots; unused operands read the zero slot).
 #[derive(Clone, Copy, Debug)]
-struct WaveOp {
-    op: Op,
-    dst: usize,
-    a: usize,
-    b: usize,
-    s: usize,
+pub(crate) struct WaveOp {
+    pub(crate) op: Op,
+    pub(crate) dst: usize,
+    pub(crate) a: usize,
+    pub(crate) b: usize,
+    pub(crate) s: usize,
 }
 
 /// A configuration lowered to a wave schedule. Immutable after
@@ -88,23 +88,25 @@ struct WaveOp {
 #[derive(Clone, Debug)]
 pub struct CompiledFabric {
     /// Value slots: `[0] = zero`, then constants, then one per external
-    /// input stream, then one per FU in schedule order.
-    n_slots: usize,
+    /// input stream, then one per FU in schedule order. Crate-visible so
+    /// the static verifier (`analysis::verifier` pass V3) can re-derive
+    /// the schedule independently and diff it against this one.
+    pub(crate) n_slots: usize,
     /// Slot pre-image for constants: (slot, value), filled once per wave
     /// buffer and never overwritten.
-    consts: Vec<(usize, i32)>,
+    pub(crate) consts: Vec<(usize, i32)>,
     /// External input bindings: (slot, stream index).
-    ext_ins: Vec<(usize, usize)>,
+    pub(crate) ext_ins: Vec<(usize, usize)>,
     /// FU firings in topological order.
-    ops: Vec<WaveOp>,
+    pub(crate) ops: Vec<WaveOp>,
     /// External output taps: (stream index, slot), sorted by stream index.
-    outs: Vec<(usize, usize)>,
+    pub(crate) outs: Vec<(usize, usize)>,
     /// Dense output stream count (max bound index + 1).
-    n_out_streams: usize,
+    pub(crate) n_out_streams: usize,
     /// Registered-stage depth of the deepest tapped path (drives the
     /// total-cycles model: the last stream finishes at `drain_depth +
     /// (n - 1)` with II = 1).
-    drain_depth: u64,
+    pub(crate) drain_depth: u64,
     /// Number of input streams the fabric reads (max bound index + 1).
     pub n_inputs: usize,
     /// Cycles until the first element emerges, derived analytically as
@@ -461,6 +463,23 @@ impl CompiledFabric {
     /// Number of scheduled FU firings (one per configured op cell).
     pub fn n_ops(&self) -> usize {
         self.ops.len()
+    }
+
+    /// Mutation hook for the verifier self-test harness
+    /// (`tests/verifier.rs`): swap two firings in the stored schedule so
+    /// pass V3 can prove it detects ordering hazards. Never called by
+    /// production code.
+    #[doc(hidden)]
+    pub fn swap_schedule_slots(&mut self, i: usize, j: usize) {
+        self.ops.swap(i, j);
+    }
+
+    /// Mutation hook for the verifier self-test harness: corrupt the
+    /// stored fill latency so pass V3's timing re-derivation has a
+    /// documented positive control. Never called by production code.
+    #[doc(hidden)]
+    pub fn set_fill_latency(&mut self, v: u64) {
+        self.fill_latency = v;
     }
 
     /// Fabric cycles to stream one batch of `lanes` elements: the

@@ -20,6 +20,15 @@
 //! * A missing file is a cold start, not an error; a corrupt file is an
 //!   `InvalidData` error so a truncated write cannot silently serve a
 //!   half-cache.
+//! * **Verifier pass V5** (DESIGN.md §11): parsing is not trust. Every
+//!   artifact that parses is re-verified (V2–V4 via
+//!   `analysis::verifier`) before it enters the cache, so a byte-valid
+//!   but semantically corrupt snapshot — a flipped route hop, a
+//!   re-pointed spill — is rejected at load instead of served.
+
+// Snapshot loading feeds the serve hot path on restart; a panic here
+// takes the fleet node down instead of falling back to a cold start.
+#![cfg_attr(not(test), deny(clippy::disallowed_methods))]
 
 use std::fs;
 use std::io::{self, ErrorKind};
@@ -47,8 +56,13 @@ pub struct CacheSnapshot {
     pub plans: usize,
 }
 
+/// All snapshot rejections — parse failures and semantic re-verification
+/// failures alike — carry the V5 banner: from the loader's point of view
+/// a truncated section and a corrupted route are the same defect class
+/// (the persisted artifact cannot be trusted), and the mutation harness
+/// attributes both to pass V5.
 fn bad(msg: impl Into<String>) -> io::Error {
-    io::Error::new(ErrorKind::InvalidData, msg.into())
+    io::Error::new(ErrorKind::InvalidData, format!("V5 snapshot integrity: {}", msg.into()))
 }
 
 // ---------------------------------------------------------------------------
@@ -408,7 +422,13 @@ pub fn load_cache(cache: &mut ConfigCache, dir: &Path) -> io::Result<Option<Cach
                 let key: u64 = parse_num(toks.get(1), "entry key")?;
                 let payload = parse_payload(&mut cur)?;
                 expect(&mut cur, "end")?;
-                cache.insert(key, build_entry(payload)?);
+                let entry = build_entry(payload)?;
+                // V5: the snapshot parsed, but parsing is not trust —
+                // re-prove V2/V3 before the artifact can be served.
+                let diags = crate::analysis::verifier::verify_artifact(&entry);
+                crate::analysis::verifier::snapshot_gate("entry", key, &diags)
+                    .map_err(|m| io::Error::new(ErrorKind::InvalidData, m))?;
+                cache.insert(key, entry);
                 snap.entries += 1;
             }
             Some("plan") => {
@@ -444,6 +464,11 @@ pub fn load_cache(cache: &mut ConfigCache, dir: &Path) -> io::Result<Option<Cach
                 }
                 let plan = ExecutionPlan::from_tiles(tiles, n_spills)
                     .ok_or_else(|| bad("persisted plan has no tiles"))?;
+                // V5: re-prove plan soundness (V4, plus per-tile V2/V3)
+                // before the plan can be served.
+                let diags = crate::analysis::verifier::verify_plan(&plan);
+                crate::analysis::verifier::snapshot_gate("plan", key, &diags)
+                    .map_err(|m| io::Error::new(ErrorKind::InvalidData, m))?;
                 cache.insert_plan(key, plan);
                 snap.plans += 1;
             }
@@ -550,7 +575,45 @@ mod tests {
         let mut c = ConfigCache::new(4);
         assert!(load_cache(&mut c, &dir).is_err(), "bad header must refuse");
         fs::write(dir.join(CACHE_FILE), format!("{HEADER}\nentry 5\ngrid 2 2\n")).unwrap();
-        assert!(load_cache(&mut c, &dir).is_err(), "unterminated entry must refuse");
+        let err = load_cache(&mut c, &dir).expect_err("unterminated entry must refuse");
+        assert!(err.to_string().contains("V5"), "truncation attributes to V5: {err}");
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn semantically_corrupt_snapshot_is_rejected_not_served() {
+        // Regression (ISSUE 9): the load path used to trust anything that
+        // parsed. This snapshot stays byte-valid — every line parses and
+        // every tile still lowers — but a flipped sink token re-points
+        // tile 0's spill at the external output, so the plan writes
+        // external stream 0 twice and never feeds tile 1. V5 must reject
+        // it with the underlying V4 diagnostic instead of serving it.
+        let dir = scratch_dir("semantic");
+        let mut cache = ConfigCache::new(8);
+        let mut plan = ExecutionPlan::single(provenance_entry(3), 77);
+        plan.tiles[0].sinks = vec![TileSink::Spill(0)];
+        let mut second = plan.tiles[0].clone();
+        second.key = 78;
+        second.sources = vec![TileSource::Spill(0), TileSource::External(1)];
+        second.sinks = vec![TileSink::External(0)];
+        plan.tiles.push(second);
+        plan.n_spills = 1;
+        cache.insert_plan(0xC3, plan);
+        let path = save_cache(&cache, &dir).unwrap();
+
+        let text = fs::read_to_string(&path).unwrap();
+        assert!(text.contains("sinks s0"), "fixture writes the spill sink");
+        fs::write(&path, text.replace("sinks s0", "sinks e0")).unwrap();
+
+        let mut back = ConfigCache::new(8);
+        let err = load_cache(&mut back, &dir).expect_err("corrupt plan must refuse");
+        assert_eq!(err.kind(), ErrorKind::InvalidData);
+        let msg = err.to_string();
+        assert!(
+            msg.contains("V5") && msg.contains("V4"),
+            "gate banner plus the root-cause pass: {msg}"
+        );
+        assert!(back.is_empty(), "nothing from the corrupt snapshot may be served");
         let _ = fs::remove_dir_all(&dir);
     }
 }

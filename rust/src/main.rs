@@ -8,10 +8,15 @@
 //!                          scheduler + shared config cache + batched
 //!                          PCIe link), verified bit-identical to the
 //!                          single-tenant path
+//!   tlo lint               static artifact verifier (DESIGN.md §11)
+//!                          over every PolyBench kernel: extract,
+//!                          route, compile, tile — then re-verify all
+//!                          of it and print the diagnostic table
 //!   tlo devices            list modeled FPGA devices
 use tlo::util::cli::Args;
 
-const USAGE: &str = "subcommands: table1 | table2 [--device NAME] | video [--frames N --riffa] \
+const USAGE: &str = "subcommands: table1 | table2 [--device NAME] | lint [--grid RxC] \
+| video [--frames N --riffa] \
 | serve [--tenants N --shards K --requests R --grid RxC --transport sync|async|async:D \
 --compile-threads N --par-portfolio K --tagged --no-adapt --no-verify \
 --slo SECS --cache-dir DIR --drain-timeout SECS \
@@ -27,6 +32,7 @@ fn main() {
     match args.positional.first().map(String::as_str) {
         Some("table1") => table1(),
         Some("table2") => table2(&args),
+        Some("lint") => lint(&args),
         Some("video") => video(&args),
         Some("serve") => serve(&args),
         Some("devices") => {
@@ -61,6 +67,143 @@ fn table1() {
             }
         }
         println!("{:<16} {:?}", k.name, if ok.is_empty() { vec!["-".to_string()] } else { ok });
+    }
+}
+
+/// `tlo lint` — run the full pipeline over every PolyBench kernel and
+/// re-verify everything it produced with the static verifier
+/// (`analysis::verifier`, DESIGN.md §11): V1 at the extraction boundary,
+/// V2/V3 on each routed single-tile artifact, and V4 on a tiled plan cut
+/// for an undersized grid. Prints one line per artifact plus a
+/// diagnostic table for anything flagged; exits nonzero on any error.
+fn lint(args: &Args) {
+    use tlo::analysis::diag::{has_errors, render_table, Diag};
+    use tlo::analysis::scop::analyze_function;
+    use tlo::analysis::verifier::{
+        verify_artifact, verify_offload, verify_plan_with_provenance,
+    };
+    use tlo::dfe::cache::{dfg_key, spec_key, CachedConfig, SpecSignature};
+    use tlo::dfe::grid::Grid;
+    use tlo::dfe::{tile_key, ExecutionPlan, PlanTile};
+    use tlo::dfg::extract::extract;
+    use tlo::dfg::partition::{needs_tiling, partition, TileBudget};
+    use tlo::par::{place_and_route, ParParams};
+    use tlo::util::prng::Rng;
+
+    let grid = match args.get("grid") {
+        None => Grid::new(8, 8),
+        Some(s) => match parse_grid(s) {
+            Some(g) => g,
+            None => {
+                eprintln!("bad --grid '{s}' (expected RxC, e.g. 8x8)");
+                std::process::exit(2);
+            }
+        },
+    };
+
+    // Las-Vegas P&R: a single seed may fail on a routable DFG, so retry
+    // a bounded seed schedule before declaring the kernel unroutable.
+    let route = |dfg: &tlo::dfg::graph::Dfg, grid: Grid, salt: u64| {
+        (0..64u64).find_map(|seed| {
+            let mut rng = Rng::new(0x71E5 + seed * 997 + salt);
+            place_and_route(dfg, grid, &ParParams::default(), &mut rng).ok()
+        })
+    };
+
+    let mut artifacts = 0usize;
+    let mut flagged: Vec<(String, Vec<Diag>)> = Vec::new();
+    let mut report = |name: String, diags: Vec<Diag>| {
+        let verdict = if has_errors(&diags) {
+            "FAIL"
+        } else if diags.is_empty() {
+            "clean"
+        } else {
+            "warn"
+        };
+        println!("  {name:<28} {verdict}");
+        if !diags.is_empty() {
+            flagged.push((name, diags));
+        }
+    };
+
+    println!("lint: static verification over the PolyBench suite ({}x{} overlay)", grid.rows, grid.cols);
+    for k in tlo::workloads::polybench::suite() {
+        let an = analyze_function(&k.func);
+        for (si, s) in an.scops.iter().enumerate() {
+            let Ok(off) = extract(&k.func, s, k.unroll) else { continue };
+            artifacts += 1;
+            report(format!("{} scop{si} u{} [V1]", k.name, k.unroll), verify_offload(&k.func, &off));
+            let budget = TileBudget::for_grid(grid);
+            if needs_tiling(&off.dfg, budget) {
+                // Oversized for one pass: cut a tiled plan and run the
+                // plan-level passes with full provenance.
+                let Ok(tiled) = partition(&off.dfg, budget) else {
+                    report(format!("{} scop{si} u{} [V4]", k.name, k.unroll), vec![Diag::error(
+                        tlo::analysis::diag::Pass::V4PlanSoundness,
+                        "partition",
+                        "kernel needs tiling but the partitioner refuses it",
+                    )]);
+                    continue;
+                };
+                let plan_key = spec_key(dfg_key(&off.dfg), SpecSignature::generic(k.unroll));
+                let mut ptiles = Vec::with_capacity(tiled.n_tiles());
+                for (idx, t) in tiled.tiles.iter().enumerate() {
+                    let Some(res) = route(&t.dfg, grid, idx as u64) else {
+                        ptiles.clear();
+                        break;
+                    };
+                    let Ok(image) = res.config.to_image() else {
+                        ptiles.clear();
+                        break;
+                    };
+                    ptiles.push(PlanTile {
+                        cached: CachedConfig::new(res.config, image, format!("tile{idx}")),
+                        sources: t.sources.clone(),
+                        sinks: t.sinks.clone(),
+                        key: tile_key(plan_key, idx, dfg_key(&t.dfg)),
+                    });
+                }
+                if ptiles.len() != tiled.n_tiles() {
+                    println!("  {:<28} (unroutable tile — skipped)", k.name);
+                    continue;
+                }
+                artifacts += 1;
+                let plan = ExecutionPlan { tiles: ptiles, n_spills: tiled.n_spills };
+                report(
+                    format!("{} scop{si} u{} [V4 {}t]", k.name, k.unroll, plan.n_tiles()),
+                    verify_plan_with_provenance(&plan, plan_key, &off.dfg, &tiled),
+                );
+            } else if let Some(res) = route(&off.dfg, grid, si as u64) {
+                let Ok(image) = res.config.to_image() else {
+                    report(format!("{} scop{si} u{} [V2]", k.name, k.unroll), vec![Diag::error(
+                        tlo::analysis::diag::Pass::V2GridLegality,
+                        "image",
+                        "routed configuration fails to lower to an image",
+                    )]);
+                    continue;
+                };
+                artifacts += 1;
+                let cached = CachedConfig::new(res.config, image, format!("lint_{}", k.name));
+                report(
+                    format!("{} scop{si} u{} [V2/V3]", k.name, k.unroll),
+                    verify_artifact(&cached),
+                );
+            } else {
+                println!("  {:<28} (unroutable on this grid — skipped)", k.name);
+            }
+        }
+    }
+
+    let errors = flagged.iter().filter(|(_, d)| has_errors(d)).count();
+    for (name, diags) in &flagged {
+        println!("\n{name}:\n{}", render_table(diags));
+    }
+    println!(
+        "\nlint: {artifacts} artifact(s) verified, {} flagged, {errors} with errors",
+        flagged.len()
+    );
+    if errors > 0 {
+        std::process::exit(1);
     }
 }
 

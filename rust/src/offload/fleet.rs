@@ -30,6 +30,10 @@
 //! never correctness (`tests/fleet.rs` enforces this against the
 //! single-tenant oracle).
 
+// Fleet hot path: recoverable faults are the normal case here — a panic
+// would defeat the whole degradation ladder. See clippy.toml.
+#![cfg_attr(not(test), deny(clippy::disallowed_methods))]
+
 use std::collections::HashSet;
 use std::fmt;
 use std::time::Duration;

@@ -480,8 +480,14 @@ pub struct OffloadManager {
 
 impl OffloadManager {
     pub fn new(params: OffloadParams) -> OffloadManager {
+        // An unknown --device degrades to the Table-II default rather
+        // than panicking the serve path; the final fallback to the first
+        // table row only fires if the compiled-in device table itself is
+        // edited to drop "Virtex 7".
         let device = device_by_name(&params.device)
-            .unwrap_or_else(|| device_by_name("Virtex 7").unwrap());
+            .or_else(|| device_by_name("Virtex 7"))
+            .or_else(|| crate::dfe::resource::devices().into_iter().next())
+            .expect("compiled-in device table is never empty");
         OffloadManager {
             pcie: Rc::new(RefCell::new(PcieSim::new(params.pcie))),
             tracer: Rc::new(RefCell::new(Tracer::new())),
@@ -587,8 +593,12 @@ impl OffloadManager {
         if count_stall {
             self.compile_stall += t0.elapsed();
         }
-        let (c, stats) =
-            routed.expect("CompileSlot::compile(defer=false) always returns an artifact");
+        // `CompileSlot::compile(defer=false)` contractually returns an
+        // artifact; surface a structured rejection instead of panicking
+        // the serve path if that contract ever regresses.
+        let (c, stats) = routed.ok_or_else(|| {
+            RejectReason::Unroutable("compile slot returned no artifact in blocking mode".into())
+        })?;
         Ok((c, false, Some(stats)))
     }
 

@@ -30,6 +30,11 @@
 //! placement affects timing, never values — and `tests/serve.rs` plus
 //! `tlo serve --verify` enforce it.
 
+// Serve hot path: a stray unwrap here takes every tenant down at once.
+// Recoverable conditions must degrade (software tier / structured error),
+// never panic — enforced via clippy.toml's disallowed_methods.
+#![cfg_attr(not(test), deny(clippy::disallowed_methods))]
+
 use std::cell::RefCell;
 use std::fmt;
 use std::rc::Rc;

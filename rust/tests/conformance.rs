@@ -941,3 +941,107 @@ fn conformance_oversized_kernels_execute_as_multi_tile_plans() {
         }
     }
 }
+
+/// Static-verification lockdown (DESIGN.md §11): every artifact the
+/// conformance surface installs — single-tile configs and oversized
+/// multi-tile plans alike — must re-verify with zero error diagnostics.
+/// This is the translation-validation half of conformance: the numeric
+/// suites above prove the artifacts compute the right values; this test
+/// proves they also satisfy every structural, routing, hazard and plan
+/// invariant the verifier re-derives independently of the compiler.
+#[test]
+fn conformance_artifacts_pass_static_verification() {
+    use tlo::analysis::diag::{render_table, Severity};
+    use tlo::analysis::verifier::verify_artifact;
+
+    let clean = |name: &str, diags: &[tlo::analysis::diag::Diag]| {
+        assert!(
+            !diags.iter().any(|d| d.severity == Severity::Error),
+            "{name}: installed artifact fails static verification\n{}",
+            render_table(diags)
+        );
+    };
+
+    for case in cases() {
+        if !case.offloadable {
+            continue;
+        }
+        let mut engine = Engine::new((case.module)()).expect("module");
+        let func = engine.func_index(case.func).expect("func");
+        let mut mgr = OffloadManager::new(OffloadParams {
+            min_dfg_nodes: 1,
+            unroll: case.unroll,
+            ..Default::default()
+        });
+        mgr.try_offload(&mut engine, func, None)
+            .unwrap_or_else(|e| panic!("{}: offload refused: {e}", case.name));
+        let active = mgr.active(func).expect("artifact live");
+        assert!(active.plan.is_none(), "{}: expected a single-tile artifact", case.name);
+        clean(case.name, &verify_artifact(&active.cached));
+    }
+}
+
+/// The multi-tile half of the lockdown: oversized kernels forced through
+/// the 3x3 cut (the same matrix as
+/// `conformance_oversized_kernels_execute_as_multi_tile_plans`) must
+/// produce plans that verify clean — both the provenance-free invariants
+/// (spill discipline, per-tile configs, word accounting) and, where the
+/// source kernel is available as a bare function, the full provenance
+/// re-derivation (positional tile keys, calc conservation, semantic
+/// probe against the uncut DFG).
+#[test]
+fn conformance_oversized_plans_pass_static_verification() {
+    use tlo::analysis::diag::{render_table, Severity};
+    use tlo::analysis::verifier::{verify_plan, verify_plan_with_provenance};
+    use tlo::dfe::grid::Grid;
+    use tlo::dfg::extract::extract;
+    use tlo::dfg::partition::{partition, TileBudget};
+    use tlo::ir::func::Function;
+
+    let clean = |name: &str, diags: &[tlo::analysis::diag::Diag]| {
+        assert!(
+            !diags.iter().any(|d| d.severity == Severity::Error),
+            "{name}: plan fails static verification\n{}",
+            render_table(diags)
+        );
+    };
+
+    let oversized: &[(&str, usize, Option<fn() -> Function>)] = &[
+        ("gemm", 8, Some(pb::gemm as fn() -> Function)),
+        ("trmm", 8, Some(pb::trmm)),
+        ("syr2k", 4, Some(pb::syr2k)),
+        ("gesummv", 8, Some(pb::gesummv)),
+        ("conv", 1, None), // module-level kernel: provenance-free check only
+    ];
+    let grid = Grid::new(3, 3);
+    for &(name, unroll, build) in oversized {
+        let case = cases().into_iter().find(|c| c.name == name).expect("case registered");
+        let mut engine = Engine::new((case.module)()).expect("module");
+        let func = engine.func_index(case.func).expect("func");
+        let mut mgr = OffloadManager::new(OffloadParams {
+            min_dfg_nodes: 1,
+            unroll,
+            grid,
+            ..Default::default()
+        });
+        mgr.try_offload(&mut engine, func, None)
+            .unwrap_or_else(|e| panic!("{name} u{unroll}: tiled offload refused: {e}"));
+        let active = mgr.active(func).expect("plan live");
+        let plan = active.plan.as_ref().unwrap_or_else(|| {
+            panic!("{name} u{unroll}: expected a multi-tile plan on the 3x3 grid")
+        });
+        clean(name, &verify_plan(plan));
+
+        // Re-derive the cut independently (extraction and partitioning
+        // are deterministic — P4/P9) and hold the installed plan to it.
+        if let Some(build) = build {
+            let f = build();
+            let an = tlo::analysis::scop::analyze_function(&f);
+            let scop = an.scops.first().expect("kernel has a SCoP");
+            let off = extract(&f, scop, unroll).expect("kernel extracts");
+            let tiled =
+                partition(&off.dfg, TileBudget::for_grid(grid)).expect("kernel partitions");
+            clean(name, &verify_plan_with_provenance(plan, active.key, &off.dfg, &tiled));
+        }
+    }
+}

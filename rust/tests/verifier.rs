@@ -1,0 +1,321 @@
+//! Mutation self-test harness for the static artifact verifier
+//! (`analysis::verifier`, DESIGN.md §11): a verifier is only worth
+//! trusting if it demonstrably *fails* on corrupted artifacts. Each test
+//! starts from a valid artifact, asserts the clean baseline (zero
+//! diagnostics), applies one mutation from ISSUE 9's matrix — swap a
+//! route hop, reorder two schedule slots, re-point a spill, flip a tile
+//! key, truncate/corrupt a snapshot — and asserts the *named* pass
+//! catches it:
+//!
+//! | mutation                           | pass |
+//! |------------------------------------|------|
+//! | dangling DFG edge / dup stream     | V1   |
+//! | route hop swap, pad off the border |      |
+//! | face double-booking                | V2   |
+//! | schedule reorder, timing drift     | V3   |
+//! | spill re-point, tile-key flip      | V4   |
+//! | snapshot truncation / corruption   | V5   |
+
+use std::rc::Rc;
+
+use tlo::analysis::diag::{has_errors, Pass, Severity};
+use tlo::analysis::verifier::{
+    verify_artifact, verify_config, verify_offload, verify_plan, verify_plan_with_provenance,
+};
+use tlo::dfe::cache::{dfg_key, spec_key, CachedConfig, ConfigCache, SpecSignature};
+use tlo::dfe::config::{fig2_config, IoAssign};
+use tlo::dfe::exec::CompiledFabric;
+use tlo::dfe::grid::{CellCoord, Dir, Grid};
+use tlo::dfe::persist::{load_cache, save_cache, CACHE_FILE};
+use tlo::dfe::{tile_key, ExecutionPlan, FuSrc, PlanTile};
+use tlo::dfg::extract::extract;
+use tlo::dfg::partition::{partition, TileBudget, TiledDfg, TileSink, TileSource};
+use tlo::par::{place_and_route, ParParams};
+use tlo::util::prng::Rng;
+use tlo::workloads::polybench;
+
+/// The fig2 artifact (§II's `C = A + 3B + 1` on a 2x2 overlay): the
+/// smallest config that exercises pads, routed hops and a 3-FU chain.
+fn fig2_artifact() -> CachedConfig {
+    let config = fig2_config();
+    let image = config.to_image().expect("fig2 lowers");
+    let c = CachedConfig::new(config, image, "verifier_fixture".into());
+    assert!(c.fabric.is_some(), "fig2 compiles to a wave schedule");
+    c
+}
+
+/// gemm@u8 cut for a 3x3 overlay and routed tile by tile — the same
+/// assembly the serve layer performs (`benches/hotpath.rs` idiom).
+fn gemm_tiled_plan() -> (ExecutionPlan, u64, tlo::dfg::graph::Dfg, TiledDfg) {
+    let f = polybench::gemm();
+    let an = tlo::analysis::scop::analyze_function(&f);
+    let scop = an.scops.first().expect("gemm has a SCoP");
+    let off = extract(&f, scop, 8).expect("gemm extracts at unroll 8");
+    let grid = Grid::new(3, 3);
+    let tiled = partition(&off.dfg, TileBudget::for_grid(grid)).expect("gemm@u8 partitions");
+    assert!(tiled.n_tiles() > 1, "gemm@u8 must not fit a 3x3 overlay");
+    let plan_key = spec_key(dfg_key(&off.dfg), SpecSignature::generic(8));
+    let mut tiles = Vec::with_capacity(tiled.n_tiles());
+    for (idx, t) in tiled.tiles.iter().enumerate() {
+        let res = (0..64u64)
+            .find_map(|seed| {
+                let mut rng = Rng::new(0x71E5 + seed * 997 + idx as u64);
+                place_and_route(&t.dfg, grid, &ParParams::default(), &mut rng).ok()
+            })
+            .expect("every cut tile routes");
+        let image = res.config.to_image().expect("routed tiles lower");
+        tiles.push(PlanTile {
+            cached: CachedConfig::new(res.config, image, format!("tile{idx}_3x3")),
+            sources: t.sources.clone(),
+            sinks: t.sinks.clone(),
+            key: tile_key(plan_key, idx, dfg_key(&t.dfg)),
+        });
+    }
+    let plan = ExecutionPlan { tiles, n_spills: tiled.n_spills };
+    (plan, plan_key, off.dfg.clone(), tiled)
+}
+
+fn passes(diags: &[tlo::analysis::diag::Diag]) -> Vec<Pass> {
+    diags.iter().filter(|d| d.severity == Severity::Error).map(|d| d.pass).collect()
+}
+
+// ------------------------------------------------------------------ V1 --
+
+#[test]
+fn v1_catches_duplicate_stream_binding_and_dangling_edge() {
+    let f = polybench::gemm();
+    let an = tlo::analysis::scop::analyze_function(&f);
+    let scop = an.scops.first().expect("gemm has a SCoP");
+    let mut off = extract(&f, scop, 2).expect("gemm extracts");
+    assert!(verify_offload(&f, &off).is_empty(), "baseline extraction verifies clean");
+
+    // Mutation: re-point a value edge past the end of the node table.
+    let n = off.dfg.nodes.len();
+    let victim = off
+        .dfg
+        .nodes
+        .iter()
+        .position(|nd| !nd.srcs.is_empty())
+        .expect("extraction has dependent nodes");
+    off.dfg.nodes[victim].srcs[0] = n + 7;
+    let diags = verify_offload(&f, &off);
+    assert!(passes(&diags).contains(&Pass::V1IrDfg), "dangling edge is V1's: {diags:?}");
+
+    // Mutation: bind the same input stream twice.
+    let mut off2 = extract(&f, scop, 2).expect("gemm extracts");
+    let dup = off2
+        .dfg
+        .nodes
+        .iter()
+        .position(|nd| matches!(nd.kind, tlo::dfg::graph::NodeKind::Input(0)))
+        .expect("stream 0 is bound");
+    if let tlo::dfg::graph::NodeKind::Input(j) = &mut off2.dfg.nodes[dup].kind {
+        *j = 1; // stream 1 now bound twice, stream 0 unbound
+    }
+    let diags = verify_offload(&f, &off2);
+    assert!(passes(&diags).contains(&Pass::V1IrDfg), "dup stream is V1's: {diags:?}");
+}
+
+// ------------------------------------------------------------------ V2 --
+
+#[test]
+fn v2_catches_a_swapped_route_hop() {
+    let mut cfg = fig2_config();
+    assert!(verify_config(&cfg).is_empty(), "fig2 baseline verifies clean");
+    // Mutation: (1,0)'s FU reads its N face (fed by (0,0)'s routed 3B
+    // product); swap the hop to the E face, whose neighbor drives nothing
+    // westward.
+    let cell = cfg.cell_mut(CellCoord::new(1, 0));
+    assert_eq!(cell.fu2, FuSrc::In(Dir::N), "fixture still routes B through N");
+    cell.fu2 = FuSrc::In(Dir::E);
+    let diags = verify_config(&cfg);
+    assert!(passes(&diags).contains(&Pass::V2GridLegality), "route hop is V2's: {diags:?}");
+}
+
+#[test]
+fn v2_catches_double_booked_faces_and_interior_pads() {
+    // Mutation: bind a second input pad onto an already-bound face.
+    let mut cfg = fig2_config();
+    let first = cfg.inputs[0];
+    cfg.inputs.push(IoAssign { cell: first.cell, dir: first.dir, index: 2 });
+    let diags = verify_config(&cfg);
+    assert!(passes(&diags).contains(&Pass::V2GridLegality), "face reuse is V2's: {diags:?}");
+
+    // Mutation: move the output pad to an interior face.
+    let mut cfg = fig2_config();
+    cfg.outputs[0] = IoAssign { cell: CellCoord::new(1, 1), dir: Dir::N, index: 0 };
+    let diags = verify_config(&cfg);
+    assert!(passes(&diags).contains(&Pass::V2GridLegality), "interior pad is V2's: {diags:?}");
+}
+
+// ------------------------------------------------------------------ V3 --
+
+#[test]
+fn v3_catches_reordered_schedule_slots() {
+    let mut cached = fig2_artifact();
+    assert!(verify_artifact(&cached).is_empty(), "fig2 artifact verifies clean");
+    // Mutation: swap the first and last firings of the 3-FU dependency
+    // chain — the first firing now reads a slot its producer defines
+    // later.
+    let mut fab = CompiledFabric::compile(&cached.config).expect("fig2 compiles");
+    let last = fab.n_ops() - 1;
+    assert!(last >= 1, "fig2 schedules a multi-op chain");
+    fab.swap_schedule_slots(0, last);
+    cached.fabric = Some(Rc::new(fab));
+    let diags = verify_artifact(&cached);
+    assert!(passes(&diags).contains(&Pass::V3WaveHazard), "schedule order is V3's: {diags:?}");
+}
+
+#[test]
+fn v3_catches_fill_latency_drift() {
+    let mut cached = fig2_artifact();
+    let mut fab = CompiledFabric::compile(&cached.config).expect("fig2 compiles");
+    assert_eq!(fab.fill_latency, 7, "fig2's analytic fill (exec.rs unit tests)");
+    fab.set_fill_latency(12);
+    cached.fabric = Some(Rc::new(fab));
+    let diags = verify_artifact(&cached);
+    assert!(passes(&diags).contains(&Pass::V3WaveHazard), "timing drift is V3's: {diags:?}");
+}
+
+// ------------------------------------------------------------------ V4 --
+
+#[test]
+fn v4_catches_a_repointed_spill() {
+    let (mut plan, plan_key, dfg, tiled) = gemm_tiled_plan();
+    assert!(verify_plan(&plan).is_empty(), "assembled plan verifies clean");
+    assert!(
+        verify_plan_with_provenance(&plan, plan_key, &dfg, &tiled).is_empty(),
+        "assembled plan verifies clean with provenance"
+    );
+    // Mutation: re-point the first spill *read* at the last spill slot —
+    // whose producer tile is never strictly earlier than every reader.
+    let last_slot = plan.n_spills - 1;
+    let (ti, si) = plan
+        .tiles
+        .iter()
+        .enumerate()
+        .find_map(|(ti, t)| {
+            t.sources.iter().position(|s| matches!(s, TileSource::Spill(_))).map(|si| (ti, si))
+        })
+        .expect("a multi-tile plan reads spills");
+    let writer = plan
+        .tiles
+        .iter()
+        .position(|t| t.sinks.contains(&TileSink::Spill(last_slot)))
+        .expect("last slot has a writer");
+    assert!(writer >= ti, "fixture: last slot's writer must not precede the first reader");
+    plan.tiles[ti].sources[si] = TileSource::Spill(last_slot);
+    let diags = verify_plan(&plan);
+    assert!(passes(&diags).contains(&Pass::V4PlanSoundness), "spill re-point is V4's: {diags:?}");
+}
+
+#[test]
+fn v4_catches_a_flipped_tile_key() {
+    let (mut plan, plan_key, dfg, tiled) = gemm_tiled_plan();
+    // Mutation: one flipped provenance bit. Execution semantics are
+    // untouched — only the provenance pass can see this.
+    plan.tiles[0].key ^= 1;
+    assert!(verify_plan(&plan).is_empty(), "provenance-free V4 cannot see a key flip");
+    let diags = verify_plan_with_provenance(&plan, plan_key, &dfg, &tiled);
+    assert!(passes(&diags).contains(&Pass::V4PlanSoundness), "tile key is V4's: {diags:?}");
+}
+
+// ------------------------------------------------------------------ V5 --
+
+fn scratch_dir(tag: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!("tlo-verifier-{}-{}", tag, std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+#[test]
+fn v5_rejects_truncated_and_corrupted_snapshots() {
+    let dir = scratch_dir("v5");
+    let mut cache = ConfigCache::new(8);
+    cache.insert(0xA1, fig2_artifact());
+    let path = save_cache(&cache, &dir).expect("snapshot writes");
+    let text = std::fs::read_to_string(&path).expect("snapshot reads back");
+
+    // Mutation: truncate the file mid-entry (drop the `end` terminator
+    // and everything after).
+    let cut = text.find("\nend").expect("snapshot has a terminator");
+    std::fs::write(dir.join(CACHE_FILE), &text[..cut + 1]).expect("rewrite");
+    let mut back = ConfigCache::new(8);
+    let err = load_cache(&mut back, &dir).expect_err("truncated snapshot must refuse");
+    assert!(err.to_string().contains("V5"), "truncation attributes to V5: {err}");
+    assert!(back.is_empty());
+
+    // Mutation: byte-valid route corruption — re-point (1,0)'s fu2 from
+    // its N face (token i0) to the E face. Every line still parses; the
+    // artifact no longer lowers/verifies, and V5 must refuse the load.
+    let corrupt = text.replace("i3 i0 -", "i3 i1 -");
+    assert_ne!(corrupt, text, "fixture line found and flipped");
+    std::fs::write(dir.join(CACHE_FILE), corrupt).expect("rewrite");
+    let mut back = ConfigCache::new(8);
+    let err = load_cache(&mut back, &dir).expect_err("corrupt snapshot must refuse");
+    assert!(err.to_string().contains("V5"), "semantic corruption attributes to V5: {err}");
+    assert!(back.is_empty(), "nothing from the corrupt snapshot may be served");
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ----------------------------------------------- clean-fleet invariants --
+
+#[test]
+fn routed_fuzz_artifacts_verify_clean_and_deterministically() {
+    // The P12 property in miniature (full sweep in tests/proptests.rs):
+    // everything the Las-Vegas P&R routes must verify clean, twice, with
+    // byte-identical diagnostics.
+    let grid = Grid::new(6, 6);
+    let mut routed = 0;
+    for case in 0..20u64 {
+        let mut rng = Rng::new(0x5EED_0 + case);
+        let dfg = {
+            // Reuse the exec_fuzz generator shape inline: a few inputs, a
+            // short chain of real ops.
+            let mut g = tlo::dfg::graph::Dfg::new();
+            let a = g.input(0);
+            let b = g.input(1);
+            let mut pool = vec![a, b, g.constant(3)];
+            for _ in 0..(2 + rng.below(5)) {
+                let x = pool[rng.below(pool.len())];
+                let y = pool[rng.below(pool.len())];
+                let op = [
+                    tlo::dfe::opcodes::Op::Add,
+                    tlo::dfe::opcodes::Op::Mul,
+                    tlo::dfe::opcodes::Op::Sub,
+                    tlo::dfe::opcodes::Op::Max,
+                ][rng.below(4)];
+                pool.push(g.calc(op, x, y));
+            }
+            let last = *pool.last().expect("pool is non-empty");
+            g.output(0, last);
+            g
+        };
+        let Ok(res) = place_and_route(&dfg, grid, &ParParams::default(), &mut rng) else {
+            continue;
+        };
+        routed += 1;
+        let image = res.config.to_image().expect("routed configs lower");
+        let cached = CachedConfig::new(res.config, image, format!("fuzz{case}"));
+        let first = verify_artifact(&cached);
+        assert!(
+            !has_errors(&first),
+            "case {case}: routed artifact must verify error-free\n{}",
+            tlo::analysis::diag::render_table(&first)
+        );
+        assert_eq!(first, verify_artifact(&cached), "case {case}: verify must be deterministic");
+    }
+    assert!(routed >= 10, "fuzz sweep must route a meaningful sample, got {routed}");
+}
+
+#[test]
+fn verify_on_insert_is_transparent_for_valid_artifacts() {
+    // The debug-build sanitizer hooks must accept everything the real
+    // pipeline produces — entries and multi-tile plans alike.
+    let mut cache = ConfigCache::new(64);
+    cache.insert(1, fig2_artifact());
+    let (plan, plan_key, _, _) = gemm_tiled_plan();
+    cache.insert_plan(plan_key, plan);
+    assert!(cache.contains(1) && cache.contains_plan(plan_key));
+}
