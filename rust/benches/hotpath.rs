@@ -1,10 +1,13 @@
 //! §Perf — hot-path microbenchmarks for the three layers' rust-side
 //! components: interpreter throughput (L3 software baseline), DFE image
-//! evaluation (rust sim lane), cycle-level overlay sim, and — the
-//! headline — the compiled wave executor (`dfe::exec`) against `CycleSim`
-//! on the PolyBench streaming mix, with an asserted ≥5x element-throughput
-//! speedup. Used by the performance pass; before/after numbers in
-//! EXPERIMENTS.md.
+//! evaluation (rust sim lane), cycle-level overlay sim, the compiled
+//! wave executor (`dfe::exec`) against `CycleSim` on the PolyBench
+//! streaming mix with an asserted ≥5x element-throughput speedup, and —
+//! the ISSUE 10 headline — the lowered batch kernels (`dfe::lower`)
+//! against the wave executor's interpreted schedule on the same mix,
+//! with an asserted ≥4x speedup (relaxed under `TLO_BENCH_QUICK=1`,
+//! where timings are too noisy for a hard ratio). Used by the
+//! performance pass; before/after numbers in EXPERIMENTS.md.
 //!
 //! With `TLO_BENCH_JSON=<path>` (set by `make bench`), writes the mix
 //! results as JSON so the perf trajectory is tracked across PRs.
@@ -14,7 +17,7 @@ use tlo::dfe::cache::{dfg_key, spec_key, CachedConfig, SpecSignature};
 use tlo::dfe::config::fig2_config;
 use tlo::dfe::exec::CompiledFabric;
 use tlo::dfe::grid::Grid;
-use tlo::dfe::{tile_key, ExecutionPlan, PlanTile};
+use tlo::dfe::{tile_key, ExecutionPlan, LoweredKernel, PlanTile, Scratch};
 use tlo::dfg::partition::{partition, TileBudget};
 use tlo::dfe::image::{fig2_image, listing1_image};
 use tlo::dfe::sim::CycleSim;
@@ -204,6 +207,88 @@ fn main() {
     );
     println!("PASS: compiled wave executor is {speedup:.1}x CycleSim on the mix");
 
+    // ---- lowered batch kernels vs the interpreted wave schedule ----
+    // Both sides run the batch ABI entry point (`run_batch`) — the exact
+    // call the offload stub makes — so the ratio isolates what the
+    // lowering buys: specialized per-op sweeps instead of a per-lane
+    // `Op::eval` match, folded/fused steps, and a reusable scratch arena
+    // instead of per-invocation buffer allocation + const refill.
+    print_header("lowered batch kernels vs wave executor — PolyBench streaming mix");
+    struct LRow {
+        name: &'static str,
+        waveb_s: f64,
+        low_s: f64,
+        folded: usize,
+        fused: usize,
+    }
+    let mut lrows: Vec<LRow> = Vec::new();
+    let mut scratch = Scratch::new();
+    for case in &mix {
+        let kernel = LoweredKernel::lower(&case.fabric);
+        let n_in = case.fabric.n_inputs;
+        let mut x = vec![0i32; n_in * n_elems];
+        for (j, s) in case.streams.iter().take(n_in).enumerate() {
+            x[j * n_elems..(j + 1) * n_elems].copy_from_slice(s);
+        }
+        // Outputs must agree before their speeds are comparable.
+        let want = case.fabric.run_batch(&x, n_elems);
+        assert_eq!(
+            kernel.run_batch(&x, n_elems, &mut scratch),
+            want,
+            "{}: lowered kernel diverges from the wave executor",
+            case.name
+        );
+
+        let w = run(&format!("waveb/{}-{}el", case.name, n_elems), cfg, || {
+            black_box(case.fabric.run_batch(&x, n_elems));
+        });
+        let l = run(&format!("lowered/{}-{}el", case.name, n_elems), cfg, || {
+            black_box(kernel.run_batch(&x, n_elems, &mut scratch));
+        });
+        lrows.push(LRow {
+            name: case.name,
+            waveb_s: w.median.as_secs_f64(),
+            low_s: l.median.as_secs_f64(),
+            folded: kernel.folded,
+            fused: kernel.fused,
+        });
+    }
+
+    println!(
+        "\n{:<10} {:>16} {:>16} {:>9} {:>7} {:>6}",
+        "kernel", "wave el/s", "lowered el/s", "speedup", "folded", "fused"
+    );
+    let (mut waveb_total, mut low_total) = (0.0f64, 0.0f64);
+    for r in &lrows {
+        waveb_total += r.waveb_s;
+        low_total += r.low_s;
+        println!(
+            "{:<10} {:>16.0} {:>16.0} {:>8.1}x {:>7} {:>6}",
+            r.name,
+            n_elems as f64 / r.waveb_s,
+            n_elems as f64 / r.low_s,
+            r.waveb_s / r.low_s,
+            r.folded,
+            r.fused
+        );
+    }
+    let lowered_speedup = waveb_total / low_total;
+    // Quick mode runs too few iterations (and too few elements) for a
+    // stable ratio; it only guards against a regression to slower-than-
+    // interpreted. The real ≥4x acceptance gate runs in full mode.
+    let lowered_threshold = if quick { 1.2 } else { 4.0 };
+    println!(
+        "\naggregate lowered-vs-wave speedup: {lowered_speedup:.1}x \
+         (acceptance: >= {lowered_threshold}x{})",
+        if quick { ", quick mode" } else { "" }
+    );
+    assert!(
+        lowered_speedup >= lowered_threshold,
+        "lowered kernel speedup {lowered_speedup:.2}x below the \
+         {lowered_threshold}x acceptance threshold"
+    );
+    println!("PASS: lowered batch kernels are {lowered_speedup:.1}x the wave executor");
+
     // ---- tiled execution plans: multi-pass overlap on an undersized grid ----
     // gemm at unroll 8 carries more calc nodes than a 3x3 overlay has
     // cells; the partitioner cuts it into a feed-forward plan and the
@@ -303,23 +388,32 @@ fn main() {
     // ---- perf-trajectory JSON (written by `make bench`) ----
     if let Ok(path) = std::env::var("TLO_BENCH_JSON") {
         let mut kernels = String::new();
-        for (i, r) in rows.iter().enumerate() {
+        for (i, (r, lr)) in rows.iter().zip(&lrows).enumerate() {
             if i > 0 {
                 kernels.push(',');
             }
             kernels.push_str(&format!(
                 "\n    {{\"name\": \"{}\", \"cyclesim_elements_per_sec\": {:.1}, \
-                 \"wave_elements_per_sec\": {:.1}, \"speedup\": {:.3}}}",
+                 \"wave_elements_per_sec\": {:.1}, \"speedup\": {:.3}, \
+                 \"lowered_elements_per_sec\": {:.1}, \
+                 \"lowered_vs_wave_speedup\": {:.3}, \
+                 \"lowered_folded_firings\": {}, \"lowered_fused_edges\": {}}}",
                 escape(r.name),
                 n_elems as f64 / r.cyc_s,
                 n_elems as f64 / r.wave_s,
-                r.cyc_s / r.wave_s
+                r.cyc_s / r.wave_s,
+                n_elems as f64 / lr.low_s,
+                lr.waveb_s / lr.low_s,
+                lr.folded,
+                lr.fused
             ));
         }
         let doc = format!(
             "{{\n  \"bench\": \"hotpath\",\n  \"mode\": \"{}\",\n  \
              \"elements\": {},\n  \"kernels\": [{}\n  ],\n  \
              \"aggregate_speedup\": {:.3},\n  \"threshold\": 5.0,\n  \
+             \"lowered_aggregate_speedup\": {:.3},\n  \
+             \"lowered_threshold\": {:.1},\n  \
              \"tiled_kernel\": \"gemm@u8/3x3\",\n  \
              \"tiled_tiles_per_plan\": {},\n  \"tiled_spill_streams\": {},\n  \
              \"tiled_makespan_sync_secs\": {:.9},\n  \
@@ -332,6 +426,8 @@ fn main() {
             n_elems,
             kernels,
             speedup,
+            lowered_speedup,
+            lowered_threshold,
             plan.n_tiles(),
             plan.n_spills,
             plan_sync.as_secs_f64(),

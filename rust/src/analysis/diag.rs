@@ -24,6 +24,9 @@ pub enum Pass {
     V4PlanSoundness,
     /// Persisted-snapshot integrity (load-time re-verification).
     V5SnapshotIntegrity,
+    /// Lowered-batch-kernel equivalence: translation validation of the
+    /// folding/aliasing/fusion decisions against the wave schedule.
+    V6LoweredKernel,
 }
 
 impl Pass {
@@ -34,6 +37,7 @@ impl Pass {
             Pass::V3WaveHazard => "V3",
             Pass::V4PlanSoundness => "V4",
             Pass::V5SnapshotIntegrity => "V5",
+            Pass::V6LoweredKernel => "V6",
         }
     }
 
@@ -44,6 +48,7 @@ impl Pass {
             Pass::V3WaveHazard => "wave-schedule hazards",
             Pass::V4PlanSoundness => "tiled-plan soundness",
             Pass::V5SnapshotIntegrity => "snapshot integrity",
+            Pass::V6LoweredKernel => "lowered-kernel equivalence",
         }
     }
 }

@@ -36,6 +36,13 @@
 //!     `dfe/persist.rs` re-runs V2–V4 on every freshly parsed "tlo-cache
 //!     v1" artifact, so a byte-valid but semantically corrupt snapshot is
 //!     rejected at load instead of served.
+//!   * **V6** — lowered-batch-kernel equivalence ([`verify_lowered`]):
+//!     translation validation of `dfe::lower`'s folding, aliasing and
+//!     fusion decisions — the abstract constant/alias state re-derived
+//!     from the wave schedule, prefill soundness + completeness, a
+//!     scoreboard scan proving every step reads only defined slots
+//!     strictly below its destination, fingerprint integrity, and a
+//!     deterministic probe diffed bit-for-bit against the wave executor.
 //!
 //! All entry points are pure (`&`-only, no interior mutability) and
 //! return diagnostics in the canonical deterministic order
@@ -49,6 +56,7 @@ use crate::analysis::diag::{error_count, has_errors, sort_diags, Diag, Pass, Sev
 use crate::dfe::cache::{dfg_key, CachedConfig};
 use crate::dfe::config::{FuSrc, GridConfig, OutSrc};
 use crate::dfe::exec::CompiledFabric;
+use crate::dfe::lower::{LoweredKernel, Scratch, Src, Step};
 use crate::dfe::grid::{CellCoord, Dir, DIRS};
 use crate::dfe::opcodes::Op;
 use crate::dfe::plan::{tile_key, ExecutionPlan};
@@ -645,6 +653,328 @@ fn verify_artifact_into(cached: &CachedConfig, diags: &mut Vec<Diag>) {
             "fabric",
             "no compiled wave schedule (CycleSim fallback artifact)",
         )),
+    }
+    match (&cached.fabric, &cached.lowered) {
+        (Some(f), Some(k)) => verify_lowered_into(f, k, diags),
+        (Some(_), None) => diags.push(Diag::warning(
+            Pass::V6LoweredKernel,
+            "lowered",
+            "wave schedule present but no lowered batch kernel (wave-executor fallback)",
+        )),
+        (None, Some(_)) => diags.push(Diag::error(
+            Pass::V6LoweredKernel,
+            "lowered",
+            "lowered kernel present without its source wave schedule",
+        )),
+        (None, None) => {}
+    }
+}
+
+// ---------------------------------------------------------------- V6 --
+
+/// V6: translation validation of the lowered batch kernels
+/// (`dfe::lower`) against the wave schedule they were specialized from.
+/// Re-derives the folding/aliasing abstract state independently from the
+/// fabric's firing list, then holds the kernel to it: slot-space
+/// identity, prefill soundness *and* completeness, output taps resolved
+/// through the re-derived alias map, a scoreboard scan proving every
+/// step reads only defined slots strictly below its destination (the
+/// invariant the executor's `split_at_mut` carve relies on), fingerprint
+/// integrity, and a deterministic end-to-end probe diffed bit-for-bit
+/// against the wave executor.
+pub fn verify_lowered(fab: &CompiledFabric, k: &LoweredKernel) -> Vec<Diag> {
+    let mut diags = Vec::new();
+    verify_lowered_into(fab, k, &mut diags);
+    sort_diags(&mut diags);
+    diags
+}
+
+fn verify_lowered_into(fab: &CompiledFabric, k: &LoweredKernel, diags: &mut Vec<Diag>) {
+    let err = |loc: String, msg: String| Diag::error(Pass::V6LoweredKernel, loc, msg);
+
+    // ---- slot-space identity (the lowering never renumbers) ----
+    let n_slots = fab.n_slots;
+    if k.n_slots != n_slots {
+        diags.push(err(
+            "slots".into(),
+            format!("kernel has {} slots, wave schedule has {n_slots}", k.n_slots),
+        ));
+        return; // everything below indexes by slot
+    }
+    if k.n_inputs != fab.n_inputs {
+        diags.push(err(
+            "ext".into(),
+            format!("n_inputs {} vs the schedule's {}", k.n_inputs, fab.n_inputs),
+        ));
+    }
+    if k.ext_ins != fab.ext_ins {
+        diags.push(err(
+            "ext".into(),
+            "external input bindings differ from the wave schedule".into(),
+        ));
+    }
+
+    // ---- independent re-derivation of the folding abstract state ----
+    // `known[s]` = compile-time constant in slot `s`; `alias[s]` = the
+    // slot holding `s`'s run-time value. Derived from the fabric's
+    // firing list and `Op::eval` alone — not from the kernel.
+    let mut known: Vec<Option<i32>> = vec![None; n_slots];
+    if n_slots == 0 {
+        diags.push(err("slots".into(), "schedule has no value slots".into()));
+        return;
+    }
+    known[0] = Some(0);
+    for &(slot, v) in &fab.consts {
+        if let Some(kn) = known.get_mut(slot) {
+            *kn = Some(v);
+        }
+    }
+    let mut alias: Vec<usize> = (0..n_slots).collect();
+    // Slots a surviving (unfolded, unfoldable) firing must still write.
+    let mut must_write = vec![false; n_slots];
+    for w in &fab.ops {
+        if w.dst >= n_slots || w.a >= n_slots || w.b >= n_slots || w.s >= n_slots {
+            // V3 reports schedule bounds; nothing sound to derive here.
+            return;
+        }
+        let (a, b, s) = (alias[w.a], alias[w.b], alias[w.s]);
+        match w.op {
+            Op::Nop => {
+                alias[w.dst] = 0;
+                known[w.dst] = Some(0);
+            }
+            Op::Pass => {
+                alias[w.dst] = a;
+                known[w.dst] = known[a];
+            }
+            op => {
+                if let (Some(ka), Some(kb), Some(ks)) = (known[a], known[b], known[s]) {
+                    known[w.dst] = Some(op.eval(ka, kb, ks));
+                } else {
+                    must_write[w.dst] = true;
+                }
+            }
+        }
+    }
+
+    // ---- output taps through the re-derived alias map ----
+    if k.outs.len() != fab.outs.len() {
+        diags.push(err(
+            "outs".into(),
+            format!("{} taps vs the schedule's {}", k.outs.len(), fab.outs.len()),
+        ));
+    } else {
+        for (i, (&(kj, kslot), &(fj, fslot))) in k.outs.iter().zip(&fab.outs).enumerate() {
+            if kj != fj || kslot != alias[fslot] {
+                diags.push(err(
+                    format!("out {i}"),
+                    format!(
+                        "tap (stream {kj}, slot {kslot}) vs re-derived \
+                         (stream {fj}, slot {})",
+                        alias[fslot]
+                    ),
+                ));
+            }
+        }
+    }
+
+    // ---- step destinations: exactly the surviving firings ----
+    let mut written = vec![false; n_slots];
+    let mut fused_away = 0usize;
+    for (i, step) in k.steps.iter().enumerate() {
+        let dst = match step {
+            Step::Sweep { dst, .. } => *dst,
+            Step::Chain { ops, dst } => {
+                // Chain members beyond the tail correspond to fused
+                // producers whose slots legitimately go unwritten.
+                fused_away += ops.len().saturating_sub(1);
+                *dst
+            }
+        };
+        if dst >= n_slots {
+            diags.push(err(format!("step {i}"), format!("dst slot {dst} out of bounds")));
+            return;
+        }
+        if written[dst] {
+            diags.push(err(format!("step {i}"), format!("slot {dst} written twice")));
+        }
+        written[dst] = true;
+        if !must_write[dst] {
+            diags.push(err(
+                format!("step {i}"),
+                format!("writes slot {dst}, which the re-derivation folds away"),
+            ));
+        }
+    }
+    let surviving = must_write.iter().filter(|&&w| w).count();
+    let emitted = written.iter().filter(|&&w| w).count();
+    if emitted + fused_away != surviving {
+        diags.push(err(
+            "steps".into(),
+            format!(
+                "{emitted} step writes + {fused_away} fused intermediates \
+                 cover {surviving} surviving firings"
+            ),
+        ));
+    }
+
+    // ---- prefill soundness + completeness ----
+    let mut prefilled = vec![false; n_slots];
+    for &(slot, v) in &k.prefill {
+        if slot >= n_slots {
+            diags.push(err(format!("prefill slot {slot}"), "out of bounds".into()));
+            continue;
+        }
+        if prefilled[slot] {
+            diags.push(err(format!("prefill slot {slot}"), "prefilled twice".into()));
+        }
+        prefilled[slot] = true;
+        if known[slot] != Some(v) {
+            diags.push(err(
+                format!("prefill slot {slot}"),
+                format!("holds {v}, re-derivation says {:?}", known[slot]),
+            ));
+        }
+        if written[slot] {
+            diags.push(err(
+                format!("prefill slot {slot}"),
+                "also written by a step (prime-once reuse would corrupt it)".into(),
+            ));
+        }
+    }
+
+    // ---- scoreboard: defined-before-use, operands strictly below dst ----
+    let mut defined = vec![false; n_slots];
+    defined[0] = true;
+    for slot in 0..n_slots {
+        if prefilled[slot] {
+            defined[slot] = true;
+        }
+    }
+    for &(slot, _) in &k.ext_ins {
+        if let Some(d) = defined.get_mut(slot) {
+            *d = true;
+        }
+    }
+    // Completeness rider inside the read check: a read of a re-derived
+    // constant must have been prefilled (ext/step-written slots are
+    // never constants in the re-derivation).
+    fn check_read(
+        diags: &mut Vec<Diag>,
+        defined: &[bool],
+        known: &[Option<i32>],
+        prefilled: &[bool],
+        i: usize,
+        slot: usize,
+        dst: usize,
+        what: &str,
+    ) {
+        let err = |loc: String, msg: String| Diag::error(Pass::V6LoweredKernel, loc, msg);
+        let n_slots = defined.len();
+        if slot >= n_slots {
+            diags.push(err(format!("step {i}"), format!("{what} slot {slot} out of bounds")));
+            return;
+        } else if !defined[slot] {
+            diags.push(err(
+                format!("step {i}"),
+                format!("{what} reads slot {slot} before it is defined"),
+            ));
+        } else if slot >= dst {
+            diags.push(err(
+                format!("step {i}"),
+                format!("{what} slot {slot} not strictly below dst {dst} (aliasing hazard)"),
+            ));
+        }
+        if known[slot].is_some() && slot != 0 && !prefilled[slot] {
+            diags.push(err(
+                format!("step {i}"),
+                format!("reads constant slot {slot} missing from the prefill image"),
+            ));
+        }
+    }
+    for (i, step) in k.steps.iter().enumerate() {
+        match step {
+            Step::Sweep { dst, a, b, s, .. } => {
+                check_read(diags, &defined, &known, &prefilled, i, *a, *dst, "operand a");
+                check_read(diags, &defined, &known, &prefilled, i, *b, *dst, "operand b");
+                check_read(diags, &defined, &known, &prefilled, i, *s, *dst, "operand s");
+                defined[*dst] = true;
+            }
+            Step::Chain { ops, dst } => {
+                if ops.len() < 2 {
+                    diags.push(err(
+                        format!("step {i}"),
+                        format!("chain of {} member(s) — fusion requires at least 2", ops.len()),
+                    ));
+                }
+                for (m, c) in ops.iter().enumerate() {
+                    let mut accs = 0usize;
+                    for (src, what) in
+                        [(c.a, "operand a"), (c.b, "operand b"), (c.s, "operand s")]
+                    {
+                        match src {
+                            Src::Buf(slot) => check_read(
+                                diags, &defined, &known, &prefilled, i, slot, *dst, what,
+                            ),
+                            Src::Acc => {
+                                accs += 1;
+                                if m == 0 {
+                                    diags.push(err(
+                                        format!("step {i}"),
+                                        "chain head reads the accumulator".into(),
+                                    ));
+                                }
+                            }
+                        }
+                    }
+                    if m > 0 && accs != 1 {
+                        diags.push(err(
+                            format!("step {i}"),
+                            format!("chain member {m} reads the accumulator {accs} times"),
+                        ));
+                    }
+                }
+                defined[*dst] = true;
+            }
+        }
+    }
+    // Taps must read defined (or prefilled-constant) slots.
+    for (i, &(_, slot)) in k.outs.iter().enumerate() {
+        if slot < n_slots && !defined[slot] {
+            diags.push(err(format!("out {i}"), format!("taps undefined slot {slot}")));
+        }
+        if slot < n_slots && known[slot].is_some() && slot != 0 && !prefilled[slot] {
+            diags.push(err(
+                format!("out {i}"),
+                format!("taps constant slot {slot} missing from the prefill image"),
+            ));
+        }
+    }
+
+    // ---- fingerprint integrity (the scratch-arena priming key) ----
+    if k.fingerprint != k.structural_hash() {
+        diags.push(err(
+            "fingerprint".into(),
+            "stored fingerprint drifted from the kernel structure \
+             (a stale scratch arena could skip re-priming)"
+                .into(),
+        ));
+    }
+
+    // ---- deterministic end-to-end probe against the wave executor ----
+    if !has_errors(diags) {
+        let lanes = 67usize;
+        let probe: Vec<i32> = (0..fab.n_inputs * lanes)
+            .map(|i| (i as i32).wrapping_mul(-1640531527).wrapping_add(40503))
+            .collect();
+        let want = fab.run_batch(&probe, lanes);
+        let got = k.run_batch(&probe, lanes, &mut Scratch::new());
+        if got != want {
+            diags.push(err(
+                "probe".into(),
+                "lowered kernel diverges from the wave executor on the probe vector".into(),
+            ));
+        }
     }
 }
 

@@ -15,6 +15,7 @@ use super::config::GridConfig;
 use super::exec::CompiledFabric;
 use super::grid::CellCoord;
 use super::image::ExecImage;
+use super::lower::LoweredKernel;
 use super::plan::ExecutionPlan;
 use crate::dfg::graph::{Dfg, NodeId, NodeKind};
 use crate::par::lasvegas::ParStats;
@@ -92,6 +93,13 @@ pub struct CachedConfig {
     pub config: GridConfig,
     pub image: ExecImage,
     pub fabric: Option<Rc<CompiledFabric>>,
+    /// The wave schedule specialized once more into vectorized
+    /// straight-line batch kernels (`dfe::lower`): folding, fusion and
+    /// per-op monomorphized sweeps. Built whenever `fabric` is — the
+    /// serve/offload hot paths execute through this by default, with
+    /// `fabric` as the `--no-lower` fallback. Verifier pass V6 re-proves
+    /// it equivalent to the wave schedule on every debug-build insert.
+    pub lowered: Option<Rc<LoweredKernel>>,
     /// Which artifact variant (grid size) it targets.
     pub variant: String,
     /// P&R seed that produced the artifact (the portfolio winner's derived
@@ -115,10 +123,12 @@ impl CachedConfig {
     /// config that already produced `image`).
     pub fn new(config: GridConfig, image: ExecImage, variant: String) -> CachedConfig {
         let fabric = CompiledFabric::compile(&config).ok().map(Rc::new);
+        let lowered = fabric.as_ref().map(|f| Rc::new(LoweredKernel::lower(f)));
         CachedConfig {
             config,
             image,
             fabric,
+            lowered,
             variant,
             seed: 0,
             par_stats: None,

@@ -1,0 +1,705 @@
+//! Lowered batch kernels: the wave schedule specialized into vectorized
+//! straight-line code.
+//!
+//! [`super::exec::CompiledFabric`] already turns a routed configuration
+//! into a static firing schedule, but its run loop still *interprets*
+//! that schedule — a 19-way `Op::eval` match per lane, bounds-checked
+//! `buf[a0 + lane]` indexing, and fresh `out`/`buf` allocations on every
+//! `run_batch` call. The schedule is fully static per artifact, so this
+//! module lowers it once more, into a [`LoweredKernel`]:
+//!
+//!   * **dispatch removal** — every firing executes through a
+//!     monomorphized per-`Op` lane sweep ([`apply`]): one match per
+//!     firing instead of one per element, and each arm is a closed
+//!     `zip`-iterated loop the compiler can autovectorize;
+//!   * **folding** — `Nop`/`Pass` firings and firings whose operands are
+//!     all compile-time constants disappear at lowering time (`Nop`
+//!     aliases the zero slot, `Pass` is pure slot aliasing, constant
+//!     results join the prefill image);
+//!   * **fusion** — a producer whose result feeds exactly one operand of
+//!     one later firing (and no output tap) is chained into its consumer
+//!     and executed in one pass over the lanes, the intermediate living
+//!     in a stack accumulator instead of a buffer slot;
+//!   * **SIMD shaping** — sweeps run over exact-length slice windows
+//!     carved with `split_at_mut` (legal because every operand slot is
+//!     strictly below its destination slot — see `CompiledFabric::compile`'s
+//!     monotone slot assignment), so bounds checks hoist and the scalar
+//!     loops vectorize; an optional `std::arch` SSE2 path for `Add`/`Sub`
+//!     sits behind the off-by-default `simd` cargo feature;
+//!   * **allocation removal** — the wave buffer lives in a reusable
+//!     [`Scratch`] arena primed once per artifact (keyed by the kernel
+//!     [`LoweredKernel::fingerprint`]), not rebuilt per invocation.
+//!
+//! Numerics are bit-identical to the wave executor and `CycleSim` by
+//! construction (`Op::eval` stays the single source of truth — the
+//! specialized arms in [`apply`] are its 19 cases spelled out, locked by
+//! a unit test below) and by translation validation: verifier pass V6
+//! (`analysis::verifier::verify_lowered`) independently re-derives the
+//! folding/aliasing abstract state from the fabric and re-proves the
+//! kernel equivalent, on every cache insert in debug builds.
+
+use std::collections::hash_map::DefaultHasher;
+use std::hash::{Hash, Hasher};
+
+use super::exec::{CompiledFabric, CHUNK};
+use super::opcodes::Op;
+
+/// Fixed sub-chunk window width for fused-chain execution: intermediates
+/// live in `[i32; LANE_W]` stack arrays, so one chain pass touches each
+/// lane once while staying register-resident.
+pub const LANE_W: usize = 16;
+
+/// Operand source for a fused chain member.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub(crate) enum Src {
+    /// Read this buffer slot's lane window.
+    Buf(usize),
+    /// Read the running accumulator (the previous member's result).
+    Acc,
+}
+
+/// One member of a fused firing chain: the same `op(a, b, s)` shape as a
+/// wave firing, but operands may read the chain accumulator and only the
+/// tail member's result is written back to the buffer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub(crate) struct ChainOp {
+    pub(crate) op: Op,
+    pub(crate) a: Src,
+    pub(crate) b: Src,
+    pub(crate) s: Src,
+}
+
+/// One lowered execution step.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub(crate) enum Step {
+    /// One surviving firing swept over the full lane window:
+    /// `buf[dst] = op(buf[a], buf[b], buf[s])` for every lane.
+    Sweep { op: Op, dst: usize, a: usize, b: usize, s: usize },
+    /// A fused producer→single-consumer chain, executed at the *tail*
+    /// consumer's schedule position (deferral is safe: every slot is
+    /// written exactly once per wave pass, so no step between a producer
+    /// and its sole consumer can clobber the producer's operands).
+    /// Exactly one buffer write — the tail's `dst`.
+    Chain { ops: Vec<ChainOp>, dst: usize },
+}
+
+/// A wave schedule lowered to specialized batch kernels. Immutable after
+/// lowering; shared through the config cache exactly like the
+/// [`CompiledFabric`] it was lowered from. Slot numbering is inherited
+/// unchanged from the fabric (folded slots simply go unwritten), which
+/// keeps the V6 equivalence proof a direct slot-for-slot re-derivation.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LoweredKernel {
+    /// Value-slot count, identical to the source fabric's.
+    pub(crate) n_slots: usize,
+    /// Pre-image written once per [`Scratch`] priming: the fabric's
+    /// constants plus every constant-folded firing result, pruned to the
+    /// slots a surviving step or output tap actually reads.
+    pub(crate) prefill: Vec<(usize, i32)>,
+    /// External input bindings `(slot, stream index)`, verbatim from the
+    /// fabric.
+    pub(crate) ext_ins: Vec<(usize, usize)>,
+    /// Surviving steps, in schedule order.
+    pub(crate) steps: Vec<Step>,
+    /// Output taps `(stream index, slot)` with aliases resolved (a tap on
+    /// a folded `Pass` reads the pass-through source; a tap on a `Nop`
+    /// reads the zero slot).
+    pub(crate) outs: Vec<(usize, usize)>,
+    /// Number of input streams the kernel reads (ABI: `x[j * lanes + i]`).
+    pub n_inputs: usize,
+    /// Deterministic structural hash of everything above — the
+    /// [`Scratch`] priming key: a scratch arena primed for this
+    /// fingerprint needs no const refill on the next invocation.
+    pub fingerprint: u64,
+    /// Firings removed by folding (`Nop`, `Pass`, all-constant operands).
+    pub folded: usize,
+    /// Producer→consumer edges removed by fusion.
+    pub fused: usize,
+}
+
+/// Reusable execution arena: the wave buffer plus the priming state that
+/// makes the constant prefill a once-per-artifact cost instead of a
+/// once-per-invocation cost. One per tenant in the serve layer (each
+/// backend owns its scratch), so tenants never observe each other's lane
+/// data.
+#[derive(Clone, Debug, Default)]
+pub struct Scratch {
+    buf: Vec<i32>,
+    /// Fingerprint of the kernel the buffer is currently primed for.
+    primed: Option<u64>,
+    /// How many times the constant prefill ran — regression-tested to be
+    /// once per artifact, not once per invocation.
+    pub const_fills: u64,
+}
+
+impl Scratch {
+    pub fn new() -> Scratch {
+        Scratch::default()
+    }
+}
+
+impl LoweredKernel {
+    /// Lower a compiled wave schedule. Total: every fabric lowers (the
+    /// fallback-worthy failure modes — cycles, dangling producers — were
+    /// already rejected by `CompiledFabric::compile`).
+    pub fn lower(fab: &CompiledFabric) -> LoweredKernel {
+        let n_slots = fab.n_slots;
+
+        // Abstract state over slots: `known[s]` = the compile-time
+        // constant in `s` (zero slot, fabric consts, folded results);
+        // `alias[s]` = the slot actually holding `s`'s value at run time
+        // (identity except through folded `Pass`/`Nop` firings).
+        let mut known: Vec<Option<i32>> = vec![None; n_slots];
+        if n_slots > 0 {
+            known[0] = Some(0);
+        }
+        for &(slot, v) in &fab.consts {
+            known[slot] = Some(v);
+        }
+        let mut alias: Vec<usize> = (0..n_slots).collect();
+
+        let mut folded = 0usize;
+        let mut sweeps: Vec<(Op, usize, usize, usize, usize)> = Vec::new();
+        for w in &fab.ops {
+            let (a, b, s) = (alias[w.a], alias[w.b], alias[w.s]);
+            match w.op {
+                // `Nop` is 0 regardless of operands: alias to the zero
+                // slot (slot 0 is never written, always zero).
+                Op::Nop => {
+                    alias[w.dst] = 0;
+                    known[w.dst] = Some(0);
+                    folded += 1;
+                }
+                // `Pass` forwards its first operand: pure slot aliasing.
+                Op::Pass => {
+                    alias[w.dst] = a;
+                    known[w.dst] = known[a];
+                    folded += 1;
+                }
+                op => {
+                    // Unused operands were resolved to the zero slot by
+                    // the fabric compiler, so `known` is `Some(0)` there
+                    // and the fold below reproduces `eval` exactly.
+                    if let (Some(ka), Some(kb), Some(ks)) = (known[a], known[b], known[s]) {
+                        known[w.dst] = Some(op.eval(ka, kb, ks));
+                        folded += 1;
+                    } else {
+                        sweeps.push((op, w.dst, a, b, s));
+                    }
+                }
+            }
+        }
+
+        // Output taps through the alias map; tapped slots are fusion
+        // barriers (their value must land in the buffer).
+        let outs: Vec<(usize, usize)> =
+            fab.outs.iter().map(|&(j, slot)| (j, alias[slot])).collect();
+        let mut tapped = vec![false; n_slots];
+        for &(_, slot) in &outs {
+            tapped[slot] = true;
+        }
+
+        // Reader census over the surviving sweeps: a producer fuses into
+        // its consumer only if exactly one (firing, operand) pair reads
+        // its destination and no tap does.
+        let mut readers = vec![0usize; n_slots];
+        for &(_, _, a, b, s) in &sweeps {
+            readers[a] += 1;
+            readers[b] += 1;
+            readers[s] += 1;
+        }
+
+        // Greedy chain building, in schedule order. `made[i]` holds the
+        // step currently ending at position `i` (tombstoned when absorbed
+        // into a later consumer); `produced_at[slot]` locates the step
+        // producing `slot`.
+        let mut made: Vec<Option<Step>> = Vec::with_capacity(sweeps.len());
+        let mut produced_at: Vec<Option<usize>> = vec![None; n_slots];
+        let mut fused = 0usize;
+        for &(op, dst, a, b, s) in &sweeps {
+            // First fusable operand wins (deterministic: a, then b, then
+            // s). An operand read twice by this firing fails the
+            // single-reader census, so `Acc` is unambiguous.
+            let fusable = |slot: usize| {
+                slot != 0
+                    && readers[slot] == 1
+                    && !tapped[slot]
+                    && produced_at[slot].is_some()
+            };
+            let pick = [a, b, s].into_iter().find(|&o| fusable(o));
+            let step = match pick {
+                Some(src_slot) => {
+                    let pi = produced_at[src_slot].expect("fusable implies produced");
+                    let prev = made[pi].take().expect("producer not yet absorbed");
+                    produced_at[src_slot] = None;
+                    let mut ops = match prev {
+                        Step::Sweep { op, a, b, s, .. } => vec![ChainOp {
+                            op,
+                            a: Src::Buf(a),
+                            b: Src::Buf(b),
+                            s: Src::Buf(s),
+                        }],
+                        Step::Chain { ops, .. } => ops,
+                    };
+                    let pickb = |o: usize| {
+                        if o == src_slot {
+                            Src::Acc
+                        } else {
+                            Src::Buf(o)
+                        }
+                    };
+                    ops.push(ChainOp { op, a: pickb(a), b: pickb(b), s: pickb(s) });
+                    fused += 1;
+                    Step::Chain { ops, dst }
+                }
+                None => Step::Sweep { op, dst, a, b, s },
+            };
+            produced_at[dst] = Some(made.len());
+            made.push(Some(step));
+        }
+        let steps: Vec<Step> = made.into_iter().flatten().collect();
+
+        // Prefill = known slots a surviving step or tap actually reads
+        // (slot 0 is excluded: the scratch arena zero-fills on priming).
+        let mut read = vec![false; n_slots];
+        for step in &steps {
+            let mut mark = |src: Src| {
+                if let Src::Buf(slot) = src {
+                    read[slot] = true;
+                }
+            };
+            match step {
+                Step::Sweep { a, b, s, .. } => {
+                    read[*a] = true;
+                    read[*b] = true;
+                    read[*s] = true;
+                }
+                Step::Chain { ops, .. } => {
+                    for c in ops {
+                        mark(c.a);
+                        mark(c.b);
+                        mark(c.s);
+                    }
+                }
+            }
+        }
+        for &(_, slot) in &outs {
+            read[slot] = true;
+        }
+        let prefill: Vec<(usize, i32)> = (1..n_slots)
+            .filter(|&slot| read[slot])
+            .filter_map(|slot| known[slot].map(|v| (slot, v)))
+            .collect();
+
+        let mut k = LoweredKernel {
+            n_slots,
+            prefill,
+            ext_ins: fab.ext_ins.clone(),
+            steps,
+            outs,
+            n_inputs: fab.n_inputs,
+            fingerprint: 0,
+            folded,
+            fused,
+        };
+        k.fingerprint = k.structural_hash();
+        k
+    }
+
+    /// Deterministic structural hash over everything execution-relevant.
+    /// Crate-visible so verifier pass V6 can re-prove the stored
+    /// `fingerprint` (a drifted fingerprint would let a stale scratch
+    /// arena skip re-priming).
+    pub(crate) fn structural_hash(&self) -> u64 {
+        let mut h = DefaultHasher::new();
+        self.n_slots.hash(&mut h);
+        self.prefill.hash(&mut h);
+        self.ext_ins.hash(&mut h);
+        self.steps.hash(&mut h);
+        self.outs.hash(&mut h);
+        self.n_inputs.hash(&mut h);
+        h.finish()
+    }
+
+    /// Surviving steps (post folding/fusion).
+    pub fn n_steps(&self) -> usize {
+        self.steps.len()
+    }
+
+    /// Batch entry point, same ABI as [`CompiledFabric::run_batch`]
+    /// (`x[j * lanes + lane]` slot-major in, `[n_out, lanes]` slot-major
+    /// out), executing through the reusable `scratch` arena: the wave
+    /// buffer is (re)allocated and const-prefilled only when the arena
+    /// was last primed for a different artifact.
+    pub fn run_batch(&self, x: &[i32], lanes: usize, scratch: &mut Scratch) -> Vec<i32> {
+        debug_assert!(x.len() >= self.n_inputs * lanes);
+        let want = self.n_slots * CHUNK;
+        if scratch.primed != Some(self.fingerprint) || scratch.buf.len() != want {
+            scratch.buf.clear();
+            scratch.buf.resize(want, 0);
+            for &(slot, v) in &self.prefill {
+                scratch.buf[slot * CHUNK..(slot + 1) * CHUNK].fill(v);
+            }
+            scratch.primed = Some(self.fingerprint);
+            scratch.const_fills += 1;
+        }
+        let buf = &mut scratch.buf[..];
+        let mut out = vec![0i32; self.outs.len() * lanes];
+        let mut at = 0usize;
+        while at < lanes {
+            let m = CHUNK.min(lanes - at);
+            for &(slot, j) in &self.ext_ins {
+                buf[slot * CHUNK..slot * CHUNK + m]
+                    .copy_from_slice(&x[j * lanes + at..j * lanes + at + m]);
+            }
+            self.fire(buf, m);
+            for (row, &(_, slot)) in self.outs.iter().enumerate() {
+                out[row * lanes + at..row * lanes + at + m]
+                    .copy_from_slice(&buf[slot * CHUNK..slot * CHUNK + m]);
+            }
+            at += m;
+        }
+        out
+    }
+
+    /// Execute every step over `m` lanes of the wave buffer.
+    #[inline]
+    fn fire(&self, buf: &mut [i32], m: usize) {
+        for step in &self.steps {
+            match step {
+                Step::Sweep { op, dst, a, b, s } => sweep(buf, m, *op, *dst, *a, *b, *s),
+                Step::Chain { ops, dst } => chain(buf, m, ops, *dst),
+            }
+        }
+    }
+
+    /// Mutation hook for the verifier self-test harness
+    /// (`tests/verifier.rs`): swap two lowered steps so pass V6's
+    /// scoreboard/probe has a documented positive control for ordering
+    /// corruption. Never called by production code.
+    #[doc(hidden)]
+    pub fn swap_steps(&mut self, i: usize, j: usize) {
+        self.steps.swap(i, j);
+    }
+
+    /// Mutation hook for the verifier self-test harness: corrupt the
+    /// first prefill value so V6's constant re-derivation has a positive
+    /// control. Never called by production code.
+    #[doc(hidden)]
+    pub fn corrupt_prefill(&mut self) {
+        if let Some(e) = self.prefill.first_mut() {
+            e.1 = e.1.wrapping_add(1);
+        }
+    }
+
+    /// Mutation hook for the verifier self-test harness: re-point the
+    /// first output tap at the zero slot so V6's tap re-derivation has a
+    /// positive control. Never called by production code.
+    #[doc(hidden)]
+    pub fn retarget_out(&mut self) {
+        if let Some(o) = self.outs.first_mut() {
+            o.1 = 0;
+        }
+    }
+}
+
+/// One surviving firing over `m` lanes. The slot invariant `a, b, s <
+/// dst` (monotone slot assignment in `CompiledFabric::compile`, preserved
+/// by alias resolution — aliases only ever point earlier) makes
+/// `split_at_mut` carve aliasing-free operand/destination windows, so the
+/// borrow checker proves disjointness and the exact-length slices let the
+/// compiler hoist every bounds check out of the lane loop.
+#[inline]
+fn sweep(buf: &mut [i32], m: usize, op: Op, dst: usize, a: usize, b: usize, s: usize) {
+    debug_assert!(a < dst && b < dst && s < dst);
+    let (lo, hi) = buf.split_at_mut(dst * CHUNK);
+    let d = &mut hi[..m];
+    let a = &lo[a * CHUNK..a * CHUNK + m];
+    let b = &lo[b * CHUNK..b * CHUNK + m];
+    let s = &lo[s * CHUNK..s * CHUNK + m];
+    apply(op, d, a, b, s);
+}
+
+/// One fused chain over `m` lanes in [`LANE_W`]-wide windows: gather the
+/// members' operand windows, thread the accumulator, write only the tail
+/// destination. Every `Buf` slot in the chain is strictly below `dst`
+/// (member operands < member dst ≤ tail dst), so the same `split_at_mut`
+/// carve applies.
+#[inline]
+fn chain(buf: &mut [i32], m: usize, ops: &[ChainOp], dst: usize) {
+    let (lo, hi) = buf.split_at_mut(dst * CHUNK);
+    let d = &mut hi[..m];
+    let mut at = 0usize;
+    while at < m {
+        let w = LANE_W.min(m - at);
+        let mut acc = [0i32; LANE_W];
+        for c in ops {
+            let mut aw = [0i32; LANE_W];
+            let mut bw = [0i32; LANE_W];
+            let mut sw = [0i32; LANE_W];
+            gather(lo, c.a, at, w, &acc, &mut aw);
+            gather(lo, c.b, at, w, &acc, &mut bw);
+            gather(lo, c.s, at, w, &acc, &mut sw);
+            let mut tmp = [0i32; LANE_W];
+            apply(c.op, &mut tmp[..w], &aw[..w], &bw[..w], &sw[..w]);
+            acc = tmp;
+        }
+        d[at..at + w].copy_from_slice(&acc[..w]);
+        at += w;
+    }
+}
+
+#[inline(always)]
+fn gather(
+    lo: &[i32],
+    src: Src,
+    at: usize,
+    w: usize,
+    acc: &[i32; LANE_W],
+    out: &mut [i32; LANE_W],
+) {
+    match src {
+        Src::Buf(slot) => {
+            out[..w].copy_from_slice(&lo[slot * CHUNK + at..slot * CHUNK + at + w])
+        }
+        Src::Acc => out[..w].copy_from_slice(&acc[..w]),
+    }
+}
+
+/// Two-operand lane sweep, monomorphized per call site: each closure
+/// below compiles to its own closed loop over exact-length slices.
+#[inline(always)]
+fn lanes2(d: &mut [i32], a: &[i32], b: &[i32], f: impl Fn(i32, i32) -> i32) {
+    for ((d, &a), &b) in d.iter_mut().zip(a).zip(b) {
+        *d = f(a, b);
+    }
+}
+
+/// Three-operand lane sweep (MUX only).
+#[inline(always)]
+fn lanes3(d: &mut [i32], a: &[i32], b: &[i32], s: &[i32], f: impl Fn(i32, i32, i32) -> i32) {
+    for (((d, &a), &b), &s) in d.iter_mut().zip(a).zip(b).zip(s) {
+        *d = f(a, b, s);
+    }
+}
+
+/// `Add` lane sweep: explicit SSE2 when the `simd` feature is on (and
+/// numerically identical — wrapping i32 lane adds), the autovectorized
+/// scalar closure otherwise.
+#[inline(always)]
+fn add_lanes(d: &mut [i32], a: &[i32], b: &[i32]) {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    simd::add(d, a, b);
+    #[cfg(not(all(feature = "simd", target_arch = "x86_64")))]
+    lanes2(d, a, b, |x, y| x.wrapping_add(y));
+}
+
+/// `Sub` lane sweep; see [`add_lanes`].
+#[inline(always)]
+fn sub_lanes(d: &mut [i32], a: &[i32], b: &[i32]) {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    simd::sub(d, a, b);
+    #[cfg(not(all(feature = "simd", target_arch = "x86_64")))]
+    lanes2(d, a, b, |x, y| x.wrapping_sub(y));
+}
+
+/// The specialized dispatch: one 19-arm match *per firing* (or per
+/// [`LANE_W`] window inside a chain), each arm a distinct monomorphized
+/// lane loop. The arms are `Op::eval`'s cases spelled out one-for-one —
+/// `eval_agrees_lane_for_lane` below locks the correspondence.
+fn apply(op: Op, d: &mut [i32], a: &[i32], b: &[i32], s: &[i32]) {
+    match op {
+        Op::Nop => d.fill(0),
+        Op::Add => add_lanes(d, a, b),
+        Op::Sub => sub_lanes(d, a, b),
+        Op::Mul => lanes2(d, a, b, |x, y| x.wrapping_mul(y)),
+        Op::Min => lanes2(d, a, b, |x, y| x.min(y)),
+        Op::Max => lanes2(d, a, b, |x, y| x.max(y)),
+        Op::Lt => lanes2(d, a, b, |x, y| (x < y) as i32),
+        Op::Gt => lanes2(d, a, b, |x, y| (x > y) as i32),
+        Op::Le => lanes2(d, a, b, |x, y| (x <= y) as i32),
+        Op::Ge => lanes2(d, a, b, |x, y| (x >= y) as i32),
+        Op::Eq => lanes2(d, a, b, |x, y| (x == y) as i32),
+        Op::Ne => lanes2(d, a, b, |x, y| (x != y) as i32),
+        Op::Mux => lanes3(d, a, b, s, |x, y, sel| if sel != 0 { x } else { y }),
+        Op::And => lanes2(d, a, b, |x, y| x & y),
+        Op::Or => lanes2(d, a, b, |x, y| x | y),
+        Op::Xor => lanes2(d, a, b, |x, y| x ^ y),
+        Op::Shl => lanes2(d, a, b, |x, y| x.wrapping_shl(y.clamp(0, 31) as u32)),
+        Op::Shr => lanes2(d, a, b, |x, y| x.wrapping_shr(y.clamp(0, 31) as u32)),
+        Op::Pass => d.copy_from_slice(a),
+    }
+}
+
+/// Explicit `std::arch` lane sweeps for the baseline-SSE2 ops. Only
+/// `Add`/`Sub` qualify: `_mm_mullo_epi32` is SSE4.1, beyond the x86_64
+/// baseline, so `Mul` and everything else stay on the autovectorized
+/// scalar path. Numerics are identical by construction (packed 32-bit
+/// adds/subs wrap exactly like `wrapping_add`/`wrapping_sub`). Off by
+/// default; CI never enables it.
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+mod simd {
+    use std::arch::x86_64::{
+        __m128i, _mm_add_epi32, _mm_loadu_si128, _mm_storeu_si128, _mm_sub_epi32,
+    };
+
+    #[inline(always)]
+    pub(super) fn add(d: &mut [i32], a: &[i32], b: &[i32]) {
+        binop(d, a, b, |x, y| unsafe { _mm_add_epi32(x, y) }, i32::wrapping_add)
+    }
+
+    #[inline(always)]
+    pub(super) fn sub(d: &mut [i32], a: &[i32], b: &[i32]) {
+        binop(d, a, b, |x, y| unsafe { _mm_sub_epi32(x, y) }, i32::wrapping_sub)
+    }
+
+    #[inline(always)]
+    fn binop(
+        d: &mut [i32],
+        a: &[i32],
+        b: &[i32],
+        v: impl Fn(__m128i, __m128i) -> __m128i,
+        scalar: impl Fn(i32, i32) -> i32,
+    ) {
+        debug_assert!(a.len() >= d.len() && b.len() >= d.len());
+        let n = d.len();
+        let mut i = 0usize;
+        while i + 4 <= n {
+            // SAFETY: `i + 4 <= n <= a.len(), b.len()` keeps every
+            // unaligned 4-lane load/store in bounds; `d` is `&mut` while
+            // `a`/`b` are `&`, so the windows cannot alias.
+            unsafe {
+                let x = _mm_loadu_si128(a.as_ptr().add(i) as *const __m128i);
+                let y = _mm_loadu_si128(b.as_ptr().add(i) as *const __m128i);
+                _mm_storeu_si128(d.as_mut_ptr().add(i) as *mut __m128i, v(x, y));
+            }
+            i += 4;
+        }
+        while i < n {
+            d[i] = scalar(a[i], b[i]);
+            i += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::config::{FuSrc, GridConfig, IoAssign, OutSrc};
+    use super::super::grid::{CellCoord, Dir, Grid};
+    use super::super::opcodes::{Op, ALL_OPS};
+    use super::*;
+
+    /// Lock the specialized dispatch to `Op::eval` lane for lane, over
+    /// operand values that exercise wrapping, clamping and sign edges.
+    #[test]
+    fn eval_agrees_lane_for_lane() {
+        let probes: [i32; 8] = [0, 1, -1, 7, -13, i32::MAX, i32::MIN, 40];
+        for op in ALL_OPS {
+            for &x in &probes {
+                for &y in &probes {
+                    for &sel in &[0i32, 1, -5] {
+                        let a = [x; 3];
+                        let b = [y; 3];
+                        let s = [sel; 3];
+                        let mut d = [0i32; 3];
+                        apply(op, &mut d, &a, &b, &s);
+                        assert_eq!(
+                            d,
+                            [op.eval(x, y, sel); 3],
+                            "{op} mismatch at a={x} b={y} s={sel}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    /// Hand-built 1x3 pipeline: in → add const → pass → out. The `Pass`
+    /// folds to an alias and the lowered output matches the wave
+    /// executor bit for bit through a reused scratch arena.
+    fn pipeline_cfg() -> GridConfig {
+        let mut cfg = GridConfig::empty(Grid::new(1, 3));
+        let c0 = CellCoord::new(0, 0);
+        let c1 = CellCoord::new(0, 1);
+        let c2 = CellCoord::new(0, 2);
+        cfg.inputs.push(IoAssign { cell: c0, dir: Dir::W, index: 0 });
+        cfg.cell_mut(c0).op = Some(Op::Add);
+        cfg.cell_mut(c0).fu1 = FuSrc::In(Dir::W);
+        cfg.cell_mut(c0).fu2 = FuSrc::Const(5);
+        cfg.cell_mut(c0).out[Dir::E.index()] = OutSrc::Fu;
+        cfg.cell_mut(c1).op = Some(Op::Pass);
+        cfg.cell_mut(c1).fu1 = FuSrc::In(Dir::W);
+        cfg.cell_mut(c1).out[Dir::E.index()] = OutSrc::Fu;
+        cfg.cell_mut(c2).op = Some(Op::Mul);
+        cfg.cell_mut(c2).fu1 = FuSrc::In(Dir::W);
+        cfg.cell_mut(c2).fu2 = FuSrc::Const(3);
+        cfg.cell_mut(c2).out[Dir::E.index()] = OutSrc::Fu;
+        cfg.outputs.push(IoAssign { cell: c2, dir: Dir::E, index: 0 });
+        cfg
+    }
+
+    #[test]
+    fn lowered_matches_wave_and_folds_pass() {
+        let cfg = pipeline_cfg();
+        let fab = CompiledFabric::compile(&cfg).expect("feed-forward");
+        let k = LoweredKernel::lower(&fab);
+        assert!(k.folded >= 1, "the Pass firing must fold");
+        let lanes = 2 * CHUNK + 37; // full, full, partial chunk
+        let x: Vec<i32> = (0..lanes).map(|i| (i as i32).wrapping_mul(3) - 40).collect();
+        let want = fab.run_batch(&x, lanes);
+        let mut scratch = Scratch::new();
+        assert_eq!(k.run_batch(&x, lanes, &mut scratch), want);
+        // Second invocation through the same arena: identical numerics,
+        // no re-prime.
+        assert_eq!(k.run_batch(&x, lanes, &mut scratch), want);
+        assert_eq!(scratch.const_fills, 1, "prefill must run once per artifact");
+    }
+
+    #[test]
+    fn fusion_chains_single_consumer_producers() {
+        // add → mul is a producer with exactly one reader and no tap:
+        // the lowering must fuse them into one chain step.
+        let cfg = pipeline_cfg();
+        let fab = CompiledFabric::compile(&cfg).expect("feed-forward");
+        let k = LoweredKernel::lower(&fab);
+        assert!(k.fused >= 1, "add→mul must fuse, got steps {:?}", k.steps);
+        assert!(
+            k.steps.iter().any(|s| matches!(s, Step::Chain { .. })),
+            "expected a fused chain"
+        );
+    }
+
+    #[test]
+    fn lowering_is_deterministic() {
+        let cfg = pipeline_cfg();
+        let fab = CompiledFabric::compile(&cfg).expect("feed-forward");
+        let k1 = LoweredKernel::lower(&fab);
+        let k2 = LoweredKernel::lower(&fab);
+        assert_eq!(k1, k2);
+        assert_eq!(k1.fingerprint, k2.fingerprint);
+    }
+
+    #[test]
+    fn scratch_reprimes_across_artifacts() {
+        let cfg = pipeline_cfg();
+        let fab = CompiledFabric::compile(&cfg).expect("feed-forward");
+        let k = LoweredKernel::lower(&fab);
+
+        // A second, different artifact: drop the Pass stage's const.
+        let mut cfg2 = pipeline_cfg();
+        cfg2.cell_mut(CellCoord::new(0, 2)).fu2 = FuSrc::Const(7);
+        let fab2 = CompiledFabric::compile(&cfg2).expect("feed-forward");
+        let k2 = LoweredKernel::lower(&fab2);
+        assert_ne!(k.fingerprint, k2.fingerprint);
+
+        let lanes = 100;
+        let x: Vec<i32> = (0..lanes as i32).collect();
+        let mut scratch = Scratch::new();
+        assert_eq!(k.run_batch(&x, lanes, &mut scratch), fab.run_batch(&x, lanes));
+        assert_eq!(k2.run_batch(&x, lanes, &mut scratch), fab2.run_batch(&x, lanes));
+        // Back to the first artifact: the arena must re-prime, not serve
+        // the other kernel's constants.
+        assert_eq!(k.run_batch(&x, lanes, &mut scratch), fab.run_batch(&x, lanes));
+        assert_eq!(scratch.const_fills, 3);
+    }
+}

@@ -9,6 +9,7 @@ pub mod config;
 pub mod exec;
 pub mod grid;
 pub mod image;
+pub mod lower;
 pub mod opcodes;
 pub mod persist;
 pub mod plan;
@@ -18,6 +19,7 @@ pub mod sim;
 pub use config::{CellConfig, ConfigError, FuSrc, GridConfig, IoAssign, OutSrc};
 pub use exec::{execute, CompileError, CompiledFabric};
 pub use grid::{CellCoord, Dir, Grid, Port};
+pub use lower::{LoweredKernel, Scratch};
 pub use image::{ExecImage, ImageBuilder, ImageCell, ImageError};
 pub use opcodes::Op;
 pub use plan::{tile_key, ExecutionPlan, PlanTile};

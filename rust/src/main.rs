@@ -18,7 +18,7 @@ use tlo::util::cli::Args;
 const USAGE: &str = "subcommands: table1 | table2 [--device NAME] | lint [--grid RxC] \
 | video [--frames N --riffa] \
 | serve [--tenants N --shards K --requests R --grid RxC --transport sync|async|async:D \
---compile-threads N --par-portfolio K --tagged --no-adapt --no-verify \
+--compile-threads N --par-portfolio K --tagged --no-adapt --no-verify --no-lower \
 --slo SECS --cache-dir DIR --drain-timeout SECS \
 --fleet N --fault-profile drop=P,dup=P,reorder=P,jitter=F,crash=P --fault-seed S] \
 | devices";
@@ -73,8 +73,9 @@ fn table1() {
 /// `tlo lint` — run the full pipeline over every PolyBench kernel and
 /// re-verify everything it produced with the static verifier
 /// (`analysis::verifier`, DESIGN.md §11): V1 at the extraction boundary,
-/// V2/V3 on each routed single-tile artifact, and V4 on a tiled plan cut
-/// for an undersized grid. Prints one line per artifact plus a
+/// V2/V3/V6 on each routed single-tile artifact (V6 re-proves the
+/// lowered batch kernels equivalent to the wave schedule), and V4 on a
+/// tiled plan cut for an undersized grid. Prints one line per artifact plus a
 /// diagnostic table for anything flagged; exits nonzero on any error.
 fn lint(args: &Args) {
     use tlo::analysis::diag::{has_errors, render_table, Diag};
@@ -185,7 +186,7 @@ fn lint(args: &Args) {
                 artifacts += 1;
                 let cached = CachedConfig::new(res.config, image, format!("lint_{}", k.name));
                 report(
-                    format!("{} scop{si} u{} [V2/V3]", k.name, k.unroll),
+                    format!("{} scop{si} u{} [V2/V3/V6]", k.name, k.unroll),
                     verify_artifact(&cached),
                 );
             } else {
@@ -382,6 +383,10 @@ fn serve(args: &Args) {
         drain_timeout: std::time::Duration::from_secs_f64(
             args.get_f64("drain-timeout", 30.0).max(0.001),
         ),
+        // --no-lower pins the interpreted wave executor instead of the
+        // lowered batch kernels (numerics identical; CI runs it once per
+        // pipeline so the fallback cannot rot).
+        lower: !args.flag("no-lower"),
         ..Default::default()
     };
     if args.flag("tagged") {

@@ -80,6 +80,12 @@ pub struct OffloadParams {
     pub cache_capacity: usize,
     /// Sim-side numerics backend (conformance suite pins this).
     pub sim_backend: SimBackendChoice,
+    /// Execute `Auto`-selected sim backends through the lowered batch
+    /// kernels (`dfe::lower`) instead of the interpreted wave schedule.
+    /// Default on; `false` pins the wave-executor fallback (`--no-lower`).
+    /// Numerics are identical either way (verifier pass V6 + the
+    /// conformance/fuzz suites hold the two bit-for-bit).
+    pub lower: bool,
     /// Transfer scheduling discipline: the paper's blocking prototype
     /// (`Sync`) or the overlapped double-buffered pipeline
     /// (`transport::pipeline`). Changes timing only, never numerics.
@@ -113,6 +119,7 @@ impl Default for OffloadParams {
             sec_per_cycle: 1e-9,
             cache_capacity: 32,
             sim_backend: SimBackendChoice::Auto,
+            lower: true,
             transport: TransportMode::Sync,
             portfolio: 1,
             compile_threads: 0,
@@ -710,12 +717,9 @@ impl OffloadManager {
                     DfeBackend::Cycle(Rc::new(cached.config.clone()))
                 }
                 SimBackendChoice::Image => DfeBackend::Sim,
-                // Sim side: the compiled wave executor when the config
-                // lowered (always, for routed configs), else image eval.
-                SimBackendChoice::Auto => match &cached.fabric {
-                    Some(f) => DfeBackend::Fabric(f.clone()),
-                    None => DfeBackend::Sim,
-                },
+                // Sim side: lowered batch kernels → wave executor →
+                // image eval, best available first.
+                SimBackendChoice::Auto => DfeBackend::sim_for(&cached, self.params.lower),
             },
         };
         let jit_time = engine.jit_times.get(func as usize).copied().unwrap_or_default();
@@ -910,10 +914,7 @@ impl OffloadManager {
             .map(|t| match self.params.sim_backend {
                 SimBackendChoice::CycleSim => DfeBackend::Cycle(Rc::new(t.cached.config.clone())),
                 SimBackendChoice::Image => DfeBackend::Sim,
-                SimBackendChoice::Auto => match &t.cached.fabric {
-                    Some(f) => DfeBackend::Fabric(f.clone()),
-                    None => DfeBackend::Sim,
-                },
+                SimBackendChoice::Auto => DfeBackend::sim_for(&t.cached, self.params.lower),
             })
             .collect();
         let jit_time = engine.jit_times.get(func as usize).copied().unwrap_or_default();

@@ -173,6 +173,11 @@ pub struct ServeParams {
     /// drains and shutdown barriers). An expired wait surfaces as
     /// [`RejectReason::CompileTimeout`] instead of blocking forever.
     pub drain_timeout: Duration,
+    /// Execute tenant numerics through the lowered batch kernels
+    /// (`dfe::lower`, the default). `false` (`tlo serve --no-lower`) pins
+    /// the interpreted wave executor — the fallback CI exercises once per
+    /// run so it can never rot. Numerics are identical either way.
+    pub lower: bool,
 }
 
 impl Default for ServeParams {
@@ -197,6 +202,7 @@ impl Default for ServeParams {
             slo: None,
             cache_dir: None,
             drain_timeout: Duration::from_secs(30),
+            lower: true,
         }
     }
 }
@@ -1245,12 +1251,11 @@ fn offload_tenant_impl(
         ..Default::default()
     }));
     let config_words = cached.config.config_words() as u64;
-    // Numerics run on the compiled wave executor shared through the
-    // cache; `Sim` (per-lane image eval) only if the lowering refused.
-    let backend = match &cached.fabric {
-        Some(f) => DfeBackend::Fabric(f.clone()),
-        None => DfeBackend::Sim,
-    };
+    // Numerics run on the lowered batch kernels shared through the cache
+    // (each tenant hook owns its backend, hence its scratch arena); the
+    // wave executor under `--no-lower`, image eval if the lowering
+    // refused.
+    let backend = DfeBackend::sim_for(&cached, params.lower);
     let hook = make_offload_hook(
         off,
         single,
@@ -1415,10 +1420,7 @@ fn offload_tenant_tiled(
             fill_latency: fill,
             initiation_interval: ii,
         });
-        backends.push(match &tile.cached.fabric {
-            Some(f) => DfeBackend::Fabric(f.clone()),
-            None => DfeBackend::Sim,
-        });
+        backends.push(DfeBackend::sim_for(&tile.cached, params.lower));
     }
 
     // Retire the outgoing state's totals and carry the software-era

@@ -44,10 +44,19 @@ use super::RuntimeState;
 pub enum DfeBackend {
     /// Rust functional simulator (always available; used by tests/benches).
     Sim,
-    /// The compiled wave executor (`dfe::exec`) — the default sim-side hot
-    /// path: same numerics as `Sim`, lowered once per configuration and
-    /// shared via the config cache.
+    /// The compiled wave executor (`dfe::exec`) — same numerics as `Sim`,
+    /// lowered once per configuration and shared via the config cache.
+    /// The `--no-lower` fallback since the lowered kernels landed.
     Fabric(std::rc::Rc<crate::dfe::exec::CompiledFabric>),
+    /// The wave schedule specialized into vectorized batch kernels
+    /// (`dfe::lower`) — the default sim-side hot path. The scratch arena
+    /// is owned per backend, and backends are built per tenant (each hook
+    /// closure owns its own), so the buffer reuse is tenant-isolated and
+    /// the constant prefill runs once per installed artifact.
+    Lowered {
+        kernel: std::rc::Rc<crate::dfe::lower::LoweredKernel>,
+        scratch: RefCell<crate::dfe::lower::Scratch>,
+    },
     /// The cycle-accurate elastic overlay simulator — the slowest but
     /// fully independent numerics path, pinned by the differential
     /// conformance suite so interpreter ≡ CycleSim ≡ wave executor is
@@ -58,10 +67,30 @@ pub enum DfeBackend {
 }
 
 impl DfeBackend {
+    /// The default sim-side backend ladder for a cached artifact: the
+    /// lowered batch kernels when present and permitted (`lower`, the
+    /// `--no-lower` switch), the compiled wave executor otherwise, and
+    /// per-lane image eval when the config refused to lower at all.
+    /// Each call mints a fresh scratch arena, so per-tenant/per-tile
+    /// backends never share lane buffers.
+    pub fn sim_for(cached: &crate::dfe::cache::CachedConfig, lower: bool) -> DfeBackend {
+        match (&cached.lowered, &cached.fabric) {
+            (Some(k), _) if lower => DfeBackend::Lowered {
+                kernel: k.clone(),
+                scratch: RefCell::new(crate::dfe::lower::Scratch::new()),
+            },
+            (_, Some(f)) => DfeBackend::Fabric(f.clone()),
+            _ => DfeBackend::Sim,
+        }
+    }
+
     fn run(&self, image: &ExecImage, x: &[i32], lanes: usize) -> Result<Vec<i32>, Trap> {
         match self {
             DfeBackend::Sim => Ok(image.eval_batch(x, lanes)),
             DfeBackend::Fabric(fabric) => Ok(fabric.run_batch(x, lanes)),
+            DfeBackend::Lowered { kernel, scratch } => {
+                Ok(kernel.run_batch(x, lanes, &mut scratch.borrow_mut()))
+            }
             DfeBackend::Cycle(cfg) => {
                 // Reshape the slot-major batch into per-stream vectors,
                 // stream them through the elastic network, and flatten

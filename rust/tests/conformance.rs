@@ -5,7 +5,10 @@
 //! least three dataset sizes each:
 //!
 //!   interpreter ≡ offloaded (CycleSim backend)
-//!               ≡ offloaded (compiled wave / Fabric backend)
+//!               ≡ offloaded (Auto backend: the **lowered batch
+//!                 kernels**, `dfe::lower` — the production default)
+//!               ≡ offloaded (Auto with lowering disabled: the compiled
+//!                 wave / Fabric interpreter, the `--no-lower` fallback)
 //!               ≡ the `*_reference` host oracle,     bit for bit.
 //!
 //! Kernels the paper rejects (multi-SCoP, divisions, fp data, no SCoP)
@@ -73,6 +76,19 @@ fn run_mode(
     n: usize,
     backend: Option<SimBackendChoice>,
 ) -> (Vec<Vec<i32>>, bool) {
+    run_mode_with(case, n, backend, true)
+}
+
+/// `run_mode` with the kernel-lowering switch exposed: `lower = true` is
+/// the production default (Auto executes through the lowered batch
+/// kernels), `lower = false` pins the compiled-wave interpreter — the
+/// same fallback `tlo serve --no-lower` selects.
+fn run_mode_with(
+    case: &Case,
+    n: usize,
+    backend: Option<SimBackendChoice>,
+    lower: bool,
+) -> (Vec<Vec<i32>>, bool) {
     let mut engine = Engine::new((case.module)()).expect("module");
     let mut mem = Memory::new();
     let (args, handles) = (case.setup)(&mut mem, n);
@@ -83,6 +99,7 @@ fn run_mode(
             min_dfg_nodes: 1,
             unroll: case.unroll,
             sim_backend,
+            lower,
             ..Default::default()
         });
         match mgr.try_offload(&mut engine, func, None) {
@@ -112,13 +129,25 @@ fn conformance(case: &Case) {
         };
         let (interp, _) = run_mode(case, n, None);
         let (cycle, off_c) = run_mode(case, n, Some(SimBackendChoice::CycleSim));
-        let (fabric, off_f) = run_mode(case, n, Some(SimBackendChoice::Auto));
+        // Auto with lowering on (the default hot path: lowered batch
+        // kernels) and off (the compiled-wave `--no-lower` fallback).
+        let (lowered, off_l) = run_mode(case, n, Some(SimBackendChoice::Auto));
+        let (wave, off_w) = run_mode_with(case, n, Some(SimBackendChoice::Auto), false);
         if case.offloadable {
-            assert!(off_c && off_f, "{} n={n}: expected the offload to engage", case.name);
+            assert!(
+                off_c && off_l && off_w,
+                "{} n={n}: expected the offload to engage",
+                case.name
+            );
         } else {
-            assert!(!off_c && !off_f, "{} n={n}: must stay in software", case.name);
+            assert!(!off_c && !off_l && !off_w, "{} n={n}: must stay in software", case.name);
         }
-        let runs = [("interpreter", &interp), ("cyclesim", &cycle), ("fabric", &fabric)];
+        let runs = [
+            ("interpreter", &interp),
+            ("cyclesim", &cycle),
+            ("lowered", &lowered),
+            ("wave", &wave),
+        ];
         for (mode, got) in runs {
             if *got != want {
                 let mut diff = String::new();
@@ -883,6 +912,7 @@ fn conformance_oversized_kernels_execute_as_multi_tile_plans() {
         unroll: usize,
         grid: Grid,
         sim_backend: SimBackendChoice,
+        lower: bool,
     ) -> (Vec<Vec<i32>>, usize) {
         let mut engine = Engine::new((case.module)()).expect("module");
         let mut mem = Memory::new();
@@ -893,6 +923,7 @@ fn conformance_oversized_kernels_execute_as_multi_tile_plans() {
             unroll,
             grid,
             sim_backend,
+            lower,
             ..Default::default()
         });
         let rec = mgr
@@ -918,16 +949,26 @@ fn conformance_oversized_kernels_execute_as_multi_tile_plans() {
                 outs(&mem, &handles)
             };
             let (interp, _) = run_mode(&case, n, None);
-            let (fabric, tiles_f) = run_tiled(&case, n, unroll, grid, SimBackendChoice::Auto);
+            // Auto with lowering on (per-tile lowered batch kernels) and
+            // off (the compiled-wave fallback), plus the CycleSim pin.
+            let (lowered, tiles_f) =
+                run_tiled(&case, n, unroll, grid, SimBackendChoice::Auto, true);
+            let (wave, tiles_w) =
+                run_tiled(&case, n, unroll, grid, SimBackendChoice::Auto, false);
             let (cycle, tiles_c) =
-                run_tiled(&case, n, unroll, grid, SimBackendChoice::CycleSim);
+                run_tiled(&case, n, unroll, grid, SimBackendChoice::CycleSim, true);
             assert!(
                 tiles_f > 1,
                 "{name} u{unroll}: expected a multi-tile plan, got {tiles_f} tile(s)"
             );
             assert_eq!(tiles_f, tiles_c, "{name}: backend choice must not change the cut");
-            let runs =
-                [("interpreter", &interp), ("tiled-fabric", &fabric), ("tiled-cyclesim", &cycle)];
+            assert_eq!(tiles_f, tiles_w, "{name}: the lowering switch must not change the cut");
+            let runs = [
+                ("interpreter", &interp),
+                ("tiled-lowered", &lowered),
+                ("tiled-wave", &wave),
+                ("tiled-cyclesim", &cycle),
+            ];
             for (mode, got) in runs {
                 if *got != want {
                     fail_with_diff(

@@ -18,10 +18,17 @@
 //!     larger than one round trip;
 //!   * a configuration the lowering cannot prove acyclic refuses to
 //!     compile and `execute` falls back to `CycleSim` — never mis-lowers;
-//!   * absent/short input streams error identically in both engines.
+//!   * absent/short input streams error identically in both engines;
+//!   * the **lowered batch kernels** (`dfe::lower`, the specialized
+//!     straight-line form the offload hot path executes by default) are
+//!     bit-identical to both engines on every routed configuration —
+//!     including folded `Nop`/`Pass`/constant firings, fused
+//!     producer→consumer chains, multi-tile plans, and scratch-arena
+//!     reuse across artifacts.
 
 use tlo::dfe::config::{GridConfig, IoAssign, OutSrc};
 use tlo::dfe::exec::{execute, CompileError, CompiledFabric};
+use tlo::dfe::{LoweredKernel, Scratch};
 use tlo::dfe::grid::{CellCoord, Dir, Grid};
 use tlo::dfe::opcodes::{Op, ALL_OPS};
 use tlo::dfe::sim::CycleSim;
@@ -341,6 +348,245 @@ fn fuzz_tiled_plans_match_the_untiled_wave_executor() {
         );
     }
     assert!(exercised >= 8, "only {exercised} tiled cases exercised — fuzz too weak");
+}
+
+/// Tentpole differential lane: the lowered batch kernel must be
+/// bit-identical to the wave executor AND to `CycleSim` on every routed
+/// configuration, at every chunk boundary, through ONE reused scratch
+/// arena — so the fingerprint-keyed re-priming between distinct
+/// artifacts is stressed on every case transition.
+#[test]
+fn fuzz_lowered_matches_wave_and_cyclesim_bit_for_bit() {
+    let cases = routed_cases(60061, 40);
+    assert!(cases.len() >= 15, "only {} routed cases — fuzz too weak", cases.len());
+    let mut scratch = Scratch::new();
+    for (case, (config, n_in)) in cases.iter().enumerate() {
+        let fabric = CompiledFabric::compile(config)
+            .unwrap_or_else(|e| panic!("case {case}: routed config must lower: {e}"));
+        let k = LoweredKernel::lower(&fabric);
+        // 64 exercises the common path; 300 crosses the CHUNK boundary.
+        for lanes in [64usize, 300] {
+            let streams = random_streams(case as u64 * 91 + lanes as u64, *n_in, lanes);
+            let mut x = vec![0i32; fabric.n_inputs * lanes];
+            for j in 0..fabric.n_inputs {
+                x[j * lanes..(j + 1) * lanes].copy_from_slice(&streams[j]);
+            }
+            let wave = fabric.run_batch(&x, lanes);
+            let lowered = k.run_batch(&x, lanes, &mut scratch);
+            assert_eq!(lowered, wave, "case {case} lanes {lanes}: lowered diverges from wave");
+            // `CompiledFabric::outs` is sorted by bound output index, so
+            // run_batch rows concatenate in CycleSim's stream order.
+            let cyc = CycleSim::new(config)
+                .expect("legal config")
+                .run_stream(&streams, lanes)
+                .expect("no deadlock on a feed-forward config");
+            let flat_cyc: Vec<i32> = cyc.outputs.concat();
+            assert_eq!(
+                lowered, flat_cyc,
+                "case {case} lanes {lanes}: lowered diverges from CycleSim"
+            );
+        }
+    }
+}
+
+/// `Nop` firings and all-constant-operand firings fold away at lowering
+/// time: a pipeline whose tail only sees a `Nop`-zeroed value reduces to
+/// a prefill constant, and the lowered output still matches both
+/// reference engines bit for bit.
+#[test]
+fn fuzz_lowered_folds_nop_and_constant_pipelines() {
+    // 1x3 row: Add(in, 5) → Nop → Add(·, 7) → out. The Nop zeroes its
+    // lane, so the tail Add const-folds to 7 and the kernel's output is
+    // the prefill image — no surviving step feeds the tap.
+    let grid = Grid::new(1, 3);
+    let mut cfg = GridConfig::empty(grid);
+    let c0 = CellCoord::new(0, 0);
+    let c1 = CellCoord::new(0, 1);
+    let c2 = CellCoord::new(0, 2);
+    cfg.inputs.push(IoAssign { cell: c0, dir: Dir::W, index: 0 });
+    {
+        let cell = cfg.cell_mut(c0);
+        cell.op = Some(Op::Add);
+        cell.fu1 = tlo::dfe::FuSrc::In(Dir::W);
+        cell.fu2 = tlo::dfe::FuSrc::Const(5);
+        cell.out[Dir::E.index()] = OutSrc::Fu;
+    }
+    {
+        let cell = cfg.cell_mut(c1);
+        cell.op = Some(Op::Nop);
+        cell.fu1 = tlo::dfe::FuSrc::In(Dir::W);
+        cell.fu2 = tlo::dfe::FuSrc::Const(0);
+        cell.out[Dir::E.index()] = OutSrc::Fu;
+    }
+    {
+        let cell = cfg.cell_mut(c2);
+        cell.op = Some(Op::Add);
+        cell.fu1 = tlo::dfe::FuSrc::In(Dir::W);
+        cell.fu2 = tlo::dfe::FuSrc::Const(7);
+        cell.out[Dir::E.index()] = OutSrc::Fu;
+    }
+    cfg.outputs.push(IoAssign { cell: c2, dir: Dir::E, index: 0 });
+
+    let fabric = CompiledFabric::compile(&cfg).expect("feed-forward row compiles");
+    let k = LoweredKernel::lower(&fabric);
+    assert!(k.folded >= 2, "Nop and the downstream constant Add must fold, got {}", k.folded);
+
+    let lanes = 300; // crosses the CHUNK boundary
+    let streams = random_streams(11, 1, lanes);
+    let mut scratch = Scratch::new();
+    let lowered = k.run_batch(&streams[0], lanes, &mut scratch);
+    assert_eq!(lowered, fabric.run_batch(&streams[0], lanes));
+    let cyc = CycleSim::new(&cfg).unwrap().run_stream(&streams, lanes).unwrap();
+    assert_eq!(lowered, cyc.outputs.concat());
+    assert!(lowered.iter().all(|&v| v == 7), "folded pipeline must emit the constant 7");
+}
+
+/// Fused producer→single-consumer chains: a straight pipeline with a
+/// folded `Pass` in the middle collapses to ONE chain step, and the
+/// chain's windowed accumulator execution is bit-identical to both
+/// engines (including wrapping arithmetic at the lane edges).
+#[test]
+fn fuzz_lowered_fused_chains_match_both_engines() {
+    // 1x4 row: Sub(in, 2) → Pass → Mul(·, 3) → Xor(·, -1) → out.
+    let grid = Grid::new(1, 4);
+    let mut cfg = GridConfig::empty(grid);
+    let cells: Vec<CellCoord> = (0..4).map(|c| CellCoord::new(0, c)).collect();
+    cfg.inputs.push(IoAssign { cell: cells[0], dir: Dir::W, index: 0 });
+    let stages: [(Op, Option<i32>); 4] =
+        [(Op::Sub, Some(2)), (Op::Pass, None), (Op::Mul, Some(3)), (Op::Xor, Some(-1))];
+    for (i, &(op, konst)) in stages.iter().enumerate() {
+        let cell = cfg.cell_mut(cells[i]);
+        cell.op = Some(op);
+        cell.fu1 = tlo::dfe::FuSrc::In(Dir::W);
+        if let Some(v) = konst {
+            cell.fu2 = tlo::dfe::FuSrc::Const(v);
+        }
+        cell.out[Dir::E.index()] = OutSrc::Fu;
+    }
+    cfg.outputs.push(IoAssign { cell: cells[3], dir: Dir::E, index: 0 });
+
+    let fabric = CompiledFabric::compile(&cfg).expect("feed-forward row compiles");
+    let k = LoweredKernel::lower(&fabric);
+    assert!(k.folded >= 1, "the Pass must fold");
+    assert!(k.fused >= 2, "Sub→Mul→Xor must fuse twice, got {}", k.fused);
+    assert_eq!(k.n_steps(), 1, "the whole pipeline must collapse to one chain step");
+
+    let lanes = 2 * 256 + 19; // two full chunks + a partial LANE_W tail
+    let streams = random_streams(23, 1, lanes);
+    let mut scratch = Scratch::new();
+    let lowered = k.run_batch(&streams[0], lanes, &mut scratch);
+    assert_eq!(lowered, fabric.run_batch(&streams[0], lanes));
+    let cyc = CycleSim::new(&cfg).unwrap().run_stream(&streams, lanes).unwrap();
+    assert_eq!(lowered, cyc.outputs.concat());
+    let want: Vec<i32> =
+        streams[0].iter().map(|&v| v.wrapping_sub(2).wrapping_mul(3) ^ -1).collect();
+    assert_eq!(lowered, want, "closed form disagrees");
+}
+
+/// Multi-tile execution plans through the lowered path: every tile's
+/// fabric is lowered and driven via `LoweredKernel::run_batch` with a
+/// single shared scratch arena (re-primed on every tile switch, exactly
+/// the worst case for the fingerprint key), and the host-staged spill
+/// schedule must still match the un-tiled wave oracle bit for bit.
+#[test]
+fn fuzz_lowered_tiled_plans_match_the_untiled_oracle() {
+    use tlo::dfg::partition::{partition, TileBudget, TileSink, TileSource};
+
+    let mut rng = Rng::new(0x10EE);
+    let mut exercised = 0usize;
+    let mut scratch = Scratch::new();
+    for case in 0..50u64 {
+        let n_in = 2 + rng.below(3);
+        let n_calc = 4 + rng.below(10);
+        let dfg = random_dfg(&mut rng, n_in, n_calc);
+        let st = dfg.stats();
+        if st.outputs == 0 || st.calc < 2 {
+            continue;
+        }
+        let mut prng = Rng::new(0xACE + case);
+        let Ok(whole) = place_and_route(&dfg, Grid::new(6, 6), &ParParams::default(), &mut prng)
+        else {
+            continue;
+        };
+        let oracle = CompiledFabric::compile(&whole.config).expect("routed config lowers");
+
+        let cells = 1 + rng.below((3 * st.calc).saturating_sub(2));
+        let budget = TileBudget { cells, io: 24 };
+        let Ok(tiled) = partition(&dfg, budget) else {
+            continue;
+        };
+        if tiled.n_tiles() < 2 {
+            continue;
+        }
+        let mut kernels = Vec::new();
+        for (i, t) in tiled.tiles.iter().enumerate() {
+            let mut prng = Rng::new(0xDEED + case * 131 + i as u64);
+            let Ok(r) = place_and_route(&t.dfg, Grid::new(6, 6), &ParParams::default(), &mut prng)
+            else {
+                break;
+            };
+            let fab = CompiledFabric::compile(&r.config).expect("tile lowers");
+            kernels.push(LoweredKernel::lower(&fab));
+        }
+        if kernels.len() != tiled.n_tiles() {
+            continue;
+        }
+        exercised += 1;
+
+        let n = 37 + rng.below(64);
+        let streams = random_streams(case * 37 + 3, n_in, n);
+        let want = oracle.run_stream(&streams, n).expect("untiled run").outputs;
+
+        let mut spills: Vec<Vec<i32>> = vec![vec![0; n]; tiled.n_spills];
+        let mut got: Vec<Vec<i32>> = vec![Vec::new(); want.len()];
+        for (tile, kernel) in tiled.tiles.iter().zip(&kernels) {
+            // Flatten the tile's local streams into the batch ABI.
+            let mut x = vec![0i32; tile.sources.len() * n];
+            for (j, s) in tile.sources.iter().enumerate() {
+                let row = match *s {
+                    TileSource::External(e) => &streams[e],
+                    TileSource::Spill(k) => &spills[k],
+                };
+                x[j * n..(j + 1) * n].copy_from_slice(row);
+            }
+            let out = kernel.run_batch(&x, n, &mut scratch);
+            for (jj, sink) in tile.sinks.iter().enumerate() {
+                let row = out[jj * n..(jj + 1) * n].to_vec();
+                match *sink {
+                    TileSink::Spill(k) => spills[k] = row,
+                    TileSink::External(j) => got[j] = row,
+                }
+            }
+        }
+        assert_eq!(
+            got, want,
+            "case {case}: lowered {}-tile plan (cells {cells}) diverges from the oracle",
+            tiled.n_tiles()
+        );
+    }
+    assert!(exercised >= 6, "only {exercised} tiled cases exercised — fuzz too weak");
+}
+
+/// Regression (ISSUE 10 satellite): the constant prefill is a
+/// once-per-artifact cost. Repeated invocations through one scratch
+/// arena must not refill constants or reallocate the wave buffer.
+#[test]
+fn fuzz_lowered_scratch_fills_consts_once_per_artifact() {
+    let cases = routed_cases(424243, 10);
+    let (config, n_in) = cases.first().expect("at least one routed case");
+    let fabric = CompiledFabric::compile(config).expect("routed config lowers");
+    let k = LoweredKernel::lower(&fabric);
+    let mut scratch = Scratch::new();
+    let lanes = 130;
+    for round in 0..5u64 {
+        let streams = random_streams(round, *n_in, lanes);
+        let mut x = vec![0i32; fabric.n_inputs * lanes];
+        for j in 0..fabric.n_inputs {
+            x[j * lanes..(j + 1) * lanes].copy_from_slice(&streams[j]);
+        }
+        assert_eq!(k.run_batch(&x, lanes, &mut scratch), fabric.run_batch(&x, lanes));
+    }
+    assert_eq!(scratch.const_fills, 1, "prefill must run once across 5 invocations");
 }
 
 #[test]

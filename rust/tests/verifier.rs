@@ -15,19 +15,23 @@
 //! | schedule reorder, timing drift     | V3   |
 //! | spill re-point, tile-key flip      | V4   |
 //! | snapshot truncation / corruption   | V5   |
+//! | lowered-step reorder, prefill      |      |
+//! | corruption, output-tap re-point    | V6   |
 
 use std::rc::Rc;
 
 use tlo::analysis::diag::{has_errors, Pass, Severity};
 use tlo::analysis::verifier::{
-    verify_artifact, verify_config, verify_offload, verify_plan, verify_plan_with_provenance,
+    verify_artifact, verify_config, verify_lowered, verify_offload, verify_plan,
+    verify_plan_with_provenance,
 };
 use tlo::dfe::cache::{dfg_key, spec_key, CachedConfig, ConfigCache, SpecSignature};
-use tlo::dfe::config::{fig2_config, IoAssign};
+use tlo::dfe::config::{fig2_config, GridConfig, IoAssign, OutSrc};
 use tlo::dfe::exec::CompiledFabric;
 use tlo::dfe::grid::{CellCoord, Dir, Grid};
+use tlo::dfe::opcodes::Op;
 use tlo::dfe::persist::{load_cache, save_cache, CACHE_FILE};
-use tlo::dfe::{tile_key, ExecutionPlan, FuSrc, PlanTile};
+use tlo::dfe::{tile_key, ExecutionPlan, FuSrc, LoweredKernel, PlanTile};
 use tlo::dfg::extract::extract;
 use tlo::dfg::partition::{partition, TileBudget, TiledDfg, TileSink, TileSource};
 use tlo::par::{place_and_route, ParParams};
@@ -257,6 +261,98 @@ fn v5_rejects_truncated_and_corrupted_snapshots() {
     assert!(back.is_empty(), "nothing from the corrupt snapshot may be served");
 
     let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ------------------------------------------------------------------ V6 --
+
+/// A 1x2 pipeline whose first stage is output-tapped: the tap is a
+/// fusion barrier, so the lowered kernel keeps TWO ordered steps
+/// (Add then Mul reading the Add's slot) — the smallest fixture where a
+/// step reorder is a genuine scoreboard violation, not just a
+/// fingerprint change.
+fn tapped_pipeline() -> (CompiledFabric, LoweredKernel) {
+    let mut cfg = GridConfig::empty(Grid::new(1, 2));
+    let c0 = CellCoord::new(0, 0);
+    let c1 = CellCoord::new(0, 1);
+    cfg.inputs.push(IoAssign { cell: c0, dir: Dir::W, index: 0 });
+    {
+        let cell = cfg.cell_mut(c0);
+        cell.op = Some(Op::Add);
+        cell.fu1 = FuSrc::In(Dir::W);
+        cell.fu2 = FuSrc::Const(5);
+        cell.out[Dir::E.index()] = OutSrc::Fu; // feeds the Mul
+        cell.out[Dir::S.index()] = OutSrc::Fu; // border tap
+    }
+    {
+        let cell = cfg.cell_mut(c1);
+        cell.op = Some(Op::Mul);
+        cell.fu1 = FuSrc::In(Dir::W);
+        cell.fu2 = FuSrc::Const(3);
+        cell.out[Dir::E.index()] = OutSrc::Fu;
+    }
+    cfg.outputs.push(IoAssign { cell: c0, dir: Dir::S, index: 0 });
+    cfg.outputs.push(IoAssign { cell: c1, dir: Dir::E, index: 1 });
+    let fab = CompiledFabric::compile(&cfg).expect("tapped pipeline compiles");
+    let k = LoweredKernel::lower(&fab);
+    assert_eq!(k.n_steps(), 2, "the tap must block fusion, leaving two ordered steps");
+    (fab, k)
+}
+
+#[test]
+fn v6_catches_reordered_lowered_steps() {
+    let (fab, mut k) = tapped_pipeline();
+    assert!(!has_errors(&verify_lowered(&fab, &k)), "baseline lowered kernel verifies clean");
+    // Mutation: swap the two steps — the Mul now reads the Add's slot
+    // before the Add defines it (and the stored fingerprint no longer
+    // matches the structure).
+    k.swap_steps(0, 1);
+    let diags = verify_lowered(&fab, &k);
+    assert!(passes(&diags).contains(&Pass::V6LoweredKernel), "step order is V6's: {diags:?}");
+}
+
+#[test]
+fn v6_catches_corrupted_prefill_constants() {
+    let (fab, mut k) = tapped_pipeline();
+    // Mutation: bump one prefill constant by 1. The structure is intact;
+    // only the constant re-derivation (and the probe) can see it.
+    k.corrupt_prefill();
+    let diags = verify_lowered(&fab, &k);
+    assert!(passes(&diags).contains(&Pass::V6LoweredKernel), "prefill drift is V6's: {diags:?}");
+}
+
+#[test]
+fn v6_catches_a_repointed_output_tap() {
+    let (fab, mut k) = tapped_pipeline();
+    // Mutation: re-point the first output tap at the zero slot.
+    k.retarget_out();
+    let diags = verify_lowered(&fab, &k);
+    assert!(passes(&diags).contains(&Pass::V6LoweredKernel), "tap re-point is V6's: {diags:?}");
+}
+
+#[test]
+fn v6_runs_inside_artifact_verification() {
+    // The artifact-level entry point must route lowered-kernel corruption
+    // to V6 — this is what cache verify-on-insert, `tlo lint` and the
+    // snapshot gate actually call.
+    let mut cached = fig2_artifact();
+    assert!(verify_artifact(&cached).is_empty(), "fig2 artifact verifies clean");
+    let mut k = (**cached.lowered.as_ref().expect("fig2 lowers")).clone();
+    k.retarget_out();
+    cached.lowered = Some(Rc::new(k));
+    let diags = verify_artifact(&cached);
+    assert!(passes(&diags).contains(&Pass::V6LoweredKernel), "artifact V6: {diags:?}");
+
+    // A compiled fabric with the lowered kernel dropped is advisory-only:
+    // the serve path falls back to the wave executor, so V6 warns rather
+    // than errors.
+    let mut cached = fig2_artifact();
+    cached.lowered = None;
+    let diags = verify_artifact(&cached);
+    assert!(!has_errors(&diags), "missing lowered kernel must not be an error");
+    assert!(
+        diags.iter().any(|d| d.pass == Pass::V6LoweredKernel && d.severity == Severity::Warning),
+        "missing lowered kernel warns under V6: {diags:?}"
+    );
 }
 
 // ----------------------------------------------- clean-fleet invariants --
